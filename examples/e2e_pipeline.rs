@@ -1,0 +1,135 @@
+//! End-to-end driver — proves all layers compose on a real small workload
+//! (the EXPERIMENTS.md headline run):
+//!
+//!   L1  Pallas kernel (AOT-lowered to artifacts/*.hlo.txt)
+//!   L2  JAX graphs calling the kernel
+//!   L3  Rust coordinator: dynamic batcher + worker pool over PJRT
+//!
+//! The driver streams a real workload — JPEG DCT-stage multiply traffic
+//! from procedural aerial frames plus an ECG squaring stream — through
+//! the *served* RAPID multiplier, cross-checks every element against the
+//! in-process bit-accurate model, and reports throughput/latency.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rapid::apps::ecg::{generate, EcgConfig};
+use rapid::apps::images::aerial_scene;
+use rapid::arith::{ApproxMul, RapidMul};
+use rapid::coordinator::cli::PjrtExecutorFactory;
+use rapid::coordinator::router::{Coordinator, CoordinatorConfig};
+
+fn main() {
+    if !std::path::Path::new("artifacts/rapid_mul16.hlo.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let batch = 8192usize;
+    let exec = Arc::new(PjrtExecutorFactory {
+        artifacts_dir: "artifacts".into(),
+        artifact: "rapid_mul16".into(),
+        batch,
+    });
+    let coord = Coordinator::start(
+        exec,
+        CoordinatorConfig {
+            batch_capacity: batch,
+            max_wait: Duration::from_micros(300),
+            workers: 2,
+            queue_depth: 64,
+        },
+    );
+    let model = RapidMul::new(16, 10);
+
+    // workload 1: DCT-stage multiply traffic from 8 aerial frames
+    // (pixel × cosine-constant pairs, the JPEG kernel's op stream)
+    let mut mul_a: Vec<i64> = Vec::new();
+    let mut mul_b: Vec<i64> = Vec::new();
+    const C: [i64; 8] = [4096, 4017, 3784, 3406, 2896, 2276, 1567, 799];
+    for f in 0..8u64 {
+        let img = aerial_scene(64, 64, 31_000 + f);
+        for (i, &p) in img.px.iter().enumerate() {
+            mul_a.push(p);
+            mul_b.push(C[i % 8]);
+        }
+    }
+    // workload 2: ECG squaring stream (30 s of samples)
+    let rec = generate(200 * 30, &EcgConfig::default(), 5);
+    for &s in &rec.samples {
+        let m = (s / 2).unsigned_abs() as i64;
+        mul_a.push(m);
+        mul_b.push(m);
+    }
+    let total = mul_a.len();
+    println!("streaming {total} multiply ops (JPEG DCT traffic + ECG squaring) through PJRT...");
+
+    // warm-up: let both workers compile their executables before timing
+    let _ = coord.call(vec![1, 2, 3], vec![4, 5, 6]);
+    let _ = coord.call(vec![1, 2, 3], vec![4, 5, 6]);
+
+    // §Perf iteration 2: submit asynchronously with a window of in-flight
+    // requests so the dynamic batcher coalesces chunks into full batches
+    // (the synchronous driver left every batch 75 % padding — see
+    // EXPERIMENTS.md §Perf).
+    let t0 = Instant::now();
+    let mut checked = 0usize;
+    let chunk = 2048;
+    // WINDOW=1 reproduces the §Perf sync baseline (RAPID_E2E_WINDOW=1)
+    let window: usize = std::env::var("RAPID_E2E_WINDOW").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+    let mut inflight: std::collections::VecDeque<(Vec<i64>, Vec<i64>, std::sync::mpsc::Receiver<rapid::coordinator::router::Response>)> =
+        std::collections::VecDeque::new();
+    let mut drain = |inflight: &mut std::collections::VecDeque<(
+        Vec<i64>,
+        Vec<i64>,
+        std::sync::mpsc::Receiver<rapid::coordinator::router::Response>,
+    )>,
+                     checked: &mut usize| {
+        let (ca, cb, rx) = inflight.pop_front().unwrap();
+        let mut got = vec![0i64; ca.len()];
+        let mut filled = 0;
+        while filled < ca.len() {
+            let resp = rx.recv().expect("reply");
+            got[resp.offset..resp.offset + resp.values.len()].copy_from_slice(&resp.values);
+            filled += resp.values.len();
+        }
+        for i in 0..ca.len() {
+            let want = model.mul(ca[i] as u64, cb[i] as u64) as i64;
+            assert_eq!(got[i], want, "served result diverged from model at {}", *checked);
+            *checked += 1;
+        }
+    };
+    for (ca, cb) in mul_a.chunks(chunk).zip(mul_b.chunks(chunk)) {
+        loop {
+            match coord.try_call_async(ca.to_vec(), cb.to_vec()) {
+                Ok(rx) => {
+                    inflight.push_back((ca.to_vec(), cb.to_vec(), rx));
+                    break;
+                }
+                Err(()) => drain(&mut inflight, &mut checked), // backpressure: reap one
+            }
+        }
+        if inflight.len() >= window {
+            drain(&mut inflight, &mut checked);
+        }
+    }
+    while !inflight.is_empty() {
+        drain(&mut inflight, &mut checked);
+    }
+    let dt = t0.elapsed();
+    println!(
+        "OK: {checked} served results bit-identical to the functional model\n\
+         throughput: {:.1} kops/s end-to-end (batched PJRT, 2 workers)\n\
+         metrics: {}",
+        checked as f64 / dt.as_secs_f64() / 1e3,
+        coord.metrics.summary()
+    );
+    println!(
+        "batches={} padding overhead={:.1}%",
+        coord.metrics.batches.load(Ordering::Relaxed),
+        100.0 * coord.metrics.padded_elements.load(Ordering::Relaxed) as f64
+            / (checked as f64 + coord.metrics.padded_elements.load(Ordering::Relaxed) as f64)
+    );
+}

@@ -1,0 +1,50 @@
+//! ECG monitor scenario (the paper's bio-signal domain, Fig. 5): run
+//! Pan-Tompkins QRS detection over a stream of synthetic ECG, comparing
+//! accurate and RAPID arithmetic on detection quality — the edge-health-
+//! gadget workload the paper motivates.
+//!
+//!     cargo run --release --example ecg_monitor [minutes]
+
+use rapid::apps::ecg::{generate, EcgConfig};
+use rapid::apps::pantompkins;
+use rapid::apps::qor::{psnr, Sensitivity};
+use rapid::arith::registry::{make_div, make_mul};
+
+fn main() {
+    let minutes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let cfg = EcgConfig::default();
+    let n = (cfg.fs as usize) * 60 * minutes;
+    println!("generating {minutes} min of synthetic ECG ({n} samples @ {} Hz)...", cfg.fs);
+    let rec = generate(n, &cfg, 2024);
+    println!("ground truth: {} beats", rec.r_peaks.len());
+
+    let em = make_mul("exact", 16).unwrap();
+    let ed = make_div("exact", 8).unwrap();
+    let (mw_exact, peaks_exact, delay) = pantompkins::run(&rec.samples, rec.fs, em.as_ref(), ed.as_ref());
+    let s_exact = Sensitivity::measure(&rec.r_peaks, &peaks_exact, delay, 30);
+
+    for (label, mul, div) in [
+        ("RAPID-10/9", "rapid10", "rapid9"),
+        ("SIMDive", "simdive", "simdive"),
+        ("DRUM6+AAXD", "drum6", "aaxd"),
+    ] {
+        let m = make_mul(mul, 16).unwrap();
+        let d = make_div(div, 8).unwrap();
+        let t0 = std::time::Instant::now();
+        let (mw, peaks, delay) = pantompkins::run(&rec.samples, rec.fs, m.as_ref(), d.as_ref());
+        let dt = t0.elapsed();
+        let s = Sensitivity::measure(&rec.r_peaks, &peaks, delay, 30);
+        let peak = *mw_exact.iter().max().unwrap() as f64;
+        println!(
+            "{label:<12} sens={:.3} (exact {:.3})  F1={:.3}  false+={}  PSNR={:.1} dB  [{:.0} ksamp/s]",
+            s.sensitivity(),
+            s_exact.sensitivity(),
+            s.f1(),
+            s.false_positives,
+            psnr(&mw_exact, &mw, peak),
+            n as f64 / dt.as_secs_f64() / 1e3,
+        );
+    }
+    let _ = peaks_exact;
+    println!("\npaper bar: >=28 dB PSNR keeps detection at ~100%; biased truncation loses ~1%.");
+}

@@ -1,0 +1,27 @@
+//! Dev tool: per-unit resource/timing/pipeline probe across the synthesized
+//! netlist zoo — the quick look the calibration workflow uses
+//! (`cargo run --release --example probe`).
+use rapid::circuit::synth::exact_ip::*;
+use rapid::circuit::synth::multiplier::*;
+use rapid::circuit::synth::divider::*;
+use rapid::circuit::pipeline::pipeline;
+use rapid::circuit::timing::{critical_path, min_clock};
+use rapid::circuit::primitive::Delays;
+fn main() {
+    let d = Delays::default();
+    for (name, nl) in [
+        ("exact_mul8", exact_mul_netlist(8)), ("exact_mul16", exact_mul_netlist(16)), ("exact_mul32", exact_mul_netlist(32)),
+        ("exact_div4", exact_div_netlist(4)), ("exact_div8", exact_div_netlist(8)), ("exact_div16", exact_div_netlist(16)),
+        ("rapid10_mul16", rapid_mul_netlist(16, 10)), ("rapid3_mul16", rapid_mul_netlist(16, 3)),
+        ("rapid10_mul32", rapid_mul_netlist(32, 10)),
+        ("rapid9_div8", rapid_div_netlist(8, 9)), ("rapid3_div8", rapid_div_netlist(8, 3)),
+        ("rapid9_div16", rapid_div_netlist(16, 9)),
+        ("mitchell_mul16", mitchell_mul_netlist(16)),
+    ] {
+        let cp = critical_path(&nl, &d);
+        let p2 = pipeline(&nl, 2, &d);
+        let p4 = pipeline(&nl, 4, &d);
+        println!("{name:16} LUT={:4} cp={:5.2}ns clk_np={:5.2} clk_p2={:5.2} (stages {:?}) clk_p4={:5.2} ffs_p2={} ffs_p4={}",
+            nl.count_luts(), cp, min_clock(&nl, &d), min_clock(&p2.netlist, &d), p2.stage_delays.iter().map(|x| (x*100.0).round()/100.0).collect::<Vec<_>>(), min_clock(&p4.netlist, &d), p2.ffs_inserted, p4.ffs_inserted);
+    }
+}

@@ -1,0 +1,42 @@
+//! Quickstart: the public API in five minutes.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Creates RAPID units, compares them against exact arithmetic and the SoA
+//! baselines, characterises error, synthesizes the circuit and pipelines it
+//! — the whole library surface in one tour.
+
+use rapid::circuit::report::characterize;
+use rapid::circuit::synth::multiplier::rapid_mul_netlist;
+use rapid::error::{characterize_mul, CharacterizeOpts};
+use rapid::prelude::*;
+
+fn main() {
+    // 1. bit-accurate functional units
+    let mul = RapidMul::new(16, 10); // 16×16 multiplier, 10 error coefficients
+    let div = RapidDiv::new(8, 9); // 16/8 divider, 9 coefficients
+    println!("RAPID 58×18      = {} (exact 1044)", mul.mul(58, 18));
+    println!("RAPID 9149/42    = {} (exact 217)", div.div(9149, 42));
+
+    // 2. any Table III design by name
+    for name in ["mitchell", "mbm", "simdive", "drum6"] {
+        let unit = make_mul(name, 16).unwrap();
+        println!("{:<10} 1234×567 = {}", name, unit.mul(1234, 567));
+    }
+
+    // 3. error characterisation (Table III accuracy columns)
+    let report = characterize_mul(&mul, &CharacterizeOpts { mc_samples: 200_000, ..Default::default() });
+    println!("\n{}", report.row());
+
+    // 4. circuit synthesis: LUT/FF/latency/power on the Virtex-7 model
+    let netlist = rapid_mul_netlist(16, 10);
+    let np = characterize(&netlist, 1, 60, 1);
+    let p4 = characterize(&netlist, 4, 60, 1);
+    println!("\nnon-pipelined: {}", np.row());
+    println!("4-stage:       {}", p4.row());
+    println!(
+        "pipelining: {:.1}x throughput for {:.1}x latency",
+        p4.throughput_per_us / np.throughput_per_us,
+        p4.latency_ns / np.latency_ns
+    );
+}

@@ -1,0 +1,15 @@
+//! Dev tool: accuracy of every derived coefficient scheme at 1M Monte-Carlo
+//! samples (`cargo run --release --example schemecheck`).
+fn main() {
+    use rapid::arith::rapid::{RapidMul, RapidDiv};
+    use rapid::error::{characterize_mul, characterize_div, CharacterizeOpts};
+    let o = CharacterizeOpts { mc_samples: 1_000_000, ..Default::default() };
+    for g in [3usize, 5, 10] {
+        let r = characterize_mul(&RapidMul::new(16, g), &o);
+        println!("mul G={g}: ARE {:.3}% PRE {:.2}%", r.are*100.0, r.pre*100.0);
+    }
+    for g in [3usize, 5, 9] {
+        let r = characterize_div(&RapidDiv::new(8, g), &o);
+        println!("div G={g}: ARE {:.3}% PRE(q>=8) {:.2}%", r.are*100.0, r.pre_large*100.0);
+    }
+}

@@ -1,0 +1,197 @@
+"""Layer-1 Pallas kernels: RAPID approximate multiply / divide.
+
+The kernels are bit-exact ports of the Rust functional models
+(``rust/src/arith/{mitchell,rapid}.rs``). They load the error-reduction
+scheme (16x16 region grid + quantised coefficients) from the JSON files the
+Rust side exports (``rapid export-scheme``), so both layers share identical
+constants; the cross-layer integration test in ``rust/tests/`` checks
+bit-equality through the PJRT runtime.
+
+Hardware adaptation (DESIGN.md §2): the FPGA datapath (LOD -> align ->
+ternary add -> shift) becomes a vectorised VPU pipeline. LOD is computed
+with integer comparisons (XLA HLO has no CLZ); the casex coefficient mux
+becomes a gather from a 256-entry group table; everything is elementwise,
+so the kernel tiles cleanly into VMEM blocks via the pallas grid.
+
+All kernels run with ``interpret=True``: real TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Scheme files live next to the AOT artifacts; overridable for tests.
+SCHEME_DIR = os.environ.get(
+    "RAPID_SCHEME_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "schemes"),
+)
+
+
+@functools.lru_cache(maxsize=None)
+def load_scheme(kind: str, width: int, groups: int):
+    """Load an exported scheme: returns (grid[256] int32, coeffs[G] int64)."""
+    path = os.path.join(SCHEME_DIR, f"{kind}{width}_g{groups}.json")
+    with open(path) as f:
+        data = json.load(f)
+    assert data["kind"] == kind and data["width"] == width
+    assert data["groups"] == groups and len(data["grid"]) == 256
+    grid = jnp.asarray(data["grid"], dtype=jnp.int32)
+    coeffs = jnp.asarray(data["coeffs"], dtype=jnp.int64)
+    return grid, coeffs
+
+
+def _lod(x, nbits):
+    """floor(log2(x)) for x >= 1, via nbits-1 comparisons (vectorised)."""
+    k = jnp.zeros_like(x)
+    for i in range(1, nbits):
+        k = k + (x >= (1 << i)).astype(x.dtype)
+    return k
+
+
+def _log_split(x, nbits, w):
+    """Characteristic k and W-bit left-aligned fraction of x (Eq. 2)."""
+    k = _lod(x, nbits)
+    low = x - (jnp.ones_like(x) << k)
+    # left-align: frac = low << (w - k); k <= nbits-1 <= w always for mul
+    frac = jnp.where(k <= w, low << jnp.maximum(w - k, 0), low >> jnp.maximum(k - w, 0))
+    return k, frac
+
+
+def rapid_mul_math(a, b, *, width, grid, coeffs):
+    """Bit-exact RAPID multiply on int64 tensors (values < 2^width)."""
+    a = a.astype(jnp.int64)
+    b = b.astype(jnp.int64)
+    w = width - 1
+    k1, x1 = _log_split(jnp.maximum(a, 1), width, w)
+    k2, x2 = _log_split(jnp.maximum(b, 1), width, w)
+    # region select: top-4 bits of each fraction -> 16x16 grid -> group
+    i = x1 >> (w - 4)
+    j = x2 >> (w - 4)
+    group = jnp.take(grid, (i * 16 + j).astype(jnp.int32))
+    c = jnp.take(coeffs, group)
+    xs = x1 + x2 + c
+    one = jnp.int64(1) << w
+    carry = xs >= one
+    mant = jnp.where(carry, jnp.minimum(xs, (one << 1) - 1), one + xs)
+    e = k1 + k2 + carry.astype(jnp.int64)
+    res = (mant << e) >> w
+    return jnp.where((a == 0) | (b == 0), jnp.int64(0), res)
+
+
+def rapid_div_math(a, b, *, width, grid, coeffs):
+    """Bit-exact RAPID 2N-by-N divide on int64 tensors.
+
+    ``width`` is the divisor width N; dividend a < 2^(2N). Saturation rules
+    match the Rust model: b == 0 -> 2^(2N)-1; overflow -> 2^N - 1.
+    """
+    a = a.astype(jnp.int64)
+    b = b.astype(jnp.int64)
+    n = width
+    w = n - 1
+    k1, x1 = _log_split(jnp.maximum(a, 1), 2 * n, w)
+    k2, x2 = _log_split(jnp.maximum(b, 1), n, w)
+    i = x1 >> (w - 4)
+    j = x2 >> (w - 4)
+    group = jnp.take(grid, (i * 16 + j).astype(jnp.int32))
+    c = jnp.take(coeffs, group)
+    borrow = x1 < x2
+    one = jnp.int64(1) << w
+    mant0 = jnp.where(borrow, (one << 1) - (x2 - x1), one + (x1 - x2))
+    e = k1 - k2 - borrow.astype(jnp.int64)
+    mant = jnp.maximum(mant0 - c, 1)
+    q = jnp.where(
+        e >= 0,
+        (mant << jnp.maximum(e, 0)) >> w,
+        mant >> jnp.minimum(w - e, 63),
+    )
+    sat_all = (jnp.int64(1) << (2 * n)) - 1
+    sat_n = (jnp.int64(1) << n) - 1
+    q = jnp.where(a == 0, 0, q)
+    q = jnp.where(a >= (b << n), sat_n, q)  # overflow rule
+    q = jnp.where(b == 0, sat_all, q)
+    return q
+
+
+def _mul_kernel(a_ref, b_ref, grid_ref, coeff_ref, o_ref, *, width):
+    o_ref[...] = rapid_mul_math(
+        a_ref[...], b_ref[...], width=width, grid=grid_ref[...], coeffs=coeff_ref[...]
+    )
+
+
+def _div_kernel(a_ref, b_ref, grid_ref, coeff_ref, o_ref, *, width):
+    o_ref[...] = rapid_div_math(
+        a_ref[...], b_ref[...], width=width, grid=grid_ref[...], coeffs=coeff_ref[...]
+    )
+
+
+# VMEM block: 8192 int64 lanes x 3 tensors = 192 KiB << 16 MiB VMEM; chosen
+# in DESIGN.md §Perf (leaves headroom for double buffering).
+BLOCK = 8192
+
+
+def rapid_mul_tables(a, b, grid_t, coeffs, *, width=16, block=BLOCK):
+    """Batched RAPID multiply with the scheme tables as *traced arguments*.
+
+    The AOT entry points thread the tables through as real parameters so
+    every artifact has a deterministic signature (jax may otherwise hoist
+    large captured constants into parameters for some graphs but not
+    others). The tables' BlockSpec maps every grid step to the whole table
+    — in VMEM they are a few hundred bytes pinned across the stream.
+    """
+    n = a.shape[0]
+    assert n % block == 0 or n < block, f"batch {n} not tileable by {block}"
+    blk = min(block, n)
+    kernel = functools.partial(_mul_kernel, width=width)
+    g = int(coeffs.shape[0])
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.int64),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a.astype(jnp.int64), b.astype(jnp.int64), grid_t, coeffs)
+
+
+def rapid_mul(a, b, *, width=16, groups=10, block=BLOCK):
+    """Convenience wrapper loading the scheme from disk (tests / eager)."""
+    grid_t, coeffs = load_scheme("mul", width, groups)
+    return rapid_mul_tables(a, b, grid_t, coeffs, width=width, block=block)
+
+
+def rapid_div_tables(a, b, grid_t, coeffs, *, width=8, block=BLOCK):
+    """Batched RAPID divide with the scheme tables as traced arguments."""
+    n = a.shape[0]
+    assert n % block == 0 or n < block, f"batch {n} not tileable by {block}"
+    blk = min(block, n)
+    kernel = functools.partial(_div_kernel, width=width)
+    g = int(coeffs.shape[0])
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.int64),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(a.astype(jnp.int64), b.astype(jnp.int64), grid_t, coeffs)
+
+
+def rapid_div(a, b, *, width=8, groups=9, block=BLOCK):
+    """Convenience wrapper loading the scheme from disk (tests / eager)."""
+    grid_t, coeffs = load_scheme("div", width, groups)
+    return rapid_div_tables(a, b, grid_t, coeffs, width=width, block=block)

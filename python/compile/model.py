@@ -1,0 +1,117 @@
+"""Layer-2 JAX models: the compute graphs AOT-lowered for the Rust runtime.
+
+Every entry point composes the Layer-1 Pallas kernels (``kernels.rapid``)
+into the hot graphs the coordinator serves:
+
+* ``batched_mul`` / ``batched_div``  — raw RAPID arithmetic over vectors
+  (the paper's unit as a service; the L3 dynamic batcher feeds these).
+* ``mac``                            — multiply-accumulate reduction, the
+  inner loop shape of all three applications' kernels.
+* ``conv3x3``                        — integer 3x3 convolution with RAPID
+  multiplies: the Harris gradient / JPEG filter workload shape.
+* ``pan_tompkins_energy``            — squaring + moving-window-integration
+  stage of the QRS detector on int samples.
+
+All graphs are integer-only and bit-exact mirrors of the Rust application
+kernels, which lets ``rust/tests/pjrt_roundtrip.rs`` assert cross-layer
+equality. Python never runs at serve time: ``aot.py`` lowers these once to
+HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rapid as K
+
+# Fixed AOT shapes (the dynamic batcher pads to these).
+BATCH = 8192
+IMG = 64
+WIN = 32
+
+
+def batched_mul(a, b, grid, coeffs):
+    """[BATCH] x [BATCH] -> [BATCH] RAPID-10 16-bit products."""
+    return (K.rapid_mul_tables(a, b, grid, coeffs, width=16),)
+
+
+def batched_div(a, b, grid, coeffs):
+    """[BATCH] x [BATCH] -> [BATCH] RAPID-9 16/8 quotients."""
+    return (K.rapid_div_tables(a, b, grid, coeffs, width=8),)
+
+
+def mac(a, b, grid, coeffs):
+    """Dot product with RAPID multiplies, exact accumulation -> [1]."""
+    p = K.rapid_mul_tables(a, b, grid, coeffs, width=16)
+    return (jnp.sum(p, keepdims=True),)
+
+
+def conv3x3(img, kern, grid, coeffs):
+    """[IMG, IMG] int32 image (x) 3x3 int kernel, RAPID multiplies.
+
+    Same-padding is *not* applied: output is [IMG-2, IMG-2], matching the
+    Rust mirror (`apps::fixed::conv3x3_rapid`). Products are computed by
+    flattening each (pixel, tap) pair through the batched kernel so every
+    multiply goes through the same RAPID datapath.
+    """
+    h = img.shape[0] - 2
+    w = img.shape[1] - 2
+    taps = []
+    for dy in range(3):
+        for dx in range(3):
+            taps.append(jax.lax.dynamic_slice(img, (dy, dx), (h, w)))
+    patches = jnp.stack(taps, axis=-1).astype(jnp.int64)  # [h, w, 9]
+    kflat = kern.reshape(-1).astype(jnp.int64)  # [9]
+    # sign-magnitude: RAPID units are unsigned (the paper's units are
+    # unsigned; applications carry the sign separately)
+    ka = jnp.abs(kflat)
+    ks = jnp.sign(kflat)
+    pa = jnp.abs(patches)
+    ps = jnp.sign(patches)
+    flat_a = jnp.broadcast_to(pa, (h, w, 9)).reshape(-1)
+    flat_b = jnp.broadcast_to(ka, (h, w, 9)).reshape(-1)
+    n = flat_a.shape[0]
+    pad = (-n) % K.BLOCK
+    flat_a = jnp.pad(flat_a, (0, pad))
+    flat_b = jnp.pad(flat_b, (0, pad))
+    prod = K.rapid_mul_tables(flat_a, flat_b, grid, coeffs, width=16)[: n]
+    prod = prod.reshape(h, w, 9) * ps * ks
+    return (jnp.sum(prod, axis=-1),)
+
+
+def pan_tompkins_energy(sig, grid, coeffs):
+    """Squaring + WIN-sample moving-window integration (QRS energy stage).
+
+    sig: [BATCH] int32 bandpassed/derivative samples (signed). The square
+    uses the RAPID multiplier on |x|; MWI is an exact windowed sum, like
+    the adder-only hardware stage.
+    """
+    mag = jnp.abs(sig).astype(jnp.int64)
+    sq = K.rapid_mul_tables(mag, mag, grid, coeffs, width=16)
+    csum = jnp.cumsum(sq)
+    shifted = jnp.pad(csum, (WIN, 0))[: csum.shape[0]]
+    mwi = csum - shifted
+    return (mwi,)
+
+
+def entry_points():
+    """(name, fn, example_args) for every artifact `aot.py` emits.
+
+    Every artifact's trailing two parameters are the scheme tables
+    (grid: int32[256], coeffs: int64[G]) — the Rust runtime loads them from
+    `artifacts/schemes/*.json` and passes them on every call, so the
+    compiled signature is deterministic (DESIGN.md §2).
+    """
+    i64 = jnp.int64
+    v = jax.ShapeDtypeStruct((BATCH,), i64)
+    img = jax.ShapeDtypeStruct((IMG, IMG), i64)
+    kern = jax.ShapeDtypeStruct((3, 3), i64)
+    grid = jax.ShapeDtypeStruct((256,), jnp.int32)
+    mul_coeffs = jax.ShapeDtypeStruct((10,), i64)
+    div_coeffs = jax.ShapeDtypeStruct((9,), i64)
+    return [
+        ("rapid_mul16", batched_mul, (v, v, grid, mul_coeffs)),
+        ("rapid_div8", batched_div, (v, v, grid, div_coeffs)),
+        ("rapid_mac16", mac, (v, v, grid, mul_coeffs)),
+        ("conv3x3_rapid", conv3x3, (img, kern, grid, mul_coeffs)),
+        ("pan_tompkins_energy", pan_tompkins_energy, (v, grid, mul_coeffs)),
+    ]

@@ -1,0 +1,144 @@
+"""L1 kernel vs oracle — the core build-time correctness signal.
+
+Sweeps shapes, widths and value distributions (hand-rolled hypothesis-style
+sweep: the offline image has no `hypothesis` package) and asserts
+bit-equality between the Pallas kernels and the independent numpy oracles,
+plus approximation-quality bounds against exact arithmetic.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import rapid as K  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+SCHEMES = os.path.join(K.SCHEME_DIR, "mul16_g10.json")
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(SCHEMES),
+    reason="scheme files missing - run `make artifacts` first",
+)
+
+RNG = np.random.default_rng(0xA91D)
+
+
+def rand_ops(n, bits, rng=RNG):
+    return rng.integers(0, 1 << bits, size=n, dtype=np.int64)
+
+
+# ---------------------------------------------------------------- mul ----
+
+@pytest.mark.parametrize("n", [64, 1000, 8192, 16384])
+@pytest.mark.parametrize("groups", [3, 5, 10])
+def test_mul_matches_oracle_shapes(n, groups):
+    a = rand_ops(n, 16)
+    b = rand_ops(n, 16)
+    got = np.asarray(K.rapid_mul(jax.numpy.asarray(a), jax.numpy.asarray(b), width=16, groups=groups))
+    want = ref.ref_mul(a, b, width=16, groups=groups)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mul_edge_values():
+    edges = np.array([0, 1, 2, 3, 4, 5, 15, 16, 17, 127, 128, 255, 256,
+                      32767, 32768, 65534, 65535], dtype=np.int64)
+    a, b = np.meshgrid(edges, edges)
+    a, b = a.ravel(), b.ravel()
+    got = np.asarray(K.rapid_mul(jax.numpy.asarray(a), jax.numpy.asarray(b)))
+    want = ref.ref_mul(a, b)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mul_zero_annihilates():
+    a = rand_ops(256, 16)
+    z = np.zeros(256, dtype=np.int64)
+    got = np.asarray(K.rapid_mul(jax.numpy.asarray(a), jax.numpy.asarray(z)))
+    assert (got == 0).all()
+
+
+def test_mul_quality_vs_exact():
+    a = rand_ops(20000, 16)
+    b = rand_ops(20000, 16)
+    nz = (a > 0) & (b > 0)
+    a, b = a[nz][: K.BLOCK], b[nz][: K.BLOCK]  # keep a tileable batch
+    got = np.asarray(K.rapid_mul(jax.numpy.asarray(a), jax.numpy.asarray(b))).astype(float)
+    exact = (a * b).astype(float)
+    rel = np.abs(exact - got) / exact
+    assert rel.mean() < 0.01, f"ARE {rel.mean()}"   # paper band ~0.6 %
+    assert rel.max() < 0.12, f"PRE {rel.max()}"
+
+
+def test_mul_commutes():
+    a = rand_ops(4096, 16)
+    b = rand_ops(4096, 16)
+    ab = np.asarray(K.rapid_mul(jax.numpy.asarray(a), jax.numpy.asarray(b)))
+    ba = np.asarray(K.rapid_mul(jax.numpy.asarray(b), jax.numpy.asarray(a)))
+    np.testing.assert_array_equal(ab, ba)
+
+
+# ---------------------------------------------------------------- div ----
+
+@pytest.mark.parametrize("n", [64, 1000, 8192])
+@pytest.mark.parametrize("groups", [3, 5, 9])
+def test_div_matches_oracle_shapes(n, groups):
+    b = rand_ops(n, 8)
+    a = rand_ops(n, 16)
+    got = np.asarray(K.rapid_div(jax.numpy.asarray(a), jax.numpy.asarray(b), width=8, groups=groups))
+    want = ref.ref_div(a, b, width=8, groups=groups)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_div_edge_values():
+    a = np.array([0, 1, 2, 255, 256, 4095, 65535, 300, 1000], dtype=np.int64)
+    b = np.array([0, 1, 2, 3, 128, 255, 17, 90, 1], dtype=np.int64)
+    got = np.asarray(K.rapid_div(jax.numpy.asarray(a), jax.numpy.asarray(b), width=8, groups=9))
+    want = ref.ref_div(a, b, width=8, groups=9)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_div_saturation_rules():
+    a = np.array([123, 0, 65535], dtype=np.int64)
+    b = np.array([0, 7, 1], dtype=np.int64)
+    got = np.asarray(K.rapid_div(jax.numpy.asarray(a), jax.numpy.asarray(b), width=8, groups=9))
+    assert got[0] == (1 << 16) - 1  # div by zero
+    assert got[1] == 0
+    assert got[2] == 255  # overflow saturates to N bits
+
+
+def test_div_quality_vs_exact():
+    b = rand_ops(40000, 8)
+    a = rand_ops(40000, 16)
+    ok = (b > 0) & (a >= b) & (a < (b << 8))
+    a, b = a[ok][: K.BLOCK], b[ok][: K.BLOCK]  # keep a tileable batch
+    got = np.asarray(K.rapid_div(jax.numpy.asarray(a), jax.numpy.asarray(b), width=8, groups=9)).astype(float)
+    exact = (a // b).astype(float)
+    rel = np.abs(exact - got) / exact
+    assert rel.mean() < 0.02, f"ARE {rel.mean()}"
+
+
+# ------------------------------------------------------------- widths ----
+
+@pytest.mark.parametrize("width,bits", [(16, 16), (16, 12), (16, 8)])
+def test_mul_narrow_value_ranges(width, bits):
+    """Value-range sweep: operands drawn from sub-ranges of the width."""
+    a = rand_ops(2048, bits)
+    b = rand_ops(2048, bits)
+    got = np.asarray(K.rapid_mul(jax.numpy.asarray(a), jax.numpy.asarray(b), width=width))
+    want = ref.ref_mul(a, b, width=width)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_block_boundaries():
+    """Batch sizes around the pallas BLOCK boundary tile correctly."""
+    for n in [K.BLOCK - 1, K.BLOCK, K.BLOCK * 2]:
+        if n % K.BLOCK and n > K.BLOCK:
+            continue
+        a = rand_ops(n, 16)
+        b = rand_ops(n, 16)
+        got = np.asarray(K.rapid_mul(jax.numpy.asarray(a), jax.numpy.asarray(b)))
+        want = ref.ref_mul(a, b)
+        np.testing.assert_array_equal(got, want)

@@ -1,0 +1,116 @@
+"""L2 model tests: the AOT entry-point graphs against independent numpy
+mirrors (the same mirrors the Rust cross-layer test uses), plus signature
+checks that pin the artifact interface the runtime relies on."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels import rapid as K  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+SCHEMES = os.path.join(K.SCHEME_DIR, "mul16_g10.json")
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(SCHEMES),
+    reason="scheme files missing - run `make artifacts` first",
+)
+
+RNG = np.random.default_rng(7)
+
+
+def tables(kind, width, groups):
+    return K.load_scheme(kind, width, groups)
+
+
+def test_batched_mul_entry_matches_ref():
+    g, c = tables("mul", 16, 10)
+    a = RNG.integers(0, 1 << 16, size=model.BATCH, dtype=np.int64)
+    b = RNG.integers(0, 1 << 16, size=model.BATCH, dtype=np.int64)
+    (out,) = model.batched_mul(jax.numpy.asarray(a), jax.numpy.asarray(b), g, c)
+    np.testing.assert_array_equal(np.asarray(out), ref.ref_mul(a, b, width=16, groups=10))
+
+
+def test_batched_div_entry_matches_ref():
+    g, c = tables("div", 8, 9)
+    a = RNG.integers(0, 1 << 16, size=model.BATCH, dtype=np.int64)
+    b = RNG.integers(0, 1 << 8, size=model.BATCH, dtype=np.int64)
+    (out,) = model.batched_div(jax.numpy.asarray(a), jax.numpy.asarray(b), g, c)
+    np.testing.assert_array_equal(np.asarray(out), ref.ref_div(a, b, width=8, groups=9))
+
+
+def test_mac_entry_is_sum_of_products():
+    g, c = tables("mul", 16, 10)
+    a = RNG.integers(0, 1 << 16, size=model.BATCH, dtype=np.int64)
+    b = RNG.integers(0, 1 << 16, size=model.BATCH, dtype=np.int64)
+    (out,) = model.mac(jax.numpy.asarray(a), jax.numpy.asarray(b), g, c)
+    want = ref.ref_mul(a, b, width=16, groups=10).sum()
+    assert np.asarray(out)[0] == want
+
+
+def test_conv3x3_entry_matches_numpy_mirror():
+    g, c = tables("mul", 16, 10)
+    img = RNG.integers(0, 256, size=(model.IMG, model.IMG), dtype=np.int64)
+    kern = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], dtype=np.int64)
+    (out,) = model.conv3x3(jax.numpy.asarray(img), jax.numpy.asarray(kern), g, c)
+    h = model.IMG - 2
+    want = np.zeros((h, h), dtype=np.int64)
+    for dy in range(3):
+        for dx in range(3):
+            patch = img[dy : dy + h, dx : dx + h]
+            prod = ref.ref_mul(np.abs(patch), np.full_like(patch, abs(kern[dy, dx])), width=16, groups=10)
+            want += prod * np.sign(patch) * np.sign(kern[dy, dx])
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+def test_conv3x3_negative_kernel_taps():
+    """Sign-magnitude handling: a Sobel-like kernel with negative taps."""
+    g, c = tables("mul", 16, 10)
+    img = RNG.integers(0, 256, size=(model.IMG, model.IMG), dtype=np.int64)
+    kern = np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], dtype=np.int64)
+    (out,) = model.conv3x3(jax.numpy.asarray(img), jax.numpy.asarray(kern), g, c)
+    out = np.asarray(out)
+    # flat image -> zero gradient
+    flat = np.full((model.IMG, model.IMG), 77, dtype=np.int64)
+    (zero_out,) = model.conv3x3(jax.numpy.asarray(flat), jax.numpy.asarray(kern), g, c)
+    assert (np.asarray(zero_out) == 0).all()
+    assert out.shape == (model.IMG - 2, model.IMG - 2)
+
+
+def test_pan_tompkins_energy_matches_mirror():
+    g, c = tables("mul", 16, 10)
+    sig = RNG.integers(-2048, 2048, size=model.BATCH, dtype=np.int64)
+    (out,) = model.pan_tompkins_energy(jax.numpy.asarray(sig), g, c)
+    mag = np.abs(sig)
+    sq = ref.ref_mul(mag, mag, width=16, groups=10)
+    want = np.zeros_like(sq)
+    acc = 0
+    for i in range(len(sq)):
+        acc += sq[i]
+        if i >= model.WIN:
+            acc -= sq[i - model.WIN]
+        want[i] = acc
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+def test_entry_points_signature_contract():
+    """The runtime relies on: every entry's last two args are the tables."""
+    eps = model.entry_points()
+    assert {n for n, _, _ in eps} == {
+        "rapid_mul16",
+        "rapid_div8",
+        "rapid_mac16",
+        "conv3x3_rapid",
+        "pan_tompkins_energy",
+    }
+    for name, _, args in eps:
+        grid, coeffs = args[-2], args[-1]
+        assert grid.shape == (256,), name
+        assert str(grid.dtype) == "int32", name
+        assert coeffs.shape[0] in (9, 10), name
+        assert str(coeffs.dtype) == "int64", name

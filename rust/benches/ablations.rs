@@ -1,0 +1,126 @@
+//! Ablation benches for the design choices DESIGN.md §5 calls out:
+//!
+//!  A. coefficient-store scaling — selector LUT cost vs number of
+//!     coefficients (RAPID's clustered G vs per-cell 2^F×2^F), the §IV-A
+//!     scalability argument;
+//!  B. ternary-fold vs separate coefficient adder — the LUT/latency value
+//!     of §IV-B's carry-chain ternary addition;
+//!  C. window-trimmed vs naive anti-log shifter — the synthesis pruning
+//!     that keeps the Mitchell datapath small;
+//!  D. clustered-vs-per-cell accuracy/LUT Pareto (accuracy side of A).
+
+use rapid::arith::rapid::RapidMul;
+use rapid::arith::registry::make_mul;
+use rapid::arith::regions::derive_mul_scheme;
+use rapid::bench_support::table::{f2, Table};
+use rapid::circuit::netlist::Netlist;
+use rapid::circuit::primitive::Delays;
+use rapid::circuit::synth::adder::{add_bus, ternary_add_bus};
+use rapid::circuit::synth::mux::coeff_mux;
+use rapid::circuit::synth::shifter::{shift_left, shift_left_keep};
+use rapid::circuit::timing::critical_path;
+use rapid::error::{characterize_mul, CharacterizeOpts};
+
+fn main() {
+    let d = Delays::default();
+
+    // ----- A: selector cost vs coefficient count -------------------------
+    let mut t = Table::new(
+        "Ablation A — coefficient selector LUT cost vs G (16-bit, 4+4 MSB select)",
+        &["G", "LUTs", "delay(ns)"],
+    );
+    for g in [1usize, 3, 5, 10, 15] {
+        let scheme = derive_mul_scheme(g);
+        let table = scheme.coeff_table(15);
+        let mut nl = Netlist::new("sel");
+        let f1 = nl.input_bus(4);
+        let f2b = nl.input_bus(4);
+        let out = coeff_mux(&mut nl, &f1, &f2b, &scheme.grid, &table, 15);
+        nl.set_outputs(&out);
+        nl.optimize();
+        t.row(&[g.to_string(), nl.count_luts().to_string(), f2(critical_path(&nl, &d))]);
+    }
+    t.print();
+    println!("per-cell (SIMDive/REALM-style) selectors grow toward one LUT6 tree per output bit");
+    println!("per 8 select inputs — the exponential wall the clustered scheme avoids.");
+
+    // ----- B: ternary fold vs separate adder ------------------------------
+    let mut t = Table::new(
+        "Ablation B — folding the coefficient into the fraction add (W=15)",
+        &["structure", "LUTs", "delay(ns)"],
+    );
+    {
+        // folded: one ternary add
+        let mut nl = Netlist::new("tern");
+        let a = nl.input_bus(15);
+        let b = nl.input_bus(15);
+        let c = nl.input_bus(15);
+        let s = ternary_add_bus(&mut nl, &a, &b, &c);
+        nl.set_outputs(&s);
+        nl.optimize();
+        t.row(&["ternary (folded coeff)".into(), nl.count_luts().to_string(), f2(critical_path(&nl, &d))]);
+    }
+    {
+        // naive: two binary adds in series (MBM/INZeD-style extra circuit)
+        let mut nl = Netlist::new("2xadd");
+        let a = nl.input_bus(15);
+        let b = nl.input_bus(15);
+        let c = nl.input_bus(15);
+        let s1 = add_bus(&mut nl, &a, &b, None);
+        let mut ce: Vec<_> = c.clone();
+        ce.push(nl.constant(false));
+        let s2 = add_bus(&mut nl, &s1, &ce, None);
+        nl.set_outputs(&s2);
+        nl.optimize();
+        t.row(&["two binary adders".into(), nl.count_luts().to_string(), f2(critical_path(&nl, &d))]);
+    }
+    t.print();
+
+    // ----- C: shifter window trimming -------------------------------------
+    let mut t = Table::new(
+        "Ablation C — anti-log shifter: naive vs window-trimmed (17-bit mant, 5-bit shamt)",
+        &["variant", "LUTs"],
+    );
+    for (label, keep, optimize) in [
+        ("naive, no synthesis opt", false, false),
+        ("naive + const-fold/DCE", false, true),
+        ("window-trimmed (keep >= W)", true, true),
+    ] {
+        let mut nl = Netlist::new("shift");
+        let x = nl.input_bus(17);
+        let sh = nl.input_bus(5);
+        let out = if keep {
+            shift_left_keep(&mut nl, &x, &sh, 47, 15)
+        } else {
+            shift_left(&mut nl, &x, &sh, 47)
+        };
+        nl.set_outputs(&out[15..47]);
+        if optimize {
+            nl.optimize();
+        }
+        t.row(&[label.into(), nl.count_luts().to_string()]);
+    }
+    t.print();
+    println!("finding: the optimiser's backward DCE recovers the window trim exactly — the");
+    println!("builder-side pruning matters for unoptimised netlists and synthesis runtime only.");
+
+    // ----- D: accuracy/size Pareto of clustered vs per-cell ---------------
+    let mut t = Table::new(
+        "Ablation D — accuracy vs coefficient count (16-bit mul, 400k MC)",
+        &["scheme", "coeffs", "ARE%"],
+    );
+    let opts = CharacterizeOpts { mc_samples: 400_000, ..Default::default() };
+    for g in [1usize, 3, 5, 10] {
+        let u = RapidMul::new(16, g);
+        let r = characterize_mul(&u, &opts);
+        t.row(&[format!("RAPID-{g}"), g.to_string(), f2(r.are * 100.0)]);
+    }
+    for (name, coeffs) in [("simdive", 64usize), ("realm256", 256)] {
+        let u = make_mul(name, 16).unwrap();
+        let r = characterize_mul(u.as_ref(), &opts);
+        t.row(&[name.into(), coeffs.to_string(), f2(r.are * 100.0)]);
+    }
+    t.print();
+    println!("\nRAPID-5/10 reach per-cell-64 accuracy with 6-12x fewer stored coefficients;");
+    println!("the 4-MSB grid's within-cell spread floors ARE near 0.75% for any G (see EXPERIMENTS.md).");
+}

@@ -1,0 +1,55 @@
+//! Figs. 11 & 12 — application-level latency/throughput with pipelined vs
+//! non-pipelined units, and the latency-throughput Pareto front.
+//! Configurations: accurate NP/P2/P4 and RAPID NP/P2/P4, scheduled over
+//! each application's kernel chain (streaming, no function pipelining —
+//! §V-B's "fair comparison" setup).
+
+use rapid::apps::census::rollup;
+use rapid::bench_support::table::{f2, Table};
+use rapid::circuit::report::{characterize, UnitReport};
+use rapid::circuit::synth::divider::rapid_div_netlist;
+use rapid::circuit::synth::exact_ip::{exact_div_netlist, exact_mul_netlist};
+use rapid::circuit::synth::multiplier::rapid_mul_netlist;
+use rapid::coordinator::pipeline_sched::pareto_front;
+
+fn units(stages: usize) -> (UnitReport, UnitReport, UnitReport, UnitReport) {
+    (
+        characterize(&exact_mul_netlist(16), stages, 80, 1),
+        characterize(&exact_div_netlist(8), stages, 80, 1),
+        characterize(&rapid_mul_netlist(16, if stages >= 4 { 10 } else { 5 }), stages, 80, 2),
+        characterize(&rapid_div_netlist(8, 9), stages, 80, 2),
+    )
+}
+
+fn main() {
+    let configs: Vec<(String, UnitReport, UnitReport, UnitReport, UnitReport)> = [1usize, 2, 4]
+        .into_iter()
+        .map(|s| {
+            let (am, ad, rm, rd) = units(s);
+            (if s == 1 { "NP".to_string() } else { format!("P{s}") }, am, ad, rm, rd)
+        })
+        .collect();
+
+    for app in ["pantompkins", "jpeg", "harris"] {
+        let mut t = Table::new(
+            &format!("Fig. 11 — {app}: latency & throughput, NP vs pipelined"),
+            &["config", "latency(ns)", "tput(items/µs)"],
+        );
+        let mut points = Vec::new();
+        let mut labels = Vec::new();
+        for (cfg, am, ad, rm, rd) in &configs {
+            for (fam, m, d) in [("Acc", am, ad), ("RAPID", rm, rd)] {
+                let r = rollup(app, m, d);
+                t.row(&[format!("{fam}_{cfg}"), f2(r.latency_ns), format!("{:.4}", r.throughput_per_us)]);
+                points.push((r.latency_ns, r.throughput_per_us));
+                labels.push(format!("{fam}_{cfg}"));
+            }
+        }
+        t.print();
+        let front = pareto_front(&points);
+        let names: Vec<&str> = front.iter().map(|&i| labels[i].as_str()).collect();
+        println!("Fig. 12 Pareto front for {app}: {}", names.join(", "));
+    }
+    println!("\npaper shape: pipelining raises throughput at an E2E-latency cost; RAPID_P2/RAPID_P4");
+    println!("dominate the Pareto front; RAPID_P2 beats Acc_NP and Acc_P2 on both axes.");
+}

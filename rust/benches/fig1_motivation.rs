@@ -1,0 +1,40 @@
+//! Fig. 1 — the motivation plot: area, delay and energy of *accurate*
+//! LUT-based multiplication vs division at 8/16/32 bit. Regenerates the
+//! paper's observation that accurate division costs a multiple of a
+//! same-size multiplication in latency and energy, growing with width.
+
+use rapid::bench_support::table::{f1, f2, Table};
+use rapid::circuit::report::characterize;
+use rapid::circuit::synth::exact_ip::{exact_div_netlist, exact_mul_netlist};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig. 1 — accurate LUT-based mul vs div (8/16/32-bit)",
+        &["op", "width", "LUT", "delay(ns)", "E/op", "div/mul delay", "div/mul energy"],
+    );
+    for (n_mul, n_div) in [(8u32, 4u32), (16, 8), (32, 16)] {
+        let m = characterize(&exact_mul_netlist(n_mul), 1, 150, 1);
+        let d = characterize(&exact_div_netlist(n_div), 1, 150, 1);
+        t.row(&[
+            "mul".into(),
+            format!("{n_mul}x{n_mul}"),
+            m.luts.to_string(),
+            f2(m.latency_ns),
+            f1(m.energy_per_op),
+            "1.0".into(),
+            "1.0".into(),
+        ]);
+        t.row(&[
+            "div".into(),
+            format!("{}/{}", 2 * n_div, n_div),
+            d.luts.to_string(),
+            f2(d.latency_ns),
+            f1(d.energy_per_op),
+            f2(d.latency_ns / m.latency_ns),
+            f2(d.energy_per_op / m.energy_per_op),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: division delay/energy is a growing multiple of same-size multiplication —");
+    println!("the gap RAPID closes by translating division to log-domain subtraction.");
+}

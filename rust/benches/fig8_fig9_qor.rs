@@ -1,0 +1,103 @@
+//! Figs. 8 & 9 (+ the Pan-Tompkins QoR paragraph) — end-to-end QoR of the
+//! three applications under four arithmetic configurations: accurate,
+//! RAPID-10/9, SIMDive, and the truncated pair DRUM-6 + AAXD-8/4.
+//! JPEG reports PSNR over procedural aerial images; HCD reports % correct
+//! motion vectors over frame pairs with known motion; Pan-Tompkins reports
+//! detection sensitivity + energy-signal PSNR on synthetic ECG.
+
+use rapid::apps::ecg::{generate, EcgConfig};
+use rapid::apps::harris::{corners, motion_vectors};
+use rapid::apps::images::{aerial_scene, frame_pair};
+use rapid::apps::jpeg::roundtrip;
+use rapid::apps::pantompkins;
+use rapid::apps::qor::{correct_vector_ratio, psnr, Sensitivity};
+use rapid::arith::registry::{make_div, make_mul};
+use rapid::bench_support::table::{f2, Table};
+use rapid::util::XorShift256;
+
+const CONFIGS: &[(&str, &str, &str)] = &[
+    ("accurate", "exact", "exact"),
+    ("RAPID-10/9", "rapid10", "rapid9"),
+    ("SIMDive", "simdive", "simdive"),
+    ("DRUM6+AAXD", "drum6", "aaxd"),
+];
+
+fn main() {
+    let n_images = 12;
+    let mut t = Table::new(
+        "Fig. 8 — JPEG compression on aerial images (mean PSNR, 16-bit kernels)",
+        &["config", "PSNR(dB)", "Δ vs accurate"],
+    );
+    let mut acc_ref = 0.0;
+    for (label, mul, div) in CONFIGS {
+        let m = make_mul(mul, 16).unwrap();
+        let d = make_div(div, 8).unwrap();
+        let mut p = 0.0;
+        for seed in 0..n_images {
+            let img = aerial_scene(64, 64, 100 + seed);
+            let (rec, _) = roundtrip(&img, m.as_ref(), d.as_ref());
+            p += psnr(&img.px, &rec.px, 255.0);
+        }
+        p /= n_images as f64;
+        if *label == "accurate" {
+            acc_ref = p;
+        }
+        t.row(&[label.to_string(), f2(p), f2(p - acc_ref)]);
+    }
+    t.print();
+    println!("paper: accurate 30.9 dB, RAPID 28.7, SIMDive 29.3, DRUM+AAXD 24.4");
+
+    let mut t = Table::new(
+        "Fig. 9 — Harris tracking: % correct motion vectors",
+        &["config", "corners/frame", "correct vectors %"],
+    );
+    let n_pairs = 10u64;
+    for (label, mul, div) in CONFIGS {
+        let m = make_mul(mul, 16).unwrap();
+        let d = make_div(div, 8).unwrap();
+        let mut rng = XorShift256::new(9);
+        let (mut ratio, mut ncorners) = (0.0, 0usize);
+        for i in 0..n_pairs {
+            let dx = rng.below(9) as i64 - 4;
+            let dy = rng.below(9) as i64 - 4;
+            let (a, b) = frame_pair(96, 96, dx, dy, 500 + i);
+            let cs = corners(&a, m.as_ref(), d.as_ref(), 15);
+            let v = motion_vectors(&a, &b, &cs, 6);
+            ratio += correct_vector_ratio(&v, (-dx as f64, -dy as f64), 1.5);
+            ncorners += cs.len();
+        }
+        t.row(&[
+            label.to_string(),
+            (ncorners / n_pairs as usize).to_string(),
+            f2(100.0 * ratio / n_pairs as f64),
+        ]);
+    }
+    t.print();
+    println!("paper: accurate 100%, RAPID 94%, SIMDive 97%, DRUM+AAXD 83%");
+
+    let mut t = Table::new(
+        "Pan-Tompkins QRS detection (synthetic 150 s ECG @200 Hz)",
+        &["config", "sensitivity", "F1", "false+", "energy PSNR(dB)"],
+    );
+    let rec = generate(200 * 150, &EcgConfig::default(), 77);
+    let em = make_mul("exact", 16).unwrap();
+    let ed = make_div("exact", 8).unwrap();
+    let (mw_ref, _, _) = pantompkins::run(&rec.samples, rec.fs, em.as_ref(), ed.as_ref());
+    let peak = *mw_ref.iter().max().unwrap() as f64;
+    for (label, mul, div) in CONFIGS {
+        let m = make_mul(mul, 16).unwrap();
+        let d = make_div(div, 8).unwrap();
+        let (mw, peaks, delay) = pantompkins::run(&rec.samples, rec.fs, m.as_ref(), d.as_ref());
+        let s = Sensitivity::measure(&rec.r_peaks, &peaks, delay, 30);
+        t.row(&[
+            label.to_string(),
+            f2(s.sensitivity()),
+            f2(s.f1()),
+            s.false_positives.to_string(),
+            f2(psnr(&mw_ref, &mw, peak)),
+        ]);
+    }
+    t.print();
+    println!("paper bar: >= 28 dB PSNR and ~100% detection for the near-unbiased designs;");
+    println!("biased truncated pair drops detection by ~1% via false positives.");
+}

@@ -1,0 +1,92 @@
+//! §Perf — this repo's own hot paths (not a paper figure): throughput of
+//! the bit-accurate units, the error-characterisation sweeps, gate-level
+//! netlist evaluation, and the batched PJRT serving path (when artifacts
+//! exist). Records the numbers EXPERIMENTS.md §Perf tracks across
+//! optimization iterations.
+
+use rapid::arith::registry::{make_div, make_mul};
+use rapid::bench_support::table::Table;
+use rapid::circuit::netlist::Netlist;
+use rapid::circuit::synth::multiplier::rapid_mul_netlist;
+use rapid::error::{characterize_mul, CharacterizeOpts};
+use rapid::util::timer::{bench, black_box, fmt_ns};
+use rapid::util::XorShift256;
+
+fn main() {
+    let mut t = Table::new("§Perf — hot-path microbenchmarks", &["path", "time", "throughput"]);
+
+    // 1. functional unit throughput (the app kernels' inner loop)
+    let mul = make_mul("rapid10", 16).unwrap();
+    let div = make_div("rapid9", 8).unwrap();
+    let mut rng = XorShift256::new(1);
+    let ops: Vec<(u64, u64)> = (0..4096).map(|_| (rng.bits(16).max(1), rng.bits(16).max(1))).collect();
+    let r = bench("rapid10_mul16 x4096", || {
+        let mut acc = 0u64;
+        for &(a, b) in &ops {
+            acc = acc.wrapping_add(mul.mul(a, b));
+        }
+        black_box(acc);
+    });
+    t.row(&["rapid10 mul (functional)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+
+    let dops: Vec<(u64, u64)> = (0..4096).map(|_| (rng.bits(16), rng.bits(8).max(1))).collect();
+    let r = bench("rapid9_div8 x4096", || {
+        let mut acc = 0u64;
+        for &(a, b) in &dops {
+            acc = acc.wrapping_add(div.div(a, b));
+        }
+        black_box(acc);
+    });
+    t.row(&["rapid9 div (functional)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+
+    // 2. exhaustive 8-bit error sweep (Table III accuracy inner loop)
+    let m8 = make_mul("rapid10", 8).unwrap();
+    let r = bench("exhaustive-8bit-char", || {
+        let rep = characterize_mul(m8.as_ref(), &CharacterizeOpts::default());
+        black_box(rep.are);
+    });
+    t.row(&["exhaustive 8-bit ARE sweep".into(), fmt_ns(r.median_ns), format!("{:.1} Mpairs/s", 65025.0 / (r.median_ns * 1e-9) / 1e6)]);
+
+    // 3. Monte-Carlo 32-bit characterisation (threaded)
+    let m32 = make_mul("rapid10", 32).unwrap();
+    let opts = CharacterizeOpts { mc_samples: 1_000_000, ..Default::default() };
+    let r = bench("mc-32bit-1M", || {
+        let rep = characterize_mul(m32.as_ref(), &opts);
+        black_box(rep.are);
+    });
+    t.row(&["Monte-Carlo 32-bit (1M pairs)".into(), fmt_ns(r.median_ns), format!("{:.1} Mpairs/s", 1e6 / (r.median_ns * 1e-9) / 1e6)]);
+
+    // 4. gate-level netlist evaluation (power/equivalence inner loop)
+    let nl = rapid_mul_netlist(16, 10);
+    let bits = Netlist::pack_inputs(&[16, 16], &[12345, 6789]);
+    let r = bench("netlist-eval", || {
+        black_box(nl.eval_outputs(&bits));
+    });
+    t.row(&["gate-level eval (16-bit RAPID)".into(), fmt_ns(r.median_ns), format!("{:.1} kevals/s", 1.0 / (r.median_ns * 1e-9) / 1e3)]);
+
+    // 5. batched PJRT serving path (optional: needs artifacts)
+    if std::path::Path::new("artifacts/rapid_mul16.hlo.txt").exists() {
+        use rapid::runtime::client::Input;
+        use rapid::runtime::{ArtifactStore, Runtime, SchemeTables};
+        let store = ArtifactStore::open(Runtime::cpu().unwrap(), "artifacts").unwrap();
+        let art = store.get("rapid_mul16").unwrap();
+        let tables = SchemeTables::load("artifacts/schemes", "mul", 16, 10).unwrap();
+        let a: Vec<i64> = (0..8192).map(|_| rng.bits(16) as i64).collect();
+        let b: Vec<i64> = (0..8192).map(|_| rng.bits(16) as i64).collect();
+        let r = bench("pjrt-batch-8192", || {
+            let inputs = [
+                Input::I64(a.clone(), vec![8192]),
+                Input::I64(b.clone(), vec![8192]),
+                Input::I32(tables.grid.clone(), vec![256]),
+                Input::I64(tables.coeffs.clone(), vec![tables.coeffs.len()]),
+            ];
+            let out = store.runtime().run_mixed(&art.exe, &inputs).unwrap();
+            black_box(out[0][0]);
+        });
+        t.row(&["PJRT batched mul (8192)".into(), fmt_ns(r.median_ns), format!("{:.2} Melem/s", 8192.0 / (r.median_ns * 1e-9) / 1e6)]);
+    } else {
+        t.row(&["PJRT batched mul".into(), "skipped (no artifacts)".into(), "-".into()]);
+    }
+
+    t.print();
+}

@@ -1,0 +1,99 @@
+//! Table III (dividers): the 8/4, 16/8 and 32/16 divider rows — accurate
+//! restoring IP (NP + pipelined), RAPID (NP + P2/P3/P4), Mitchell, INZeD,
+//! SIMDive, AAXD, SAADI-EC. The headline here is the paper's central
+//! claim: logarithmic division collapses the divider's latency to that of
+//! a same-size multiplier, and pipelining multiplies throughput per Watt.
+
+use rapid::arith::registry::make_div;
+use rapid::bench_support::paper;
+use rapid::bench_support::table::{f2, Table};
+use rapid::circuit::report::{characterize, UnitReport};
+use rapid::circuit::synth::divider::rapid_div_netlist;
+use rapid::circuit::synth::exact_ip::exact_div_netlist;
+use rapid::error::{characterize_div, CharacterizeOpts};
+
+fn accuracy(name: &str, n: u32) -> (f64, f64, f64) {
+    match make_div(name, n) {
+        Some(unit) if !unit.is_exact() => {
+            let opts = CharacterizeOpts { mc_samples: 400_000, ..Default::default() };
+            let r = characterize_div(unit.as_ref(), &opts);
+            (r.are * 100.0, r.pre_large * 100.0, r.bias * 100.0)
+        }
+        _ => (0.0, 0.0, 0.0),
+    }
+}
+
+fn row(t: &mut Table, label: &str, rep: &UnitReport, base: &UnitReport, acc: (f64, f64, f64)) {
+    t.row(&[
+        label.to_string(),
+        rep.stages.to_string(),
+        rep.luts.to_string(),
+        rep.ffs.to_string(),
+        f2(rep.latency_ns),
+        f2(rep.throughput_per_us / base.throughput_per_us),
+        f2(rep.power_mw),
+        f2(rep.energy_per_op / base.energy_per_op),
+        f2(rep.throughput_per_watt() / base.throughput_per_watt()),
+        f2(acc.0),
+        f2(acc.1),
+        f2(acc.2),
+    ]);
+}
+
+fn main() {
+    for n in [4u32, 8, 16] {
+        let mut t = Table::new(
+            &format!("Table III — {}/{} dividers (measured on the circuit model)", 2 * n, n),
+            &["design", "S", "LUT", "FF", "lat(ns)", "relTput", "P(mW)", "relE/op", "relT/W", "ARE%", "PRE%(q≥8)", "bias%"],
+        );
+        let base = characterize(&exact_div_netlist(n), 1, 120, 1);
+        row(&mut t, "acc_ip_np", &base, &base, (0.0, 0.0, 0.0));
+        for stages in [2usize, 4] {
+            let rep = characterize(&exact_div_netlist(n), stages, 120, 1);
+            row(&mut t, &format!("acc_ip_p{stages}"), &rep, &base, (0.0, 0.0, 0.0));
+        }
+        for (g, stages, label) in [
+            (3usize, 1usize, "rapid3_np"),
+            (5, 2, "rapid5_p2"),
+            (9, 3, "rapid9_p3"),
+            (9, 4, "rapid9_p4"),
+        ] {
+            let rep = characterize(&rapid_div_netlist(n, g), stages, 120, 2);
+            row(&mut t, label, &rep, &base, accuracy(&format!("rapid{g}"), n));
+        }
+        let mit = characterize(&rapid_div_netlist(n, 0), 1, 120, 3);
+        row(&mut t, "mitchell", &mit, &base, accuracy("mitchell", n));
+        for name in ["inzed", "simdive", "aaxd", "saadi"] {
+            let (are, pre, bias) = accuracy(name, n);
+            t.row(&[
+                format!("{name} (acc only)"),
+                "1".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                f2(are),
+                f2(pre),
+                f2(bias),
+            ]);
+        }
+        t.print();
+    }
+
+    // headline: 32/16 pipelined RAPID-9 vs 4-stage accurate IP
+    let base = characterize(&exact_div_netlist(16), 4, 120, 1);
+    let rapid = characterize(&rapid_div_netlist(16, 9), 4, 120, 2);
+    let lut_saving = 1.0 - rapid.luts as f64 / base.luts as f64;
+    println!(
+        "\n32/16 RAPID-9_P4 vs acc_ip_p4: Tput gain {:.1}x (paper {:.1}x), T/W gain {:.1}x (paper {:.1}x), LUT saving {:.0}% (paper {:.0}%)",
+        rapid.throughput_per_us / base.throughput_per_us,
+        paper::headline::DIV32_TPUT_GAIN,
+        rapid.throughput_per_watt() / base.throughput_per_watt(),
+        paper::headline::DIV32_TPUT_PER_WATT_GAIN,
+        lut_saving * 100.0,
+        paper::headline::DIV32_LUT_SAVING * 100.0,
+    );
+}

@@ -1,0 +1,108 @@
+//! Table III (multipliers): LUT / FF / latency / relative throughput /
+//! power / energy / T-per-Watt / ARE / PRE / bias for 8-, 16- and 32-bit
+//! multipliers — accurate IP (NP + pipelined), RAPID (NP + P2/P3/P4),
+//! Mitchell, MBM, SIMDive, DRUM, AFM. Rows print paper references where
+//! the paper reports the same design point; DSP rows are carried as
+//! context constants only.
+
+use rapid::arith::registry::make_mul;
+use rapid::bench_support::paper;
+use rapid::bench_support::table::{f2, Table};
+use rapid::circuit::report::{characterize, UnitReport};
+use rapid::circuit::synth::exact_ip::exact_mul_netlist;
+use rapid::circuit::synth::multiplier::rapid_mul_netlist;
+use rapid::error::{characterize_mul, CharacterizeOpts};
+
+fn accuracy(name: &str, width: u32) -> (f64, f64, f64) {
+    match make_mul(name, width) {
+        Some(unit) if !unit.is_exact() => {
+            let opts = CharacterizeOpts { mc_samples: 400_000, ..Default::default() };
+            let r = characterize_mul(unit.as_ref(), &opts);
+            (r.are * 100.0, r.pre * 100.0, r.bias * 100.0)
+        }
+        _ => (0.0, 0.0, 0.0),
+    }
+}
+
+fn row(t: &mut Table, label: &str, rep: &UnitReport, base: &UnitReport, acc: (f64, f64, f64)) {
+    t.row(&[
+        label.to_string(),
+        rep.stages.to_string(),
+        rep.luts.to_string(),
+        rep.ffs.to_string(),
+        f2(rep.latency_ns),
+        f2(rep.throughput_per_us / base.throughput_per_us),
+        f2(rep.power_mw),
+        f2(rep.energy_per_op / base.energy_per_op),
+        f2(rep.throughput_per_watt() / base.throughput_per_watt()),
+        f2(acc.0),
+        f2(acc.1),
+        f2(acc.2),
+    ]);
+}
+
+fn main() {
+    for width in [8u32, 16, 32] {
+        let mut t = Table::new(
+            &format!("Table III — {width}×{width} multipliers (measured on the circuit model)"),
+            &["design", "S", "LUT", "FF", "lat(ns)", "relTput", "P(mW)", "relE/op", "relT/W", "ARE%", "PRE%", "bias%"],
+        );
+        let base = characterize(&exact_mul_netlist(width), 1, 120, 1);
+        row(&mut t, "acc_ip_np", &base, &base, (0.0, 0.0, 0.0));
+        for stages in [2usize, 3, 4] {
+            let rep = characterize(&exact_mul_netlist(width), stages, 120, 1);
+            row(&mut t, &format!("acc_ip_p{stages}"), &rep, &base, (0.0, 0.0, 0.0));
+        }
+        // RAPID NP + pipelined configurations of Table III
+        for (g, stages, label) in [
+            (3usize, 1usize, "rapid3_np"),
+            (3, 2, "rapid3_p2"),
+            (5, 2, "rapid5_p2"),
+            (5, 3, "rapid5_p3"),
+            (10, 3, "rapid10_p3"),
+            (10, 4, "rapid10_p4"),
+        ] {
+            let rep = characterize(&rapid_mul_netlist(width, g), stages, 120, 2);
+            row(&mut t, label, &rep, &base, accuracy(&format!("rapid{g}"), width));
+        }
+        // SoA baselines: Mitchell is synthesized (same family); the other
+        // families are accuracy-only rows (their circuits use different
+        // fabrics we do not LUT-map).
+        let mit = characterize(&rapid_mul_netlist(width, 0), 1, 120, 3);
+        row(&mut t, "mitchell", &mit, &base, accuracy("mitchell", width));
+        for name in ["mbm", "simdive", "drum6", "afm"] {
+            let (are, pre, bias) = accuracy(name, width);
+            t.row(&[
+                format!("{name} (acc only)"),
+                "1".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                f2(are),
+                f2(pre),
+                f2(bias),
+            ]);
+        }
+        t.print();
+    }
+
+    // paper-vs-measured headline (16-bit): RAPID-10_P4 vs acc_ip_p4
+    let base = characterize(&exact_mul_netlist(16), 4, 120, 1);
+    let rapid = characterize(&rapid_mul_netlist(16, 10), 4, 120, 2);
+    let lut_saving = 1.0 - rapid.luts as f64 / base.luts as f64;
+    let p = paper::MUL16;
+    let paper_saving = 1.0
+        - p.iter().find(|r| r.name == "rapid10_p4").unwrap().luts as f64
+            / p.iter().find(|r| r.name == "acc_ip_p4").unwrap().luts as f64;
+    println!(
+        "\n16-bit RAPID-10_P4 vs acc_ip_p4: LUT saving {:.0}% (paper {:.0}%), relT/W {:.2}, relTput {:.2}",
+        lut_saving * 100.0,
+        paper_saving * 100.0,
+        rapid.throughput_per_watt() / base.throughput_per_watt(),
+        rapid.throughput_per_us / base.throughput_per_us,
+    );
+}

@@ -1,0 +1,150 @@
+//! Kernel op census → end-to-end area/latency/ADP roll-up (Fig. 10).
+//!
+//! Mirrors the paper's HLS flow: each application is a chain of kernels;
+//! each kernel instantiates some number of multiplier/divider units (plus
+//! exact add/shift logic we carry as a fixed LUT overhead per kernel).
+//! Swapping the unit design changes the area and the achievable clock; the
+//! roll-up reports area, latency and ADP relative to the all-accurate
+//! configuration — the three bars of Fig. 10.
+
+use crate::circuit::report::UnitReport;
+use crate::coordinator::pipeline_sched::{schedule, KernelStage, UnitTiming};
+
+/// One kernel of an application: how many mul/div unit instances it
+/// instantiates and how many unit-ops one input item triggers.
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    pub name: &'static str,
+    pub mul_units: usize,
+    pub div_units: usize,
+    /// exact glue logic (adders, muxes, control) in LUTs
+    pub glue_luts: usize,
+    pub mul_ops_per_item: usize,
+    pub div_ops_per_item: usize,
+}
+
+/// Application = named chain of kernels (Figs. 5-7 structures).
+pub fn app_kernels(app: &str) -> Vec<KernelSpec> {
+    match app {
+        // Fig. 5: LP → HP → derivative → squaring → MWI → thresholding
+        "pantompkins" => vec![
+            KernelSpec { name: "bandpass", mul_units: 0, div_units: 0, glue_luts: 260, mul_ops_per_item: 0, div_ops_per_item: 0 },
+            KernelSpec { name: "derivative", mul_units: 0, div_units: 0, glue_luts: 90, mul_ops_per_item: 0, div_ops_per_item: 0 },
+            KernelSpec { name: "squaring", mul_units: 1, div_units: 0, glue_luts: 40, mul_ops_per_item: 1, div_ops_per_item: 0 },
+            KernelSpec { name: "mwi", mul_units: 0, div_units: 1, glue_luts: 140, mul_ops_per_item: 0, div_ops_per_item: 1 },
+            KernelSpec { name: "threshold", mul_units: 0, div_units: 0, glue_luts: 110, mul_ops_per_item: 0, div_ops_per_item: 0 },
+        ],
+        // Fig. 6: level shift → 2-D DCT (two 1-D passes) → quantise →
+        // zigzag → RLE/Huffman (exact). Ops per 8×8 block item.
+        "jpeg" => vec![
+            KernelSpec { name: "dct_rows", mul_units: 2, div_units: 0, glue_luts: 420, mul_ops_per_item: 96, div_ops_per_item: 0 },
+            KernelSpec { name: "dct_cols", mul_units: 2, div_units: 0, glue_luts: 420, mul_ops_per_item: 96, div_ops_per_item: 0 },
+            KernelSpec { name: "quantise", mul_units: 0, div_units: 1, glue_luts: 120, mul_ops_per_item: 0, div_ops_per_item: 64 },
+            KernelSpec { name: "zigzag_rle", mul_units: 0, div_units: 0, glue_luts: 300, mul_ops_per_item: 0, div_ops_per_item: 0 },
+        ],
+        // Fig. 7: Sobel → tensor products+window → response (det/trace) →
+        // NMS (exact). Ops per pixel item.
+        "harris" => vec![
+            KernelSpec { name: "sobel", mul_units: 0, div_units: 0, glue_luts: 340, mul_ops_per_item: 0, div_ops_per_item: 0 },
+            KernelSpec { name: "tensor", mul_units: 3, div_units: 0, glue_luts: 380, mul_ops_per_item: 3, div_ops_per_item: 0 },
+            KernelSpec { name: "response", mul_units: 2, div_units: 1, glue_luts: 180, mul_ops_per_item: 2, div_ops_per_item: 1 },
+            KernelSpec { name: "nms", mul_units: 0, div_units: 0, glue_luts: 260, mul_ops_per_item: 0, div_ops_per_item: 0 },
+        ],
+        other => panic!("unknown app '{other}'"),
+    }
+}
+
+/// End-to-end roll-up of one configuration.
+#[derive(Clone, Debug)]
+pub struct AppRollup {
+    pub app: String,
+    pub luts: usize,
+    pub latency_ns: f64,
+    pub throughput_per_us: f64,
+}
+
+impl AppRollup {
+    pub fn adp(&self) -> f64 {
+        self.luts as f64 * self.latency_ns
+    }
+}
+
+/// Roll up an application over concrete unit reports (one multiplier + one
+/// divider design, possibly pipelined).
+pub fn rollup(app: &str, mul: &UnitReport, div: &UnitReport) -> AppRollup {
+    let kernels = app_kernels(app);
+    let mut luts = 0usize;
+    let mut stages = Vec::new();
+    for k in &kernels {
+        luts += k.glue_luts + k.mul_units * mul.luts + k.div_units * div.luts;
+        // a kernel's item time is dominated by its slowest unit chain; the
+        // exact glue runs at system clock
+        let unit_clock = if k.div_ops_per_item > 0 && k.mul_ops_per_item > 0 {
+            mul.clock_ns.max(div.clock_ns)
+        } else if k.div_ops_per_item > 0 {
+            div.clock_ns
+        } else if k.mul_ops_per_item > 0 {
+            mul.clock_ns
+        } else {
+            2.0 // exact glue clock (ns) — add/shift kernels
+        };
+        let unit_stages = if k.div_ops_per_item > 0 {
+            div.stages
+        } else if k.mul_ops_per_item > 0 {
+            mul.stages
+        } else {
+            1
+        };
+        // ops issued per item divided across the kernel's unit instances
+        let issue = ((k.mul_ops_per_item as f64 / k.mul_units.max(1) as f64)
+            .max(k.div_ops_per_item as f64 / k.div_units.max(1) as f64))
+        .ceil()
+        .max(1.0) as usize;
+        stages.push(KernelStage {
+            name: k.name.to_string(),
+            ops_per_item: issue,
+            timing: UnitTiming { clock_ns: unit_clock, stages: unit_stages },
+        });
+    }
+    let sched = schedule(&stages);
+    AppRollup {
+        app: app.to_string(),
+        luts,
+        latency_ns: sched.latency_ns,
+        throughput_per_us: sched.throughput_per_us,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::report::characterize;
+    use crate::circuit::synth::divider::rapid_div_netlist;
+    use crate::circuit::synth::exact_ip::{exact_div_netlist, exact_mul_netlist};
+    use crate::circuit::synth::multiplier::rapid_mul_netlist;
+
+    #[test]
+    fn rapid_config_improves_area_and_adp() {
+        // Fig. 10's headline: RAPID improves area & ADP over accurate in
+        // all three applications.
+        let em = characterize(&exact_mul_netlist(16), 1, 40, 1);
+        let ed = characterize(&exact_div_netlist(8), 1, 40, 1);
+        let rm = characterize(&rapid_mul_netlist(16, 10), 1, 40, 1);
+        let rd = characterize(&rapid_div_netlist(8, 9), 1, 40, 1);
+        for app in ["pantompkins", "jpeg", "harris"] {
+            let acc = rollup(app, &em, &ed);
+            let rap = rollup(app, &rm, &rd);
+            assert!(rap.luts < acc.luts, "{app}: {} !< {} LUTs", rap.luts, acc.luts);
+            assert!(rap.adp() < acc.adp(), "{app} ADP");
+        }
+    }
+
+    #[test]
+    fn all_apps_have_kernels() {
+        for app in ["pantompkins", "jpeg", "harris"] {
+            let ks = app_kernels(app);
+            assert!(ks.len() >= 4);
+            assert!(ks.iter().any(|k| k.mul_units > 0 || k.div_units > 0));
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! `rapid app` subcommand: run one end-to-end application with chosen
+//! arithmetic units and print its QoR + roll-up row.
+
+use crate::arith::registry::{make_div, make_mul};
+use crate::util::cli::Args;
+
+use super::ecg::{generate, EcgConfig};
+use super::harris::{corners, motion_vectors};
+use super::images::{aerial_scene, frame_pair};
+use super::jpeg::roundtrip;
+use super::pantompkins;
+use super::qor::{correct_vector_ratio, psnr, Sensitivity};
+
+pub fn run(argv: Vec<String>) {
+    let args = Args::parse(argv, &["name", "mul", "div", "seconds", "images", "seed"]);
+    let name = args.get_or("name", "jpeg");
+    let mul_name = args.get_or("mul", "rapid10");
+    let div_name = args.get_or("div", "rapid9");
+    let seed = args.get_u64("seed", 1);
+    let mul = make_mul(mul_name, 16).unwrap_or_else(|| panic!("unknown multiplier '{mul_name}'"));
+    let div = make_div(div_name, 8).unwrap_or_else(|| panic!("unknown divider '{div_name}'"));
+
+    match name {
+        "pantompkins" => {
+            let secs = args.get_usize("seconds", 150);
+            let rec = generate(200 * secs, &EcgConfig::default(), seed);
+            let (mw, peaks, delay) = pantompkins::run(&rec.samples, rec.fs, mul.as_ref(), div.as_ref());
+            let s = Sensitivity::measure(&rec.r_peaks, &peaks, delay, 30);
+            // PSNR of the approximate energy signal vs the exact pipeline
+            let em = make_mul("exact", 16).unwrap();
+            let ed = make_div("exact", 8).unwrap();
+            let (mw_e, _, _) = pantompkins::run(&rec.samples, rec.fs, em.as_ref(), ed.as_ref());
+            let peak = *mw_e.iter().max().unwrap() as f64;
+            println!(
+                "pantompkins mul={mul_name} div={div_name}: beats={} detected={} sens={:.3} F1={:.3} PSNR={:.1}dB",
+                rec.r_peaks.len(),
+                peaks.len(),
+                s.sensitivity(),
+                s.f1(),
+                psnr(&mw_e, &mw, peak)
+            );
+        }
+        "jpeg" => {
+            let n_imgs = args.get_usize("images", 10);
+            let mut total_psnr = 0.0;
+            let mut total_syms = 0usize;
+            for i in 0..n_imgs {
+                let img = aerial_scene(64, 64, seed + i as u64);
+                let (rec, syms) = roundtrip(&img, mul.as_ref(), div.as_ref());
+                total_psnr += psnr(&img.px, &rec.px, 255.0);
+                total_syms += syms;
+            }
+            println!(
+                "jpeg mul={mul_name} div={div_name}: images={n_imgs} mean PSNR={:.2}dB symbols/img={}",
+                total_psnr / n_imgs as f64,
+                total_syms / n_imgs
+            );
+        }
+        "harris" => {
+            let n_pairs = args.get_usize("images", 8);
+            let mut rng = crate::util::XorShift256::new(seed);
+            let mut total_ratio = 0.0;
+            let mut total_corners = 0usize;
+            for i in 0..n_pairs {
+                let dx = rng.below(9) as i64 - 4;
+                let dy = rng.below(9) as i64 - 4;
+                let (a, b) = frame_pair(96, 96, dx, dy, seed * 100 + i as u64);
+                let cs = corners(&a, mul.as_ref(), div.as_ref(), 40);
+                let v = motion_vectors(&a, &b, &cs, 6);
+                total_ratio += correct_vector_ratio(&v, (-dx as f64, -dy as f64), 1.5);
+                total_corners += cs.len();
+            }
+            println!(
+                "harris mul={mul_name} div={div_name}: pairs={n_pairs} corners/frame={} correct-vectors={:.1}%",
+                total_corners / n_pairs,
+                100.0 * total_ratio / n_pairs as f64
+            );
+        }
+        other => {
+            eprintln!("unknown app '{other}' (pantompkins | jpeg | harris)");
+            std::process::exit(2);
+        }
+    }
+}

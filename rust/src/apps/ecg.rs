@@ -1,0 +1,132 @@
+//! Synthetic ECG generator (the MIT-BIH substitution, DESIGN.md §1).
+//!
+//! Produces a sampled ECG-like signal as a sum of Gaussian-shaped waves
+//! (P, Q, R, S, T components per beat) with heart-rate variability,
+//! baseline wander and measurement noise, plus the ground-truth R-peak
+//! sample indices — exactly what Pan-Tompkins QoR needs (sensitivity /
+//! false positives against known beats).
+
+use crate::util::XorShift256;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EcgConfig {
+    /// sample rate (Hz); Pan-Tompkins' classic design point is 200 Hz
+    pub fs: f64,
+    /// mean heart rate (bpm)
+    pub bpm: f64,
+    /// beat-to-beat interval jitter (fraction)
+    pub hrv: f64,
+    /// additive white noise (fraction of R amplitude)
+    pub noise: f64,
+    /// baseline wander amplitude (fraction of R amplitude)
+    pub wander: f64,
+}
+
+impl Default for EcgConfig {
+    fn default() -> Self {
+        EcgConfig { fs: 200.0, bpm: 72.0, hrv: 0.08, noise: 0.02, wander: 0.08 }
+    }
+}
+
+/// (wave amplitude, center offset within beat [s], width [s]) per component
+/// — textbook-shaped P-QRS-T morphology.
+const WAVES: [(f64, f64, f64); 5] = [
+    (0.12, -0.20, 0.025), // P
+    (-0.14, -0.030, 0.010), // Q
+    (1.00, 0.0, 0.011),   // R
+    (-0.22, 0.030, 0.010), // S
+    (0.30, 0.22, 0.045),  // T
+];
+
+/// Generated record: integer samples (like an ADC) + truth annotations.
+pub struct EcgRecord {
+    /// signed samples, ~11-bit dynamic range
+    pub samples: Vec<i64>,
+    /// ground-truth R-peak indices
+    pub r_peaks: Vec<usize>,
+    pub fs: f64,
+}
+
+/// Generate `n` samples with the given config (deterministic per seed).
+pub fn generate(n: usize, cfg: &EcgConfig, seed: u64) -> EcgRecord {
+    let mut rng = XorShift256::new(seed);
+    let mut beat_times = Vec::new();
+    let mut t = 0.35; // first beat offset (s)
+    let dur = n as f64 / cfg.fs;
+    while t < dur + 1.0 {
+        beat_times.push(t);
+        let rr = 60.0 / cfg.bpm;
+        t += rr * (1.0 + cfg.hrv * rng.gaussian());
+    }
+    let mut samples = Vec::with_capacity(n);
+    let scale = 900.0; // ADC counts per mV-ish
+    let w1 = 0.33 + 0.1 * rng.f64();
+    let w2 = 0.05 + 0.03 * rng.f64();
+    for i in 0..n {
+        let ts = i as f64 / cfg.fs;
+        let mut v = 0.0;
+        for &bt in &beat_times {
+            let dt = ts - bt;
+            if dt.abs() > 0.6 {
+                continue;
+            }
+            for &(amp, off, width) in &WAVES {
+                let d = dt - off;
+                v += amp * (-d * d / (2.0 * width * width)).exp();
+            }
+        }
+        v += cfg.wander * (2.0 * std::f64::consts::PI * w1 * ts).sin();
+        v += cfg.wander * 0.5 * (2.0 * std::f64::consts::PI * w2 * ts + 1.0).sin();
+        v += cfg.noise * rng.gaussian();
+        samples.push((v * scale) as i64);
+    }
+    let r_peaks = beat_times
+        .iter()
+        .map(|bt| (bt * cfg.fs).round() as usize)
+        .filter(|&idx| idx < n)
+        .collect();
+    EcgRecord { samples, r_peaks, fs: cfg.fs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beat_count_matches_rate() {
+        let cfg = EcgConfig::default();
+        let rec = generate(200 * 60, &cfg, 1); // one minute
+        let n = rec.r_peaks.len() as f64;
+        assert!((n - 72.0).abs() < 8.0, "{n} beats in a 72 bpm minute");
+    }
+
+    #[test]
+    fn r_peaks_are_local_maxima() {
+        let rec = generate(4000, &EcgConfig { noise: 0.0, wander: 0.0, ..Default::default() }, 2);
+        for &p in &rec.r_peaks {
+            if p < 3 || p + 3 >= rec.samples.len() {
+                continue;
+            }
+            let win = &rec.samples[p - 3..p + 4];
+            let max = win.iter().max().unwrap();
+            assert!(rec.samples[p] >= max - 40, "peak at {p} not near local max");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(1000, &EcgConfig::default(), 7);
+        let b = generate(1000, &EcgConfig::default(), 7);
+        assert_eq!(a.samples, b.samples);
+        let c = generate(1000, &EcgConfig::default(), 8);
+        assert_ne!(a.samples, c.samples);
+    }
+
+    #[test]
+    fn amplitude_range_fits_adc() {
+        let rec = generate(8000, &EcgConfig::default(), 3);
+        let max = rec.samples.iter().map(|s| s.abs()).max().unwrap();
+        assert!(max < 2048, "samples exceed 11-bit range: {max}");
+        assert!(max > 500, "R peaks unexpectedly small: {max}");
+    }
+}

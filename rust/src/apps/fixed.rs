@@ -1,0 +1,164 @@
+//! Signed fixed-point arithmetic routed through the pluggable unsigned
+//! units — the application kernels' view of the hardware.
+//!
+//! The paper's units are unsigned N×N (2N/N); application datapaths carry
+//! signs separately (sign-magnitude at the unit boundary, as the HLS
+//! integration does) and place the binary point per kernel (Q-formats).
+
+use crate::arith::{ApproxDiv, ApproxMul};
+
+/// Signed multiply via an unsigned unit: |a|·|b| with the product sign
+/// recombined. Saturates magnitudes into the unit's width.
+pub struct SignedMul<'a> {
+    pub unit: &'a dyn ApproxMul,
+}
+
+impl<'a> SignedMul<'a> {
+    pub fn new(unit: &'a dyn ApproxMul) -> Self {
+        SignedMul { unit }
+    }
+
+    #[inline]
+    pub fn mul(&self, a: i64, b: i64) -> i64 {
+        let n = self.unit.width();
+        let lim = (1u64 << n) - 1;
+        let ua = (a.unsigned_abs()).min(lim);
+        let ub = (b.unsigned_abs()).min(lim);
+        let p = self.unit.mul(ua, ub) as i64;
+        if (a < 0) ^ (b < 0) {
+            -p
+        } else {
+            p
+        }
+    }
+
+    /// Fixed-point multiply: (a · b) >> frac, preserving sign semantics of
+    /// an arithmetic shift after the approximate product.
+    #[inline]
+    pub fn mul_q(&self, a: i64, b: i64, frac: u32) -> i64 {
+        let p = self.mul(a, b);
+        if p >= 0 {
+            p >> frac
+        } else {
+            -((-p) >> frac)
+        }
+    }
+}
+
+/// Signed divide via an unsigned 2N/N unit.
+pub struct SignedDiv<'a> {
+    pub unit: &'a dyn ApproxDiv,
+}
+
+impl<'a> SignedDiv<'a> {
+    pub fn new(unit: &'a dyn ApproxDiv) -> Self {
+        SignedDiv { unit }
+    }
+
+    #[inline]
+    pub fn div(&self, a: i64, b: i64) -> i64 {
+        let n = self.unit.divisor_width();
+        if b == 0 {
+            return if a >= 0 { (1 << n) - 1 } else { -((1 << n) - 1) };
+        }
+        let ua = a.unsigned_abs().min((1u64 << (2 * n)) - 1);
+        let ub = b.unsigned_abs().min((1u64 << n) - 1).max(1);
+        let q = self.unit.div(ua, ub) as i64;
+        if (a < 0) ^ (b < 0) {
+            -q
+        } else {
+            q
+        }
+    }
+}
+
+/// Integer 3×3 convolution with all multiplies through the unit — the
+/// bit-exact Rust mirror of the L2 `conv3x3` artifact (same traversal,
+/// same sign-magnitude convention), used by the cross-layer test.
+pub fn conv3x3_rapid(img: &[Vec<i64>], kern: &[[i64; 3]; 3], unit: &dyn ApproxMul) -> Vec<Vec<i64>> {
+    let sm = SignedMul::new(unit);
+    let h = img.len() - 2;
+    let w = img[0].len() - 2;
+    let mut out = vec![vec![0i64; w]; h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0i64;
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    acc += sm.mul(img[y + dy][x + dx], kern[dy][dx]);
+                }
+            }
+            out[y][x] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::exact::{ExactDiv, ExactMul};
+    use crate::arith::rapid::RapidMul;
+
+    #[test]
+    fn signed_mul_signs() {
+        let u = ExactMul { n: 16 };
+        let m = SignedMul::new(&u);
+        assert_eq!(m.mul(3, 4), 12);
+        assert_eq!(m.mul(-3, 4), -12);
+        assert_eq!(m.mul(3, -4), -12);
+        assert_eq!(m.mul(-3, -4), 12);
+        assert_eq!(m.mul(0, -7), 0);
+    }
+
+    #[test]
+    fn signed_div_signs() {
+        let u = ExactDiv { n: 8 };
+        let d = SignedDiv::new(&u);
+        assert_eq!(d.div(100, 7), 14);
+        assert_eq!(d.div(-100, 7), -14);
+        assert_eq!(d.div(100, -7), -14);
+        assert_eq!(d.div(-100, -7), 14);
+    }
+
+    #[test]
+    fn q_format_shift() {
+        let u = ExactMul { n: 16 };
+        let m = SignedMul::new(&u);
+        // 1.5 * 2.0 in Q8 = 384 * 512 >> 8 = 768 (3.0)
+        assert_eq!(m.mul_q(384, 512, 8), 768);
+        assert_eq!(m.mul_q(-384, 512, 8), -768);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        let u = ExactMul { n: 16 };
+        let img: Vec<Vec<i64>> = (0..5).map(|y| (0..5).map(|x| (y * 5 + x) as i64).collect()).collect();
+        let mut kern = [[0i64; 3]; 3];
+        kern[1][1] = 1;
+        let out = conv3x3_rapid(&img, &kern, &u);
+        for y in 0..3 {
+            for x in 0..3 {
+                assert_eq!(out[y][x], img[y + 1][x + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_rapid_close_to_exact() {
+        let exact = ExactMul { n: 16 };
+        let approx = RapidMul::new(16, 10);
+        let img: Vec<Vec<i64>> = (0..8)
+            .map(|y| (0..8).map(|x| ((y * 131 + x * 17) % 255) as i64).collect())
+            .collect();
+        let kern = [[1, 2, 1], [2, 4, 2], [1, 2, 1]];
+        let a = conv3x3_rapid(&img, &kern, &exact);
+        let b = conv3x3_rapid(&img, &kern, &approx);
+        for y in 0..6 {
+            for x in 0..6 {
+                let (ea, eb) = (a[y][x] as f64, b[y][x] as f64);
+                assert!((ea - eb).abs() / ea.max(1.0) < 0.05, "({y},{x}): {ea} vs {eb}");
+            }
+        }
+    }
+}

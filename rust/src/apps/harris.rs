@@ -1,0 +1,245 @@
+//! Harris corner detection + motion vectors (paper Fig. 7): Sobel
+//! gradients, structure-tensor products (mul), Gaussian windowing, Harris
+//! response with the *division* formulation R = det / (trace + ε) — the
+//! division in the last HCD stage the paper calls out — then exact NMS and
+//! patch matching between two frames to produce motion vectors.
+
+use crate::arith::{ApproxDiv, ApproxMul};
+
+use super::fixed::{SignedDiv, SignedMul};
+use super::images::Image;
+
+/// Sobel gradients (shift/add only in hardware — exact).
+pub fn sobel(img: &Image) -> (Vec<Vec<i64>>, Vec<Vec<i64>>) {
+    let (w, h) = (img.w, img.h);
+    let mut gx = vec![vec![0i64; w]; h];
+    let mut gy = vec![vec![0i64; w]; h];
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            let p = |dx: i64, dy: i64| img.at((x as i64 + dx) as usize, (y as i64 + dy) as usize);
+            gx[y][x] = (p(1, -1) + 2 * p(1, 0) + p(1, 1)) - (p(-1, -1) + 2 * p(-1, 0) + p(-1, 1));
+            gy[y][x] = (p(-1, 1) + 2 * p(0, 1) + p(1, 1)) - (p(-1, -1) + 2 * p(0, -1) + p(1, -1));
+        }
+    }
+    (gx, gy)
+}
+
+/// Structure-tensor products Ixx, Iyy, Ixy through the multiplier, with a
+/// 3×3 binomial window (adds).
+pub fn structure_tensor(
+    gx: &[Vec<i64>],
+    gy: &[Vec<i64>],
+    mul: &dyn ApproxMul,
+) -> (Vec<Vec<i64>>, Vec<Vec<i64>>, Vec<Vec<i64>>) {
+    let m = SignedMul::new(mul);
+    let h = gx.len();
+    let w = gx[0].len();
+    // gradient scale: Sobel of 8-bit image ≤ 1020; scale down to keep the
+    // squared terms in the 16-bit unit domain (as the HLS kernel does).
+    let sc = 4;
+    let mut xx = vec![vec![0i64; w]; h];
+    let mut yy = vec![vec![0i64; w]; h];
+    let mut xy = vec![vec![0i64; w]; h];
+    for y in 0..h {
+        for x in 0..w {
+            let (a, b) = (gx[y][x] / sc, gy[y][x] / sc);
+            xx[y][x] = m.mul(a, a);
+            yy[y][x] = m.mul(b, b);
+            xy[y][x] = m.mul(a, b);
+        }
+    }
+    let window = |src: &Vec<Vec<i64>>| -> Vec<Vec<i64>> {
+        let mut out = vec![vec![0i64; w]; h];
+        for y in 1..h - 1 {
+            for x in 1..w - 1 {
+                let mut acc = 0;
+                for dy in 0..3usize {
+                    for dx in 0..3usize {
+                        let k = [[1, 2, 1], [2, 4, 2], [1, 2, 1]][dy][dx];
+                        acc += k * src[y + dy - 1][x + dx - 1];
+                    }
+                }
+                out[y][x] = acc / 16;
+            }
+        }
+        out
+    };
+    (window(&xx), window(&yy), window(&xy))
+}
+
+/// Harris response per pixel: R = det / (trace/2 + 1) through the divider
+/// (det = Ixx·Iyy − Ixy², trace = Ixx + Iyy).
+///
+/// Fixed-point staging keeps every intermediate inside the unit domains:
+/// windowed tensor entries ≤ 65 k are scaled to 8 bits (`>> 8`), so
+/// det ≤ 65 k fits the 16-bit dividend and trace/2 + 1 ≤ 255 fits the
+/// 8-bit divisor — and the paper's overflow condition
+/// `dividend < 2^8 · divisor` holds structurally (a·b < 256(a+b)/2 + 256
+/// for a, b ≤ 254).
+pub fn response(
+    xx: &[Vec<i64>],
+    yy: &[Vec<i64>],
+    xy: &[Vec<i64>],
+    mul: &dyn ApproxMul,
+    div: &dyn ApproxDiv,
+) -> Vec<Vec<i64>> {
+    let m = SignedMul::new(mul);
+    let d = SignedDiv::new(div);
+    let h = xx.len();
+    let w = xx[0].len();
+    let mut r = vec![vec![0i64; w]; h];
+    for y in 0..h {
+        for x in 0..w {
+            let (a, b, c) = (xx[y][x] >> 8, yy[y][x] >> 8, xy[y][x] >> 8);
+            let det = m.mul(a, b) - m.mul(c, c);
+            let trace = a + b;
+            r[y][x] = d.div(det.max(0), trace / 2 + 1);
+        }
+    }
+    r
+}
+
+/// Non-maximum suppression + threshold (exact comparisons, per the paper).
+pub fn nms(r: &[Vec<i64>], threshold: i64, radius: usize) -> Vec<(usize, usize)> {
+    let h = r.len();
+    let w = r[0].len();
+    let mut out = Vec::new();
+    for y in radius..h - radius {
+        'pix: for x in radius..w - radius {
+            let v = r[y][x];
+            if v < threshold {
+                continue;
+            }
+            for dy in 0..=2 * radius {
+                for dx in 0..=2 * radius {
+                    let (yy, xx) = (y + dy - radius, x + dx - radius);
+                    if (yy, xx) != (y, x) && r[yy][xx] > v {
+                        continue 'pix;
+                    }
+                }
+            }
+            out.push((x, y));
+        }
+    }
+    out
+}
+
+/// Full detector on one frame.
+pub fn corners(img: &Image, mul: &dyn ApproxMul, div: &dyn ApproxDiv, threshold: i64) -> Vec<(usize, usize)> {
+    let (gx, gy) = sobel(img);
+    let (xx, yy, xy) = structure_tensor(&gx, &gy, mul);
+    let r = response(&xx, &yy, &xy, mul, div);
+    nms(&r, threshold, 3)
+}
+
+/// Match corners of frame A in frame B by SAD patch search within `search`
+/// pixels; returns per-corner motion vectors (exact block matching — the
+/// MATLAB-side step of the paper's flow).
+pub fn motion_vectors(a: &Image, b: &Image, corners_a: &[(usize, usize)], search: i64) -> Vec<(f64, f64)> {
+    let patch = 4i64;
+    let mut out = Vec::new();
+    for &(cx, cy) in corners_a {
+        let (cx, cy) = (cx as i64, cy as i64);
+        if cx < patch + search
+            || cy < patch + search
+            || cx + patch + search >= a.w as i64
+            || cy + patch + search >= a.h as i64
+        {
+            continue;
+        }
+        let mut best = (0i64, 0i64, i64::MAX);
+        for dy in -search..=search {
+            for dx in -search..=search {
+                let mut sad = 0i64;
+                for py in -patch..=patch {
+                    for px in -patch..=patch {
+                        let va = a.at((cx + px) as usize, (cy + py) as usize);
+                        let vb = b.at((cx + dx + px) as usize, (cy + dy + py) as usize);
+                        sad += (va - vb).abs();
+                    }
+                }
+                if sad < best.2 {
+                    best = (dx, dy, sad);
+                }
+            }
+        }
+        out.push((best.0 as f64, best.1 as f64));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::images::{aerial_scene, frame_pair};
+    use crate::apps::qor::correct_vector_ratio;
+    use crate::arith::exact::{ExactDiv, ExactMul};
+    use crate::arith::rapid::{RapidDiv, RapidMul};
+
+    #[test]
+    fn detects_corner_of_a_square() {
+        // bright square on dark background → 4 strong corners
+        let mut px = vec![20i64; 48 * 48];
+        for y in 16..32 {
+            for x in 16..32 {
+                px[y * 48 + x] = 220;
+            }
+        }
+        let img = Image { w: 48, h: 48, px };
+        let (m, d) = (ExactMul { n: 16 }, ExactDiv { n: 8 });
+        let cs = corners(&img, &m, &d, 15);
+        assert!(!cs.is_empty(), "no corners found");
+        // every detected corner is near one of the square's corners
+        for (x, y) in &cs {
+            let near = [(16, 16), (16, 31), (31, 16), (31, 31)]
+                .iter()
+                .any(|&(cx, cy)| ((*x as i64 - cx).abs() <= 3) && ((*y as i64 - cy).abs() <= 3));
+            assert!(near, "spurious corner at ({x},{y})");
+        }
+    }
+
+    #[test]
+    fn no_corners_on_flat_image() {
+        let img = Image { w: 32, h: 32, px: vec![128; 32 * 32] };
+        let (m, d) = (ExactMul { n: 16 }, ExactDiv { n: 8 });
+        assert!(corners(&img, &m, &d, 15).is_empty());
+    }
+
+    #[test]
+    fn tracking_recovers_known_motion_exact() {
+        let (a, b) = frame_pair(96, 96, 4, -3, 31);
+        let (m, d) = (ExactMul { n: 16 }, ExactDiv { n: 8 });
+        let cs = corners(&a, &m, &d, 15);
+        assert!(cs.len() >= 5, "too few corners: {}", cs.len());
+        let v = motion_vectors(&a, &b, &cs, 6);
+        // motion of the crop window is (dx,dy) = (4,-3): content moves by
+        // (-4, 3) in image coordinates
+        let ratio = correct_vector_ratio(&v, (-4.0, 3.0), 1.5);
+        assert!(ratio > 0.85, "correct-vector ratio {ratio}");
+    }
+
+    #[test]
+    fn rapid_keeps_vector_accuracy() {
+        // Paper Fig. 9: RAPID-10/9 keeps ≥ 90 % correct vectors.
+        let (a, b) = frame_pair(96, 96, 3, 2, 33);
+        let (em, ed) = (ExactMul { n: 16 }, ExactDiv { n: 8 });
+        let (rm, rd) = (RapidMul::new(16, 10), RapidDiv::new(8, 9));
+        let exact_cs = corners(&a, &em, &ed, 15);
+        let rapid_cs = corners(&a, &rm, &rd, 15);
+        assert!(!rapid_cs.is_empty());
+        let ve = motion_vectors(&a, &b, &exact_cs, 5);
+        let vr = motion_vectors(&a, &b, &rapid_cs, 5);
+        let re = correct_vector_ratio(&ve, (-3.0, -2.0), 1.5);
+        let rr = correct_vector_ratio(&vr, (-3.0, -2.0), 1.5);
+        assert!(rr >= re - 0.10, "RAPID {} vs exact {}", rr, re);
+        assert!(rr >= 0.80, "RAPID correct vectors {rr}");
+    }
+
+    #[test]
+    fn aerial_scene_yields_corners() {
+        let img = aerial_scene(96, 96, 40);
+        let (m, d) = (ExactMul { n: 16 }, ExactDiv { n: 8 });
+        let cs = corners(&img, &m, &d, 15);
+        assert!(cs.len() >= 4, "aerial scene corners: {}", cs.len());
+    }
+}

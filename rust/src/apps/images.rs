@@ -1,0 +1,161 @@
+//! Procedural aerial-scene generator (the UAV123/VisDrone/UAVid
+//! substitution, DESIGN.md §1): value-noise terrain with roads and
+//! building-like blocks, plus frame pairs under a known global motion for
+//! the Harris tracking study (ground-truth motion ⇒ % correct vectors is
+//! measurable without the gated datasets).
+
+use crate::util::XorShift256;
+
+/// 8-bit grayscale image.
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub w: usize,
+    pub h: usize,
+    pub px: Vec<i64>, // row-major, 0..=255
+}
+
+impl Image {
+    pub fn at(&self, x: usize, y: usize) -> i64 {
+        self.px[y * self.w + x]
+    }
+
+    pub fn rows(&self) -> Vec<Vec<i64>> {
+        (0..self.h).map(|y| self.px[y * self.w..(y + 1) * self.w].to_vec()).collect()
+    }
+}
+
+/// Smooth value noise via bilinear interpolation of a coarse lattice.
+fn value_noise(w: usize, h: usize, cell: usize, amp: f64, rng: &mut XorShift256) -> Vec<f64> {
+    let gw = w / cell + 2;
+    let gh = h / cell + 2;
+    let lattice: Vec<f64> = (0..gw * gh).map(|_| rng.f64() * amp).collect();
+    let mut out = vec![0.0; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let gx = x as f64 / cell as f64;
+            let gy = y as f64 / cell as f64;
+            let (x0, y0) = (gx as usize, gy as usize);
+            let (fx, fy) = (gx - x0 as f64, gy - y0 as f64);
+            let sx = fx * fx * (3.0 - 2.0 * fx);
+            let sy = fy * fy * (3.0 - 2.0 * fy);
+            let l = |xx: usize, yy: usize| lattice[yy * gw + xx];
+            let top = l(x0, y0) * (1.0 - sx) + l(x0 + 1, y0) * sx;
+            let bot = l(x0, y0 + 1) * (1.0 - sx) + l(x0 + 1, y0 + 1) * sx;
+            out[y * w + x] = top * (1.0 - sy) + bot * sy;
+        }
+    }
+    out
+}
+
+/// Generate one aerial-like scene at `scale`× supersampling margin so a
+/// shifted crop can simulate camera motion.
+pub fn aerial_scene(w: usize, h: usize, seed: u64) -> Image {
+    let margin = 32;
+    let (fw, fh) = (w + 2 * margin, h + 2 * margin);
+    let mut rng = XorShift256::new(seed);
+    // terrain: two octaves of value noise
+    let mut field: Vec<f64> = value_noise(fw, fh, 24, 120.0, &mut rng);
+    let fine = value_noise(fw, fh, 6, 45.0, &mut rng);
+    for (a, b) in field.iter_mut().zip(fine) {
+        *a += b + 40.0;
+    }
+    // roads: a few dark straight strips
+    for _ in 0..3 {
+        let horizontal = rng.next_u64() & 1 == 0;
+        let pos = rng.below((if horizontal { fh } else { fw }) as u64 - 8) as usize;
+        let width = 3 + rng.below(3) as usize;
+        for t in 0..if horizontal { fw } else { fh } {
+            for k in 0..width {
+                let (x, y) = if horizontal { (t, pos + k) } else { (pos + k, t) };
+                field[y * fw + x] = 25.0 + 6.0 * rng.f64();
+            }
+        }
+    }
+    // buildings: bright rectangles with dark shadow edge (strong corners!)
+    for _ in 0..14 {
+        let bw = 6 + rng.below(18) as usize;
+        let bh = 6 + rng.below(18) as usize;
+        let x0 = rng.below((fw - bw - 2) as u64) as usize;
+        let y0 = rng.below((fh - bh - 2) as u64) as usize;
+        let level = 150.0 + rng.f64() * 90.0;
+        for y in y0..y0 + bh {
+            for x in x0..x0 + bw {
+                field[y * fw + x] = level;
+            }
+        }
+        for x in x0..x0 + bw {
+            field[(y0 + bh) * fw + x] = 15.0;
+        }
+        for y in y0..y0 + bh {
+            field[y * fw + x0 + bw] = 15.0;
+        }
+    }
+    // crop center + quantise
+    let px: Vec<i64> = (0..h)
+        .flat_map(|y| {
+            let fy = y + margin;
+            (0..w).map(move |x| (x, fy))
+        })
+        .map(|(x, fy)| {
+            let v = field[fy * fw + (x + margin)];
+            v.clamp(0.0, 255.0) as i64
+        })
+        .collect();
+    Image { w, h, px }
+}
+
+/// A frame pair under integer global translation (dx, dy): frame B is the
+/// same scene sampled shifted — the known motion the tracker must recover.
+pub fn frame_pair(w: usize, h: usize, dx: i64, dy: i64, seed: u64) -> (Image, Image) {
+    let margin = 32usize;
+    assert!(dx.unsigned_abs() as usize <= margin && dy.unsigned_abs() as usize <= margin);
+    let big = aerial_scene(w + 2 * margin, h + 2 * margin, seed);
+    let crop = |ox: usize, oy: usize| -> Image {
+        let px: Vec<i64> = (0..h)
+            .flat_map(|y| (0..w).map(move |x| (x, y)))
+            .map(|(x, y)| big.at(x + ox, y + oy))
+            .collect();
+        Image { w, h, px }
+    };
+    let a = crop(margin, margin);
+    let b = crop((margin as i64 + dx) as usize, (margin as i64 + dy) as usize);
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixels_in_range() {
+        let img = aerial_scene(64, 64, 1);
+        assert_eq!(img.px.len(), 64 * 64);
+        assert!(img.px.iter().all(|&p| (0..=255).contains(&p)));
+    }
+
+    #[test]
+    fn scene_has_contrast() {
+        let img = aerial_scene(64, 64, 2);
+        let min = img.px.iter().min().unwrap();
+        let max = img.px.iter().max().unwrap();
+        assert!(max - min > 100, "flat scene: {min}..{max}");
+    }
+
+    #[test]
+    fn frame_pair_shift_is_exact() {
+        let (a, b) = frame_pair(48, 48, 3, -2, 5);
+        // b(x, y) == a(x+3, y-2) wherever both are in range
+        for y in 2..46 {
+            for x in 0..45 {
+                assert_eq!(b.at(x, y), a.at(x + 3, y - 2), "({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = aerial_scene(32, 32, 9);
+        let b = aerial_scene(32, 32, 9);
+        assert_eq!(a.px, b.px);
+    }
+}

@@ -1,0 +1,18 @@
+//! End-to-end multi-kernel applications (paper §V-B, Figs. 5-12):
+//! Pan-Tompkins QRS detection, JPEG compression and Harris corner tracking,
+//! all parameterised over pluggable `ApproxMul`/`ApproxDiv` units so any
+//! Table III design can be dropped into any kernel — the paper's
+//! "replace the mul/div HDL" flow.
+
+pub mod fixed;
+pub mod ecg;
+pub mod pantompkins;
+pub mod images;
+pub mod jpeg;
+pub mod harris;
+pub mod qor;
+pub mod census;
+pub mod nn;
+pub mod cli;
+
+pub use qor::{psnr, Sensitivity};

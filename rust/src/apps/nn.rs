@@ -1,0 +1,190 @@
+//! Neural-network deployment (paper §VI future work): a fixed-point MLP
+//! classifier whose multiply-accumulate traffic runs through the pluggable
+//! approximate multiplier — the "SIMD + pipelining opportunities" domain
+//! the paper targets next, and a direct test of the §V-B claim that
+//! near-zero-biased errors cancel in aggregation-based kernels.
+//!
+//! The network (2-16-16-3, ReLU) is trained *in this module* with plain
+//! f32 SGD on a synthetic spiral-classification task, then quantised to
+//! Q8.8 weights; inference runs entirely in integer arithmetic.
+
+use crate::arith::ApproxMul;
+use crate::util::XorShift256;
+
+use super::fixed::SignedMul;
+
+const QF: u32 = 8; // Q8.8 fixed point
+
+/// A trained, quantised MLP.
+pub struct QuantMlp {
+    /// per-layer (weights[out][in], bias[out]) in Q8.8
+    layers: Vec<(Vec<Vec<i64>>, Vec<i64>)>,
+}
+
+/// Three-class spiral dataset (the classic toy benchmark), deterministic.
+pub fn spiral_dataset(per_class: usize, seed: u64) -> Vec<([f64; 2], usize)> {
+    let mut rng = XorShift256::new(seed);
+    let mut out = Vec::with_capacity(3 * per_class);
+    for class in 0..3usize {
+        for i in 0..per_class {
+            let r = i as f64 / per_class as f64;
+            let t = class as f64 * 2.1 + r * 4.4 + rng.gaussian() * 0.12;
+            out.push(([r * t.sin(), r * t.cos()], class));
+        }
+    }
+    rng.shuffle(&mut out);
+    out
+}
+
+/// Train the float MLP (plain SGD + ReLU + softmax-CE) and quantise.
+pub fn train(data: &[([f64; 2], usize)], epochs: usize, seed: u64) -> QuantMlp {
+    let sizes = [2usize, 16, 16, 3];
+    let mut rng = XorShift256::new(seed);
+    let mut w: Vec<Vec<Vec<f64>>> = Vec::new();
+    let mut b: Vec<Vec<f64>> = Vec::new();
+    for l in 0..sizes.len() - 1 {
+        let scale = (2.0 / sizes[l] as f64).sqrt();
+        w.push((0..sizes[l + 1])
+            .map(|_| (0..sizes[l]).map(|_| rng.gaussian() * scale).collect())
+            .collect());
+        b.push(vec![0.0; sizes[l + 1]]);
+    }
+    let lr = 0.05;
+    for _ in 0..epochs {
+        for &(x, label) in data {
+            // forward
+            let mut acts: Vec<Vec<f64>> = vec![x.to_vec()];
+            for l in 0..3 {
+                let prev = acts[l].clone();
+                let mut z: Vec<f64> = (0..w[l].len())
+                    .map(|o| w[l][o].iter().zip(&prev).map(|(wi, ai)| wi * ai).sum::<f64>() + b[l][o])
+                    .collect();
+                if l < 2 {
+                    for v in &mut z {
+                        *v = v.max(0.0);
+                    }
+                }
+                acts.push(z);
+            }
+            // softmax CE grad
+            let logits = acts[3].clone();
+            let mx = logits.iter().cloned().fold(f64::MIN, f64::max);
+            let exps: Vec<f64> = logits.iter().map(|v| (v - mx).exp()).collect();
+            let sum: f64 = exps.iter().sum();
+            let mut delta: Vec<f64> = exps.iter().map(|e| e / sum).collect();
+            delta[label] -= 1.0;
+            // backward
+            for l in (0..3).rev() {
+                let prev = acts[l].clone();
+                let mut next_delta = vec![0.0; prev.len()];
+                for o in 0..w[l].len() {
+                    for i in 0..prev.len() {
+                        next_delta[i] += delta[o] * w[l][o][i];
+                        w[l][o][i] -= lr * delta[o] * prev[i];
+                    }
+                    b[l][o] -= lr * delta[o];
+                }
+                if l > 0 {
+                    for (i, d) in next_delta.iter_mut().enumerate() {
+                        if acts[l][i] <= 0.0 {
+                            *d = 0.0;
+                        }
+                    }
+                }
+                delta = next_delta;
+            }
+        }
+    }
+    // quantise to Q8.8
+    let q = |v: f64| (v * (1 << QF) as f64).round() as i64;
+    let layers = (0..3)
+        .map(|l| {
+            let wq: Vec<Vec<i64>> = w[l].iter().map(|row| row.iter().map(|&v| q(v)).collect()).collect();
+            let bq: Vec<i64> = b[l].iter().map(|&v| q(v)).collect();
+            (wq, bq)
+        })
+        .collect();
+    QuantMlp { layers }
+}
+
+impl QuantMlp {
+    /// Integer inference: all multiplies through `unit` (Q8.8 activations).
+    pub fn classify(&self, x: [f64; 2], unit: &dyn ApproxMul) -> usize {
+        let m = SignedMul::new(unit);
+        let mut act: Vec<i64> = x.iter().map(|&v| (v * (1 << QF) as f64).round() as i64).collect();
+        for (l, (w, b)) in self.layers.iter().enumerate() {
+            let mut z: Vec<i64> = Vec::with_capacity(w.len());
+            for (row, bias) in w.iter().zip(b) {
+                let mut acc: i64 = *bias << QF;
+                for (wi, ai) in row.iter().zip(&act) {
+                    acc += m.mul(*wi, *ai);
+                }
+                z.push(acc >> QF);
+            }
+            if l < self.layers.len() - 1 {
+                for v in &mut z {
+                    *v = (*v).max(0);
+                }
+            }
+            act = z;
+        }
+        act.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap()
+    }
+
+    /// Accuracy over a dataset.
+    pub fn accuracy(&self, data: &[([f64; 2], usize)], unit: &dyn ApproxMul) -> f64 {
+        let ok = data.iter().filter(|(x, y)| self.classify(*x, unit) == *y).count();
+        ok as f64 / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::exact::ExactMul;
+    use crate::arith::rapid::RapidMul;
+    use crate::arith::registry::make_mul;
+
+    fn trained() -> (QuantMlp, Vec<([f64; 2], usize)>) {
+        let train_set = spiral_dataset(120, 1);
+        let test_set = spiral_dataset(60, 2);
+        (train(&train_set, 60, 3), test_set)
+    }
+
+    #[test]
+    fn exact_integer_inference_learns_spiral() {
+        let (mlp, test) = trained();
+        let exact = ExactMul { n: 16 };
+        let acc = mlp.accuracy(&test, &exact);
+        assert!(acc > 0.85, "quantised exact accuracy {acc}");
+    }
+
+    #[test]
+    fn rapid_preserves_accuracy() {
+        // §V-B / [71,72]: near-zero-bias approximation survives the
+        // aggregation-heavy NN structure.
+        let (mlp, test) = trained();
+        let exact = ExactMul { n: 16 };
+        let rapid = RapidMul::new(16, 10);
+        let a_exact = mlp.accuracy(&test, &exact);
+        let a_rapid = mlp.accuracy(&test, &rapid);
+        assert!(
+            a_rapid >= a_exact - 0.05,
+            "RAPID acc {a_rapid} vs exact {a_exact}"
+        );
+    }
+
+    #[test]
+    fn biased_mitchell_degrades_more_than_rapid() {
+        // plain Mitchell's 3.8 % *biased* error accumulates through layers
+        let (mlp, test) = trained();
+        let rapid = RapidMul::new(16, 10);
+        let mitchell = make_mul("mitchell", 16).unwrap();
+        let a_rapid = mlp.accuracy(&test, &rapid);
+        let a_mit = mlp.accuracy(&test, mitchell.as_ref());
+        assert!(
+            a_rapid >= a_mit - 0.02,
+            "RAPID {a_rapid} should be >= Mitchell {a_mit}"
+        );
+    }
+}

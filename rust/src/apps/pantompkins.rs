@@ -1,0 +1,177 @@
+//! Pan-Tompkins QRS detection (paper Fig. 5): bandpass (low-pass +
+//! high-pass recursive integer filters per the original 1985 design),
+//! derivative, squaring, moving-window integration and adaptive-threshold
+//! peak picking. The multiply-heavy stages (squaring, threshold scaling)
+//! run through the pluggable units; the filters are add/shift-only in
+//! hardware and stay exact, matching the paper's kernel split.
+
+use crate::arith::{ApproxDiv, ApproxMul};
+
+use super::fixed::{SignedDiv, SignedMul};
+
+/// Low-pass: y[n] = 2y[n-1] − y[n-2] + x[n] − 2x[n-6] + x[n-12]
+/// (Pan-Tompkins' integer LP section, gain 36, delay 6).
+pub fn lowpass(x: &[i64]) -> Vec<i64> {
+    let mut y = vec![0i64; x.len()];
+    let g = |v: &[i64], i: i64| if i >= 0 { v[i as usize] } else { 0 };
+    for n in 0..x.len() as i64 {
+        y[n as usize] = 2 * g(&y, n - 1) - g(&y, n - 2) + g(x, n) - 2 * g(x, n - 6) + g(x, n - 12);
+    }
+    y
+}
+
+/// High-pass: y[n] = y[n-1] − x[n]/32 + x[n-16] − x[n-17] + x[n-32]/32
+/// (integer HP section, gain 32, delay 16).
+pub fn highpass(x: &[i64]) -> Vec<i64> {
+    let mut y = vec![0i64; x.len()];
+    let g = |v: &[i64], i: i64| if i >= 0 { v[i as usize] } else { 0 };
+    for n in 0..x.len() as i64 {
+        y[n as usize] =
+            g(&y, n - 1) - g(x, n) / 32 + g(x, n - 16) - g(x, n - 17) + g(x, n - 32) / 32;
+    }
+    y
+}
+
+/// Five-point derivative: y[n] = (2x[n] + x[n-1] − x[n-3] − 2x[n-4]) / 8.
+pub fn derivative(x: &[i64]) -> Vec<i64> {
+    let g = |v: &[i64], i: i64| if i >= 0 { v[i as usize] } else { 0 };
+    (0..x.len() as i64)
+        .map(|n| (2 * g(x, n) + g(x, n - 1) - g(x, n - 3) - 2 * g(x, n - 4)) / 8)
+        .collect()
+}
+
+/// Squaring through the approximate multiplier (the hot multiply kernel).
+///
+/// Fixed-point staging: the integer band-pass amplifies the ±2 k-count ADC
+/// signal by ≈ 36·32; stage gains are normalised back (`run` divides after
+/// each filter) so the derivative stays within ±2 k, the halved magnitude
+/// fits the 16-bit multiplier, and the squared energy is rescaled to 8
+/// bits (`>> 10`) for the MWI divider's 2N/N overflow window.
+pub fn square(x: &[i64], unit: &dyn ApproxMul) -> Vec<i64> {
+    let m = SignedMul::new(unit);
+    x.iter()
+        .map(|&v| {
+            let h = (v / 2).unsigned_abs().min(0xffff) as i64;
+            m.mul(h, h) >> 6
+        })
+        .collect()
+}
+
+/// Moving-window integration over `win` samples (adder chain in hardware;
+/// the mean uses the approximate divider — the kernel's division). The
+/// accumulator is clamped into the divider's no-overflow window
+/// (`acc < win << 8`), which saturates the quotient at 255 — the hardware
+/// guard the HLS kernel inserts.
+pub fn mwi(x: &[i64], win: usize, unit: &dyn ApproxDiv) -> Vec<i64> {
+    let d = SignedDiv::new(unit);
+    let limit = ((win as i64) << 8) - 1;
+    let mut out = vec![0i64; x.len()];
+    let mut acc: i64 = 0;
+    for i in 0..x.len() {
+        acc += x[i];
+        if i >= win {
+            acc -= x[i - win];
+        }
+        out[i] = d.div(acc.clamp(0, limit), win as i64);
+    }
+    out
+}
+
+/// Detected peaks via the adaptive dual-threshold rule (comparisons only —
+/// kept exact like the paper's NMS/selection logic).
+pub fn detect_peaks(mwi_sig: &[i64], fs: f64) -> Vec<usize> {
+    let refractory = (0.25 * fs) as usize; // 250 ms lockout
+    let mut spki = 0i64;
+    let mut npki = 0i64;
+    let mut peaks = Vec::new();
+    let mut last = 0usize;
+    for i in 1..mwi_sig.len().saturating_sub(1) {
+        let v = mwi_sig[i];
+        if v <= mwi_sig[i - 1] || v < mwi_sig[i + 1] {
+            continue; // not a local max
+        }
+        let threshold = npki + (spki - npki) / 4;
+        if v > threshold && (peaks.is_empty() || i - last >= refractory) {
+            spki = v / 8 + 7 * spki / 8;
+            peaks.push(i);
+            last = i;
+        } else {
+            npki = v / 8 + 7 * npki / 8;
+        }
+    }
+    peaks
+}
+
+/// Full pipeline: returns (mwi signal, detected R-peak indices, group
+/// delay in samples for annotation alignment).
+pub fn run(samples: &[i64], fs: f64, mul: &dyn ApproxMul, div: &dyn ApproxDiv) -> (Vec<i64>, Vec<usize>, usize) {
+    // normalise the LP section's gain-36 (the HP form used here is already
+    // unity-gain in its passband) so downstream kernels stay in their
+    // fixed-point windows
+    let lp: Vec<i64> = lowpass(samples).iter().map(|v| v / 32).collect();
+    let hp = highpass(&lp);
+    let de = derivative(&hp);
+    let sq = square(&de, mul);
+    let win = (0.15 * fs) as usize; // 150 ms window
+    let mw = mwi(&sq, win, div);
+    let peaks = detect_peaks(&mw, fs);
+    // group delay: LP(6) + HP(16) + derivative(2) + MWI(win/2)
+    let delay = 6 + 16 + 2 + win / 2;
+    (mw, peaks, delay)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::ecg::{generate, EcgConfig};
+    use crate::apps::qor::Sensitivity;
+    use crate::arith::exact::{ExactDiv, ExactMul};
+    use crate::arith::rapid::{RapidDiv, RapidMul};
+
+    #[test]
+    fn filters_reject_dc_and_pass_qrs_band() {
+        // DC in → HP output ~0 after settling.
+        let dc = vec![100i64; 400];
+        let hp = highpass(&lowpass(&dc));
+        let tail = &hp[300..];
+        let mx = tail.iter().map(|v| v.abs()).max().unwrap();
+        assert!(mx <= 110, "HP leaves DC: {mx}"); // HP gain is 32: residual ripple small vs 100*36*32
+    }
+
+    #[test]
+    fn exact_pipeline_detects_most_beats() {
+        let rec = generate(200 * 30, &EcgConfig::default(), 11); // 30 s
+        let (mul, div) = (ExactMul { n: 16 }, ExactDiv { n: 8 });
+        let (_, peaks, delay) = run(&rec.samples, rec.fs, &mul, &div);
+        let s = Sensitivity::measure(&rec.r_peaks, &peaks, delay, 30);
+        assert!(s.sensitivity() > 0.9, "sensitivity {}", s.sensitivity());
+        assert!(s.false_positives <= 4, "fp {}", s.false_positives);
+    }
+
+    #[test]
+    fn rapid_pipeline_matches_exact_qor() {
+        // Paper §V-B: near-zero-bias approximation keeps detection intact.
+        let rec = generate(200 * 30, &EcgConfig::default(), 12);
+        let (em, ed) = (ExactMul { n: 16 }, ExactDiv { n: 8 });
+        let (rm, rd) = (RapidMul::new(16, 10), RapidDiv::new(8, 9));
+        let (_, exact_peaks, delay) = run(&rec.samples, rec.fs, &em, &ed);
+        let (_, rapid_peaks, _) = run(&rec.samples, rec.fs, &rm, &rd);
+        let se = Sensitivity::measure(&rec.r_peaks, &exact_peaks, delay, 30);
+        let sr = Sensitivity::measure(&rec.r_peaks, &rapid_peaks, delay, 30);
+        assert!(
+            sr.sensitivity() >= se.sensitivity() - 0.03,
+            "RAPID {} vs exact {}",
+            sr.sensitivity(),
+            se.sensitivity()
+        );
+    }
+
+    #[test]
+    fn mwi_is_windowed_mean() {
+        let d = ExactDiv { n: 8 };
+        let x = vec![30i64; 100];
+        let out = mwi(&x, 30, &d);
+        // steady state: mean of 30 values of 30 = 30
+        assert_eq!(out[99], 30);
+    }
+}

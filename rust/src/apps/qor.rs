@@ -1,0 +1,143 @@
+//! Quality-of-result metrics (paper §V-B): PSNR for signals/images,
+//! detection sensitivity for QRS, and motion-vector correctness for HCD.
+
+/// PSNR between two integer signals/images with a given peak value.
+pub fn psnr(reference: &[i64], test: &[i64], peak: f64) -> f64 {
+    assert_eq!(reference.len(), test.len());
+    assert!(!reference.is_empty());
+    let mse: f64 = reference
+        .iter()
+        .zip(test)
+        .map(|(&r, &t)| {
+            let d = (r - t) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / reference.len() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (peak * peak / mse).log10()
+}
+
+/// 2-D convenience wrapper.
+pub fn psnr2d(reference: &[Vec<i64>], test: &[Vec<i64>], peak: f64) -> f64 {
+    let r: Vec<i64> = reference.iter().flatten().cloned().collect();
+    let t: Vec<i64> = test.iter().flatten().cloned().collect();
+    psnr(&r, &t, peak)
+}
+
+/// QRS detection quality vs ground-truth annotations.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sensitivity {
+    pub true_positives: usize,
+    pub false_negatives: usize,
+    pub false_positives: usize,
+}
+
+impl Sensitivity {
+    /// Match detections to truth within ±`tolerance` samples, after
+    /// shifting detections back by the pipeline's group `delay`.
+    pub fn measure(truth: &[usize], detected: &[usize], delay: usize, tolerance: usize) -> Self {
+        let shifted: Vec<i64> = detected.iter().map(|&d| d as i64 - delay as i64).collect();
+        let mut used = vec![false; shifted.len()];
+        let mut tp = 0;
+        let mut fne = 0;
+        for &t in truth {
+            let mut hit = None;
+            for (i, &d) in shifted.iter().enumerate() {
+                if !used[i] && (d - t as i64).abs() <= tolerance as i64 {
+                    hit = Some(i);
+                    break;
+                }
+            }
+            match hit {
+                Some(i) => {
+                    used[i] = true;
+                    tp += 1;
+                }
+                None => fne += 1,
+            }
+        }
+        let fp = used.iter().filter(|&&u| !u).count();
+        Sensitivity { true_positives: tp, false_negatives: fne, false_positives: fp }
+    }
+
+    pub fn sensitivity(&self) -> f64 {
+        let denom = self.true_positives + self.false_negatives;
+        if denom == 0 {
+            0.0
+        } else {
+            self.true_positives as f64 / denom as f64
+        }
+    }
+
+    pub fn f1(&self) -> f64 {
+        let tp = self.true_positives as f64;
+        let denom = tp + 0.5 * (self.false_positives + self.false_negatives) as f64;
+        if denom == 0.0 {
+            0.0
+        } else {
+            tp / denom
+        }
+    }
+}
+
+/// Fraction of motion vectors within `tol` pixels of the reference motion
+/// (the HCD application metric: "% correct vectors").
+pub fn correct_vector_ratio(vectors: &[(f64, f64)], truth: (f64, f64), tol: f64) -> f64 {
+    if vectors.is_empty() {
+        return 0.0;
+    }
+    let ok = vectors
+        .iter()
+        .filter(|(dx, dy)| (dx - truth.0).hypot(dy - truth.1) <= tol)
+        .count();
+    ok as f64 / vectors.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn psnr_identical_is_infinite() {
+        let x = vec![1, 2, 3, 4];
+        assert!(psnr(&x, &x, 255.0).is_infinite());
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // constant error of 16 on peak 255: PSNR = 20 log10(255/16) ≈ 24.05
+        let r = vec![100i64; 64];
+        let t = vec![116i64; 64];
+        let p = psnr(&r, &t, 255.0);
+        assert!((p - 24.05).abs() < 0.05, "{p}");
+    }
+
+    #[test]
+    fn sensitivity_counts() {
+        let truth = vec![100, 300, 500];
+        let det = vec![105, 303, 720]; // third is a false positive, 500 missed
+        let s = Sensitivity::measure(&truth, &det, 0, 10);
+        assert_eq!(s.true_positives, 2);
+        assert_eq!(s.false_negatives, 1);
+        assert_eq!(s.false_positives, 1);
+        assert!((s.sensitivity() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delay_alignment() {
+        let truth = vec![100];
+        let det = vec![130];
+        assert_eq!(Sensitivity::measure(&truth, &det, 30, 5).true_positives, 1);
+        assert_eq!(Sensitivity::measure(&truth, &det, 0, 5).true_positives, 0);
+    }
+
+    #[test]
+    fn vector_ratio() {
+        let v = vec![(1.0, 0.0), (1.1, 0.1), (5.0, 5.0)];
+        let r = correct_vector_ratio(&v, (1.0, 0.0), 0.5);
+        assert!((r - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

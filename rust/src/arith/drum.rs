@@ -1,0 +1,105 @@
+//! DRUM-k — dynamic-range unbiased multiplier baseline [47].
+//!
+//! Truncation-family design: select the k bits starting at the leading one
+//! of each operand, force the LSB of the truncated mantissa to 1 (the
+//! unbiasing trick), multiply the two k-bit mantissas exactly and shift
+//! back. Table III compares DRUM-4 at 8-bit and DRUM-6 at 16/32-bit.
+
+use super::traits::{check_width, mask, ApproxMul};
+
+pub struct DrumMul {
+    pub n: u32,
+    pub k: u32,
+}
+
+impl DrumMul {
+    pub fn new(n: u32, k: u32) -> Self {
+        assert!(k >= 2 && k <= n);
+        DrumMul { n, k }
+    }
+
+    /// Truncated unbiased mantissa + shift amount for one operand.
+    #[inline]
+    fn reduce(&self, x: u64) -> (u64, u32) {
+        if x < (1u64 << self.k) {
+            return (x, 0); // short operand: exact
+        }
+        let k1 = 63 - x.leading_zeros();
+        let s = k1 - self.k + 1;
+        // keep top k bits, force the lowest kept bit to 1 (unbiasing)
+        (((x >> s) | 1) & mask(self.k), s)
+    }
+}
+
+impl ApproxMul for DrumMul {
+    fn width(&self) -> u32 {
+        self.n
+    }
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        check_width(a, self.n);
+        check_width(b, self.n);
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let (ma, sa) = self.reduce(a);
+        let (mb, sb) = self.reduce(b);
+        let p = (ma as u128) * (mb as u128);
+        ((p << (sa + sb)) & mask(2 * self.n) as u128) as u64
+    }
+    fn name(&self) -> String {
+        format!("drum{}_mul{}", self.k, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_pairs;
+    use crate::util::XorShift256;
+
+    #[test]
+    fn exact_for_small_operands() {
+        let m = DrumMul::new(16, 6);
+        check_pairs("drum-small-exact", 6, 6, 30, |a, b| m.mul(a, b) == a * b);
+    }
+
+    #[test]
+    fn near_unbiased() {
+        // DRUM's defining property: error bias ≈ 0 (Table III: 0.04-0.05 %).
+        let m = DrumMul::new(16, 6);
+        let mut rng = XorShift256::new(31);
+        let mut bias = 0.0;
+        let n = 200_000;
+        for _ in 0..n {
+            let a = rng.bits(16).max(1);
+            let b = rng.bits(16).max(1);
+            let exact = (a * b) as f64;
+            bias += (exact - m.mul(a, b) as f64) / exact;
+        }
+        let bias = bias / n as f64;
+        assert!(bias.abs() < 0.004, "DRUM bias {bias}");
+    }
+
+    #[test]
+    fn are_band() {
+        // Paper: DRUM-6 ARE ≈ 1.47 % (16-bit); DRUM-4 ≈ 5.8 % (8-bit).
+        let m6 = DrumMul::new(16, 6);
+        let m4 = DrumMul::new(8, 4);
+        let mut rng = XorShift256::new(32);
+        let (mut e6, mut e4) = (0.0, 0.0);
+        let n = 60_000;
+        for _ in 0..n {
+            let a = rng.bits(16).max(1);
+            let b = rng.bits(16).max(1);
+            let exact = (a * b) as f64;
+            e6 += ((exact - m6.mul(a, b) as f64) / exact).abs();
+            let a8 = rng.bits(8).max(1);
+            let b8 = rng.bits(8).max(1);
+            let ex8 = (a8 * b8) as f64;
+            e4 += ((ex8 - m4.mul(a8, b8) as f64) / ex8).abs();
+        }
+        let (e6, e4) = (e6 / n as f64, e4 / n as f64);
+        assert!((0.005..0.03).contains(&e6), "DRUM-6 ARE {e6}");
+        assert!((0.02..0.09).contains(&e4), "DRUM-4 ARE {e4}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Exact reference units — the functional equivalent of the "accurate
+//! Vivado IP" rows of Table III, and the golden oracle for every error
+//! metric.
+
+use super::traits::{check_width, mask, ApproxDiv, ApproxMul};
+
+/// Exact N×N multiplier (soft-IP functional reference).
+pub struct ExactMul {
+    pub n: u32,
+}
+
+impl ApproxMul for ExactMul {
+    fn width(&self) -> u32 {
+        self.n
+    }
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        check_width(a, self.n);
+        check_width(b, self.n);
+        ((a as u128 * b as u128) & mask(2 * self.n) as u128) as u64
+    }
+    fn name(&self) -> String {
+        format!("exact_mul{}", self.n)
+    }
+    fn is_exact(&self) -> bool {
+        true
+    }
+}
+
+/// Exact 2N-by-N divider with the paper's overflow convention: quotient
+/// saturates to `2^N − 1` when `dividend >= 2^N * divisor` (§IV-B), and a
+/// zero divisor saturates to all-ones.
+pub struct ExactDiv {
+    pub n: u32,
+}
+
+impl ApproxDiv for ExactDiv {
+    fn divisor_width(&self) -> u32 {
+        self.n
+    }
+    fn div(&self, a: u64, b: u64) -> u64 {
+        check_width(a, 2 * self.n);
+        check_width(b, self.n);
+        if b == 0 {
+            return mask(2 * self.n);
+        }
+        if a >= (b << self.n) {
+            return mask(self.n);
+        }
+        a / b
+    }
+    fn name(&self) -> String {
+        format!("exact_div{}", self.n)
+    }
+    fn is_exact(&self) -> bool {
+        true
+    }
+}
+
+/// Restoring-array division step sequence — bit-exact model of the
+/// hardware restoring divider the exact-IP netlist implements
+/// (`circuit::synth::exact_ip`). Kept separate from `ExactDiv::div` (which
+/// uses the CPU divide) so the two can be cross-checked.
+pub fn restoring_div(n: u32, a: u64, b: u64) -> (u64, u64) {
+    check_width(a, 2 * n);
+    check_width(b, n);
+    assert!(b != 0);
+    let steps = 2 * n;
+    let mut rem: u128 = 0;
+    let mut quo: u64 = 0;
+    for i in (0..steps).rev() {
+        rem = (rem << 1) | ((a >> i) & 1) as u128;
+        quo <<= 1;
+        if rem >= b as u128 {
+            rem -= b as u128;
+            quo |= 1;
+        }
+    }
+    (quo, rem as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_pairs;
+
+    #[test]
+    fn exact_mul_is_exact() {
+        let m = ExactMul { n: 16 };
+        check_pairs("exact-mul", 16, 16, 20, |a, b| m.mul(a, b) == a * b);
+    }
+
+    #[test]
+    fn exact_div_matches_cpu_quotient() {
+        let d = ExactDiv { n: 8 };
+        check_pairs("exact-div", 16, 8, 21, |a, b| {
+            if b == 0 || a >= (b << 8) {
+                return true;
+            }
+            d.div(a, b) == a / b
+        });
+    }
+
+    #[test]
+    fn restoring_matches_cpu() {
+        check_pairs("restoring-div", 16, 8, 22, |a, b| {
+            if b == 0 {
+                return true;
+            }
+            let (q, r) = restoring_div(8, a, b);
+            q == a / b && r == a % b
+        });
+    }
+
+    #[test]
+    fn saturation_rules() {
+        let d = ExactDiv { n: 4 };
+        assert_eq!(d.div(77, 0), 0xff);
+        assert_eq!(d.div(0xf0, 1), 0xf);
+    }
+}

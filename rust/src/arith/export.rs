@@ -1,0 +1,74 @@
+//! Scheme export — serialises the derived error-reduction schemes to a
+//! small JSON file consumed by the build-time Python layer
+//! (`python/compile/kernels/rapid.py`), so the Pallas kernel and the Rust
+//! functional model share bit-identical grids and coefficient tables.
+//!
+//! Hand-rolled JSON (no serde in the offline vendor set); the format is:
+//! `{"kind": "mul", "groups": G, "width": N, "frac_bits": W,
+//!   "grid": [256 ints row-major], "coeffs": [G ints]}`.
+
+use std::fmt::Write as _;
+
+use super::rapid::{RapidDiv, RapidMul};
+use super::regions::GRID;
+
+/// JSON for a multiplier scheme at width `n` with `g` groups.
+pub fn export_mul_scheme(n: u32, g: usize) -> String {
+    let unit = RapidMul::new(n, g);
+    render("mul", n, n - 1, unit.scheme().grid, unit.table())
+}
+
+/// JSON for a divider scheme at divisor width `n` with `g` groups.
+pub fn export_div_scheme(n: u32, g: usize) -> String {
+    let unit = RapidDiv::new(n, g);
+    render("div", n, n - 1, unit.scheme().grid, unit.table())
+}
+
+fn render(kind: &str, n: u32, w: u32, grid: [[u8; GRID]; GRID], coeffs: &[u64]) -> String {
+    let mut s = String::with_capacity(2048);
+    let _ = write!(
+        s,
+        "{{\"kind\": \"{kind}\", \"groups\": {}, \"width\": {n}, \"frac_bits\": {w}, \"grid\": [",
+        coeffs.len()
+    );
+    for i in 0..GRID {
+        for j in 0..GRID {
+            if i + j > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{}", grid[i][j]);
+        }
+    }
+    s.push_str("], \"coeffs\": [");
+    for (idx, c) in coeffs.iter().enumerate() {
+        if idx > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{c}");
+    }
+    s.push_str("]}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_is_wellformed() {
+        let s = export_mul_scheme(16, 10);
+        assert!(s.starts_with('{') && s.trim_end().ends_with('}'));
+        assert!(s.contains("\"groups\": 10"));
+        assert!(s.contains("\"frac_bits\": 15"));
+        // 256 grid entries -> 255 commas inside grid array at least
+        let grid_part = s.split("\"grid\": [").nth(1).unwrap().split(']').next().unwrap();
+        assert_eq!(grid_part.split(',').count(), 256);
+    }
+
+    #[test]
+    fn div_export_has_requested_groups() {
+        let s = export_div_scheme(16, 9);
+        let coeffs = s.split("\"coeffs\": [").nth(1).unwrap().split(']').next().unwrap();
+        assert_eq!(coeffs.split(',').count(), 9);
+    }
+}

@@ -1,0 +1,209 @@
+//! Approximate floating-point units (paper §VI future work): RAPID in the
+//! mantissa datapath of an IEEE-754 single-precision multiplier/divider.
+//!
+//! The paper notes the mantissa multiplier/divider consumes >95 % of an
+//! FPU's area/power and division latency reaches 35× an addition; RAPID
+//! replaces the 24×24 mantissa multiply (48/24 divide) with its log-domain
+//! datapath while sign/exponent logic stays exact. Subnormals flush to
+//! zero (the common FPGA-FPU simplification); NaN/Inf propagate.
+
+use super::rapid::{RapidDiv, RapidMul};
+use super::traits::{ApproxDiv, ApproxMul};
+
+/// f32 multiplier with a RAPID mantissa core (24-bit significands produce
+/// a 48-bit product through the 24×24 RAPID multiplier).
+pub struct RapidFloatMul {
+    core: RapidMul,
+}
+
+impl RapidFloatMul {
+    pub fn new(groups: usize) -> Self {
+        RapidFloatMul { core: RapidMul::new(24, groups) }
+    }
+
+    pub fn mul(&self, a: f32, b: f32) -> f32 {
+        let (sa, ea, ma) = split(a);
+        let (sb, eb, mb) = split(b);
+        let sign = sa ^ sb;
+        // specials
+        if a.is_nan() || b.is_nan() {
+            return f32::NAN;
+        }
+        if a.is_infinite() || b.is_infinite() {
+            if a == 0.0 || b == 0.0 {
+                return f32::NAN;
+            }
+            return inf(sign);
+        }
+        if ea == 0 || eb == 0 {
+            return signed_zero(sign); // subnormals flush to zero
+        }
+        // significands with hidden one: 24-bit
+        let p = self.core.mul(ma, mb); // ~2^46..2^48
+        if p == 0 {
+            return signed_zero(sign);
+        }
+        let k = 63 - p.leading_zeros() as i32; // 46 or 47
+        let mant = if k >= 23 { (p >> (k - 23)) & 0x7f_ffff } else { 0 } as u32;
+        let e = ea as i32 + eb as i32 - 127 + (k - 46);
+        pack(sign, e, mant)
+    }
+}
+
+/// f32 divider with a RAPID mantissa core (48/24 divide).
+pub struct RapidFloatDiv {
+    core: RapidDiv,
+}
+
+impl RapidFloatDiv {
+    pub fn new(groups: usize) -> Self {
+        RapidFloatDiv { core: RapidDiv::new(24, groups) }
+    }
+
+    pub fn div(&self, a: f32, b: f32) -> f32 {
+        let (sa, ea, ma) = split(a);
+        let (sb, eb, mb) = split(b);
+        let sign = sa ^ sb;
+        if a.is_nan() || b.is_nan() || (a.is_infinite() && b.is_infinite()) {
+            return f32::NAN;
+        }
+        if b == 0.0 || eb == 0 {
+            return if a == 0.0 { f32::NAN } else { inf(sign) };
+        }
+        if a.is_infinite() {
+            return inf(sign);
+        }
+        if b.is_infinite() || ea == 0 {
+            return signed_zero(sign);
+        }
+        // scale dividend significand up so the integer quotient keeps 24
+        // significant bits: (ma << 23) / mb ∈ [2^22, 2^24)
+        let q = self.core.div(ma << 23, mb);
+        if q == 0 {
+            return signed_zero(sign);
+        }
+        let k = 63 - q.leading_zeros() as i32; // 22 or 23
+        let mant = if k >= 23 { (q >> (k - 23)) & 0x7f_ffff } else { (q << (23 - k)) & 0x7f_ffff } as u32;
+        let e = ea as i32 - eb as i32 + 127 + (k - 23);
+        pack(sign, e, mant)
+    }
+}
+
+#[inline]
+fn split(x: f32) -> (u32, u32, u64) {
+    let bits = x.to_bits();
+    let sign = bits >> 31;
+    let exp = (bits >> 23) & 0xff;
+    let frac = bits & 0x7f_ffff;
+    let mant = if exp == 0 { frac as u64 } else { (1 << 23) | frac as u64 };
+    (sign, exp, mant)
+}
+
+#[inline]
+fn pack(sign: u32, e: i32, mant: u32) -> f32 {
+    if e >= 0xff {
+        return inf(sign);
+    }
+    if e <= 0 {
+        return signed_zero(sign);
+    }
+    f32::from_bits((sign << 31) | ((e as u32) << 23) | mant)
+}
+
+#[inline]
+fn inf(sign: u32) -> f32 {
+    if sign == 1 {
+        f32::NEG_INFINITY
+    } else {
+        f32::INFINITY
+    }
+}
+
+#[inline]
+fn signed_zero(sign: u32) -> f32 {
+    if sign == 1 {
+        -0.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift256;
+
+    #[test]
+    fn mul_relative_error_band() {
+        let m = RapidFloatMul::new(10);
+        let mut rng = XorShift256::new(1);
+        let mut worst = 0.0f64;
+        let mut sum = 0.0f64;
+        let n = 50_000;
+        for _ in 0..n {
+            let a = f32::from_bits(0x3000_0000 + rng.below(0x2000_0000) as u32); // positive normals
+            let b = f32::from_bits(0x3000_0000 + rng.below(0x2000_0000) as u32);
+            let exact = a as f64 * b as f64;
+            let got = m.mul(a, b) as f64;
+            let rel = ((exact - got) / exact).abs();
+            worst = worst.max(rel);
+            sum += rel;
+        }
+        let are = sum / n as f64;
+        assert!(are < 0.012, "FP mul ARE {are}");
+        assert!(worst < 0.09, "FP mul PRE {worst}");
+    }
+
+    #[test]
+    fn div_relative_error_band() {
+        let d = RapidFloatDiv::new(9);
+        let mut rng = XorShift256::new(2);
+        let mut sum = 0.0f64;
+        let n = 50_000;
+        for _ in 0..n {
+            let a = f32::from_bits(0x3000_0000 + rng.below(0x2000_0000) as u32);
+            let b = f32::from_bits(0x3000_0000 + rng.below(0x2000_0000) as u32);
+            let exact = a as f64 / b as f64;
+            let got = d.div(a, b) as f64;
+            sum += ((exact - got) / exact).abs();
+        }
+        let are = sum / n as f64;
+        assert!(are < 0.012, "FP div ARE {are}");
+    }
+
+    #[test]
+    fn specials_propagate() {
+        let m = RapidFloatMul::new(5);
+        let d = RapidFloatDiv::new(5);
+        assert!(m.mul(f32::NAN, 1.0).is_nan());
+        assert!(m.mul(f32::INFINITY, 0.0).is_nan());
+        assert_eq!(m.mul(f32::INFINITY, -2.0), f32::NEG_INFINITY);
+        assert_eq!(m.mul(0.0, 5.0), 0.0);
+        assert!(d.div(1.0, 0.0).is_infinite());
+        assert!(d.div(0.0, 0.0).is_nan());
+        assert_eq!(d.div(-6.0, f32::INFINITY), -0.0);
+    }
+
+    #[test]
+    fn signs_correct_and_powers_of_two_near_exact() {
+        // zero-fraction operands are exact under plain Mitchell but pick
+        // up the region-(0,0) coefficient under RAPID (the paper's Table
+        // II coefficients are nonzero there too) — expect <1 % error with
+        // correct signs.
+        let m = RapidFloatMul::new(10);
+        let d = RapidFloatDiv::new(9);
+        let close = |got: f32, want: f32| (got as f64 / want as f64 - 1.0).abs() < 0.01;
+        assert!(close(m.mul(-2.0, 4.0), -8.0), "{}", m.mul(-2.0, 4.0));
+        assert!(m.mul(-2.0, 4.0) < 0.0);
+        assert!(close(m.mul(-0.5, -0.25), 0.125));
+        assert!(close(d.div(8.0, -2.0), -4.0), "{}", d.div(8.0, -2.0));
+        assert!(d.div(8.0, -2.0) < 0.0);
+    }
+
+    #[test]
+    fn exponent_overflow_saturates() {
+        let m = RapidFloatMul::new(5);
+        assert_eq!(m.mul(f32::MAX, f32::MAX), f32::INFINITY);
+        assert_eq!(m.mul(f32::MIN_POSITIVE, f32::MIN_POSITIVE), 0.0);
+    }
+}

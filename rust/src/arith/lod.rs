@@ -1,0 +1,99 @@
+//! Leading-one detection and fraction extraction — step 1 of Mitchell's
+//! algorithm (paper §III / §IV-B "Leading-one detection").
+//!
+//! The functional model here is what the hardware computes; the segmented
+//! 4-bit LOD structure (flag-LUT + LOD4-LUT + priority combine) lives in
+//! `crate::circuit::synth::lod` and is property-checked against this.
+
+use super::traits::mask;
+
+/// Position of the leading one: `k = floor(log2(x))`. Undefined for 0
+/// (callers must special-case zero operands, as the RTL does).
+#[inline]
+pub fn lod(x: u64) -> u32 {
+    debug_assert!(x != 0);
+    63 - x.leading_zeros()
+}
+
+/// Characteristic + fraction split of Eq. 2: `x = 2^k (1 + f)` with the
+/// fraction left-aligned into `frac_bits` bits of fixed point
+/// (`f = frac / 2^frac_bits`). Hardware performs this alignment with the
+/// same barrel shifter that later applies the anti-log.
+///
+/// Returns `(k, frac)`.
+#[inline]
+pub fn log_split(x: u64, frac_bits: u32) -> (u32, u64) {
+    let k = lod(x);
+    let low = x & mask(k); // bits below the leading one (k of them)
+    let frac = if k <= frac_bits {
+        low << (frac_bits - k)
+    } else {
+        low >> (k - frac_bits) // truncate LSBs (paper: divider neglects N LSBs)
+    };
+    (k, frac)
+}
+
+/// Inverse helper for tests: approximate value of `(k, frac)` as f64.
+pub fn log_value(k: u32, frac: u64, frac_bits: u32) -> f64 {
+    k as f64 + frac as f64 / (1u64 << frac_bits) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_vals;
+
+    #[test]
+    fn lod_matches_log2() {
+        for x in 1u64..=4096 {
+            assert_eq!(lod(x), (x as f64).log2().floor() as u32, "x={x}");
+        }
+    }
+
+    #[test]
+    fn split_roundtrip_when_fraction_fits() {
+        // For k <= frac_bits the split is exact: x == 2^k * (1 + frac/2^W).
+        let w = 15;
+        for x in 1u64..=0xffff {
+            let (k, f) = log_split(x, w);
+            if k <= w {
+                let recon = (1u64 << k) + ((f >> (w - k)) << 0).checked_shl(0).unwrap() * 0 + (f >> (w - k));
+                // recon = 2^k + low where low = f >> (w-k)
+                assert_eq!(recon, x, "x={x} k={k} f={f:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_worked_example() {
+        // Paper Eq. 2-3: 58 = 2^5 (1 + 0.11010b), 18 = 2^4 (1 + 0.001b).
+        let (k, f) = log_split(58, 7);
+        assert_eq!(k, 5);
+        assert_eq!(f, 0b1101000); // 0.11010 left-aligned to 7 bits
+        let (k2, f2) = log_split(18, 7);
+        assert_eq!(k2, 4);
+        assert_eq!(f2, 0b0010000);
+    }
+
+    #[test]
+    fn fraction_always_below_one() {
+        check_vals("frac<1", 32, 77, |x| {
+            if x == 0 {
+                return true;
+            }
+            let (_, f) = log_split(x, 31);
+            f < (1u64 << 31)
+        });
+    }
+
+    #[test]
+    fn log_value_monotone_nondecreasing() {
+        let mut prev = -1.0;
+        for x in 1u64..=2048 {
+            let (k, f) = log_split(x, 20);
+            let v = log_value(k, f, 20);
+            assert!(v >= prev, "x={x}");
+            prev = v;
+        }
+    }
+}

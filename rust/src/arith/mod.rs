@@ -1,0 +1,30 @@
+//! Bit-accurate functional models of every multiplier/divider the paper
+//! builds or compares against (Table I / Table III).
+//!
+//! Each unit is a pure function over unsigned integers that mirrors the RTL
+//! datapath exactly (LOD → fraction align → (ternary) add/sub → normalize →
+//! barrel shift). The circuit layer (`crate::circuit`) synthesizes netlists
+//! from the *same* coefficient tables, and the gate-level evaluation is
+//! property-tested against these models.
+
+pub mod traits;
+pub mod lod;
+pub mod mitchell;
+pub mod regions;
+pub mod rapid;
+pub mod exact;
+pub mod mbm;
+pub mod inzed;
+pub mod simdive;
+pub mod drum;
+pub mod aaxd;
+pub mod afm;
+pub mod saadi;
+pub mod registry;
+pub mod export;
+pub mod float;
+
+pub use traits::{ApproxDiv, ApproxMul, DivUnit, MulUnit};
+pub use rapid::{RapidDiv, RapidMul};
+pub use mitchell::{MitchellDiv, MitchellMul};
+pub use exact::{ExactDiv, ExactMul};

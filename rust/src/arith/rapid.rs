@@ -1,0 +1,271 @@
+//! RAPID multipliers and dividers (the paper's contribution, §IV).
+//!
+//! A RAPID unit is the Mitchell datapath of `mitchell.rs` plus the derived
+//! G-coefficient error-reduction scheme of `regions.rs`, with the coefficient
+//! folded into the fraction addition by the LUT ternary adder (zero extra
+//! latency in hardware; here: zero extra pipeline stage in the circuit
+//! model). Mul variants: RAPID-3/5/10; div variants: RAPID-3/5/9.
+
+use std::sync::OnceLock;
+
+use super::mitchell::{mitchell_div_core, mitchell_mul_core};
+use super::regions::{derive_div_scheme, derive_mul_scheme, Scheme};
+use super::traits::{ApproxDiv, ApproxMul};
+
+/// Cache: deriving a scheme costs a small DP; units are created freely all
+/// over benches/tests, so memoise per group count.
+fn mul_scheme(g: usize) -> &'static Scheme {
+    static CACHE: OnceLock<[OnceLock<Scheme>; 16]> = OnceLock::new();
+    let slots = CACHE.get_or_init(Default::default);
+    slots[g].get_or_init(|| derive_mul_scheme(g))
+}
+
+fn div_scheme(g: usize) -> &'static Scheme {
+    static CACHE: OnceLock<[OnceLock<Scheme>; 16]> = OnceLock::new();
+    let slots = CACHE.get_or_init(Default::default);
+    slots[g].get_or_init(|| derive_div_scheme(g))
+}
+
+/// RAPID N×N multiplier with G error coefficients.
+pub struct RapidMul {
+    n: u32,
+    scheme: &'static Scheme,
+    /// W-bit quantised coefficient per group (W = N−1).
+    table: Vec<u64>,
+}
+
+impl RapidMul {
+    pub fn new(n: u32, g: usize) -> Self {
+        assert!((2..=32).contains(&n), "width {n} unsupported");
+        assert!(g >= 1 && g <= 15);
+        let scheme = mul_scheme(g);
+        let table = scheme.coeff_table(n - 1);
+        RapidMul { n, scheme, table }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn scheme(&self) -> &Scheme {
+        self.scheme
+    }
+
+    /// Quantised coefficient table (used by the netlist synthesizer so the
+    /// circuit and the functional model share constants).
+    pub fn table(&self) -> &[u64] {
+        &self.table
+    }
+}
+
+impl ApproxMul for RapidMul {
+    fn width(&self) -> u32 {
+        self.n
+    }
+
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        let w = self.n - 1;
+        mitchell_mul_core(self.n, a, b, |x1, x2| {
+            self.table[self.scheme.group(x1, x2, w)]
+        })
+    }
+
+    fn name(&self) -> String {
+        format!("rapid{}_mul{}", self.groups(), self.n)
+    }
+}
+
+/// RAPID 2N-by-N divider with G error coefficients.
+pub struct RapidDiv {
+    n: u32,
+    scheme: &'static Scheme,
+    table: Vec<u64>,
+}
+
+impl RapidDiv {
+    pub fn new(n: u32, g: usize) -> Self {
+        assert!((2..=32).contains(&n), "divisor width {n} unsupported");
+        let scheme = div_scheme(g);
+        let table = scheme.coeff_table(n - 1);
+        RapidDiv { n, scheme, table }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn scheme(&self) -> &Scheme {
+        self.scheme
+    }
+
+    pub fn table(&self) -> &[u64] {
+        &self.table
+    }
+}
+
+impl ApproxDiv for RapidDiv {
+    fn divisor_width(&self) -> u32 {
+        self.n
+    }
+
+    fn div(&self, a: u64, b: u64) -> u64 {
+        let w = self.n - 1;
+        mitchell_div_core(self.n, a, b, |x1, x2, _| {
+            self.table[self.scheme.group(x1, x2, w)]
+        })
+    }
+
+    fn name(&self) -> String {
+        format!("rapid{}_div{}", self.groups(), self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::mitchell::{MitchellDiv, MitchellMul};
+    use crate::util::proptest::check_pairs;
+    use crate::util::XorShift256;
+
+    fn are_mul(m: &dyn ApproxMul, samples: u64, seed: u64) -> f64 {
+        let mut rng = XorShift256::new(seed);
+        let n = m.width();
+        let mut acc = 0.0;
+        let mut cnt = 0u64;
+        for _ in 0..samples {
+            let a = rng.bits(n).max(1);
+            let b = rng.bits(n).max(1);
+            let exact = (a as u128 * b as u128) as f64;
+            let approx = m.mul(a, b) as f64;
+            acc += ((exact - approx) / exact).abs();
+            cnt += 1;
+        }
+        acc / cnt as f64
+    }
+
+    fn are_div(d: &dyn ApproxDiv, samples: u64, seed: u64) -> f64 {
+        let mut rng = XorShift256::new(seed);
+        let n = d.divisor_width();
+        let mut acc = 0.0;
+        let mut cnt = 0u64;
+        for _ in 0..samples {
+            let b = rng.bits(n).max(1);
+            let a = rng.bits(2 * n);
+            if a < b || a >= (b << n) {
+                continue;
+            }
+            let exact = (a / b) as f64;
+            let approx = d.div(a, b) as f64;
+            acc += ((exact - approx) / exact).abs();
+            cnt += 1;
+        }
+        acc / cnt as f64
+    }
+
+    #[test]
+    fn rapid_mul_beats_plain_mitchell() {
+        let plain = MitchellMul { n: 16 };
+        let base = are_mul(&plain, 20_000, 1);
+        for g in [3usize, 5, 10] {
+            let r = RapidMul::new(16, g);
+            let e = are_mul(&r, 20_000, 1);
+            assert!(e < base / 2.0, "RAPID-{g} ARE {e:.4} vs Mitchell {base:.4}");
+        }
+    }
+
+    #[test]
+    fn rapid_mul_accuracy_bands() {
+        // Paper Table III (16-bit): RAPID-3 ≈ 1.03 %, RAPID-5 ≈ 0.93 %,
+        // RAPID-10 ≈ 0.56 %. Allow generous bands around the derived scheme.
+        let e3 = are_mul(&RapidMul::new(16, 3), 50_000, 2);
+        let e5 = are_mul(&RapidMul::new(16, 5), 50_000, 2);
+        let e10 = are_mul(&RapidMul::new(16, 10), 50_000, 2);
+        assert!(e3 < 0.016, "RAPID-3 ARE {e3}");
+        assert!(e5 < 0.012, "RAPID-5 ARE {e5}");
+        assert!(e10 < 0.008, "RAPID-10 ARE {e10}");
+        assert!(e10 <= e5 + 1e-4 && e5 <= e3 + 1e-4, "more coeffs must not hurt");
+    }
+
+    #[test]
+    fn rapid_div_accuracy_bands() {
+        // Paper Table III (16/8): RAPID-3 ≈ 1.02 %, RAPID-5 ≈ 0.79 %,
+        // RAPID-9 ≈ 0.58 %.
+        let base = are_div(&MitchellDiv { n: 8 }, 50_000, 3);
+        let e3 = are_div(&RapidDiv::new(8, 3), 50_000, 3);
+        let e5 = are_div(&RapidDiv::new(8, 5), 50_000, 3);
+        let e9 = are_div(&RapidDiv::new(8, 9), 50_000, 3);
+        assert!(base > 0.03, "Mitchell div baseline {base}");
+        assert!(e3 < 0.02, "RAPID-3 div ARE {e3}");
+        assert!(e5 < 0.015, "RAPID-5 div ARE {e5}");
+        assert!(e9 < 0.012, "RAPID-9 div ARE {e9}");
+    }
+
+    #[test]
+    fn accuracy_independent_of_width() {
+        // §IV-A: the same scheme serves every operand size with nearly the
+        // same relative error (error replicates per power-of-two).
+        let e8 = are_mul(&RapidMul::new(8, 5), 30_000, 4);
+        let e16 = are_mul(&RapidMul::new(16, 5), 30_000, 4);
+        let e32 = are_mul(&RapidMul::new(32, 5), 30_000, 4);
+        assert!((e8 - e16).abs() < 0.01, "8 vs 16: {e8} {e16}");
+        assert!((e16 - e32).abs() < 0.005, "16 vs 32: {e16} {e32}");
+    }
+
+    #[test]
+    fn rapid_mul_never_exceeds_double_width() {
+        let m = RapidMul::new(16, 10);
+        check_pairs("rapid-fits-2n", 16, 16, 9, |a, b| m.mul(a, b) < (1u64 << 32));
+    }
+
+    #[test]
+    fn rapid_div_zero_and_overflow_rules() {
+        let d = RapidDiv::new(8, 9);
+        assert_eq!(d.div(0, 5), 0);
+        assert_eq!(d.div(123, 0), 0xffff);
+        assert_eq!(d.div(0xffff, 1), 0xff); // overflow saturates to N bits
+    }
+
+    #[test]
+    fn rapid_mul_commutes() {
+        let m = RapidMul::new(16, 10);
+        // The derived grid is built from a symmetric error surface; the
+        // clustering sees symmetric cell stats, so group(x1,x2)==group(x2,x1)
+        // and the whole unit commutes, like the paper's (symmetric casex).
+        check_pairs("rapid-commute", 16, 16, 10, |a, b| m.mul(a, b) == m.mul(b, a));
+    }
+
+    #[test]
+    fn rapid_mul_error_all_small_exhaustive_8bit() {
+        // Exhaustive 8-bit sweep over operands with >= 4 fraction bits
+        // (a, b >= 16): peak relative error tracks the paper's PRE band
+        // (~6.1 % RAPID-3, 4.45 % RAPID-5, 3.69 % RAPID-10) plus the output
+        // truncation ulp. Tiny operands are excluded here because their
+        // product resolution (1 output ulp ≈ several %) dominates any
+        // coefficient scheme — the full-range PRE is asserted more loosely.
+        // Bounds carry ~1.5 % headroom over the paper's PRE values: the
+        // derived clustering optimises mean error (ARE), not peak, and the
+        // W = 7 coefficient grid quantises at 0.8 % steps.
+        for (g, bound) in [(3usize, 0.085), (5, 0.075), (10, 0.072)] {
+            let m = RapidMul::new(8, g);
+            let mut worst = 0.0f64;
+            for a in 16u64..256 {
+                for b in 16u64..256 {
+                    let exact = (a * b) as f64;
+                    let rel = ((exact - m.mul(a, b) as f64) / exact).abs();
+                    worst = worst.max(rel);
+                }
+            }
+            assert!(worst < bound, "RAPID-{g} peak rel err {worst}");
+            // Full-range peak (truncation-dominated for tiny operands).
+            let mut worst_all = 0.0f64;
+            for a in 1u64..256 {
+                for b in 1u64..256 {
+                    let exact = (a * b) as f64;
+                    let rel = ((exact - m.mul(a, b) as f64) / exact).abs();
+                    worst_all = worst_all.max(rel);
+                }
+            }
+            assert!(worst_all < 0.15, "RAPID-{g} full-range peak {worst_all}");
+        }
+    }
+}

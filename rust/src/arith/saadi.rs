@@ -1,0 +1,133 @@
+//! SAADI-EC — quality-configurable multiplicative divider baseline [42, 53].
+//!
+//! Reciprocal family: normalise the divisor into [0.5, 1), seed a linear
+//! reciprocal estimate, refine it with Newton–Raphson-style iterations (the
+//! "accuracy-configurable" knob), then multiply by the dividend. The paper
+//! uses SAADI-EC(16) — the 16-bit-datapath configuration — and shows it is a
+//! poor fit for LUT fabrics (needs a full multiplier + reciprocal datapath;
+//! its three pipeline stages are badly imbalanced).
+
+use super::traits::{check_width, mask, ApproxDiv};
+
+/// Fixed-point bits of the internal reciprocal datapath.
+const RBITS: u32 = 16;
+
+pub struct SaadiDiv {
+    pub n: u32,
+    /// Newton–Raphson refinement iterations (0 = linear seed only).
+    pub iters: u32,
+}
+
+impl SaadiDiv {
+    pub fn new(n: u32, iters: u32) -> Self {
+        SaadiDiv { n, iters }
+    }
+}
+
+impl ApproxDiv for SaadiDiv {
+    fn divisor_width(&self) -> u32 {
+        self.n
+    }
+
+    fn div(&self, a: u64, b: u64) -> u64 {
+        check_width(a, 2 * self.n);
+        check_width(b, self.n);
+        if b == 0 {
+            return mask(2 * self.n);
+        }
+        if a == 0 {
+            return 0;
+        }
+        if a >= (b << self.n) {
+            return mask(self.n);
+        }
+        // Normalise divisor to y ∈ [0.5, 1) in RBITS fixed point.
+        let kb = 63 - b.leading_zeros();
+        let y = if kb + 1 >= RBITS {
+            b >> (kb + 1 - RBITS)
+        } else {
+            b << (RBITS - kb - 1)
+        }; // y has its MSB at bit RBITS-1 → value y/2^RBITS ∈ [0.5, 1)
+
+        // Linear seed r0 ≈ 2.9142 − 2y (classic N-R reciprocal seed),
+        // in RBITS fixed point with 2 integer bits.
+        let c = (2.9142 * (1u64 << RBITS) as f64) as u64;
+        let mut r = c.saturating_sub(2 * y); // r/2^RBITS ≈ 1/(y/2^RBITS) ∈ (1,2]
+
+        // Newton–Raphson: r ← r·(2 − y·r), all in RBITS fixed point.
+        for _ in 0..self.iters {
+            let yr = (y as u128 * r as u128) >> RBITS; // y·r
+            let two = 2u128 << RBITS;
+            let t = two.saturating_sub(yr); // 2 − y·r
+            r = ((r as u128 * t) >> RBITS) as u64;
+        }
+
+        // Undo the normalisation: y/2^RBITS = b/2^(kb+1), so
+        // r/2^RBITS ≈ 2^(kb+1)/b  ⇒  a/b ≈ (a·r) >> (RBITS + kb + 1).
+        let prod = (a as u128) * (r as u128);
+        let q = prod >> (RBITS + kb + 1);
+        (q as u64) & mask(2 * self.n)
+    }
+
+    fn name(&self) -> String {
+        format!("saadi_ec{}_div{}", RBITS, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift256;
+
+    #[test]
+    fn power_of_two_divisors_near_exact() {
+        let d = SaadiDiv::new(8, 2);
+        for i in 0..8 {
+            let b = 1u64 << i;
+            let a = 200u64.min((b << 8) - 1);
+            let q = d.div(a, b);
+            let exact = a / b;
+            assert!(
+                (q as i64 - exact as i64).abs() <= (exact / 16 + 2) as i64,
+                "a={a} b={b} q={q} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_iterations_reduce_error() {
+        let mut rng = XorShift256::new(60);
+        let mut are = [0.0f64; 3];
+        for (idx, iters) in [0u32, 1, 2].into_iter().enumerate() {
+            let d = SaadiDiv::new(8, iters);
+            let mut rng2 = XorShift256::new(60);
+            let _ = &mut rng;
+            let mut e = 0.0;
+            let mut cnt = 0;
+            for _ in 0..40_000 {
+                let b = rng2.bits(8).max(1);
+                let a = rng2.bits(16);
+                if a < b || a >= (b << 8) {
+                    continue;
+                }
+                let exact = (a / b) as f64;
+                e += ((exact - d.div(a, b) as f64) / exact).abs();
+                cnt += 1;
+            }
+            are[idx] = e / cnt as f64;
+        }
+        assert!(are[1] <= are[0] + 1e-6, "{are:?}");
+        assert!(are[2] <= are[1] + 1e-6, "{are:?}");
+        // Paper band for SAADI-EC(16): ARE ≈ 2.1-2.4 %; our 2-iter model
+        // should land below 6 % and above exact.
+        assert!(are[2] < 0.06, "SAADI ARE {}", are[2]);
+    }
+
+    #[test]
+    fn respects_saturation_contract() {
+        let d = SaadiDiv::new(8, 2);
+        assert_eq!(d.div(5, 0), 0xffff);
+        assert_eq!(d.div(0xffff, 1), 0xff);
+        assert_eq!(d.div(0, 3), 0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Unit traits shared by every multiplier/divider model.
+//!
+//! Operands are carried in `u64` with an explicit bit width, so one model
+//! covers the paper's 8-, 16- and 32-bit instantiations (Table III shows the
+//! same architecture at all three precisions).
+
+/// N×N → 2N unsigned multiplier.
+pub trait ApproxMul: Send + Sync {
+    /// Operand bit width N (both operands).
+    fn width(&self) -> u32;
+    /// Compute the (possibly approximate) product. Inputs must fit in
+    /// `width()` bits; the result fits in `2*width()` bits.
+    fn mul(&self, a: u64, b: u64) -> u64;
+    /// Short identifier used by the registry / reports ("rapid10", "drum6", ...).
+    fn name(&self) -> String;
+    /// True for bit-exact designs (skipped by error characterisation).
+    fn is_exact(&self) -> bool {
+        false
+    }
+}
+
+/// 2N-by-N unsigned divider (paper's 8/4, 16/8, 32/16 configurations):
+/// dividend is `2N` bits, divisor `N` bits, quotient `2N` bits in general
+/// but constrained to `N` bits under the paper's no-overflow condition
+/// `dividend < 2^N * divisor` (§IV-B).
+pub trait ApproxDiv: Send + Sync {
+    /// Divisor width N; the dividend width is `2*N`.
+    fn divisor_width(&self) -> u32;
+    fn dividend_width(&self) -> u32 {
+        2 * self.divisor_width()
+    }
+    /// Compute the (possibly approximate) quotient. `b == 0` saturates to
+    /// all-ones of the dividend width; overflow (`a >= b << N`) saturates
+    /// to `2^N - 1` mirroring a hardware overflow flag.
+    fn div(&self, a: u64, b: u64) -> u64;
+    fn name(&self) -> String;
+    fn is_exact(&self) -> bool {
+        false
+    }
+}
+
+/// Object-safe boxed aliases used by the application layer.
+pub type MulUnit = Box<dyn ApproxMul>;
+pub type DivUnit = Box<dyn ApproxDiv>;
+
+/// Validate that an operand fits its declared width (debug builds only —
+/// the hot loops rely on callers respecting the contract).
+#[inline]
+pub fn check_width(x: u64, bits: u32) {
+    debug_assert!(
+        bits == 64 || x < (1u64 << bits),
+        "operand {x:#x} exceeds {bits} bits"
+    );
+}
+
+/// Mask helper: lowest `bits` ones.
+#[inline]
+pub const fn mask(bits: u32) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_values() {
+        assert_eq!(mask(0), 0);
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(8), 0xff);
+        assert_eq!(mask(32), 0xffff_ffff);
+        assert_eq!(mask(64), u64::MAX);
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared helpers for the bench targets: table formatting, the paper's
+//! reference numbers (Table III et al.) and delta reporting so every bench
+//! prints paper-vs-measured side by side.
+
+pub mod paper;
+pub mod table;
+
+pub use table::Table;

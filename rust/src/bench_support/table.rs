@@ -1,0 +1,96 @@
+//! Plain-text table printer for the bench targets (criterion is not in the
+//! offline vendor set; benches print the paper's tables/figures as rows).
+
+/// Column-aligned text table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: Vec<String>) {
+        self.row(&cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len();
+        println!("\n=== {} ===", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}   ", c, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(total.min(200)));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Format a measured/paper ratio pair: "2.41x (paper 2.52x)".
+pub fn vs_paper(measured: f64, paper: f64) -> String {
+    format!("{measured:.2} (paper {paper:.2})")
+}
+
+/// Shorthand numeric formatting.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_accepts_matching_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_mismatched_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(pct(0.5), "50.00%");
+        assert!(vs_paper(2.4, 2.5).contains("paper"));
+    }
+}

@@ -1,0 +1,43 @@
+//! `rapid synth` subcommand: synthesize one unit, print its Table-III row
+//! (optionally across pipeline configurations).
+
+use crate::util::cli::Args;
+
+use super::report::characterize;
+use super::synth::divider::rapid_div_netlist;
+use super::synth::exact_ip::{exact_div_netlist, exact_mul_netlist};
+use super::synth::multiplier::rapid_mul_netlist;
+
+pub fn run(argv: Vec<String>) {
+    let args = Args::parse(argv, &["unit", "width", "stages", "vectors"]);
+    let unit = args.get_or("unit", "rapid10");
+    let width = args.get_u32("width", 16);
+    let stages = args.get_usize("stages", 1);
+    let vectors = args.get_usize("vectors", 200);
+    let is_div = args.flag("div");
+
+    let nl = match (unit, is_div) {
+        ("exact", false) => exact_mul_netlist(width),
+        ("exact", true) => exact_div_netlist(width),
+        ("mitchell", false) => rapid_mul_netlist(width, 0),
+        ("mitchell", true) => rapid_div_netlist(width, 0),
+        (u, false) if u.starts_with("rapid") => {
+            let g: usize = u[5..].parse().expect("rapidN");
+            rapid_mul_netlist(width, g)
+        }
+        (u, true) if u.starts_with("rapid") => {
+            let g: usize = u[5..].parse().expect("rapidN");
+            rapid_div_netlist(width, g)
+        }
+        (u, _) => {
+            eprintln!("synth: unknown unit '{u}' (exact | mitchell | rapidN)");
+            std::process::exit(2);
+        }
+    };
+    let rep = characterize(&nl, stages, vectors, 7);
+    println!("{}", rep.row());
+    if stages > 1 {
+        let pretty: Vec<String> = rep.stage_delays.iter().map(|d| format!("{d:.2}")).collect();
+        println!("  stage delays (ns): [{}]", pretty.join(", "));
+    }
+}

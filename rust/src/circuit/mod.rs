@@ -1,0 +1,18 @@
+//! FPGA circuit substrate — structural netlists of every unit on Virtex-7
+//! class primitives (LUT6 / CARRY4 / FDRE), with gate-level evaluation,
+//! static timing, resource counting, switching-activity power and
+//! fine-grained pipelining. Reproduces the circuit-level columns of
+//! Table III and the stage analysis of Fig. 4.
+
+pub mod primitive;
+pub mod netlist;
+pub mod timing;
+pub mod power;
+pub mod pipeline;
+pub mod synth;
+pub mod report;
+pub mod cli;
+
+pub use netlist::Netlist;
+pub use primitive::Net;
+pub use report::UnitReport;

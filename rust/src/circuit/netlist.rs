@@ -1,0 +1,479 @@
+//! Netlist container + builder + gate-level evaluation + the optimisation
+//! passes a synthesis tool would apply (constant folding, dead-cone
+//! elimination). Builders in `synth/` construct units on top of this.
+
+use super::primitive::{Cell, Net};
+
+/// A combinational (optionally pipelined) netlist.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    /// number of nets allocated
+    pub n_nets: u32,
+    pub cells: Vec<Cell>,
+    pub inputs: Vec<Net>,
+    pub outputs: Vec<Net>,
+    /// nets tied to constants: (net, value)
+    pub consts: Vec<(Net, bool)>,
+    pub name: String,
+    /// LUTs absorbed into fractured LUT6 pairs (O5/O6 dual outputs): a
+    /// builder that maps two ≤5-input functions of shared inputs onto one
+    /// physical LUT calls [`Netlist::absorb_luts`]; the census subtracts
+    /// them, mirroring how the tools report fractured LUTs once.
+    pub absorbed_luts: usize,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Netlist { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn net(&mut self) -> Net {
+        let id = self.n_nets;
+        self.n_nets += 1;
+        id
+    }
+
+    pub fn nets(&mut self, count: usize) -> Vec<Net> {
+        (0..count).map(|_| self.net()).collect()
+    }
+
+    pub fn input(&mut self) -> Net {
+        let n = self.net();
+        self.inputs.push(n);
+        n
+    }
+
+    pub fn input_bus(&mut self, width: u32) -> Vec<Net> {
+        (0..width).map(|_| self.input()).collect()
+    }
+
+    pub fn constant(&mut self, value: bool) -> Net {
+        let n = self.net();
+        self.consts.push((n, value));
+        n
+    }
+
+    /// Add a LUT computing `table` over `ins` (LSB-first indexing).
+    pub fn lut(&mut self, ins: Vec<Net>, table: u64) -> Net {
+        assert!(ins.len() <= 6, "LUT with {} inputs", ins.len());
+        let out = self.net();
+        self.cells.push(Cell::Lut { ins, table, out });
+        out
+    }
+
+    /// Add a LUT from a boolean closure over the input bits.
+    pub fn lut_fn<F: Fn(u64) -> bool>(&mut self, ins: Vec<Net>, f: F) -> Net {
+        let k = ins.len();
+        let mut table = 0u64;
+        for idx in 0..(1u64 << k) {
+            if f(idx) {
+                table |= 1 << idx;
+            }
+        }
+        self.lut(ins, table)
+    }
+
+    /// Add one carry-chain bit; returns (sum_out, carry_out).
+    pub fn carry_bit(&mut self, s: Net, di: Net, ci: Net) -> (Net, Net) {
+        let o = self.net();
+        let co = self.net();
+        self.cells.push(Cell::CarryBit { s, di, ci, o, co });
+        (o, co)
+    }
+
+    /// Add a pipeline register.
+    pub fn ff(&mut self, d: Net) -> Net {
+        let q = self.net();
+        self.cells.push(Cell::Ff { d, q });
+        q
+    }
+
+    pub fn set_outputs(&mut self, outs: &[Net]) {
+        self.outputs = outs.to_vec();
+    }
+
+    /// Mark `n` LUTs as absorbed into fractured pairs (see field docs).
+    pub fn absorb_luts(&mut self, n: usize) {
+        self.absorbed_luts += n;
+    }
+
+    /// Resource census.
+    pub fn count_luts(&self) -> usize {
+        self.cells
+            .iter()
+            .filter(|c| matches!(c, Cell::Lut { .. }))
+            .count()
+            .saturating_sub(self.absorbed_luts)
+    }
+
+    pub fn count_carry_bits(&self) -> usize {
+        self.cells.iter().filter(|c| matches!(c, Cell::CarryBit { .. })).count()
+    }
+
+    /// CARRY4 blocks (4 bits each, rounded up like the tools report).
+    pub fn count_carry4(&self) -> usize {
+        (self.count_carry_bits() + 3) / 4
+    }
+
+    pub fn count_ffs(&self) -> usize {
+        self.cells.iter().filter(|c| matches!(c, Cell::Ff { .. })).count()
+    }
+
+    /// Evaluate combinationally (FFs transparent): returns the value of
+    /// every net. Cells must be in definition order (builders guarantee it).
+    pub fn eval(&self, input_values: &[bool]) -> Vec<bool> {
+        assert_eq!(input_values.len(), self.inputs.len(), "input arity mismatch");
+        let mut v = vec![false; self.n_nets as usize];
+        for (net, val) in &self.consts {
+            v[*net as usize] = *val;
+        }
+        for (net, val) in self.inputs.iter().zip(input_values) {
+            v[*net as usize] = *val;
+        }
+        for cell in &self.cells {
+            match cell {
+                Cell::Lut { ins, table, out } => {
+                    let mut idx = 0u64;
+                    for (i, n) in ins.iter().enumerate() {
+                        if v[*n as usize] {
+                            idx |= 1 << i;
+                        }
+                    }
+                    v[*out as usize] = (table >> idx) & 1 == 1;
+                }
+                Cell::CarryBit { s, di, ci, o, co } => {
+                    let (sv, dv, cv) = (v[*s as usize], v[*di as usize], v[*ci as usize]);
+                    v[*o as usize] = sv ^ cv;
+                    v[*co as usize] = if sv { cv } else { dv };
+                }
+                Cell::Ff { d, q } => {
+                    v[*q as usize] = v[*d as usize];
+                }
+            }
+        }
+        v
+    }
+
+    /// Evaluate and return only the output bits as a u128 (LSB-first).
+    pub fn eval_outputs(&self, input_values: &[bool]) -> u128 {
+        let v = self.eval(input_values);
+        let mut out = 0u128;
+        for (i, n) in self.outputs.iter().enumerate() {
+            if v[*n as usize] {
+                out |= 1 << i;
+            }
+        }
+        out
+    }
+
+    /// Helper: pack integer operands into the input bit vector (LSB-first
+    /// per bus, buses in declaration order).
+    pub fn pack_inputs(widths: &[u32], values: &[u64]) -> Vec<bool> {
+        assert_eq!(widths.len(), values.len());
+        let mut bits = Vec::new();
+        for (w, val) in widths.iter().zip(values) {
+            for i in 0..*w {
+                bits.push((val >> i) & 1 == 1);
+            }
+        }
+        bits
+    }
+
+    /// Synthesis-style cleanup: constant-fold LUTs fed by constants,
+    /// share structurally identical LUTs (CSE), then drop cells whose
+    /// outputs reach no primary output. Mirrors what Vivado's opt_design
+    /// does to unused shifter cones and duplicated decode logic; run by
+    /// every `synth::` builder before reporting resources.
+    pub fn optimize(&mut self) {
+        self.const_fold();
+        self.cse();
+        self.dead_cone_elim();
+    }
+
+    /// Common-subexpression elimination: identical (inputs, table) LUTs
+    /// collapse to one; repeated until fixpoint so shared subtrees merge.
+    fn cse(&mut self) {
+        use std::collections::HashMap;
+        loop {
+            let mut seen: HashMap<(Vec<Net>, u64), Net> = HashMap::new();
+            let mut alias: HashMap<Net, Net> = HashMap::new();
+            let mut new_cells = Vec::with_capacity(self.cells.len());
+            let resolve = |n: Net, alias: &HashMap<Net, Net>| -> Net {
+                alias.get(&n).copied().unwrap_or(n)
+            };
+            for cell in std::mem::take(&mut self.cells) {
+                match cell {
+                    Cell::Lut { ins, table, out } => {
+                        let ins: Vec<Net> = ins.iter().map(|n| resolve(*n, &alias)).collect();
+                        match seen.get(&(ins.clone(), table)) {
+                            Some(&existing) => {
+                                alias.insert(out, existing);
+                            }
+                            None => {
+                                seen.insert((ins.clone(), table), out);
+                                new_cells.push(Cell::Lut { ins, table, out });
+                            }
+                        }
+                    }
+                    Cell::CarryBit { s, di, ci, o, co } => {
+                        new_cells.push(Cell::CarryBit {
+                            s: resolve(s, &alias),
+                            di: resolve(di, &alias),
+                            ci: resolve(ci, &alias),
+                            o,
+                            co,
+                        });
+                    }
+                    Cell::Ff { d, q } => {
+                        new_cells.push(Cell::Ff { d: resolve(d, &alias), q });
+                    }
+                }
+            }
+            self.cells = new_cells;
+            let outputs = std::mem::take(&mut self.outputs);
+            self.outputs = outputs.into_iter().map(|n| resolve(n, &alias)).collect();
+            if alias.is_empty() {
+                break;
+            }
+        }
+    }
+
+    fn const_fold(&mut self) {
+        use std::collections::HashMap;
+        let mut known: HashMap<Net, bool> = self.consts.iter().cloned().collect();
+        let mut alias: HashMap<Net, Net> = HashMap::new(); // out -> same-as-in
+        let mut new_cells: Vec<Cell> = Vec::with_capacity(self.cells.len());
+        let resolve = |n: Net, alias: &HashMap<Net, Net>| -> Net {
+            let mut x = n;
+            while let Some(&y) = alias.get(&x) {
+                x = y;
+            }
+            x
+        };
+        for cell in std::mem::take(&mut self.cells) {
+            match cell {
+                Cell::Lut { ins, table, out } => {
+                    let ins: Vec<Net> = ins.iter().map(|n| resolve(*n, &alias)).collect();
+                    // split inputs into known / unknown
+                    let unknown: Vec<(usize, Net)> = ins
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, n)| !known.contains_key(n))
+                        .map(|(i, n)| (i, *n))
+                        .collect();
+                    if unknown.is_empty() {
+                        let mut idx = 0u64;
+                        for (i, n) in ins.iter().enumerate() {
+                            if known[n] {
+                                idx |= 1 << i;
+                            }
+                        }
+                        known.insert(out, (table >> idx) & 1 == 1);
+                        continue;
+                    }
+                    // Build the reduced truth table over unknown inputs.
+                    let k = unknown.len();
+                    let mut reduced = 0u64;
+                    for uidx in 0..(1u64 << k) {
+                        let mut idx = 0u64;
+                        for (bit, (orig_i, _)) in unknown.iter().enumerate() {
+                            if (uidx >> bit) & 1 == 1 {
+                                idx |= 1 << orig_i;
+                            }
+                        }
+                        for (i, n) in ins.iter().enumerate() {
+                            if let Some(&v) = known.get(n) {
+                                if v {
+                                    idx |= 1 << i;
+                                }
+                            }
+                        }
+                        if (table >> idx) & 1 == 1 {
+                            reduced |= 1 << uidx;
+                        }
+                    }
+                    // collapse constants / wires
+                    if reduced == 0 {
+                        known.insert(out, false);
+                    } else if reduced == crate::arith::traits::mask(1u32 << k) {
+                        known.insert(out, true);
+                    } else if k == 1 && reduced == 0b10 {
+                        alias.insert(out, unknown[0].1);
+                    } else {
+                        new_cells.push(Cell::Lut {
+                            ins: unknown.iter().map(|(_, n)| *n).collect(),
+                            table: reduced,
+                            out,
+                        });
+                    }
+                }
+                Cell::CarryBit { s, di, ci, o, co } => {
+                    let (s, di, ci) =
+                        (resolve(s, &alias), resolve(di, &alias), resolve(ci, &alias));
+                    match (known.get(&s).copied(), known.get(&di).copied(), known.get(&ci).copied()) {
+                        (Some(sv), dv, cv) => {
+                            // s known: o = s ^ ci; co = s ? ci : di
+                            match cv {
+                                Some(c) => {
+                                    known.insert(o, sv ^ c);
+                                }
+                                None => {
+                                    if sv {
+                                        // o = !ci — needs an inverter LUT
+                                        let inv = Cell::Lut { ins: vec![ci], table: 0b01, out: o };
+                                        new_cells.push(inv);
+                                    } else {
+                                        alias.insert(o, ci);
+                                    }
+                                }
+                            }
+                            if sv {
+                                match cv {
+                                    Some(c) => {
+                                        known.insert(co, c);
+                                    }
+                                    None => {
+                                        alias.insert(co, ci);
+                                    }
+                                }
+                            } else {
+                                match dv {
+                                    Some(d) => {
+                                        known.insert(co, d);
+                                    }
+                                    None => {
+                                        alias.insert(co, di);
+                                    }
+                                }
+                            }
+                        }
+                        _ => {
+                            new_cells.push(Cell::CarryBit { s, di, ci, o, co });
+                        }
+                    }
+                }
+                Cell::Ff { d, q } => {
+                    let d = resolve(d, &alias);
+                    if let Some(&v) = known.get(&d) {
+                        known.insert(q, v);
+                    } else {
+                        new_cells.push(Cell::Ff { d, q });
+                    }
+                }
+            }
+        }
+        self.cells = new_cells;
+        // every known net stays a constant: surviving cells may still
+        // reference folded nets (e.g. a subtractor's cin = 1)
+        self.consts = known.iter().map(|(n, v)| (*n, *v)).collect();
+        self.consts.sort_unstable();
+        // rewrite outputs through aliases
+        let outputs = std::mem::take(&mut self.outputs);
+        self.outputs = outputs.into_iter().map(|n| resolve(n, &alias)).collect();
+    }
+
+    fn dead_cone_elim(&mut self) {
+        use std::collections::HashSet;
+        let mut live: HashSet<Net> = self.outputs.iter().cloned().collect();
+        // walk cells in reverse, keeping those that feed live nets
+        let mut keep = vec![false; self.cells.len()];
+        for (i, cell) in self.cells.iter().enumerate().rev() {
+            let (outs, ins): (Vec<Net>, Vec<Net>) = match cell {
+                Cell::Lut { ins, out, .. } => (vec![*out], ins.clone()),
+                Cell::CarryBit { s, di, ci, o, co } => (vec![*o, *co], vec![*s, *di, *ci]),
+                Cell::Ff { d, q } => (vec![*q], vec![*d]),
+            };
+            if outs.iter().any(|o| live.contains(o)) {
+                keep[i] = true;
+                for n in ins {
+                    live.insert(n);
+                }
+            }
+        }
+        let mut i = 0;
+        self.cells.retain(|_| {
+            let k = keep[i];
+            i += 1;
+            k
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny 2-bit adder by hand and check eval.
+    fn two_bit_adder() -> Netlist {
+        let mut nl = Netlist::new("add2");
+        let a = nl.input_bus(2);
+        let b = nl.input_bus(2);
+        let zero = nl.constant(false);
+        let mut outs = Vec::new();
+        let mut ci = zero;
+        for i in 0..2 {
+            let s = nl.lut_fn(vec![a[i], b[i]], |idx| (idx & 1 == 1) ^ (idx >> 1 & 1 == 1));
+            let (o, co) = nl.carry_bit(s, a[i], ci);
+            outs.push(o);
+            ci = co;
+        }
+        outs.push(ci);
+        nl.set_outputs(&outs);
+        nl
+    }
+
+    #[test]
+    fn adder_truth() {
+        let nl = two_bit_adder();
+        for a in 0..4u64 {
+            for b in 0..4u64 {
+                let bits = Netlist::pack_inputs(&[2, 2], &[a, b]);
+                assert_eq!(nl.eval_outputs(&bits), (a + b) as u128, "{a}+{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_fn_table_orientation() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        let b = nl.input();
+        let and = nl.lut_fn(vec![a, b], |idx| idx == 0b11);
+        nl.set_outputs(&[and]);
+        assert_eq!(nl.eval_outputs(&[true, true]), 1);
+        assert_eq!(nl.eval_outputs(&[true, false]), 0);
+    }
+
+    #[test]
+    fn optimize_removes_dead_and_const() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        let zero = nl.constant(false);
+        let dead = nl.lut_fn(vec![a], |i| i == 1); // not an output
+        let _ = dead;
+        let anded = nl.lut_fn(vec![a, zero], |idx| idx == 0b11); // == const 0
+        let ored = nl.lut_fn(vec![a, zero], |idx| idx & 1 == 1 || idx & 2 == 2); // == a
+        let keep = nl.lut_fn(vec![anded, ored], |idx| (idx & 1 == 1) ^ (idx >> 1 & 1 == 1));
+        nl.set_outputs(&[keep]);
+        let before = nl.count_luts();
+        // functional check before/after
+        let f0 = nl.eval_outputs(&[false]);
+        let f1 = nl.eval_outputs(&[true]);
+        nl.optimize();
+        assert!(nl.count_luts() < before, "{} !< {before}", nl.count_luts());
+        assert_eq!(nl.eval_outputs(&[false]), f0);
+        assert_eq!(nl.eval_outputs(&[true]), f1);
+    }
+
+    #[test]
+    fn optimize_preserves_adder_function() {
+        let mut nl = two_bit_adder();
+        nl.optimize();
+        for a in 0..4u64 {
+            for b in 0..4u64 {
+                let bits = Netlist::pack_inputs(&[2, 2], &[a, b]);
+                assert_eq!(nl.eval_outputs(&bits), (a + b) as u128);
+            }
+        }
+    }
+}

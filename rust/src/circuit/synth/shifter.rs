@@ -1,0 +1,180 @@
+//! Barrel shifters from LUT6-as-MUX4 layers (paper §IV-A cites the
+//! Xilinx mux app-note: a 16:1 mux per output bit costs one slice / four
+//! 6-LUTs; each LUT6 implements a 4:1 mux, so an S-bit shift amount needs
+//! ceil(S/2) LUT layers per output bit).
+
+use crate::circuit::netlist::Netlist;
+use crate::circuit::primitive::Net;
+
+/// Variable left shift: out[i] = x[i - sh] (zero fill). `out_width` lets
+/// the anti-log stage widen into the product width; the optimiser trims
+/// cones that can't be reached.
+pub fn shift_left(nl: &mut Netlist, x: &[Net], sh: &[Net], out_width: usize) -> Vec<Net> {
+    shift_left_keep(nl, x, sh, out_width, 0)
+}
+
+/// Left shift where only output columns `[keep_lo, out_width)` are needed:
+/// intermediate columns that cannot reach the kept window (given the
+/// remaining shift range) are never built — the column pruning a synthesis
+/// tool performs on anti-log shifters whose low bits are discarded.
+pub fn shift_left_keep(
+    nl: &mut Netlist,
+    x: &[Net],
+    sh: &[Net],
+    out_width: usize,
+    keep_lo: usize,
+) -> Vec<Net> {
+    let zero = nl.constant(false);
+    let mut cur: Vec<Net> = x.to_vec();
+    cur.resize(out_width, zero);
+    // max shift still applicable after processing bits [0..b)
+    let rem_shift = |b: usize| -> usize {
+        sh.len().saturating_sub(b + 1).checked_shl(0).map(|_| {
+            let mut r = 0usize;
+            for bb in b..sh.len() {
+                r += 1 << bb;
+            }
+            r
+        }).unwrap_or(0)
+    };
+    let mut b = 0;
+    while b < sh.len() {
+        let take = if b + 1 < sh.len() { 2 } else { 1 };
+        let lo = keep_lo.saturating_sub(rem_shift(b + take));
+        if take == 2 {
+            let (s0, s1) = (sh[b], sh[b + 1]);
+            let (d0, d1, d2) = (1usize << b, 2usize << b, 3usize << b);
+            let next: Vec<Net> = (0..out_width)
+                .map(|i| {
+                    if i < lo {
+                        return zero; // column can never reach the window
+                    }
+                    let t0 = cur[i];
+                    let t1 = if i >= d0 { cur[i - d0] } else { zero };
+                    let t2 = if i >= d1 { cur[i - d1] } else { zero };
+                    let t3 = if i >= d2 { cur[i - d2] } else { zero };
+                    nl.lut_fn(vec![t0, t1, t2, t3, s0, s1], |v| {
+                        let sel = (v >> 4) & 3;
+                        (v >> sel) & 1 == 1
+                    })
+                })
+                .collect();
+            cur = next;
+        } else {
+            let s0 = sh[b];
+            let d = 1usize << b;
+            let next: Vec<Net> = (0..out_width)
+                .map(|i| {
+                    if i < lo {
+                        return zero;
+                    }
+                    let t0 = cur[i];
+                    let t1 = if i >= d { cur[i - d] } else { zero };
+                    nl.lut_fn(vec![t0, t1, s0], |v| {
+                        let sel = (v >> 2) & 1;
+                        (v >> sel) & 1 == 1
+                    })
+                })
+                .collect();
+            cur = next;
+        }
+        b += take;
+    }
+    cur
+}
+
+/// Variable right shift: out[i] = x[i + sh].
+pub fn shift_right(nl: &mut Netlist, x: &[Net], sh: &[Net], out_width: usize) -> Vec<Net> {
+    let zero = nl.constant(false);
+    let mut cur: Vec<Net> = x.to_vec();
+    let in_w = cur.len();
+    let mut b = 0;
+    while b < sh.len() {
+        let take = if b + 1 < sh.len() { 2 } else { 1 };
+        let width_now = cur.len();
+        if take == 2 {
+            let (s0, s1) = (sh[b], sh[b + 1]);
+            let (d0, d1, d2) = (1usize << b, 2usize << b, 3usize << b);
+            let next: Vec<Net> = (0..width_now)
+                .map(|i| {
+                    let g = |off: usize| if i + off < width_now { cur[i + off] } else { zero };
+                    let (t0, t1, t2, t3) = (g(0), g(d0), g(d1), g(d2));
+                    nl.lut_fn(vec![t0, t1, t2, t3, s0, s1], |v| {
+                        let sel = (v >> 4) & 3;
+                        (v >> sel) & 1 == 1
+                    })
+                })
+                .collect();
+            cur = next;
+        } else {
+            let s0 = sh[b];
+            let d = 1usize << b;
+            let next: Vec<Net> = (0..width_now)
+                .map(|i| {
+                    let t0 = cur[i];
+                    let t1 = if i + d < width_now { cur[i + d] } else { zero };
+                    nl.lut_fn(vec![t0, t1, s0], |v| {
+                        let sel = (v >> 2) & 1;
+                        (v >> sel) & 1 == 1
+                    })
+                })
+                .collect();
+            cur = next;
+        }
+        b += take;
+    }
+    cur.truncate(out_width.min(in_w.max(out_width)));
+    let zero2 = zero;
+    while cur.len() < out_width {
+        cur.push(zero2);
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn left_netlist(w: usize, shbits: usize, out_w: usize) -> Netlist {
+        let mut nl = Netlist::new("shl");
+        let x = nl.input_bus(w as u32);
+        let sh = nl.input_bus(shbits as u32);
+        let o = shift_left(&mut nl, &x, &sh, out_w);
+        nl.set_outputs(&o);
+        nl
+    }
+
+    #[test]
+    fn shift_left_exhaustive_8() {
+        let nl = left_netlist(8, 3, 16);
+        for x in 0..256u64 {
+            for s in 0..8u64 {
+                let bits = Netlist::pack_inputs(&[8, 3], &[x, s]);
+                let got = nl.eval_outputs(&bits) as u64;
+                assert_eq!(got, (x << s) & 0xffff, "x={x} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn shift_right_exhaustive_8() {
+        let mut nl = Netlist::new("shr");
+        let x = nl.input_bus(8);
+        let sh = nl.input_bus(3);
+        let o = shift_right(&mut nl, &x, &sh, 8);
+        nl.set_outputs(&o);
+        for x in 0..256u64 {
+            for s in 0..8u64 {
+                let bits = Netlist::pack_inputs(&[8, 3], &[x, s]);
+                assert_eq!(nl.eval_outputs(&bits) as u64, x >> s, "x={x} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_budget_one_layer_per_two_shift_bits() {
+        let nl = left_netlist(16, 4, 32);
+        // 2 layers x 32 output bits = 64 LUTs expected
+        assert!(nl.count_luts() <= 64, "{} LUTs", nl.count_luts());
+    }
+}

@@ -1,0 +1,144 @@
+//! Static timing analysis: longest arrival path through the netlist DAG
+//! with per-primitive delay constants (carry spine fast, LUT hops slow —
+//! the Virtex-7 shape that makes carry-chain adders and Mitchell's 1-D
+//! datapath win).
+
+use super::netlist::Netlist;
+use super::primitive::{Cell, Delays};
+
+/// Arrival time of every net (ns), FFs treated as transparent (gives the
+/// *combinational* end-to-end latency of the unpipelined unit).
+pub fn arrival_times(nl: &Netlist, d: &Delays) -> Vec<f64> {
+    arrival_times_opts(nl, d, true)
+}
+
+/// `ff_transparent = false` restarts paths at FF outputs (per-stage timing
+/// for pipelined netlists).
+pub fn arrival_times_opts(nl: &Netlist, d: &Delays, ff_transparent: bool) -> Vec<f64> {
+    let mut t = vec![0.0f64; nl.n_nets as usize];
+    for n in &nl.inputs {
+        t[*n as usize] = d.input_route;
+    }
+    for cell in &nl.cells {
+        match cell {
+            Cell::Lut { ins, out, .. } => {
+                let worst = ins.iter().map(|n| t[*n as usize]).fold(0.0, f64::max);
+                t[*out as usize] = worst + d.lut;
+            }
+            Cell::CarryBit { s, di, ci, o, co } => {
+                let ts = t[*s as usize];
+                let tdi = t[*di as usize];
+                let tci = t[*ci as usize];
+                // sum output: XORCY from s and ci
+                t[*o as usize] = (ts + d.carry_entry).max(tci + d.carry_out);
+                // carry out: fast from ci, entry cost from s/di
+                t[*co as usize] = (tci + d.carry_hop).max(ts.max(tdi) + d.carry_entry);
+            }
+            Cell::Ff { d: din, q } => {
+                t[*q as usize] = if ff_transparent { t[*din as usize] } else { 0.0 };
+            }
+        }
+    }
+    t
+}
+
+/// Combinational critical path (ns) to any primary output.
+pub fn critical_path(nl: &Netlist, d: &Delays) -> f64 {
+    let t = arrival_times(nl, d);
+    nl.outputs.iter().map(|n| t[*n as usize]).fold(0.0, f64::max)
+}
+
+/// Minimum clock period of a pipelined netlist: the worst register-to-
+/// register (or input-to-register / register-to-output) delay plus FF
+/// overhead. For an unpipelined netlist this is the critical path + FF
+/// overhead (registered IO assumption, like the IP cores).
+pub fn min_clock(nl: &Netlist, d: &Delays) -> f64 {
+    if nl.count_ffs() == 0 {
+        return critical_path(nl, d) + d.ff_overhead;
+    }
+    let t = arrival_times_opts(nl, d, false);
+    let mut worst: f64 = 0.0;
+    for cell in &nl.cells {
+        if let Cell::Ff { d: din, .. } = cell {
+            worst = worst.max(t[*din as usize]);
+        }
+    }
+    for n in &nl.outputs {
+        worst = worst.max(t[*n as usize]);
+    }
+    worst + d.ff_overhead
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deeper_logic_is_slower() {
+        let d = Delays::default();
+        let mut shallow = Netlist::new("s");
+        let a = shallow.input();
+        let b = shallow.input();
+        let o = shallow.lut_fn(vec![a, b], |i| i == 3);
+        shallow.set_outputs(&[o]);
+
+        let mut deep = Netlist::new("d");
+        let a = deep.input();
+        let mut x = a;
+        for _ in 0..5 {
+            x = deep.lut_fn(vec![x], |i| i == 0);
+        }
+        deep.set_outputs(&[x]);
+
+        assert!(critical_path(&deep, &d) > critical_path(&shallow, &d));
+    }
+
+    #[test]
+    fn carry_spine_faster_than_lut_ripple() {
+        // 16-bit carry chain vs 16 chained LUTs: the chain must be much
+        // faster — the architectural fact Mitchell/CLA designs exploit.
+        let d = Delays::default();
+        let mut chain = Netlist::new("chain");
+        let s: Vec<_> = (0..16).map(|_| chain.input()).collect();
+        let zero = chain.constant(false);
+        let mut ci = zero;
+        let mut last_o = ci;
+        for i in 0..16 {
+            let (o, co) = chain.carry_bit(s[i], zero, ci);
+            ci = co;
+            last_o = o;
+        }
+        chain.set_outputs(&[last_o]);
+
+        let mut ripple = Netlist::new("ripple");
+        let mut x = ripple.input();
+        for _ in 0..16 {
+            x = ripple.lut_fn(vec![x], |i| i == 1);
+        }
+        ripple.set_outputs(&[x]);
+
+        let tc = critical_path(&chain, &d);
+        let tr = critical_path(&ripple, &d);
+        assert!(tc < tr / 3.0, "chain {tc} vs ripple {tr}");
+    }
+
+    #[test]
+    fn ff_breaks_path_for_min_clock() {
+        let d = Delays::default();
+        let mut nl = Netlist::new("p");
+        let a = nl.input();
+        let mut x = a;
+        for _ in 0..4 {
+            x = nl.lut_fn(vec![x], |i| i == 0);
+        }
+        let q = nl.ff(x);
+        let mut y = q;
+        for _ in 0..4 {
+            y = nl.lut_fn(vec![y], |i| i == 0);
+        }
+        nl.set_outputs(&[y]);
+        let clk = min_clock(&nl, &d);
+        let full = critical_path(&nl, &d) + d.ff_overhead;
+        assert!(clk < full, "clk {clk} full {full}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Dynamic batcher: packs operand pairs into fixed-shape batches (the AOT
+//! artifact's compiled batch size), flushing on size or deadline — the
+//! same policy a serving router uses to feed a fixed-shape accelerator
+//! kernel. Short batches are padded with zero operands (the kernels map
+//! zero inputs to zero outputs, so padding is inert) and trimmed on reply.
+
+use std::time::{Duration, Instant};
+
+/// One packed batch plus bookkeeping to route results back.
+#[derive(Debug)]
+pub struct Batch {
+    pub a: Vec<i64>,
+    pub b: Vec<i64>,
+    /// (request id, offset in batch, length, offset within the request) —
+    /// the last field reassembles split requests regardless of the order
+    /// their batches complete in.
+    pub spans: Vec<(u64, usize, usize, usize)>,
+    /// live elements before padding
+    pub used: usize,
+}
+
+/// Accumulates requests into fixed-size batches.
+pub struct DynamicBatcher {
+    capacity: usize,
+    max_wait: Duration,
+    cur_a: Vec<i64>,
+    cur_b: Vec<i64>,
+    spans: Vec<(u64, usize, usize, usize)>,
+    opened_at: Option<Instant>,
+}
+
+impl DynamicBatcher {
+    pub fn new(capacity: usize, max_wait: Duration) -> Self {
+        DynamicBatcher {
+            capacity,
+            max_wait,
+            cur_a: Vec::with_capacity(capacity),
+            cur_b: Vec::with_capacity(capacity),
+            spans: Vec::new(),
+            opened_at: None,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.cur_a.len()
+    }
+
+    /// Offer a request; returns any batches that became full. A request
+    /// larger than the capacity is split across batches.
+    pub fn offer(&mut self, id: u64, a: &[i64], b: &[i64]) -> Vec<Batch> {
+        assert_eq!(a.len(), b.len());
+        let mut out = Vec::new();
+        let mut off = 0;
+        while off < a.len() {
+            if self.opened_at.is_none() {
+                self.opened_at = Some(Instant::now());
+            }
+            let room = self.capacity - self.cur_a.len();
+            let take = room.min(a.len() - off);
+            let start = self.cur_a.len();
+            self.cur_a.extend_from_slice(&a[off..off + take]);
+            self.cur_b.extend_from_slice(&b[off..off + take]);
+            self.spans.push((id, start, take, off));
+            off += take;
+            if self.cur_a.len() == self.capacity {
+                out.push(self.flush().expect("full batch flushes"));
+            }
+        }
+        out
+    }
+
+    /// Flush the open batch (padding to capacity), if any.
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.cur_a.is_empty() {
+            self.opened_at = None;
+            return None;
+        }
+        let used = self.cur_a.len();
+        let mut a = std::mem::replace(&mut self.cur_a, Vec::with_capacity(self.capacity));
+        let mut b = std::mem::replace(&mut self.cur_b, Vec::with_capacity(self.capacity));
+        a.resize(self.capacity, 0);
+        b.resize(self.capacity, 0);
+        let spans = std::mem::take(&mut self.spans);
+        self.opened_at = None;
+        Some(Batch { a, b, spans, used })
+    }
+
+    /// True when the open batch has waited past the deadline.
+    pub fn deadline_expired(&self) -> bool {
+        match self.opened_at {
+            Some(t) => t.elapsed() >= self.max_wait,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> DynamicBatcher {
+        DynamicBatcher::new(8, Duration::from_millis(1))
+    }
+
+    #[test]
+    fn accumulates_until_full() {
+        let mut b = mk();
+        assert!(b.offer(1, &[1, 2, 3], &[4, 5, 6]).is_empty());
+        assert_eq!(b.pending(), 3);
+        let full = b.offer(2, &[1, 2, 3, 4, 5], &[1, 2, 3, 4, 5]);
+        assert_eq!(full.len(), 1);
+        assert_eq!(full[0].used, 8);
+        assert_eq!(full[0].spans, vec![(1, 0, 3, 0), (2, 3, 5, 0)]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn splits_oversized_requests() {
+        let mut b = mk();
+        let a: Vec<i64> = (0..20).collect();
+        let batches = b.offer(7, &a, &a);
+        assert_eq!(batches.len(), 2, "two full batches emitted");
+        assert_eq!(b.pending(), 4, "tail kept open");
+        let tail = b.flush().unwrap();
+        assert_eq!(tail.used, 4);
+        assert_eq!(tail.a.len(), 8, "padded to capacity");
+        assert_eq!(&tail.a[..4], &[16, 17, 18, 19]);
+        assert_eq!(&tail.a[4..], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn flush_empty_is_none() {
+        let mut b = mk();
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn spans_cover_batch_exactly() {
+        // property: spans partition [0, used)
+        let mut b = DynamicBatcher::new(16, Duration::from_millis(1));
+        let mut rng = crate::util::XorShift256::new(13);
+        let mut batches = Vec::new();
+        for id in 0..50u64 {
+            let len = 1 + rng.below(9) as usize;
+            let v: Vec<i64> = (0..len as i64).collect();
+            batches.extend(b.offer(id, &v, &v));
+        }
+        batches.extend(b.flush());
+        for batch in batches {
+            let mut covered = 0;
+            for (_, off, len, _) in &batch.spans {
+                assert_eq!(*off, covered, "spans must be contiguous");
+                covered += len;
+            }
+            assert_eq!(covered, batch.used);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! `rapid serve` subcommand: bring up the coordinator over the PJRT
+//! artifacts and drive it with a synthetic client load, printing
+//! throughput/latency metrics — the minimal "serving demo" a user runs to
+//! see the three layers compose.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::util::cli::Args;
+
+use super::router::{Coordinator, CoordinatorConfig, Executor, ExecutorFactory};
+
+/// Factory building one PJRT client + compiled artifact per worker thread
+/// (xla handles are not `Send`, so each worker owns its own).
+pub struct PjrtExecutorFactory {
+    pub artifacts_dir: String,
+    pub artifact: String,
+    pub batch: usize,
+}
+
+struct PjrtExecutor {
+    store: ArtifactStore,
+    artifact: String,
+    batch: usize,
+    tables: crate::runtime::SchemeTables,
+}
+
+impl ExecutorFactory for PjrtExecutorFactory {
+    fn make(&self) -> Box<dyn Executor> {
+        let runtime = Runtime::cpu().expect("PJRT client");
+        let store = ArtifactStore::open(runtime, &self.artifacts_dir).expect("artifact store");
+        // warm the compilation cache inside the worker thread
+        store.get(&self.artifact).expect("artifact compiles");
+        // each artifact's trailing params are its scheme tables
+        let schemes_dir = format!("{}/schemes", self.artifacts_dir);
+        let tables = if self.artifact.contains("div") {
+            crate::runtime::SchemeTables::load(&schemes_dir, "div", 8, 9)
+        } else {
+            crate::runtime::SchemeTables::load(&schemes_dir, "mul", 16, 10)
+        }
+        .expect("scheme tables");
+        Box::new(PjrtExecutor {
+            store,
+            artifact: self.artifact.clone(),
+            batch: self.batch,
+            tables,
+        })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(&mut self, a: &[i64], b: &[i64]) -> Vec<i64> {
+        use crate::runtime::client::Input;
+        assert_eq!(a.len(), self.batch, "batcher must pack to the AOT shape");
+        let art = self.store.get(&self.artifact).expect("artifact available");
+        let inputs = [
+            Input::I64(a.to_vec(), vec![a.len()]),
+            Input::I64(b.to_vec(), vec![b.len()]),
+            Input::I32(self.tables.grid.clone(), vec![256]),
+            Input::I64(self.tables.coeffs.clone(), vec![self.tables.coeffs.len()]),
+        ];
+        let out = self
+            .store
+            .runtime()
+            .run_mixed(&art.exe, &inputs)
+            .expect("PJRT execution");
+        out.into_iter().next().expect("one output")
+    }
+}
+
+pub fn run(argv: Vec<String>) {
+    let args = Args::parse(argv, &["artifacts", "artifact", "batch", "workers", "requests", "req-len"]);
+    let dir = args.get_or("artifacts", "artifacts");
+    let artifact = args.get_or("artifact", "rapid_mul16");
+    let batch = args.get_usize("batch", 8192);
+    let workers = args.get_usize("workers", 2);
+    let n_requests = args.get_usize("requests", 200);
+    let req_len = args.get_usize("req-len", 1024);
+
+    {
+        let runtime = Runtime::cpu().expect("PJRT client");
+        println!("platform: {} ({} devices)", runtime.platform(), runtime.device_count());
+        let store = ArtifactStore::open(runtime, dir).expect("artifact store");
+        println!("artifacts: {:?}", store.list());
+    }
+    let exec = Arc::new(PjrtExecutorFactory {
+        artifacts_dir: dir.to_string(),
+        artifact: artifact.to_string(),
+        batch,
+    });
+    let cfg = CoordinatorConfig {
+        batch_capacity: batch,
+        max_wait: Duration::from_micros(500),
+        workers,
+        queue_depth: 128,
+    };
+    let coord = Coordinator::start(exec, cfg);
+
+    // synthetic client load: uniform random 16-bit operands
+    let mut rng = crate::util::XorShift256::new(42);
+    let t0 = Instant::now();
+    let mut checked = 0u64;
+    for _ in 0..n_requests {
+        let a: Vec<i64> = (0..req_len).map(|_| rng.bits(16) as i64).collect();
+        let b: Vec<i64> = (0..req_len).map(|_| rng.bits(16) as i64).collect();
+        let out = coord.call(a.clone(), b.clone());
+        assert_eq!(out.len(), req_len);
+        checked += out.len() as u64;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {n_requests} requests ({checked} elements) in {:.2?} — {:.1} kelem/s",
+        dt,
+        checked as f64 / dt.as_secs_f64() / 1e3
+    );
+    println!("metrics: {}", coord.metrics.summary());
+}

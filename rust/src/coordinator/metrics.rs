@@ -1,0 +1,115 @@
+//! Lock-light metrics shared by the coordinator's threads: request /
+//! element counters, latency histogram, queue depth gauges.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Fixed log2 latency histogram (ns buckets from 1µs to ~4s).
+const BUCKETS: usize = 24;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub elements: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_elements: AtomicU64,
+    pub rejected: AtomicU64,
+    hist: [AtomicU64; BUCKETS],
+    lat_sum_ns: AtomicU64,
+    lat_count: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, elements: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.elements.fetch_add(elements as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, used: usize, capacity: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_elements.fetch_add((capacity - used) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.lat_count.fetch_add(1, Ordering::Relaxed);
+        let bucket = (63 - (ns.max(1024)).leading_zeros() as usize - 10).min(BUCKETS - 1);
+        self.hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile from the histogram (upper bound of
+    /// the containing bucket).
+    pub fn latency_percentile_ns(&self, p: f64) -> u64 {
+        let total: u64 = self.hist.iter().map(|h| h.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut acc = 0;
+        for (i, h) in self.hist.iter().enumerate() {
+            acc += h.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 10 + 1);
+            }
+        }
+        1u64 << (BUCKETS + 10)
+    }
+
+    pub fn mean_latency_ns(&self) -> f64 {
+        let n = self.lat_count.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.lat_sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} elements={} batches={} padding={} rejected={} mean_lat={:.1}µs p50={:.1}µs p99={:.1}µs",
+            self.requests.load(Ordering::Relaxed),
+            self.elements.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.padded_elements.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.mean_latency_ns() / 1e3,
+            self.latency_percentile_ns(0.5) as f64 / 1e3,
+            self.latency_percentile_ns(0.99) as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(100);
+        m.record_request(28);
+        m.record_batch(100, 128);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.elements.load(Ordering::Relaxed), 128);
+        assert_eq!(m.padded_elements.load(Ordering::Relaxed), 28);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let m = Metrics::new();
+        for us in [5u64, 10, 20, 40, 80, 160, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert!(m.latency_percentile_ns(0.5) <= m.latency_percentile_ns(0.99));
+        assert!(m.mean_latency_ns() > 0.0);
+    }
+}

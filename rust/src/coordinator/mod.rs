@@ -1,0 +1,19 @@
+//! Layer-3 streaming coordinator — the serving shell around the AOT
+//! artifacts (DESIGN.md §2).
+//!
+//! The paper's units target stream applications "constantly fed with a
+//! bulk of data"; the coordinator provides exactly that runtime: a
+//! bounded-queue router with backpressure, a dynamic batcher that packs
+//! requests to the artifact's compiled batch shape, a std-thread worker
+//! pool executing on PJRT, per-stage metrics, and a pipeline scheduler
+//! mirroring the 2/3/4-stage units for the Fig. 11/12 study.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline_sched;
+pub mod router;
+pub mod cli;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use metrics::Metrics;
+pub use router::{Coordinator, Request, Response};

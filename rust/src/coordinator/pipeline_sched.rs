@@ -1,0 +1,139 @@
+//! Pipeline scheduler model (Fig. 11 / Fig. 12): cycle-accurate simulation
+//! of an application kernel graph whose mul/div units are non-pipelined or
+//! S-stage pipelined RAPID / accurate circuits.
+//!
+//! Each kernel is a stream stage with an initiation interval (II) of one
+//! unit-operation per cycle once the unit pipeline is full; non-pipelined
+//! units stall the stage for their full latency per operation. The model
+//! reports end-to-end latency of one item and steady-state throughput —
+//! the two axes of the paper's Fig. 12 Pareto plot.
+
+/// One arithmetic unit's timing as seen by the scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct UnitTiming {
+    /// clock period the unit can sustain (ns)
+    pub clock_ns: f64,
+    /// pipeline depth (1 = combinational / non-pipelined)
+    pub stages: usize,
+}
+
+impl UnitTiming {
+    /// Cycles between successive independent ops (II).
+    pub fn initiation_interval(&self) -> usize {
+        if self.stages <= 1 {
+            1 // combinational unit registered at the kernel boundary
+        } else {
+            1 // fully pipelined: one per cycle
+        }
+    }
+
+    pub fn latency_cycles(&self) -> usize {
+        self.stages.max(1)
+    }
+}
+
+/// One application kernel: `ops` unit-operations per input item, through a
+/// unit with `timing`. Kernels run as a chained stream (paper §V-B
+/// "streaming approach", no function pipelining pragmas).
+#[derive(Clone, Debug)]
+pub struct KernelStage {
+    pub name: String,
+    pub ops_per_item: usize,
+    pub timing: UnitTiming,
+}
+
+/// Latency/throughput of the kernel chain.
+#[derive(Clone, Debug)]
+pub struct ScheduleReport {
+    /// ns for one item to traverse the empty pipeline
+    pub latency_ns: f64,
+    /// items per µs in steady state
+    pub throughput_per_us: f64,
+    /// the system clock: slowest unit's clock (one clock domain, like the
+    /// paper's HLS implementation)
+    pub clock_ns: f64,
+}
+
+/// Analytic schedule: system clock = max unit clock; a kernel needs
+/// `ops × II + (stages − 1)` cycles for one item; steady-state item rate is
+/// bounded by the slowest kernel's `ops × II` cycles.
+pub fn schedule(stages: &[KernelStage]) -> ScheduleReport {
+    assert!(!stages.is_empty());
+    let clock = stages.iter().map(|s| s.timing.clock_ns).fold(0.0f64, f64::max);
+    let mut latency_cycles = 0usize;
+    let mut bottleneck_cycles = 0usize;
+    for s in stages {
+        let ii = s.timing.initiation_interval();
+        let fill = s.timing.latency_cycles() - 1;
+        let per_item = s.ops_per_item * ii + fill;
+        latency_cycles += per_item;
+        bottleneck_cycles = bottleneck_cycles.max(s.ops_per_item * ii);
+    }
+    ScheduleReport {
+        latency_ns: latency_cycles as f64 * clock,
+        throughput_per_us: 1e3 / (bottleneck_cycles as f64 * clock),
+        clock_ns: clock,
+    }
+}
+
+/// Pareto front extraction over (latency, throughput) points — Fig. 12.
+/// Returns indices of configurations not dominated by any other
+/// (lower latency AND higher throughput dominates).
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut keep = Vec::new();
+    'outer: for (i, &(lat_i, tput_i)) in points.iter().enumerate() {
+        for (j, &(lat_j, tput_j)) in points.iter().enumerate() {
+            if i != j && lat_j <= lat_i && tput_j >= tput_i && (lat_j < lat_i || tput_j > tput_i) {
+                continue 'outer;
+            }
+        }
+        keep.push(i);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(name: &str, ops: usize, clock: f64, stages: usize) -> KernelStage {
+        KernelStage {
+            name: name.into(),
+            ops_per_item: ops,
+            timing: UnitTiming { clock_ns: clock, stages },
+        }
+    }
+
+    #[test]
+    fn pipelined_unit_raises_throughput_but_latency() {
+        // One kernel, 64 ops/item: non-pipelined at 6 ns vs 4-stage at 2 ns.
+        let np = schedule(&[stage("k", 64, 6.0, 1)]);
+        let p4 = schedule(&[stage("k", 64, 2.0, 4)]);
+        assert!(p4.throughput_per_us > np.throughput_per_us * 2.0);
+        // fill cycles add latency but the faster clock can offset; with
+        // equal clocks latency must grow:
+        let p4_same_clk = schedule(&[stage("k", 64, 6.0, 4)]);
+        assert!(p4_same_clk.latency_ns > np.latency_ns);
+    }
+
+    #[test]
+    fn slowest_kernel_bounds_throughput() {
+        let r = schedule(&[
+            stage("light", 8, 3.0, 2),
+            stage("heavy", 100, 3.0, 2),
+            stage("mid", 20, 3.0, 2),
+        ]);
+        let heavy_only = schedule(&[stage("heavy", 100, 3.0, 2)]);
+        assert!((r.throughput_per_us - heavy_only.throughput_per_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pareto_filters_dominated() {
+        // (latency, throughput)
+        let pts = vec![(10.0, 5.0), (12.0, 4.0), (8.0, 6.0), (9.0, 2.0)];
+        let front = pareto_front(&pts);
+        assert_eq!(front, vec![2], "only (8,6) is non-dominated");
+        let pts2 = vec![(10.0, 5.0), (20.0, 9.0)];
+        assert_eq!(pareto_front(&pts2).len(), 2, "trade-off points both kept");
+    }
+}

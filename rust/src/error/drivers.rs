@@ -1,0 +1,192 @@
+//! Characterisation drivers: exhaustive sweeps for small widths, threaded
+//! Monte-Carlo for 32-bit (paper §V-A: exhaustive for 8/16-bit, ~4.3 G
+//! uniformly-distributed Monte-Carlo pairs for 32-bit).
+
+use std::thread;
+
+use crate::arith::{ApproxDiv, ApproxMul};
+use crate::util::XorShift256;
+
+use super::metrics::{ErrorAcc, ErrorReport};
+
+#[derive(Clone, Copy, Debug)]
+pub struct CharacterizeOpts {
+    /// Use exhaustive enumeration when the pair space is at most this big.
+    pub exhaustive_limit: u64,
+    /// Monte-Carlo samples otherwise.
+    pub mc_samples: u64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for CharacterizeOpts {
+    fn default() -> Self {
+        CharacterizeOpts {
+            exhaustive_limit: 1 << 26, // 8-bit (2^16) and 13-bit pairs
+            mc_samples: 2_000_000,
+            seed: 0x5EED_2A71D,
+            threads: default_threads(),
+        }
+    }
+}
+
+fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Characterise a multiplier (both operands `width()`-bit, nonzero).
+pub fn characterize_mul(unit: &dyn ApproxMul, opts: &CharacterizeOpts) -> ErrorReport {
+    let n = unit.width();
+    let pairs = 1u128 << (2 * n);
+    if pairs <= opts.exhaustive_limit as u128 {
+        let mut acc = ErrorAcc::new();
+        for a in 1..(1u64 << n) {
+            for b in 1..(1u64 << n) {
+                let exact = (a as u128 * b as u128) as f64;
+                acc.push(exact, unit.mul(a, b) as f64);
+            }
+        }
+        acc.report(&unit.name())
+    } else {
+        mc_parallel(opts, |acc, rng| {
+            let a = rng.bits(n);
+            let b = rng.bits(n);
+            if a == 0 || b == 0 {
+                acc.skip();
+                return;
+            }
+            let exact = (a as u128 * b as u128) as f64;
+            acc.push(exact, unit.mul(a, b) as f64);
+        })
+        .report(&unit.name())
+    }
+}
+
+/// Characterise a 2N-by-N divider.
+///
+/// The oracle is the *integer* quotient (what the accurate divider IP
+/// returns), so `ExactDiv` reports zero error. Inputs outside the
+/// constrained-division domain (`b == 0`, `a < b`, overflow) are skipped,
+/// mirroring the paper's exhaustive C++ harness for 2N-by-N division.
+pub fn characterize_div(unit: &dyn ApproxDiv, opts: &CharacterizeOpts) -> ErrorReport {
+    let n = unit.divisor_width();
+    let pairs = 1u128 << (3 * n);
+    if pairs <= opts.exhaustive_limit as u128 {
+        let mut acc = ErrorAcc::new();
+        for b in 1..(1u64 << n) {
+            for a in b..(b << n) {
+                let exact = (a / b) as f64;
+                acc.push(exact, unit.div(a, b) as f64);
+            }
+        }
+        acc.report(&unit.name())
+    } else {
+        mc_parallel(opts, |acc, rng| {
+            let b = rng.bits(n);
+            let a = rng.bits(2 * n);
+            if b == 0 || a < b || a >= (b << n) {
+                acc.skip();
+                return;
+            }
+            let exact = (a / b) as f64;
+            acc.push(exact, unit.div(a, b) as f64);
+        })
+        .report(&unit.name())
+    }
+}
+
+/// Threaded Monte-Carlo: each worker owns a decorrelated PRNG stream and a
+/// private accumulator; results merge at the end (scoped threads — the
+/// closure only needs `Sync`).
+fn mc_parallel<F>(opts: &CharacterizeOpts, f: F) -> ErrorAcc
+where
+    F: Fn(&mut ErrorAcc, &mut XorShift256) + Sync,
+{
+    let threads = opts.threads.max(1);
+    let per = opts.mc_samples / threads as u64;
+    let mut acc = ErrorAcc::new();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let f = &f;
+                s.spawn(move || {
+                    let mut local = ErrorAcc::new();
+                    let mut rng = XorShift256::new(opts.seed.wrapping_add(0x9e37 * (t as u64 + 1)));
+                    for _ in 0..per {
+                        f(&mut local, &mut rng);
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            acc.merge(&h.join().expect("characterisation worker panicked"));
+        }
+    });
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::exact::{ExactDiv, ExactMul};
+    use crate::arith::mitchell::MitchellMul;
+    use crate::arith::rapid::{RapidDiv, RapidMul};
+
+    fn opts(mc: u64) -> CharacterizeOpts {
+        CharacterizeOpts { mc_samples: mc, threads: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn exact_units_have_zero_error() {
+        let r = characterize_mul(&ExactMul { n: 8 }, &opts(0));
+        assert_eq!(r.are, 0.0);
+        assert_eq!(r.pre, 0.0);
+        let d = characterize_div(&ExactDiv { n: 4 }, &opts(0));
+        // integer truncation: exact integer division *is* the oracle here
+        assert_eq!(d.are, 0.0);
+    }
+
+    #[test]
+    fn mitchell_8bit_exhaustive_matches_paper_band() {
+        // Paper Table III: Mitchell 8×8 ARE = 3.77 %, PRE = 11.11 %.
+        let r = characterize_mul(&MitchellMul { n: 8 }, &opts(0));
+        assert!((0.032..0.042).contains(&r.are), "ARE {}", r.are);
+        assert!((0.10..0.13).contains(&r.pre), "PRE {}", r.pre);
+        assert!(r.bias > 0.0, "Mitchell underestimates");
+        assert_eq!(r.samples, 255 * 255);
+    }
+
+    #[test]
+    fn mc_and_exhaustive_agree_for_8bit() {
+        let m = RapidMul::new(8, 5);
+        let ex = characterize_mul(&m, &opts(0));
+        let mc = {
+            let o = CharacterizeOpts { exhaustive_limit: 0, mc_samples: 400_000, threads: 4, ..Default::default() };
+            characterize_mul(&m, &o)
+        };
+        assert!((ex.are - mc.are).abs() < 0.002, "exh {} vs mc {}", ex.are, mc.are);
+    }
+
+    #[test]
+    fn div_exhaustive_small() {
+        // 4-bit divider: full enumeration is tiny. W = 3 fraction bits
+        // quantise the coefficients harshly, so the band is wider than the
+        // 8-bit one, but RAPID-5 must still clearly beat plain Mitchell.
+        let r = characterize_div(&RapidDiv::new(4, 5), &opts(0));
+        let m = characterize_div(&crate::arith::mitchell::MitchellDiv { n: 4 }, &opts(0));
+        assert!(r.are < 0.045, "ARE {}", r.are);
+        assert!(r.are < m.are, "RAPID {} vs Mitchell {}", r.are, m.are);
+        assert!(r.samples > 0);
+    }
+
+    #[test]
+    fn mc_deterministic_given_seed() {
+        let m = RapidMul::new(32, 10);
+        let o = CharacterizeOpts { exhaustive_limit: 0, mc_samples: 100_000, threads: 4, ..Default::default() };
+        let a = characterize_mul(&m, &o);
+        let b = characterize_mul(&m, &o);
+        assert_eq!(a.are, b.are);
+        assert_eq!(a.samples, b.samples);
+    }
+}

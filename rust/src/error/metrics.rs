@@ -1,0 +1,136 @@
+//! Error metrics: ARE (mean |relative error|), PRE (peak |relative error|)
+//! and signed error bias, with streaming accumulation so exhaustive and
+//! Monte-Carlo drivers share one code path (and can merge across threads).
+
+/// Accumulates relative-error observations for one unit.
+#[derive(Clone, Debug, Default)]
+pub struct ErrorAcc {
+    pub n: u64,
+    sum_abs: f64,
+    sum_signed: f64,
+    peak: f64,
+    /// peak over results with exact magnitude ≥ 8 — the paper's divider
+    /// PRE is a continuous-domain figure; integer outputs at quotients of
+    /// 1-7 carry unavoidable ulp error up to 100 % that this conditioned
+    /// peak excludes (EXPERIMENTS.md discusses the two flavours)
+    peak_large: f64,
+    /// inputs skipped by the divider overflow/zero rules
+    pub skipped: u64,
+}
+
+impl ErrorAcc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation. `exact` must be nonzero.
+    #[inline]
+    pub fn push(&mut self, exact: f64, approx: f64) {
+        let rel = (exact - approx) / exact;
+        self.n += 1;
+        self.sum_abs += rel.abs();
+        self.sum_signed += rel;
+        if rel.abs() > self.peak {
+            self.peak = rel.abs();
+        }
+        if exact.abs() >= 8.0 && rel.abs() > self.peak_large {
+            self.peak_large = rel.abs();
+        }
+    }
+
+    #[inline]
+    pub fn skip(&mut self) {
+        self.skipped += 1;
+    }
+
+    pub fn merge(&mut self, o: &ErrorAcc) {
+        self.n += o.n;
+        self.sum_abs += o.sum_abs;
+        self.sum_signed += o.sum_signed;
+        self.peak = self.peak.max(o.peak);
+        self.peak_large = self.peak_large.max(o.peak_large);
+        self.skipped += o.skipped;
+    }
+
+    pub fn report(&self, name: &str) -> ErrorReport {
+        ErrorReport {
+            name: name.to_string(),
+            are: if self.n == 0 { 0.0 } else { self.sum_abs / self.n as f64 },
+            pre: self.peak,
+            pre_large: self.peak_large,
+            bias: if self.n == 0 { 0.0 } else { self.sum_signed / self.n as f64 },
+            samples: self.n,
+            skipped: self.skipped,
+        }
+    }
+}
+
+/// Final error characterisation of one unit (one accuracy block of a
+/// Table III row).
+#[derive(Clone, Debug)]
+pub struct ErrorReport {
+    pub name: String,
+    /// Average absolute relative error (MRED), as a fraction (0.01 = 1 %).
+    pub are: f64,
+    /// Peak absolute relative error (all results, including small integer
+    /// quotients where one output ulp is a large relative error).
+    pub pre: f64,
+    /// Peak over results ≥ 8 (the paper's continuous-domain PRE regime).
+    pub pre_large: f64,
+    /// Signed mean relative error (positive = underestimates).
+    pub bias: f64,
+    pub samples: u64,
+    pub skipped: u64,
+}
+
+impl ErrorReport {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<16} ARE={:6.3}%  PRE={:7.3}%  bias={:7.3}%  (n={}, skipped={})",
+            self.name,
+            self.are * 100.0,
+            self.pre * 100.0,
+            self.bias * 100.0,
+            self.samples,
+            self.skipped
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acc_computes_expected_metrics() {
+        let mut a = ErrorAcc::new();
+        a.push(100.0, 90.0); // rel +0.10
+        a.push(100.0, 105.0); // rel -0.05
+        let r = a.report("t");
+        assert!((r.are - 0.075).abs() < 1e-12);
+        assert!((r.pre - 0.10).abs() < 1e-12);
+        assert!((r.bias - 0.025).abs() < 1e-12);
+        assert_eq!(r.samples, 2);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let obs = [(10.0, 9.0), (20.0, 21.0), (5.0, 5.0), (8.0, 6.0)];
+        let mut whole = ErrorAcc::new();
+        for &(e, a) in &obs {
+            whole.push(e, a);
+        }
+        let mut p1 = ErrorAcc::new();
+        let mut p2 = ErrorAcc::new();
+        p1.push(obs[0].0, obs[0].1);
+        p1.push(obs[1].0, obs[1].1);
+        p2.push(obs[2].0, obs[2].1);
+        p2.push(obs[3].0, obs[3].1);
+        p1.merge(&p2);
+        let (a, b) = (whole.report("x"), p1.report("x"));
+        assert_eq!(a.samples, b.samples);
+        assert!((a.are - b.are).abs() < 1e-14);
+        assert!((a.bias - b.bias).abs() < 1e-14);
+        assert!((a.pre - b.pre).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,11 @@
+//! Error characterisation — the accuracy columns of Table III.
+//!
+//! The paper measures the average of absolute relative error (ARE, a.k.a.
+//! MRED), peak relative error (PRE) and error bias; exhaustively for 8- and
+//! 16-bit units and via Monte-Carlo for 32-bit (§V-A "Experimental Setup").
+
+pub mod metrics;
+pub mod drivers;
+
+pub use drivers::{characterize_div, characterize_mul, CharacterizeOpts};
+pub use metrics::ErrorReport;

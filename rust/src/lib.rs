@@ -1,0 +1,53 @@
+//! # RAPID — approximate pipelined soft multipliers & dividers
+//!
+//! Full-system reproduction of *RAPID: AppRoximAte Pipelined Soft
+//! MultIpliers and Dividers for High-Throughput and Energy-Efficiency*
+//! (Ebrahimi et al., IEEE TCAD 2022).
+//!
+//! The crate is organised in the layers DESIGN.md describes:
+//!
+//! * [`arith`] — bit-accurate functional models of every unit the paper
+//!   builds or compares against (Mitchell, RAPID-G, MBM, INZeD, SIMDive,
+//!   DRUM, AAXD, AFM, SAADI-EC, exact IPs).
+//! * [`error`] — ARE / PRE / bias characterisation (exhaustive + Monte
+//!   Carlo), reproducing the accuracy columns of Table III.
+//! * [`circuit`] — the FPGA substrate: LUT6/CARRY4/FDRE netlists,
+//!   technology mapping of each unit, static timing, switching-activity
+//!   power and fine-grained pipelining (Fig. 4, resource/latency/power
+//!   columns of Table III).
+//! * [`apps`] — the three end-to-end applications (Pan-Tompkins QRS,
+//!   JPEG compression, Harris corner tracking) over pluggable arithmetic
+//!   (Figs. 5-12).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text produced by `python/compile/aot.py`).
+//! * [`coordinator`] — the streaming orchestrator: dynamic batcher, worker
+//!   pool, backpressure, pipeline scheduler, metrics.
+//! * [`util`] — zero-dependency PRNG/stats/CLI/bench/property-test helpers.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the libxla rpath; the same code
+//! // runs in examples/quickstart.rs and the arith unit tests)
+//! use rapid::arith::{ApproxMul, RapidMul};
+//! let m = RapidMul::new(16, 10); // 16×16 multiplier, 10 coefficients
+//! let p = m.mul(58, 18);
+//! assert!((p as f64 - 1044.0).abs() / 1044.0 < 0.04);
+//! ```
+
+pub mod util;
+pub mod arith;
+pub mod error;
+pub mod circuit;
+pub mod apps;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_support;
+
+/// Commonly used items.
+pub mod prelude {
+    pub use crate::arith::{ApproxDiv, ApproxMul, DivUnit, MulUnit, RapidDiv, RapidMul};
+    pub use crate::arith::registry::{make_div, make_mul};
+    pub use crate::error::metrics::ErrorReport;
+    pub use crate::util::XorShift256;
+}

@@ -1,0 +1,95 @@
+//! `rapid` — launcher CLI for the RAPID reproduction.
+//!
+//! Subcommands:
+//! * `export-scheme` — write derived error-reduction schemes as JSON for the
+//!   build-time Python layer (`make artifacts` runs this).
+//! * `characterize`  — ARE/PRE/bias of a unit (Table III accuracy columns).
+//! * `synth`         — netlist resources/timing/power of a unit (Table III).
+//! * `app`           — run an end-to-end application with chosen arithmetic.
+//! * `serve`         — start the streaming coordinator on PJRT artifacts.
+
+use rapid::util::cli::Args;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        return;
+    }
+    let cmd = argv.remove(0);
+    match cmd.as_str() {
+        "export-scheme" => cmd_export_scheme(argv),
+        "characterize" => cmd_characterize(argv),
+        "synth" => rapid::circuit::cli::run(argv),
+        "app" => rapid::apps::cli::run(argv),
+        "serve" => rapid::coordinator::cli::run(argv),
+        "--help" | "help" | "-h" => usage(),
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "rapid — approximate pipelined soft multipliers & dividers (TCAD'22 reproduction)\n\
+         \n\
+         USAGE: rapid <command> [options]\n\
+         \n\
+         COMMANDS\n\
+           export-scheme --out DIR              write derived coefficient schemes (JSON)\n\
+           characterize  --unit NAME --width N [--div] [--samples M]\n\
+                                                ARE/PRE/bias of one unit\n\
+           synth         --unit NAME --width N [--div] [--stages S]\n\
+                                                LUT/FF/latency/power of one unit\n\
+           app           --name {{pantompkins|jpeg|harris}} --mul NAME --div NAME\n\
+                                                end-to-end application run + QoR\n\
+           serve         --artifacts DIR [--batch B] [--workers W] [--requests R]\n\
+                                                streaming coordinator demo over PJRT\n"
+    );
+}
+
+/// `rapid export-scheme --out artifacts/schemes` — one JSON per scheme the
+/// Python kernels need (16-bit mul G=3/5/10, div G=3/5/9 by default).
+fn cmd_export_scheme(argv: Vec<String>) {
+    use rapid::arith::export::{export_div_scheme, export_mul_scheme};
+    let args = Args::parse(argv, &["out"]);
+    let out = args.get_or("out", "artifacts/schemes");
+    std::fs::create_dir_all(out).expect("create scheme dir");
+    // the L2 models use the 16-bit multiplier and the 16/8 divider; both
+    // widths are exported for every scheme size so pytest can sweep them
+    for width in [8u32, 16, 32] {
+        for g in [3usize, 5, 10] {
+            let path = format!("{out}/mul{width}_g{g}.json");
+            std::fs::write(&path, export_mul_scheme(width, g)).expect("write scheme");
+            println!("wrote {path}");
+        }
+        for g in [3usize, 5, 9] {
+            let path = format!("{out}/div{width}_g{g}.json");
+            std::fs::write(&path, export_div_scheme(width, g)).expect("write scheme");
+            println!("wrote {path}");
+        }
+    }
+}
+
+fn cmd_characterize(argv: Vec<String>) {
+    use rapid::arith::registry::{make_div, make_mul};
+    use rapid::error::{characterize_div, characterize_mul, CharacterizeOpts};
+    let args = Args::parse(argv, &["unit", "width", "samples"]);
+    let unit = args.get_or("unit", "rapid10");
+    let width = args.get_u32("width", 16);
+    let opts = CharacterizeOpts {
+        mc_samples: args.get_u64("samples", 2_000_000),
+        ..Default::default()
+    };
+    let report = if args.flag("div") {
+        let d = make_div(unit, width).unwrap_or_else(|| panic!("unknown divider '{unit}'"));
+        characterize_div(d.as_ref(), &opts)
+    } else {
+        let m = make_mul(unit, width).unwrap_or_else(|| panic!("unknown multiplier '{unit}'"));
+        characterize_mul(m.as_ref(), &opts)
+    };
+    println!("{}", report.row());
+}

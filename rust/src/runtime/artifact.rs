@@ -1,0 +1,67 @@
+//! Artifact store: discovers `*.hlo.txt` under `artifacts/`, compiles on
+//! demand and caches the executables by name.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::client::Runtime;
+
+/// One compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// Lazy-compiling store over an artifacts directory.
+pub struct ArtifactStore {
+    runtime: Runtime,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
+}
+
+impl ArtifactStore {
+    pub fn open(runtime: Runtime, dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(anyhow!("artifact dir {} missing — run `make artifacts`", dir.display()));
+        }
+        Ok(ArtifactStore { runtime, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Artifact names available on disk (without `.hlo.txt`).
+    pub fn list(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                let f = e.file_name().into_string().ok()?;
+                f.strip_suffix(".hlo.txt").map(str::to_string)
+            })
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Get (compiling if needed) an artifact by name.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let exe = self
+            .runtime
+            .compile_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("loading artifact '{name}'"))?;
+        let art = std::sync::Arc::new(Artifact { name: name.to_string(), exe });
+        self.cache.lock().unwrap().insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+}

@@ -1,0 +1,88 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//!
+//! One `Runtime` owns the client; executables are compiled once per
+//! artifact and shared behind `Arc` (PjRtLoadedExecutable is cheaply
+//! clonable on the C API side). HLO *text* is the interchange format —
+//! see `python/compile/aot.py` for why serialized protos are rejected.
+
+use anyhow::{Context, Result};
+
+/// PJRT client handle.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client (the only backend in this image).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_file(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {path}"))
+    }
+
+    /// Execute with i64 vector inputs; returns flattened i64 outputs of the
+    /// first (tuple) result. All our artifacts are lowered with
+    /// `return_tuple=True`, so the single output is a tuple literal.
+    pub fn run_i64(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[i64], &[usize])],
+    ) -> Result<Vec<Vec<i64>>> {
+        let lits: Vec<Input> = inputs.iter().map(|(d, dims)| Input::I64(d.to_vec(), dims.to_vec())).collect();
+        self.run_mixed(exe, &lits)
+    }
+
+    /// Execute with mixed-dtype inputs (the artifacts' scheme-table
+    /// parameters are int32 while operands are int64).
+    pub fn run_mixed(&self, exe: &xla::PjRtLoadedExecutable, inputs: &[Input]) -> Result<Vec<Vec<i64>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let (lit, dims, flat_len) = match input {
+                Input::I64(data, dims) => (xla::Literal::vec1(data.as_slice()), dims, data.len()),
+                Input::I32(data, dims) => (xla::Literal::vec1(data.as_slice()), dims, data.len()),
+            };
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = if dims.len() == 1 && dims[0] == flat_len {
+                lit
+            } else {
+                lit.reshape(&dims_i64).context("reshaping input literal")?
+            };
+            lits.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&lits).context("executing")?;
+        let first = result[0][0].to_literal_sync().context("fetching result")?;
+        let tuple = first.to_tuple().context("untupling result")?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<i64>().context("reading i64 output")?);
+        }
+        Ok(out)
+    }
+}
+
+/// One artifact input: flat data + dims.
+pub enum Input {
+    I64(Vec<i64>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/pjrt_roundtrip.rs (they need
+    // `make artifacts` to have run; unit tests here stay hermetic).
+}

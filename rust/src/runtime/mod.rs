@@ -1,0 +1,12 @@
+//! PJRT runtime (Layer 3 ⇄ Layer 2 bridge): load the HLO-text artifacts
+//! produced by `python/compile/aot.py`, compile them once on the CPU PJRT
+//! client, and execute them from the coordinator's hot path. Python never
+//! runs at serve time.
+
+pub mod client;
+pub mod artifact;
+pub mod schemes;
+
+pub use artifact::{Artifact, ArtifactStore};
+pub use client::Runtime;
+pub use schemes::SchemeTables;

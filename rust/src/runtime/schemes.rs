@@ -1,0 +1,98 @@
+//! Loader for the exported scheme JSONs (`rapid export-scheme`): the AOT
+//! artifacts take the region grid and coefficient table as their trailing
+//! parameters, so the serving path must supply the same constants the
+//! kernel was authored against. Hand-rolled parser for the fixed format
+//! `arith::export` writes (no serde in the offline vendor set).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One loaded scheme, ready to feed a PJRT artifact.
+#[derive(Clone, Debug)]
+pub struct SchemeTables {
+    pub grid: Vec<i32>,   // 256 entries, row-major 16×16
+    pub coeffs: Vec<i64>, // G entries
+    pub width: u32,
+    pub kind: String,
+}
+
+/// Parse the flat integer array following `"key": [` in `text`.
+fn parse_int_array(text: &str, key: &str) -> Result<Vec<i64>> {
+    let pat = format!("\"{key}\": [");
+    let start = text.find(&pat).ok_or_else(|| anyhow!("missing key {key}"))? + pat.len();
+    let end = text[start..].find(']').ok_or_else(|| anyhow!("unterminated array {key}"))? + start;
+    text[start..end]
+        .split(',')
+        .map(|s| s.trim().parse::<i64>().context("bad int"))
+        .collect()
+}
+
+fn parse_int_scalar(text: &str, key: &str) -> Result<i64> {
+    let pat = format!("\"{key}\": ");
+    let start = text.find(&pat).ok_or_else(|| anyhow!("missing key {key}"))? + pat.len();
+    let end = text[start..]
+        .find(|c: char| !c.is_ascii_digit())
+        .map(|i| i + start)
+        .unwrap_or(text.len());
+    text[start..end].trim().parse().context("bad scalar")
+}
+
+impl SchemeTables {
+    /// Load `<dir>/<kind><width>_g<groups>.json`.
+    pub fn load(dir: impl AsRef<Path>, kind: &str, width: u32, groups: usize) -> Result<Self> {
+        let path = dir.as_ref().join(format!("{kind}{width}_g{groups}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading scheme {}", path.display()))?;
+        let grid: Vec<i32> = parse_int_array(&text, "grid")?.into_iter().map(|v| v as i32).collect();
+        let coeffs = parse_int_array(&text, "coeffs")?;
+        if grid.len() != 256 {
+            return Err(anyhow!("grid has {} entries, want 256", grid.len()));
+        }
+        let g = parse_int_scalar(&text, "groups")? as usize;
+        if coeffs.len() != g || g != groups {
+            return Err(anyhow!("coeff count mismatch: {} vs {groups}", coeffs.len()));
+        }
+        Ok(SchemeTables {
+            grid,
+            coeffs,
+            width: parse_int_scalar(&text, "width")? as u32,
+            kind: kind.to_string(),
+        })
+    }
+
+    /// Grid as i64 (PJRT literal helper; the artifact expects int32 — use
+    /// [`SchemeTables::grid`] with an i32 literal for that).
+    pub fn grid_i64(&self) -> Vec<i64> {
+        self.grid.iter().map(|&v| v as i64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_export_format() {
+        let json = crate::arith::export::export_mul_scheme(16, 10);
+        let dir = std::env::temp_dir().join("rapid_scheme_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mul16_g10.json"), &json).unwrap();
+        let t = SchemeTables::load(&dir, "mul", 16, 10).unwrap();
+        assert_eq!(t.grid.len(), 256);
+        assert_eq!(t.coeffs.len(), 10);
+        assert_eq!(t.width, 16);
+        // must agree with the in-process unit
+        let unit = crate::arith::rapid::RapidMul::new(16, 10);
+        assert_eq!(t.coeffs, unit.table().iter().map(|&c| c as i64).collect::<Vec<_>>());
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(t.grid[i * 16 + j], unit.scheme().grid[i][j] as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(SchemeTables::load("/nonexistent", "mul", 16, 10).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Zero-dependency utilities: PRNG, statistics, fixed-point helpers and a
+//! miniature property-testing harness.
+//!
+//! The offline vendor set only carries `xla` + `anyhow`, so the substrates a
+//! well-maintained project would pull from crates.io (rand, proptest,
+//! statistical helpers) are implemented here from scratch.
+
+pub mod rng;
+pub mod stats;
+pub mod proptest;
+pub mod cli;
+pub mod timer;
+
+pub use rng::XorShift256;
+pub use stats::Summary;

@@ -1,0 +1,173 @@
+//! xoshiro256** PRNG — deterministic, fast, no external crates.
+//!
+//! Used by Monte-Carlo error characterisation (Table III, 32-bit rows),
+//! switching-activity power estimation, workload generators and the
+//! property-test harness. Deterministic seeding keeps every experiment
+//! reproducible run-to-run.
+
+/// xoshiro256** by Blackman & Vigna (public-domain algorithm), implemented
+/// from the published recurrence.
+#[derive(Clone, Debug)]
+pub struct XorShift256 {
+    s: [u64; 4],
+}
+
+impl XorShift256 {
+    /// Seed via SplitMix64 so that low-entropy seeds (0, 1, 2, ...) still
+    /// produce well-distributed states.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        XorShift256 { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` (Lemire's multiply-shift rejection method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let l = m as u64;
+            if l >= bound || l >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform unsigned integer with exactly `bits` significant bits allowed.
+    #[inline]
+    pub fn bits(&mut self, bits: u32) -> u64 {
+        debug_assert!(bits >= 1 && bits <= 64);
+        if bits == 64 {
+            self.next_u64()
+        } else {
+            self.next_u64() & ((1u64 << bits) - 1)
+        }
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal (Box–Muller); used by the synthetic ECG/image noise.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = XorShift256::new(42);
+        let mut b = XorShift256::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = XorShift256::new(1);
+        let mut b = XorShift256::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = XorShift256::new(7);
+        for bound in [1u64, 2, 3, 10, 255, 65536] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = XorShift256::new(9);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniformity_rough_chi2() {
+        // 16 buckets, 16k draws: each bucket expectation 1024, tolerate ±20%.
+        let mut r = XorShift256::new(3);
+        let mut buckets = [0u32; 16];
+        for _ in 0..16384 {
+            buckets[(r.next_u64() >> 60) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((820..1230).contains(&b), "bucket count {b} out of range");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = XorShift256::new(11);
+        let n = 20000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gaussian();
+            sum += g;
+            sq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn bits_masks_correctly() {
+        let mut r = XorShift256::new(5);
+        for _ in 0..100 {
+            assert!(r.bits(8) < 256);
+            assert!(r.bits(1) < 2);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Bench timing harness (criterion is not in the offline vendor set).
+//!
+//! Measures wall-clock of a closure with warmup, repeated samples and
+//! outlier-robust reporting; `cargo bench` targets print table rows via
+//! `bench_support`, so the harness keeps to plain text.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// median ns per iteration
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+/// Time `f`, auto-scaling the iteration count so each sample takes ≥ ~2 ms.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_n(name, 12, &mut f)
+}
+
+/// Variant with explicit sample count.
+pub fn bench_n<F: FnMut()>(name: &str, samples: usize, f: &mut F) -> BenchResult {
+    // Warmup + calibration: find iters such that one sample >= 2ms.
+    let mut iters: u64 = 1;
+    loop {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = t.elapsed().as_nanos() as u64;
+        if el >= 2_000_000 || iters >= 1 << 24 {
+            break;
+        }
+        iters = (iters * 2).max(iters + 1);
+    }
+    let mut ns: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = ns[ns.len() / 2];
+    let mean = ns.iter().sum::<f64>() / ns.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        median_ns: median,
+        mean_ns: mean,
+        min_ns: ns[0],
+        max_ns: *ns.last().unwrap(),
+        samples,
+        iters_per_sample: iters,
+    }
+}
+
+/// Keep a value observably alive (prevents the optimiser from deleting
+/// the benched computation).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_n("noop-ish", 3, &mut || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Coordinator end-to-end tests over the *functional-model* executor (no
+//! PJRT dependency → runs on a fresh clone), plus property tests on the
+//! router invariants: every caller gets its own results, in order, exactly
+//! once, under concurrency, padding, splitting and backpressure.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapid::arith::{ApproxMul, RapidMul};
+use rapid::coordinator::router::{Coordinator, CoordinatorConfig, ExecutorFactory, FnFactory};
+use rapid::util::XorShift256;
+
+fn rapid_exec() -> Arc<dyn ExecutorFactory> {
+    Arc::new(FnFactory(|a: &[i64], b: &[i64]| {
+        let m = RapidMul::new(16, 10);
+        a.iter().zip(b).map(|(&x, &y)| m.mul(x as u64, y as u64) as i64).collect::<Vec<i64>>()
+    }))
+}
+
+fn cfg(batch: usize, workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batch_capacity: batch,
+        max_wait: Duration::from_micros(200),
+        workers,
+        queue_depth: 32,
+    }
+}
+
+#[test]
+fn serving_matches_direct_model() {
+    let c = Coordinator::start(rapid_exec(), cfg(256, 2));
+    let model = RapidMul::new(16, 10);
+    let mut rng = XorShift256::new(1);
+    for _ in 0..20 {
+        let n = 1 + rng.below(500) as usize;
+        let a: Vec<i64> = (0..n).map(|_| rng.bits(16) as i64).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.bits(16) as i64).collect();
+        let got = c.call(a.clone(), b.clone());
+        for i in 0..n {
+            assert_eq!(got[i], model.mul(a[i] as u64, b[i] as u64) as i64);
+        }
+    }
+}
+
+#[test]
+fn concurrent_clients_isolation() {
+    let c = Coordinator::start(rapid_exec(), cfg(128, 3));
+    let model = Arc::new(RapidMul::new(16, 10));
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let c = c.clone();
+        let model = model.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = XorShift256::new(100 + t);
+            for _ in 0..40 {
+                let n = 1 + rng.below(300) as usize;
+                let a: Vec<i64> = (0..n).map(|_| rng.bits(16) as i64).collect();
+                let b: Vec<i64> = (0..n).map(|_| rng.bits(16) as i64).collect();
+                let got = c.call(a.clone(), b.clone());
+                assert_eq!(got.len(), n);
+                for i in 0..n {
+                    assert_eq!(got[i], model.mul(a[i] as u64, b[i] as u64) as i64);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 240);
+}
+
+#[test]
+fn zero_padding_is_inert() {
+    // Padding uses zero operands; RAPID maps zeros to zero — the batcher
+    // must never leak padding into a reply.
+    let c = Coordinator::start(rapid_exec(), cfg(64, 1));
+    let expect = RapidMul::new(16, 10).mul(3, 7) as i64; // approximate 3×7
+    for n in [1usize, 2, 63, 64, 65, 127] {
+        let a = vec![3i64; n];
+        let b = vec![7i64; n];
+        let got = c.call(a, b);
+        assert_eq!(got.len(), n);
+        assert!(got.iter().all(|&v| v == expect), "n={n}: {got:?}");
+    }
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    // An executor that blocks until released: the bounded queues must
+    // reject rather than grow unboundedly.
+    static GATE: AtomicUsize = AtomicUsize::new(0);
+    struct SlowFactory;
+    impl ExecutorFactory for SlowFactory {
+        fn make(&self) -> Box<dyn rapid::coordinator::router::Executor> {
+            Box::new(|a: &[i64], _b: &[i64]| {
+                while GATE.load(Ordering::SeqCst) == 0 {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                a.to_vec()
+            })
+        }
+    }
+    let c = Coordinator::start(
+        Arc::new(SlowFactory),
+        CoordinatorConfig {
+            batch_capacity: 4,
+            max_wait: Duration::from_micros(50),
+            workers: 1,
+            queue_depth: 2,
+        },
+    );
+    // flood the queue asynchronously
+    let mut pending = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..200 {
+        match c.try_call_async(vec![1, 2, 3, 4], vec![0; 4]) {
+            Ok(rx) => pending.push(rx),
+            Err(()) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections");
+    GATE.store(1, Ordering::SeqCst);
+    // accepted requests must still complete correctly
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("drain");
+        assert_eq!(resp.values, vec![1, 2, 3, 4]);
+    }
+    assert_eq!(c.metrics.rejected.load(Ordering::Relaxed), rejected);
+}
+
+#[test]
+fn metrics_account_padding_and_batches() {
+    let c = Coordinator::start(rapid_exec(), cfg(32, 1));
+    let _ = c.call(vec![1; 10], vec![1; 10]);
+    let batches = c.metrics.batches.load(Ordering::Relaxed);
+    let padding = c.metrics.padded_elements.load(Ordering::Relaxed);
+    assert_eq!(batches, 1);
+    assert_eq!(padding, 22);
+    assert!(c.metrics.mean_latency_ns() > 0.0);
+}

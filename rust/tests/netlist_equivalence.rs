@@ -1,0 +1,93 @@
+//! Netlist ≡ functional-model equivalence and pipelining invariants at
+//! integration scale: every synthesized unit, at several widths, in every
+//! pipeline configuration, against the bit-accurate models — the guarantee
+//! that Table III's circuit columns describe circuits that really compute
+//! the reported arithmetic.
+
+use rapid::arith::exact::{ExactDiv, ExactMul};
+use rapid::arith::mitchell::{MitchellDiv, MitchellMul};
+use rapid::arith::rapid::{RapidDiv, RapidMul};
+use rapid::arith::{ApproxDiv, ApproxMul};
+use rapid::circuit::netlist::Netlist;
+use rapid::circuit::pipeline::pipeline;
+use rapid::circuit::primitive::Delays;
+use rapid::circuit::synth::divider::rapid_div_netlist;
+use rapid::circuit::synth::exact_ip::{exact_div_netlist, exact_mul_netlist};
+use rapid::circuit::synth::multiplier::rapid_mul_netlist;
+use rapid::util::XorShift256;
+
+fn check_mul(nl: &Netlist, model: &dyn ApproxMul, n: u32, cases: usize, seed: u64) {
+    let mut rng = XorShift256::new(seed);
+    let d = Delays::default();
+    let p2 = pipeline(nl, 2, &d);
+    let p4 = pipeline(nl, 4, &d);
+    for _ in 0..cases {
+        let a = rng.bits(n);
+        let b = rng.bits(n);
+        let bits = Netlist::pack_inputs(&[n, n], &[a, b]);
+        let want = model.mul(a, b) as u128;
+        assert_eq!(nl.eval_outputs(&bits), want, "{}: {a}x{b}", nl.name);
+        assert_eq!(p2.netlist.eval_outputs(&bits), want, "{} p2: {a}x{b}", nl.name);
+        assert_eq!(p4.netlist.eval_outputs(&bits), want, "{} p4: {a}x{b}", nl.name);
+    }
+}
+
+fn check_div(nl: &Netlist, model: &dyn ApproxDiv, n: u32, cases: usize, seed: u64) {
+    let mut rng = XorShift256::new(seed);
+    let d = Delays::default();
+    let p3 = pipeline(nl, 3, &d);
+    for _ in 0..cases {
+        let a = rng.bits(2 * n);
+        let b = rng.bits(n);
+        let bits = Netlist::pack_inputs(&[2 * n, n], &[a, b]);
+        let want = model.div(a, b) as u128;
+        assert_eq!(nl.eval_outputs(&bits), want, "{}: {a}/{b}", nl.name);
+        assert_eq!(p3.netlist.eval_outputs(&bits), want, "{} p3: {a}/{b}", nl.name);
+    }
+}
+
+#[test]
+fn mul_netlists_all_widths_and_schemes() {
+    for n in [8u32, 16] {
+        for g in [3usize, 5, 10] {
+            check_mul(&rapid_mul_netlist(n, g), &RapidMul::new(n, g), n, 150, n as u64 * 10 + g as u64);
+        }
+        check_mul(&rapid_mul_netlist(n, 0), &MitchellMul { n }, n, 150, n as u64);
+        check_mul(&exact_mul_netlist(n), &ExactMul { n }, n, 150, n as u64 + 1);
+    }
+}
+
+#[test]
+fn mul_netlist_32bit_spot() {
+    check_mul(&rapid_mul_netlist(32, 10), &RapidMul::new(32, 10), 32, 60, 99);
+    check_mul(&exact_mul_netlist(32), &ExactMul { n: 32 }, 32, 40, 98);
+}
+
+#[test]
+fn div_netlists_all_widths_and_schemes() {
+    for n in [4u32, 8] {
+        for g in [3usize, 5, 9] {
+            check_div(&rapid_div_netlist(n, g), &RapidDiv::new(n, g), n, 150, 70 + n as u64 + g as u64);
+        }
+        check_div(&rapid_div_netlist(n, 0), &MitchellDiv { n }, n, 150, 80 + n as u64);
+        check_div(&exact_div_netlist(n), &ExactDiv { n }, n, 150, 90 + n as u64);
+    }
+}
+
+#[test]
+fn div_netlist_16bit_spot() {
+    check_div(&rapid_div_netlist(16, 9), &RapidDiv::new(16, 9), 16, 50, 97);
+}
+
+#[test]
+fn pipelined_ff_counts_monotone() {
+    let d = Delays::default();
+    for nl in [rapid_mul_netlist(16, 10), rapid_div_netlist(8, 9), exact_mul_netlist(16)] {
+        let p2 = pipeline(&nl, 2, &d);
+        let p3 = pipeline(&nl, 3, &d);
+        let p4 = pipeline(&nl, 4, &d);
+        assert!(p2.ffs_inserted > 0);
+        assert!(p3.ffs_inserted >= p2.ffs_inserted, "{}", nl.name);
+        assert!(p4.ffs_inserted >= p3.ffs_inserted, "{}", nl.name);
+    }
+}

@@ -1,0 +1,157 @@
+//! Cross-layer integration: the AOT artifacts (JAX + Pallas, lowered by
+//! `python/compile/aot.py`) must agree **bit-exactly** with the Rust
+//! functional models when executed through the PJRT runtime. This is the
+//! proof that L1/L2/L3 compose: the same scheme tables drive the Pallas
+//! kernel and the Rust `arith` units, and the serving path returns the
+//! same numbers a hardware RAPID unit would.
+//!
+//! Every artifact's trailing two parameters are the scheme tables
+//! (grid int32[256], coeffs int64[G]) — loaded from the exported JSON and
+//! passed explicitly (deterministic artifact signatures; DESIGN.md §2).
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent so
+//! `cargo test` works on a fresh clone).
+
+use rapid::arith::{ApproxDiv, ApproxMul, RapidDiv, RapidMul};
+use rapid::runtime::client::Input;
+use rapid::runtime::{ArtifactStore, Runtime, SchemeTables};
+use rapid::util::XorShift256;
+
+const BATCH: usize = 8192;
+
+fn store() -> Option<ArtifactStore> {
+    if !std::path::Path::new("artifacts/rapid_mul16.hlo.txt").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    Some(ArtifactStore::open(rt, "artifacts").expect("store"))
+}
+
+fn mul_tables() -> (Input, Input) {
+    let t = SchemeTables::load("artifacts/schemes", "mul", 16, 10).expect("mul scheme");
+    (Input::I32(t.grid.clone(), vec![256]), Input::I64(t.coeffs.clone(), vec![t.coeffs.len()]))
+}
+
+fn div_tables() -> (Input, Input) {
+    let t = SchemeTables::load("artifacts/schemes", "div", 8, 9).expect("div scheme");
+    (Input::I32(t.grid.clone(), vec![256]), Input::I64(t.coeffs.clone(), vec![t.coeffs.len()]))
+}
+
+#[test]
+fn mul_artifact_matches_rust_model_bit_exactly() {
+    let Some(store) = store() else { return };
+    let art = store.get("rapid_mul16").expect("artifact");
+    let model = RapidMul::new(16, 10);
+    let mut rng = XorShift256::new(0xA0);
+    let a: Vec<i64> = (0..BATCH).map(|_| rng.bits(16) as i64).collect();
+    let b: Vec<i64> = (0..BATCH).map(|_| rng.bits(16) as i64).collect();
+    let (grid, coeffs) = mul_tables();
+    let inputs = [
+        Input::I64(a.clone(), vec![BATCH]),
+        Input::I64(b.clone(), vec![BATCH]),
+        grid,
+        coeffs,
+    ];
+    let out = store.runtime().run_mixed(&art.exe, &inputs).expect("execute");
+    assert_eq!(out.len(), 1);
+    for i in 0..BATCH {
+        let want = model.mul(a[i] as u64, b[i] as u64) as i64;
+        assert_eq!(out[0][i], want, "i={} a={} b={}", i, a[i], b[i]);
+    }
+}
+
+#[test]
+fn div_artifact_matches_rust_model_bit_exactly() {
+    let Some(store) = store() else { return };
+    let art = store.get("rapid_div8").expect("artifact");
+    let model = RapidDiv::new(8, 9);
+    let mut rng = XorShift256::new(0xA1);
+    let a: Vec<i64> = (0..BATCH).map(|_| rng.bits(16) as i64).collect();
+    let b: Vec<i64> = (0..BATCH).map(|_| rng.bits(8) as i64).collect();
+    let (grid, coeffs) = div_tables();
+    let inputs = [
+        Input::I64(a.clone(), vec![BATCH]),
+        Input::I64(b.clone(), vec![BATCH]),
+        grid,
+        coeffs,
+    ];
+    let out = store.runtime().run_mixed(&art.exe, &inputs).expect("execute");
+    for i in 0..BATCH {
+        let want = model.div(a[i] as u64, b[i] as u64) as i64;
+        assert_eq!(out[0][i], want, "i={} a={} b={}", i, a[i], b[i]);
+    }
+}
+
+#[test]
+fn mac_artifact_matches_rust_reduction() {
+    let Some(store) = store() else { return };
+    let art = store.get("rapid_mac16").expect("artifact");
+    let model = RapidMul::new(16, 10);
+    let mut rng = XorShift256::new(0xA2);
+    let a: Vec<i64> = (0..BATCH).map(|_| rng.bits(16) as i64).collect();
+    let b: Vec<i64> = (0..BATCH).map(|_| rng.bits(16) as i64).collect();
+    let (grid, coeffs) = mul_tables();
+    let inputs = [
+        Input::I64(a.clone(), vec![BATCH]),
+        Input::I64(b.clone(), vec![BATCH]),
+        grid,
+        coeffs,
+    ];
+    let out = store.runtime().run_mixed(&art.exe, &inputs).expect("execute");
+    let want: i64 = (0..BATCH).map(|i| model.mul(a[i] as u64, b[i] as u64) as i64).sum();
+    assert_eq!(out[0], vec![want]);
+}
+
+#[test]
+fn conv_artifact_matches_rust_conv() {
+    let Some(store) = store() else { return };
+    let art = store.get("conv3x3_rapid").expect("artifact");
+    let model = RapidMul::new(16, 10);
+    let mut rng = XorShift256::new(0xA3);
+    const IMG: usize = 64;
+    let img_flat: Vec<i64> = (0..IMG * IMG).map(|_| rng.bits(8) as i64).collect();
+    let kern = [[1i64, 2, 1], [2, 4, 2], [1, 2, 1]];
+    let kern_flat: Vec<i64> = kern.iter().flatten().cloned().collect();
+    let (grid, coeffs) = mul_tables();
+    let inputs = [
+        Input::I64(img_flat.clone(), vec![IMG, IMG]),
+        Input::I64(kern_flat, vec![3, 3]),
+        grid,
+        coeffs,
+    ];
+    let out = store.runtime().run_mixed(&art.exe, &inputs).expect("execute");
+    // Rust mirror
+    let img_rows: Vec<Vec<i64>> =
+        (0..IMG).map(|y| img_flat[y * IMG..(y + 1) * IMG].to_vec()).collect();
+    let want = rapid::apps::fixed::conv3x3_rapid(&img_rows, &kern, &model);
+    let h = IMG - 2;
+    for y in 0..h {
+        for x in 0..h {
+            assert_eq!(out[0][y * h + x], want[y][x], "pixel ({x},{y})");
+        }
+    }
+}
+
+#[test]
+fn pan_tompkins_energy_artifact_matches_rust() {
+    let Some(store) = store() else { return };
+    let art = store.get("pan_tompkins_energy").expect("artifact");
+    let model = RapidMul::new(16, 10);
+    let mut rng = XorShift256::new(0xA4);
+    let sig: Vec<i64> = (0..BATCH).map(|_| rng.bits(12) as i64 - 2048).collect();
+    let (grid, coeffs) = mul_tables();
+    let inputs = [Input::I64(sig.clone(), vec![BATCH]), grid, coeffs];
+    let out = store.runtime().run_mixed(&art.exe, &inputs).expect("execute");
+    // mirror: square via RAPID on |x|, then 32-sample MWI (exact sum)
+    let sq: Vec<i64> =
+        sig.iter().map(|&v| model.mul(v.unsigned_abs(), v.unsigned_abs()) as i64).collect();
+    let mut acc = 0i64;
+    for i in 0..BATCH {
+        acc += sq[i];
+        if i >= 32 {
+            acc -= sq[i - 32];
+        }
+        assert_eq!(out[0][i], acc, "mwi[{i}]");
+    }
+}
