@@ -1,0 +1,25 @@
+# Convenience targets; tier-1 is `cargo build --release && cargo test -q`.
+
+.PHONY: all test artifacts bench doc
+
+all:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+# Scheme JSONs (Rust is the source of truth) + AOT-lowered HLO artifacts.
+# The python step needs jax with x64 enabled; see python/compile/aot.py.
+artifacts:
+	cargo run --release -- export-scheme --out artifacts/schemes
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+bench:
+	for b in fig1_motivation fig2_error_surface fig4_stage_balance \
+	         fig8_fig9_qor fig10_apps fig11_fig12_pipeline \
+	         table1_accuracy table3_mul table3_div ablations hotpath; do \
+	    cargo bench --bench $$b; \
+	done
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

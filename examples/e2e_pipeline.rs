@@ -27,6 +27,13 @@ fn main() {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(1);
     }
+    // probe up front: the worker factory `.expect`s a client, so a missing
+    // libxla (or the API-stub build) must exit cleanly here instead of
+    // panicking inside a worker thread
+    if let Err(e) = rapid::runtime::Runtime::cpu() {
+        eprintln!("e2e_pipeline: {e}");
+        std::process::exit(1);
+    }
     let batch = 8192usize;
     let exec = Arc::new(PjrtExecutorFactory {
         artifacts_dir: "artifacts".into(),

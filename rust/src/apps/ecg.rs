@@ -28,7 +28,7 @@ impl Default for EcgConfig {
     }
 }
 
-/// (wave amplitude, center offset within beat [s], width [s]) per component
+/// (wave amplitude, center offset within beat in s, width in s) per wave
 /// — textbook-shaped P-QRS-T morphology.
 const WAVES: [(f64, f64, f64); 5] = [
     (0.12, -0.20, 0.025), // P

@@ -13,7 +13,7 @@ use super::fixed::{SignedDiv, SignedMul};
 use super::images::Image;
 
 /// Q12 cosine constants for the even/odd butterfly 1-D DCT-II.
-/// c[k] = cos(k·π/16) · 2^12.
+/// `c[k] = cos(k·π/16) · 2^12`.
 const C: [i64; 8] = [4096, 4017, 3784, 3406, 2896, 2276, 1567, 799];
 const QSHIFT: u32 = 12;
 
@@ -88,7 +88,7 @@ pub fn dct2d(block: &[[i64; 8]; 8], mul: &dyn ApproxMul) -> [[i64; 8]; 8] {
     out
 }
 
-/// Quantise coefficients: q[i][j] = coeff / qtable — the division kernel.
+/// Quantise coefficients: `q[i][j] = coeff / qtable` — the division kernel.
 pub fn quantise(coeffs: &[[i64; 8]; 8], div: &dyn ApproxDiv) -> [[i64; 8]; 8] {
     let d = SignedDiv::new(div);
     let mut out = [[0i64; 8]; 8];

@@ -17,7 +17,7 @@ const QF: u32 = 8; // Q8.8 fixed point
 
 /// A trained, quantised MLP.
 pub struct QuantMlp {
-    /// per-layer (weights[out][in], bias[out]) in Q8.8
+    /// per-layer (`weights[out][in]`, `bias[out]`) in Q8.8
     layers: Vec<(Vec<Vec<i64>>, Vec<i64>)>,
 }
 

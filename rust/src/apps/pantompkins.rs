@@ -9,7 +9,7 @@ use crate::arith::{ApproxDiv, ApproxMul};
 
 use super::fixed::{SignedDiv, SignedMul};
 
-/// Low-pass: y[n] = 2y[n-1] − y[n-2] + x[n] − 2x[n-6] + x[n-12]
+/// Low-pass: `y[n] = 2y[n-1] − y[n-2] + x[n] − 2x[n-6] + x[n-12]`
 /// (Pan-Tompkins' integer LP section, gain 36, delay 6).
 pub fn lowpass(x: &[i64]) -> Vec<i64> {
     let mut y = vec![0i64; x.len()];
@@ -20,7 +20,7 @@ pub fn lowpass(x: &[i64]) -> Vec<i64> {
     y
 }
 
-/// High-pass: y[n] = y[n-1] − x[n]/32 + x[n-16] − x[n-17] + x[n-32]/32
+/// High-pass: `y[n] = y[n-1] − x[n]/32 + x[n-16] − x[n-17] + x[n-32]/32`
 /// (integer HP section, gain 32, delay 16).
 pub fn highpass(x: &[i64]) -> Vec<i64> {
     let mut y = vec![0i64; x.len()];
@@ -32,7 +32,7 @@ pub fn highpass(x: &[i64]) -> Vec<i64> {
     y
 }
 
-/// Five-point derivative: y[n] = (2x[n] + x[n-1] − x[n-3] − 2x[n-4]) / 8.
+/// Five-point derivative: `y[n] = (2x[n] + x[n-1] − x[n-3] − 2x[n-4]) / 8`.
 pub fn derivative(x: &[i64]) -> Vec<i64> {
     let g = |v: &[i64], i: i64| if i >= 0 { v[i as usize] } else { 0 };
     (0..x.len() as i64)

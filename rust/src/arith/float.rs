@@ -44,7 +44,7 @@ impl RapidFloatMul {
             return signed_zero(sign);
         }
         let k = 63 - p.leading_zeros() as i32; // 46 or 47
-        let mant = if k >= 23 { (p >> (k - 23)) & 0x7f_ffff } else { 0 } as u32;
+        let mant = (if k >= 23 { (p >> (k - 23)) & 0x7f_ffff } else { 0 }) as u32;
         let e = ea as i32 + eb as i32 - 127 + (k - 46);
         pack(sign, e, mant)
     }
@@ -83,7 +83,8 @@ impl RapidFloatDiv {
             return signed_zero(sign);
         }
         let k = 63 - q.leading_zeros() as i32; // 22 or 23
-        let mant = if k >= 23 { (q >> (k - 23)) & 0x7f_ffff } else { (q << (23 - k)) & 0x7f_ffff } as u32;
+        let mant =
+            (if k >= 23 { (q >> (k - 23)) & 0x7f_ffff } else { (q << (23 - k)) & 0x7f_ffff }) as u32;
         let e = ea as i32 - eb as i32 + 127 + (k - 23);
         pack(sign, e, mant)
     }

@@ -29,7 +29,7 @@ pub const GRID: usize = 1 << F_BITS;
 /// in f64 and quantised per operand width by [`Scheme::coeff_table`].
 #[derive(Clone, Debug)]
 pub struct Scheme {
-    /// grid[i][j] = group index for sub-region (i, j).
+    /// `grid[i][j]` = group index for sub-region (i, j).
     pub grid: [[u8; GRID]; GRID],
     /// Per-group coefficient in [0, 1) (fraction of the mantissa LSB scale).
     pub coeffs: Vec<f64>,

@@ -67,9 +67,105 @@ pub const TABLE3_MULS: &[&str] =
 pub const TABLE3_DIVS: &[&str] =
     &["mitchell", "inzed", "rapid3", "rapid5", "rapid9", "simdive", "aaxd", "saadi"];
 
+/// Every name `make_mul` understands (the README registry table).
+pub const ALL_MULS: &[&str] = &[
+    "exact", "mitchell", "mbm", "rapid3", "rapid5", "rapid10", "simdive", "realm256", "drum4",
+    "drum6", "afm",
+];
+
+/// Every name `make_div` understands.
+pub const ALL_DIVS: &[&str] = &[
+    "exact", "mitchell", "inzed", "rapid3", "rapid5", "rapid9", "simdive", "aaxd_small", "aaxd",
+    "aaxd_large", "saadi",
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn every_documented_mul_instantiates_at_paper_widths() {
+        // Table III instantiates every design at 8/16/32 bit; the registry
+        // must honour that at every width, with in-range products and the
+        // zero-annihilation rule intact.
+        for &name in ALL_MULS {
+            for n in [8u32, 16, 32] {
+                let m = make_mul(name, n)
+                    .unwrap_or_else(|| panic!("make_mul({name}, {n}) returned None"));
+                assert_eq!(m.width(), n, "{name}@{n}");
+                // every documented unit lands within one log-domain ulp of
+                // 3×5 = 15 at every width (exact for the non-Mitchell ones)
+                let p = m.mul(3, 5);
+                assert!((14..=15).contains(&p), "{name}@{n} product {p}");
+                assert_eq!(m.mul(0, 5), 0, "{name}@{n} zero rule");
+            }
+        }
+    }
+
+    #[test]
+    fn every_documented_div_instantiates_at_paper_widths() {
+        // Divider configurations are 2N/N at N = 8/16/32 (plus the 8/4
+        // point Table III also reports — covered by the older smoke test).
+        for &name in ALL_DIVS {
+            for n in [8u32, 16, 32] {
+                let d = make_div(name, n)
+                    .unwrap_or_else(|| panic!("make_div({name}, {n}) returned None"));
+                assert_eq!(d.divisor_width(), n, "{name}@{n}");
+                assert_eq!(d.dividend_width(), 2 * n, "{name}@{n}");
+                // inside the constrained domain (b <= a < b << n): 9/3 = 3,
+                // one truncation ulp of slack for the log-domain designs
+                let q = d.div(9, 3);
+                assert!((2..=3).contains(&q), "{name}@{n} quotient {q}");
+                assert_eq!(d.div(0, 3), 0, "{name}@{n} zero rule");
+            }
+        }
+    }
+
+    #[test]
+    fn names_roundtrip_through_the_registry() {
+        // A unit's `name()` is deterministic, and for every design whose
+        // name embeds its registry key (`<key>_mul<N>` / `<key>_div<N>`),
+        // stripping the width suffix recovers a key that re-instantiates
+        // the same unit. AAXD/SAADI report their structural configuration
+        // ("aaxd8_4_div8", "saadi_ec16_div8") instead of the key, and
+        // aaxd/aaxd_small alias to the same window at these widths — for
+        // those only prefix + determinism are asserted.
+        for &name in ALL_MULS {
+            let a = make_mul(name, 16).unwrap().name();
+            let b = make_mul(name, 16).unwrap().name();
+            assert_eq!(a, b, "mul name not deterministic for {name}");
+            let stem = a.split("_mul").next().unwrap();
+            assert_eq!(stem, name, "mul name {a} does not embed its key {name}");
+            let again = make_mul(stem, 16).unwrap_or_else(|| panic!("stem {stem} unknown"));
+            assert_eq!(again.name(), a);
+        }
+        for &name in ALL_DIVS {
+            let a = make_div(name, 8).unwrap().name();
+            let b = make_div(name, 8).unwrap().name();
+            assert_eq!(a, b, "div name not deterministic for {name}");
+            if name.starts_with("aaxd") || name == "saadi" {
+                let family = if name == "saadi" { "saadi" } else { "aaxd" };
+                assert!(a.starts_with(family), "{name} name {a}");
+                continue;
+            }
+            let stem = a.split("_div").next().unwrap();
+            assert_eq!(stem, name, "div name {a} does not embed its key {name}");
+            let again = make_div(stem, 8).unwrap_or_else(|| panic!("stem {stem} unknown"));
+            assert_eq!(again.name(), a);
+        }
+    }
+
+    #[test]
+    fn unknown_names_rejected_at_every_width() {
+        for n in [8u32, 16, 32] {
+            assert!(make_mul("rapid", n).is_none(), "bare 'rapid' is not a key");
+            assert!(make_mul("drum", n).is_none());
+            assert!(make_mul("", n).is_none());
+            assert!(make_div("rapid10", n).is_none(), "rapid10 is a mul-only key");
+            assert!(make_div("mbm", n).is_none(), "mbm is a mul-only key");
+            assert!(make_div("", n).is_none());
+        }
+    }
 
     #[test]
     fn all_registered_muls_instantiate_and_run() {

@@ -37,7 +37,7 @@ fn div_cells(f_bits: u32) -> &'static PerCellScheme {
 pub struct SimdiveMul {
     n: u32,
     f_bits: u32,
-    /// quantised per-cell table, indexed [i][j]
+    /// quantised per-cell table, indexed `[i][j]`
     table: Vec<Vec<u64>>,
 }
 

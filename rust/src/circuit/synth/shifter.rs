@@ -6,7 +6,7 @@
 use crate::circuit::netlist::Netlist;
 use crate::circuit::primitive::Net;
 
-/// Variable left shift: out[i] = x[i - sh] (zero fill). `out_width` lets
+/// Variable left shift: `out[i] = x[i - sh]` (zero fill). `out_width` lets
 /// the anti-log stage widen into the product width; the optimiser trims
 /// cones that can't be reached.
 pub fn shift_left(nl: &mut Netlist, x: &[Net], sh: &[Net], out_width: usize) -> Vec<Net> {
@@ -83,7 +83,7 @@ pub fn shift_left_keep(
     cur
 }
 
-/// Variable right shift: out[i] = x[i + sh].
+/// Variable right shift: `out[i] = x[i + sh]`.
 pub fn shift_right(nl: &mut Netlist, x: &[Net], sh: &[Net], out_width: usize) -> Vec<Net> {
     let zero = nl.constant(false);
     let mut cur: Vec<Net> = x.to_vec();

@@ -79,9 +79,24 @@ pub fn run(argv: Vec<String>) {
     let req_len = args.get_usize("req-len", 1024);
 
     {
-        let runtime = Runtime::cpu().expect("PJRT client");
+        // Probe the backend up front so a missing libxla (or the API stub
+        // build — see runtime::xla) degrades to a clean message instead of
+        // a worker-thread panic.
+        let runtime = match Runtime::cpu() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                std::process::exit(1);
+            }
+        };
         println!("platform: {} ({} devices)", runtime.platform(), runtime.device_count());
-        let store = ArtifactStore::open(runtime, dir).expect("artifact store");
+        let store = match ArtifactStore::open(runtime, dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                std::process::exit(1);
+            }
+        };
         println!("artifacts: {:?}", store.list());
     }
     let exec = Arc::new(PjrtExecutorFactory {

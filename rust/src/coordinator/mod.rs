@@ -12,6 +12,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod pipeline_sched;
 pub mod router;
+#[cfg(feature = "pjrt")]
 pub mod cli;
 
 pub use batcher::{Batch, DynamicBatcher};

@@ -18,8 +18,11 @@
 //! * [`apps`] — the three end-to-end applications (Pan-Tompkins QRS,
 //!   JPEG compression, Harris corner tracking) over pluggable arithmetic
 //!   (Figs. 5-12).
-//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
-//!   artifacts (HLO text produced by `python/compile/aot.py`).
+//! * `runtime` — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text produced by `python/compile/aot.py`). Behind the
+//!   default-on `pjrt` cargo feature; `--no-default-features` builds are
+//!   runtime-free and the PJRT-dependent tests/examples skip cleanly when
+//!   `libxla` is absent (DESIGN.md §2).
 //! * [`coordinator`] — the streaming orchestrator: dynamic batcher, worker
 //!   pool, backpressure, pipeline scheduler, metrics.
 //! * [`util`] — zero-dependency PRNG/stats/CLI/bench/property-test helpers.
@@ -27,8 +30,9 @@
 //! ## Quickstart
 //!
 //! ```no_run
-//! // (no_run: rustdoc test binaries miss the libxla rpath; the same code
-//! // runs in examples/quickstart.rs and the arith unit tests)
+//! // (no_run: on libxla-linked builds rustdoc test binaries miss the
+//! // rpath; the same code runs in examples/quickstart.rs and the arith
+//! // unit tests)
 //! use rapid::arith::{ApproxMul, RapidMul};
 //! let m = RapidMul::new(16, 10); // 16×16 multiplier, 10 coefficients
 //! let p = m.mul(58, 18);
@@ -40,6 +44,7 @@ pub mod arith;
 pub mod error;
 pub mod circuit;
 pub mod apps;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod coordinator;
 pub mod bench_support;

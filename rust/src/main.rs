@@ -22,7 +22,16 @@ fn main() {
         "characterize" => cmd_characterize(argv),
         "synth" => rapid::circuit::cli::run(argv),
         "app" => rapid::apps::cli::run(argv),
-        "serve" => rapid::coordinator::cli::run(argv),
+        "serve" => {
+            #[cfg(feature = "pjrt")]
+            rapid::coordinator::cli::run(argv);
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = argv;
+                eprintln!("serve requires the `pjrt` feature (build with default features)");
+                std::process::exit(2);
+            }
+        }
         "--help" | "help" | "-h" => usage(),
         other => {
             eprintln!("unknown command '{other}'");

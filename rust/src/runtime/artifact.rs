@@ -5,9 +5,11 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::util::error::{Context, Result};
 
 use super::client::Runtime;
+use super::xla;
 
 /// One compiled artifact.
 pub struct Artifact {
@@ -26,7 +28,7 @@ impl ArtifactStore {
     pub fn open(runtime: Runtime, dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         if !dir.is_dir() {
-            return Err(anyhow!("artifact dir {} missing — run `make artifacts`", dir.display()));
+            return Err(err!("artifact dir {} missing — run `make artifacts`", dir.display()));
         }
         Ok(ArtifactStore { runtime, dir, cache: Mutex::new(HashMap::new()) })
     }

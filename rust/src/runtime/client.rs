@@ -1,11 +1,13 @@
-//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//! Thin wrapper around the PJRT CPU client ([`super::xla`] — the in-crate
+//! stand-in for the `xla` crate; see that module for the swap-back story).
 //!
 //! One `Runtime` owns the client; executables are compiled once per
 //! artifact and shared behind `Arc` (PjRtLoadedExecutable is cheaply
 //! clonable on the C API side). HLO *text* is the interchange format —
 //! see `python/compile/aot.py` for why serialized protos are rejected.
 
-use anyhow::{Context, Result};
+use super::xla;
+use crate::util::error::{Context, Result};
 
 /// PJRT client handle.
 pub struct Runtime {

@@ -3,6 +3,7 @@
 //! client, and execute them from the coordinator's hot path. Python never
 //! runs at serve time.
 
+pub mod xla;
 pub mod client;
 pub mod artifact;
 pub mod schemes;

@@ -4,7 +4,8 @@
 //! kernel was authored against. Hand-rolled parser for the fixed format
 //! `arith::export` writes (no serde in the offline vendor set).
 
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// One loaded scheme, ready to feed a PJRT artifact.
@@ -19,8 +20,8 @@ pub struct SchemeTables {
 /// Parse the flat integer array following `"key": [` in `text`.
 fn parse_int_array(text: &str, key: &str) -> Result<Vec<i64>> {
     let pat = format!("\"{key}\": [");
-    let start = text.find(&pat).ok_or_else(|| anyhow!("missing key {key}"))? + pat.len();
-    let end = text[start..].find(']').ok_or_else(|| anyhow!("unterminated array {key}"))? + start;
+    let start = text.find(&pat).ok_or_else(|| err!("missing key {key}"))? + pat.len();
+    let end = text[start..].find(']').ok_or_else(|| err!("unterminated array {key}"))? + start;
     text[start..end]
         .split(',')
         .map(|s| s.trim().parse::<i64>().context("bad int"))
@@ -29,7 +30,7 @@ fn parse_int_array(text: &str, key: &str) -> Result<Vec<i64>> {
 
 fn parse_int_scalar(text: &str, key: &str) -> Result<i64> {
     let pat = format!("\"{key}\": ");
-    let start = text.find(&pat).ok_or_else(|| anyhow!("missing key {key}"))? + pat.len();
+    let start = text.find(&pat).ok_or_else(|| err!("missing key {key}"))? + pat.len();
     let end = text[start..]
         .find(|c: char| !c.is_ascii_digit())
         .map(|i| i + start)
@@ -46,11 +47,11 @@ impl SchemeTables {
         let grid: Vec<i32> = parse_int_array(&text, "grid")?.into_iter().map(|v| v as i32).collect();
         let coeffs = parse_int_array(&text, "coeffs")?;
         if grid.len() != 256 {
-            return Err(anyhow!("grid has {} entries, want 256", grid.len()));
+            return Err(err!("grid has {} entries, want 256", grid.len()));
         }
         let g = parse_int_scalar(&text, "groups")? as usize;
         if coeffs.len() != g || g != groups {
-            return Err(anyhow!("coeff count mismatch: {} vs {groups}", coeffs.len()));
+            return Err(err!("coeff count mismatch: {} vs {groups}", coeffs.len()));
         }
         Ok(SchemeTables {
             grid,

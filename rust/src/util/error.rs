@@ -1,0 +1,101 @@
+//! Minimal error type + context trait — the `anyhow` stand-in for the
+//! runtime layer (the offline build carries no external crates, so the
+//! ergonomic subset the PJRT loaders actually use is implemented here:
+//! a string-backed error, `.context(..)` / `.with_context(..)` on both
+//! `Result` and `Option`, and the [`crate::err!`] constructor macro).
+
+use std::fmt;
+
+/// String-backed error; context wraps outside-in like `anyhow`
+/// ("loading artifact 'x': parsing HLO text y: no such file").
+#[derive(Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` subset: attach a human-readable layer to failures.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// `anyhow!`-style constructor: `err!("artifact dir {} missing", d)`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_wraps_outside_in() {
+        let base: Result<(), Error> = Err(Error::msg("inner"));
+        let wrapped = base.context("outer");
+        assert_eq!(wrapped.unwrap_err().to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, Error> = Ok(1);
+        let v = ok.with_context(|| -> String { unreachable!("must not evaluate") });
+        assert_eq!(v.unwrap(), 1);
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let e = crate::err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+    }
+}

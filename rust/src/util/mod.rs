@@ -1,8 +1,8 @@
-//! Zero-dependency utilities: PRNG, statistics, fixed-point helpers and a
-//! miniature property-testing harness.
+//! Zero-dependency utilities: PRNG, statistics, fixed-point helpers, a
+//! miniature property-testing harness and the `anyhow`-subset error type.
 //!
-//! The offline vendor set only carries `xla` + `anyhow`, so the substrates a
-//! well-maintained project would pull from crates.io (rand, proptest,
+//! The offline build carries no external crates at all, so the substrates a
+//! well-maintained project would pull from crates.io (rand, proptest, anyhow,
 //! statistical helpers) are implemented here from scratch.
 
 pub mod rng;
@@ -10,6 +10,7 @@ pub mod stats;
 pub mod proptest;
 pub mod cli;
 pub mod timer;
+pub mod error;
 
 pub use rng::XorShift256;
 pub use stats::Summary;

@@ -24,7 +24,15 @@ fn store() -> Option<ArtifactStore> {
         eprintln!("skipping: artifacts missing (run `make artifacts`)");
         return None;
     }
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    // the API-stub build (and a build without libxla on the rpath) cannot
+    // create a client — skip rather than fail the suite
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return None;
+        }
+    };
     Some(ArtifactStore::open(rt, "artifacts").expect("store"))
 }
 
