@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 is `cargo build --release && cargo test -q`.
 
-.PHONY: all test artifacts bench doc
+.PHONY: all test artifacts bench bench-hotpath doc
 
 all:
 	cargo build --release
@@ -20,6 +20,11 @@ bench:
 	         table1_accuracy table3_mul table3_div ablations hotpath; do \
 	    cargo bench --bench $$b; \
 	done
+
+# One-command refresh of the EXPERIMENTS.md §Perf rows (scalar vs batched
+# unit throughput, sweeps, netlist eval, PJRT path when artifacts exist).
+bench-hotpath:
+	cargo bench --bench hotpath
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

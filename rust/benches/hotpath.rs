@@ -1,8 +1,9 @@
 //! §Perf — this repo's own hot paths (not a paper figure): throughput of
-//! the bit-accurate units, the error-characterisation sweeps, gate-level
-//! netlist evaluation, and the batched PJRT serving path (when artifacts
-//! exist). Records the numbers EXPERIMENTS.md §Perf tracks across
-//! optimization iterations.
+//! the bit-accurate units (scalar dispatch vs the batched slice entry
+//! points), the error-characterisation sweeps, gate-level netlist
+//! evaluation, and the batched PJRT serving path (when artifacts exist).
+//! Records the numbers EXPERIMENTS.md §Perf tracks across optimization
+//! iterations.
 
 use rapid::arith::registry::{make_div, make_mul};
 use rapid::bench_support::table::Table;
@@ -15,29 +16,49 @@ use rapid::util::XorShift256;
 fn main() {
     let mut t = Table::new("§Perf — hot-path microbenchmarks", &["path", "time", "throughput"]);
 
-    // 1. functional unit throughput (the app kernels' inner loop)
+    // 1. functional unit throughput (the app kernels' inner loop), scalar
+    //    virtual dispatch vs the batched slice entry points — the
+    //    speedup EXPERIMENTS.md §Perf tracks for the batch refactor.
     let mul = make_mul("rapid10", 16).unwrap();
     let div = make_div("rapid9", 8).unwrap();
     let mut rng = XorShift256::new(1);
     let ops: Vec<(u64, u64)> = (0..4096).map(|_| (rng.bits(16).max(1), rng.bits(16).max(1))).collect();
-    let r = bench("rapid10_mul16 x4096", || {
+    let r = bench("rapid10_mul16 scalar x4096", || {
         let mut acc = 0u64;
         for &(a, b) in &ops {
             acc = acc.wrapping_add(mul.mul(a, b));
         }
         black_box(acc);
     });
-    t.row(&["rapid10 mul (functional)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    t.row(&["rapid10 mul16 (scalar)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+
+    let ma: Vec<u64> = ops.iter().map(|&(a, _)| a).collect();
+    let mb: Vec<u64> = ops.iter().map(|&(_, b)| b).collect();
+    let mut mout = vec![0u64; ma.len()];
+    let r = bench("rapid10_mul16 batched x4096", || {
+        mul.mul_batch(&ma, &mb, &mut mout);
+        black_box(mout[4095]);
+    });
+    t.row(&["rapid10 mul16 (batched)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
 
     let dops: Vec<(u64, u64)> = (0..4096).map(|_| (rng.bits(16), rng.bits(8).max(1))).collect();
-    let r = bench("rapid9_div8 x4096", || {
+    let r = bench("rapid9_div8 scalar x4096", || {
         let mut acc = 0u64;
         for &(a, b) in &dops {
             acc = acc.wrapping_add(div.div(a, b));
         }
         black_box(acc);
     });
-    t.row(&["rapid9 div (functional)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    t.row(&["rapid9 div8 (scalar)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+
+    let da: Vec<u64> = dops.iter().map(|&(a, _)| a).collect();
+    let db: Vec<u64> = dops.iter().map(|&(_, b)| b).collect();
+    let mut dout = vec![0u64; da.len()];
+    let r = bench("rapid9_div8 batched x4096", || {
+        div.div_batch(&da, &db, &mut dout);
+        black_box(dout[4095]);
+    });
+    t.row(&["rapid9 div8 (batched)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
 
     // 2. exhaustive 8-bit error sweep (Table III accuracy inner loop)
     let m8 = make_mul("rapid10", 8).unwrap();

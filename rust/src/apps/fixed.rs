@@ -5,6 +5,7 @@
 //! signs separately (sign-magnitude at the unit boundary, as the HLS
 //! integration does) and place the binary point per kernel (Q-formats).
 
+use crate::arith::traits::mask;
 use crate::arith::{ApproxDiv, ApproxMul};
 
 /// Signed multiply via an unsigned unit: |a|·|b| with the product sign
@@ -18,13 +19,17 @@ impl<'a> SignedMul<'a> {
         SignedMul { unit }
     }
 
+    /// The product magnitude saturates to `i64::MAX`: a full-scale 32-bit
+    /// unit yields 64-bit products whose top bit would otherwise wrap the
+    /// sign in the i64 recombination. Widths ≤ 31 (everything the app
+    /// kernels use) are unaffected — products stay below 2^62.
     #[inline]
     pub fn mul(&self, a: i64, b: i64) -> i64 {
         let n = self.unit.width();
         let lim = (1u64 << n) - 1;
         let ua = (a.unsigned_abs()).min(lim);
         let ub = (b.unsigned_abs()).min(lim);
-        let p = self.unit.mul(ua, ub) as i64;
+        let p = self.unit.mul(ua, ub).min(i64::MAX as u64) as i64;
         if (a < 0) ^ (b < 0) {
             -p
         } else {
@@ -43,6 +48,38 @@ impl<'a> SignedMul<'a> {
             -((-p) >> frac)
         }
     }
+
+    /// Batched signed multiply: `out[i] = self.mul(a[i], b[i])`, with the
+    /// sign-magnitude split vectorised around a single call into the unit's
+    /// [`crate::arith::ApproxMul::mul_batch`] — the app kernels' fast path
+    /// (one virtual dispatch per slice instead of one per element).
+    ///
+    /// Allocates three u64 scratch vectors per call; kernels that batch a
+    /// whole block/plane per call amortise this against the per-element
+    /// dispatch they replace (a scratch-carrying variant is the obvious
+    /// next step when the SIMD backend lands).
+    pub fn mul_batch(&self, a: &[i64], b: &[i64], out: &mut [i64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        let n = self.unit.width();
+        let lim = (1u64 << n) - 1;
+        let ua: Vec<u64> = a.iter().map(|&x| x.unsigned_abs().min(lim)).collect();
+        let ub: Vec<u64> = b.iter().map(|&x| x.unsigned_abs().min(lim)).collect();
+        let mut up = vec![0u64; a.len()];
+        self.unit.mul_batch(&ua, &ub, &mut up);
+        for (i, o) in out.iter_mut().enumerate() {
+            let p = up[i].min(i64::MAX as u64) as i64;
+            *o = if (a[i] < 0) ^ (b[i] < 0) { -p } else { p };
+        }
+    }
+
+    /// Batched fixed-point multiply: `out[i] = self.mul_q(a[i], b[i], frac)`.
+    pub fn mul_q_batch(&self, a: &[i64], b: &[i64], frac: u32, out: &mut [i64]) {
+        self.mul_batch(a, b, out);
+        for o in out.iter_mut() {
+            *o = if *o >= 0 { *o >> frac } else { -((-*o) >> frac) };
+        }
+    }
 }
 
 /// Signed divide via an unsigned 2N/N unit.
@@ -55,14 +92,23 @@ impl<'a> SignedDiv<'a> {
         SignedDiv { unit }
     }
 
+    /// Signed divide-by-zero convention: the quotient saturates to
+    /// ±(2^N − 1) — the largest magnitude inside the no-overflow quotient
+    /// range — i.e. the signed layer treats `b == 0` like the overflow
+    /// flag. This deliberately diverges from the unsigned [`ApproxDiv`]
+    /// contract (all-ones of the *dividend* width, 2^2N − 1): at N = 32
+    /// that value does not fit an i64 magnitude, and the app kernels clamp
+    /// quotients to the N-bit Q-format range anyway. Pinned by
+    /// `signed_div_by_zero_saturates_to_quotient_range`; DESIGN.md §Perf
+    /// records the convention.
     #[inline]
     pub fn div(&self, a: i64, b: i64) -> i64 {
         let n = self.unit.divisor_width();
         if b == 0 {
             return if a >= 0 { (1 << n) - 1 } else { -((1 << n) - 1) };
         }
-        let ua = a.unsigned_abs().min((1u64 << (2 * n)) - 1);
-        let ub = b.unsigned_abs().min((1u64 << n) - 1).max(1);
+        let ua = a.unsigned_abs().min(mask(2 * n));
+        let ub = b.unsigned_abs().min(mask(n)).max(1);
         let q = self.unit.div(ua, ub) as i64;
         if (a < 0) ^ (b < 0) {
             -q
@@ -70,28 +116,67 @@ impl<'a> SignedDiv<'a> {
             q
         }
     }
+
+    /// Batched signed divide: `out[i] = self.div(a[i], b[i])`, including
+    /// the ±(2^N − 1) divide-by-zero convention above. Zero-divisor lanes
+    /// are given divisor 1 in the unit call and patched afterwards, so the
+    /// whole slice still goes through one
+    /// [`crate::arith::ApproxDiv::div_batch`].
+    pub fn div_batch(&self, a: &[i64], b: &[i64], out: &mut [i64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        let n = self.unit.divisor_width();
+        let dlim = mask(2 * n);
+        let blim = mask(n);
+        let ua: Vec<u64> = a.iter().map(|&x| x.unsigned_abs().min(dlim)).collect();
+        let ub: Vec<u64> = b.iter().map(|&x| x.unsigned_abs().min(blim).max(1)).collect();
+        let mut uq = vec![0u64; a.len()];
+        self.unit.div_batch(&ua, &ub, &mut uq);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = if b[i] == 0 {
+                if a[i] >= 0 { (1 << n) - 1 } else { -((1 << n) - 1) }
+            } else {
+                let q = uq[i] as i64;
+                if (a[i] < 0) ^ (b[i] < 0) {
+                    -q
+                } else {
+                    q
+                }
+            };
+        }
+    }
 }
 
 /// Integer 3×3 convolution with all multiplies through the unit — the
-/// bit-exact Rust mirror of the L2 `conv3x3` artifact (same traversal,
+/// bit-exact Rust mirror of the L2 `conv3x3` artifact (same products,
 /// same sign-magnitude convention), used by the cross-layer test.
+///
+/// Batched formulation: instead of nine scalar unit calls per output
+/// pixel, each kernel tap multiplies the whole shifted image plane in one
+/// [`SignedMul::mul_batch`] call — 9 batch calls total, independent of
+/// image size.
 pub fn conv3x3_rapid(img: &[Vec<i64>], kern: &[[i64; 3]; 3], unit: &dyn ApproxMul) -> Vec<Vec<i64>> {
     let sm = SignedMul::new(unit);
     let h = img.len() - 2;
     let w = img[0].len() - 2;
-    let mut out = vec![vec![0i64; w]; h];
-    for y in 0..h {
-        for x in 0..w {
-            let mut acc = 0i64;
-            for dy in 0..3 {
-                for dx in 0..3 {
-                    acc += sm.mul(img[y + dy][x + dx], kern[dy][dx]);
-                }
+    let npix = h * w;
+    let mut acc = vec![0i64; npix];
+    let mut plane = vec![0i64; npix];
+    let mut prod = vec![0i64; npix];
+    let mut tap = vec![0i64; npix];
+    for dy in 0..3 {
+        for dx in 0..3 {
+            for y in 0..h {
+                plane[y * w..(y + 1) * w].copy_from_slice(&img[y + dy][dx..dx + w]);
             }
-            out[y][x] = acc;
+            tap.fill(kern[dy][dx]);
+            sm.mul_batch(&plane, &tap, &mut prod);
+            for (a, &p) in acc.iter_mut().zip(&prod) {
+                *a += p;
+            }
         }
     }
-    out
+    (0..h).map(|y| acc[y * w..(y + 1) * w].to_vec()).collect()
 }
 
 #[cfg(test)]
@@ -128,6 +213,70 @@ mod tests {
         // 1.5 * 2.0 in Q8 = 384 * 512 >> 8 = 768 (3.0)
         assert_eq!(m.mul_q(384, 512, 8), 768);
         assert_eq!(m.mul_q(-384, 512, 8), -768);
+    }
+
+    #[test]
+    fn signed_batch_matches_scalar() {
+        let um = RapidMul::new(16, 10);
+        let m = SignedMul::new(&um);
+        let ud = ExactDiv { n: 8 };
+        let d = SignedDiv::new(&ud);
+        let a: Vec<i64> = vec![0, 1, -1, 300, -300, 65535, -65535, 70000, -70000, 12345];
+        let b: Vec<i64> = vec![7, -7, 0, -300, 300, 1, -1, 65535, 0, -99];
+        let mut out = vec![0i64; a.len()];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], m.mul(a[i], b[i]), "mul lane {i}");
+        }
+        m.mul_q_batch(&a, &b, 4, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], m.mul_q(a[i], b[i], 4), "mul_q lane {i}");
+        }
+        d.div_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], d.div(a[i], b[i]), "div lane {i}");
+        }
+    }
+
+    #[test]
+    fn signed_mul_width32_saturates_instead_of_sign_wrapping() {
+        // A full-scale 32-bit product (≈ 1.6e19) exceeds i64::MAX; the
+        // signed layer must saturate the magnitude, not wrap the sign —
+        // scalar and batch identically.
+        let u = ExactMul { n: 32 };
+        let m = SignedMul::new(&u);
+        let big = 4_000_000_000i64;
+        assert_eq!(m.mul(big, big), i64::MAX);
+        assert_eq!(m.mul(-big, big), -i64::MAX);
+        let a = [big, -big, 3];
+        let b = [big, big, -4];
+        let mut out = [0i64; 3];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..3 {
+            assert_eq!(out[i], m.mul(a[i], b[i]), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn signed_div_by_zero_saturates_to_quotient_range() {
+        // The unsigned contract saturates b == 0 to all-ones of the
+        // *dividend* width (2N)...
+        let u = ExactDiv { n: 8 };
+        assert_eq!(u.div(123, 0), 0xffff);
+        // ...while the signed wrapper deliberately treats divide-by-zero
+        // like overflow and clamps to the ±(2^N − 1) quotient range (see
+        // the `SignedDiv::div` doc for why).
+        let d = SignedDiv::new(&u);
+        assert_eq!(d.div(123, 0), 255);
+        assert_eq!(d.div(-123, 0), -255);
+        assert_eq!(d.div(0, 0), 255);
+        // At the widest divisor width the unsigned convention (2^64 − 1)
+        // would not even fit an i64 magnitude; the signed one stays
+        // representable.
+        let w = ExactDiv { n: 32 };
+        let dw = SignedDiv::new(&w);
+        assert_eq!(dw.div(-5, 0), -(u32::MAX as i64));
+        assert_eq!(dw.div(5, 0), u32::MAX as i64);
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub fn sobel(img: &Image) -> (Vec<Vec<i64>>, Vec<Vec<i64>>) {
 
 /// Structure-tensor products Ixx, Iyy, Ixy through the multiplier, with a
 /// 3×3 binomial window (adds).
+///
+/// The gradient products are the detector's hottest loop: all three planes
+/// are computed as whole-image [`SignedMul::mul_batch`] calls (three unit
+/// dispatches per frame instead of three per pixel).
 pub fn structure_tensor(
     gx: &[Vec<i64>],
     gy: &[Vec<i64>],
@@ -37,17 +41,21 @@ pub fn structure_tensor(
     // gradient scale: Sobel of 8-bit image ≤ 1020; scale down to keep the
     // squared terms in the 16-bit unit domain (as the HLS kernel does).
     let sc = 4;
-    let mut xx = vec![vec![0i64; w]; h];
-    let mut yy = vec![vec![0i64; w]; h];
-    let mut xy = vec![vec![0i64; w]; h];
-    for y in 0..h {
-        for x in 0..w {
-            let (a, b) = (gx[y][x] / sc, gy[y][x] / sc);
-            xx[y][x] = m.mul(a, a);
-            yy[y][x] = m.mul(b, b);
-            xy[y][x] = m.mul(a, b);
-        }
-    }
+    let npix = h * w;
+    let ga: Vec<i64> = gx.iter().flat_map(|row| row.iter().map(|&v| v / sc)).collect();
+    let gb: Vec<i64> = gy.iter().flat_map(|row| row.iter().map(|&v| v / sc)).collect();
+    let mut pxx = vec![0i64; npix];
+    let mut pyy = vec![0i64; npix];
+    let mut pxy = vec![0i64; npix];
+    m.mul_batch(&ga, &ga, &mut pxx);
+    m.mul_batch(&gb, &gb, &mut pyy);
+    m.mul_batch(&ga, &gb, &mut pxy);
+    let unflatten = |p: &[i64]| -> Vec<Vec<i64>> {
+        (0..h).map(|y| p[y * w..(y + 1) * w].to_vec()).collect()
+    };
+    let xx = unflatten(&pxx);
+    let yy = unflatten(&pyy);
+    let xy = unflatten(&pxy);
     let window = |src: &Vec<Vec<i64>>| -> Vec<Vec<i64>> {
         let mut out = vec![vec![0i64; w]; h];
         for y in 1..h - 1 {
@@ -87,16 +95,20 @@ pub fn response(
     let d = SignedDiv::new(div);
     let h = xx.len();
     let w = xx[0].len();
-    let mut r = vec![vec![0i64; w]; h];
-    for y in 0..h {
-        for x in 0..w {
-            let (a, b, c) = (xx[y][x] >> 8, yy[y][x] >> 8, xy[y][x] >> 8);
-            let det = m.mul(a, b) - m.mul(c, c);
-            let trace = a + b;
-            r[y][x] = d.div(det.max(0), trace / 2 + 1);
-        }
-    }
-    r
+    let flat = |src: &[Vec<i64>]| -> Vec<i64> {
+        src.iter().flat_map(|row| row.iter().map(|&v| v >> 8)).collect()
+    };
+    let (a, b, c) = (flat(xx), flat(yy), flat(xy));
+    let npix = h * w;
+    let mut ab = vec![0i64; npix];
+    let mut cc = vec![0i64; npix];
+    m.mul_batch(&a, &b, &mut ab);
+    m.mul_batch(&c, &c, &mut cc);
+    let det: Vec<i64> = ab.iter().zip(&cc).map(|(&p, &q)| (p - q).max(0)).collect();
+    let denom: Vec<i64> = a.iter().zip(&b).map(|(&p, &q)| (p + q) / 2 + 1).collect();
+    let mut resp = vec![0i64; npix];
+    d.div_batch(&det, &denom, &mut resp);
+    (0..h).map(|y| resp[y * w..(y + 1) * w].to_vec()).collect()
 }
 
 /// Non-maximum suppression + threshold (exact comparisons, per the paper).

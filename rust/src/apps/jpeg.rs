@@ -33,7 +33,10 @@ pub const QTABLE: [[i64; 8]; 8] = [
 
 /// Butterfly 1-D DCT-II on 8 samples (Loeffler-style even/odd split), all
 /// constant multiplies through the unit. Output scaled by 2 (folded into
-/// the quantiser).
+/// the quantiser). Scalar reference for [`dct1d_batch`], which is what
+/// [`dct2d`] actually runs; the equivalence is pinned by
+/// `dct1d_batch_matches_scalar`.
+#[cfg_attr(not(test), allow(dead_code))]
 fn dct1d(x: &[i64; 8], m: &SignedMul) -> [i64; 8] {
     // stage 1: butterflies
     let s = [
@@ -70,32 +73,91 @@ fn dct1d(x: &[i64; 8], m: &SignedMul) -> [i64; 8] {
     out
 }
 
-/// 2-D DCT of one level-shifted 8×8 block (rows then columns).
+/// Products per 1-D butterfly DCT: 6 even-part + 16 odd-part multiplies.
+const DCT_PRODUCTS: usize = 22;
+
+/// Batched 1-D DCT over many 8-sample vectors: the 22 constant multiplies
+/// of every vector are packed into one [`SignedMul::mul_q_batch`] call
+/// (`vecs.len() × 22` lanes), then recombined with the butterfly signs —
+/// bit-identical to running [`dct1d`] per vector, but with one unit
+/// dispatch per pass instead of 22 per vector.
+fn dct1d_batch(vecs: &[[i64; 8]], m: &SignedMul) -> Vec<[i64; 8]> {
+    let mut a = Vec::with_capacity(vecs.len() * DCT_PRODUCTS);
+    let mut b = Vec::with_capacity(vecs.len() * DCT_PRODUCTS);
+    for x in vecs {
+        let s = [x[0] + x[7], x[1] + x[6], x[2] + x[5], x[3] + x[4]];
+        let d = [x[0] - x[7], x[1] - x[6], x[2] - x[5], x[3] - x[4]];
+        let t0 = s[0] + s[3];
+        let t1 = s[1] + s[2];
+        let t2 = s[1] - s[2];
+        let t3 = s[0] - s[3];
+        a.extend_from_slice(&[
+            t0 + t1, t0 - t1, t3, t2, t3, t2, // even part
+            d[0], d[1], d[2], d[3], // X1
+            d[0], d[1], d[2], d[3], // X3
+            d[0], d[1], d[2], d[3], // X5
+            d[0], d[1], d[2], d[3], // X7
+        ]);
+        b.extend_from_slice(&[
+            C[4], C[4], C[2], C[6], C[6], C[2],
+            C[1], C[3], C[5], C[7],
+            C[3], C[7], C[1], C[5],
+            C[5], C[1], C[7], C[3],
+            C[7], C[5], C[3], C[1],
+        ]);
+    }
+    let mut p = vec![0i64; a.len()];
+    m.mul_q_batch(&a, &b, QSHIFT, &mut p);
+    (0..vecs.len())
+        .map(|r| {
+            let p = &p[r * DCT_PRODUCTS..(r + 1) * DCT_PRODUCTS];
+            let mut out = [0i64; 8];
+            out[0] = p[0];
+            out[4] = p[1];
+            out[2] = p[2] + p[3];
+            out[6] = p[4] - p[5];
+            out[1] = p[6] + p[7] + p[8] + p[9];
+            out[3] = p[10] - p[11] - p[12] - p[13];
+            out[5] = p[14] - p[15] + p[16] + p[17];
+            out[7] = p[18] - p[19] + p[20] - p[21];
+            out
+        })
+        .collect()
+}
+
+/// 2-D DCT of one level-shifted 8×8 block (rows then columns); each pass
+/// is one batched unit call over all 8 vectors (176 lanes).
 pub fn dct2d(block: &[[i64; 8]; 8], mul: &dyn ApproxMul) -> [[i64; 8]; 8] {
     let m = SignedMul::new(mul);
-    let mut tmp = [[0i64; 8]; 8];
-    for r in 0..8 {
-        tmp[r] = dct1d(&block[r], &m);
-    }
+    let tmp = dct1d_batch(&block[..], &m);
+    let cols: Vec<[i64; 8]> = (0..8)
+        .map(|c| [tmp[0][c], tmp[1][c], tmp[2][c], tmp[3][c], tmp[4][c], tmp[5][c], tmp[6][c], tmp[7][c]])
+        .collect();
+    let t = dct1d_batch(&cols, &m);
     let mut out = [[0i64; 8]; 8];
     for c in 0..8 {
-        let col = [tmp[0][c], tmp[1][c], tmp[2][c], tmp[3][c], tmp[4][c], tmp[5][c], tmp[6][c], tmp[7][c]];
-        let t = dct1d(&col, &m);
         for r in 0..8 {
-            out[r][c] = t[r] / 4; // DCT-II normalisation (×2 per pass, /8 total ⇒ /4 with the C4 folding)
+            out[r][c] = t[c][r] / 4; // DCT-II normalisation (×2 per pass, /8 total ⇒ /4 with the C4 folding)
         }
     }
     out
 }
 
-/// Quantise coefficients: `q[i][j] = coeff / qtable` — the division kernel.
+/// Quantise coefficients: `q[i][j] = coeff / qtable` — the division kernel,
+/// one batched 64-lane call through [`SignedDiv::div_batch`].
 pub fn quantise(coeffs: &[[i64; 8]; 8], div: &dyn ApproxDiv) -> [[i64; 8]; 8] {
     let d = SignedDiv::new(div);
+    let mut a = [0i64; 64];
+    let mut b = [0i64; 64];
+    for r in 0..8 {
+        a[r * 8..(r + 1) * 8].copy_from_slice(&coeffs[r]);
+        b[r * 8..(r + 1) * 8].copy_from_slice(&QTABLE[r]);
+    }
+    let mut q = [0i64; 64];
+    d.div_batch(&a, &b, &mut q);
     let mut out = [[0i64; 8]; 8];
     for r in 0..8 {
-        for c in 0..8 {
-            out[r][c] = d.div(coeffs[r][c], QTABLE[r][c]);
-        }
+        out[r].copy_from_slice(&q[r * 8..(r + 1) * 8]);
     }
     out
 }
@@ -243,6 +305,24 @@ mod tests {
                 if (r, c) != (0, 0) {
                     assert!(out[r][c].abs() <= 4, "AC[{r}][{c}] = {}", out[r][c]);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dct1d_batch_matches_scalar() {
+        // The packed-lane formulation must reproduce the scalar butterfly
+        // bit-for-bit, for exact and approximate units alike.
+        let exact = ExactMul { n: 16 };
+        let rapid = RapidMul::new(16, 10);
+        for unit in [&exact as &dyn crate::arith::ApproxMul, &rapid] {
+            let m = SignedMul::new(unit);
+            let vecs: Vec<[i64; 8]> = (0..5)
+                .map(|r| std::array::from_fn(|c| ((r * 37 + c * 113) as i64 % 255) - 128))
+                .collect();
+            let batched = dct1d_batch(&vecs, &m);
+            for (i, v) in vecs.iter().enumerate() {
+                assert_eq!(batched[i], dct1d(v, &m), "vector {i} ({})", unit.name());
             }
         }
     }

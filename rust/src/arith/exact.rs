@@ -18,6 +18,18 @@ impl ApproxMul for ExactMul {
         check_width(b, self.n);
         ((a as u128 * b as u128) & mask(2 * self.n) as u128) as u64
     }
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        // The 2N-bit mask is loop-invariant; the lane body is a single
+        // widening multiply the compiler can vectorize.
+        let m = mask(2 * self.n);
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            check_width(x, self.n);
+            check_width(y, self.n);
+            *o = (x as u128 * y as u128) as u64 & m;
+        }
+    }
     fn name(&self) -> String {
         format!("exact_mul{}", self.n)
     }
@@ -47,6 +59,24 @@ impl ApproxDiv for ExactDiv {
             return mask(self.n);
         }
         a / b
+    }
+    fn div_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        let n = self.n;
+        let zero_sat = mask(2 * n);
+        let ovf_sat = mask(n);
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            check_width(x, 2 * n);
+            check_width(y, n);
+            *o = if y == 0 {
+                zero_sat
+            } else if x >= (y << n) {
+                ovf_sat
+            } else {
+                x / y
+            };
+        }
     }
     fn name(&self) -> String {
         format!("exact_div{}", self.n)

@@ -4,7 +4,7 @@
 //! error-reduction coefficient. Modelled as the G=1 case of the derived
 //! divider scheme; paper Table III reports ARE ≈ 2.93 % at every width.
 
-use super::mitchell::mitchell_div_core;
+use super::mitchell::{mitchell_div_batch_core, mitchell_div_core};
 use super::rapid::RapidDiv;
 use super::traits::ApproxDiv;
 
@@ -29,6 +29,10 @@ impl ApproxDiv for InzedDiv {
     fn div(&self, a: u64, b: u64) -> u64 {
         let c = self.coefficient();
         mitchell_div_core(self.divisor_width(), a, b, |_, _, _| c)
+    }
+    fn div_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        let c = self.coefficient();
+        mitchell_div_batch_core(self.divisor_width(), a, b, out, |_, _, _| c);
     }
     fn name(&self) -> String {
         format!("inzed_div{}", self.divisor_width())

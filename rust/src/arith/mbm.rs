@@ -7,7 +7,7 @@
 //! single coefficient under the uniform-fraction model), which lands at the
 //! published ARE band (~2.6 %, Table III).
 
-use super::mitchell::mitchell_mul_core;
+use super::mitchell::{mitchell_mul_batch_core, mitchell_mul_core};
 use super::rapid::RapidMul;
 use super::traits::ApproxMul;
 use super::inzed::InzedDiv;
@@ -34,6 +34,10 @@ impl ApproxMul for MbmMul {
     fn mul(&self, a: u64, b: u64) -> u64 {
         let c = self.coefficient();
         mitchell_mul_core(self.width(), a, b, |_, _| c)
+    }
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        let c = self.coefficient();
+        mitchell_mul_batch_core(self.width(), a, b, out, |_, _| c);
     }
     fn name(&self) -> String {
         format!("mbm_mul{}", self.width())

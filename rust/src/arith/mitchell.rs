@@ -14,12 +14,37 @@ use super::traits::{check_width, mask, ApproxDiv, ApproxMul};
 /// correction added to the fraction sum (0 for plain Mitchell). W = N − 1.
 #[inline]
 pub fn mitchell_mul_core<F: Fn(u64, u64) -> u64>(n: u32, a: u64, b: u64, coeff: F) -> u64 {
+    mul_kernel(n, n - 1, a, b, &coeff)
+}
+
+/// Batched variant of [`mitchell_mul_core`]: `out[i]` is bit-identical to
+/// the scalar call on `(a[i], b[i])`. The width-derived constants are
+/// hoisted out of the lane loop and the coefficient closure is monomorphised
+/// once for the whole slice, so units built on this core pay no per-element
+/// dispatch — the fast path every RAPID-family `mul_batch` override routes
+/// through.
+pub fn mitchell_mul_batch_core<F: Fn(u64, u64) -> u64>(
+    n: u32,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    coeff: F,
+) {
+    assert_eq!(a.len(), b.len(), "operand slices must match");
+    assert_eq!(a.len(), out.len(), "output slice must match operands");
+    let w = n - 1;
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = mul_kernel(n, w, x, y, &coeff);
+    }
+}
+
+#[inline(always)]
+fn mul_kernel<F: Fn(u64, u64) -> u64>(n: u32, w: u32, a: u64, b: u64, coeff: &F) -> u64 {
     check_width(a, n);
     check_width(b, n);
     if a == 0 || b == 0 {
         return 0;
     }
-    let w = n - 1;
     let (k1, x1) = log_split(a, w);
     let (k2, x2) = log_split(b, w);
     // Ternary add: frac1 + frac2 + error coefficient (paper §IV-B,
@@ -58,6 +83,30 @@ pub fn mitchell_mul_core<F: Fn(u64, u64) -> u64>(n: u32, a: u64, b: u64, coeff: 
 /// D̂ − D).
 #[inline]
 pub fn mitchell_div_core<F: Fn(u64, u64, bool) -> u64>(n: u32, a: u64, b: u64, coeff: F) -> u64 {
+    div_kernel(n, n - 1, a, b, &coeff)
+}
+
+/// Batched variant of [`mitchell_div_core`]: `out[i]` is bit-identical to
+/// the scalar call on `(a[i], b[i])`, including the divide-by-zero and
+/// overflow saturation lanes (those short-circuit before the log datapath,
+/// exactly as the scalar core does).
+pub fn mitchell_div_batch_core<F: Fn(u64, u64, bool) -> u64>(
+    n: u32,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    coeff: F,
+) {
+    assert_eq!(a.len(), b.len(), "operand slices must match");
+    assert_eq!(a.len(), out.len(), "output slice must match operands");
+    let w = n - 1;
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = div_kernel(n, w, x, y, &coeff);
+    }
+}
+
+#[inline(always)]
+fn div_kernel<F: Fn(u64, u64, bool) -> u64>(n: u32, w: u32, a: u64, b: u64, coeff: &F) -> u64 {
     check_width(a, 2 * n);
     check_width(b, n);
     if b == 0 {
@@ -70,7 +119,6 @@ pub fn mitchell_div_core<F: Fn(u64, u64, bool) -> u64>(n: u32, a: u64, b: u64, c
     if a >= (b << n) {
         return mask(n); // saturate quotient to N bits + overflow flag
     }
-    let w = n - 1;
     let (k1, x1) = log_split(a, w);
     let (k2, x2) = log_split(b, w);
     let borrow = x1 < x2;
@@ -110,6 +158,9 @@ impl ApproxMul for MitchellMul {
     fn mul(&self, a: u64, b: u64) -> u64 {
         mitchell_mul_core(self.n, a, b, |_, _| 0)
     }
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        mitchell_mul_batch_core(self.n, a, b, out, |_, _| 0);
+    }
     fn name(&self) -> String {
         format!("mitchell_mul{}", self.n)
     }
@@ -126,6 +177,9 @@ impl ApproxDiv for MitchellDiv {
     }
     fn div(&self, a: u64, b: u64) -> u64 {
         mitchell_div_core(self.n, a, b, |_, _, _| 0)
+    }
+    fn div_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        mitchell_div_batch_core(self.n, a, b, out, |_, _, _| 0);
     }
     fn name(&self) -> String {
         format!("mitchell_div{}", self.n)
@@ -232,6 +286,30 @@ mod tests {
     fn mul_commutative() {
         let m = MitchellMul { n: 12 };
         check_pairs("mitchell-commute", 12, 12, 7, |a, b| m.mul(a, b) == m.mul(b, a));
+    }
+
+    #[test]
+    fn batch_cores_match_scalar_cores() {
+        let m = MitchellMul { n: 16 };
+        let d = MitchellDiv { n: 8 };
+        let mut rng = crate::util::XorShift256::new(55);
+        let ma: Vec<u64> = (0..257).map(|_| rng.bits(16)).collect();
+        let mb: Vec<u64> = (0..257).map(|_| rng.bits(16)).collect();
+        let mut out = vec![0u64; 257];
+        m.mul_batch(&ma, &mb, &mut out);
+        for i in 0..257 {
+            assert_eq!(out[i], m.mul(ma[i], mb[i]), "mul lane {i}");
+        }
+        // div: include zero-divisor and overflow lanes
+        let mut da: Vec<u64> = (0..257).map(|_| rng.bits(16)).collect();
+        let mut db: Vec<u64> = (0..257).map(|_| rng.bits(8)).collect();
+        da[0] = 0;
+        db[1] = 0;
+        (da[2], db[2]) = (0xffff, 1); // overflow
+        d.div_batch(&da, &db, &mut out);
+        for i in 0..257 {
+            assert_eq!(out[i], d.div(da[i], db[i]), "div lane {i}");
+        }
     }
 
     #[test]

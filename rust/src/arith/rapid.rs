@@ -8,7 +8,9 @@
 
 use std::sync::OnceLock;
 
-use super::mitchell::{mitchell_div_core, mitchell_mul_core};
+use super::mitchell::{
+    mitchell_div_batch_core, mitchell_div_core, mitchell_mul_batch_core, mitchell_mul_core,
+};
 use super::regions::{derive_div_scheme, derive_mul_scheme, Scheme};
 use super::traits::{ApproxDiv, ApproxMul};
 
@@ -70,6 +72,19 @@ impl ApproxMul for RapidMul {
         })
     }
 
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        // Hoist the scheme pointer and coefficient table into locals so the
+        // lane loop is self-contained: the coefficient lookup is two array
+        // indexes, with no `self` indirection and no per-element virtual
+        // call.
+        let w = self.n - 1;
+        let scheme = self.scheme;
+        let table = &self.table[..];
+        mitchell_mul_batch_core(self.n, a, b, out, |x1, x2| {
+            table[scheme.group(x1, x2, w)]
+        });
+    }
+
     fn name(&self) -> String {
         format!("rapid{}_mul{}", self.groups(), self.n)
     }
@@ -85,6 +100,7 @@ pub struct RapidDiv {
 impl RapidDiv {
     pub fn new(n: u32, g: usize) -> Self {
         assert!((2..=32).contains(&n), "divisor width {n} unsupported");
+        assert!(g >= 1 && g <= 15);
         let scheme = div_scheme(g);
         let table = scheme.coeff_table(n - 1);
         RapidDiv { n, scheme, table }
@@ -113,6 +129,15 @@ impl ApproxDiv for RapidDiv {
         mitchell_div_core(self.n, a, b, |x1, x2, _| {
             self.table[self.scheme.group(x1, x2, w)]
         })
+    }
+
+    fn div_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        let w = self.n - 1;
+        let scheme = self.scheme;
+        let table = &self.table[..];
+        mitchell_div_batch_core(self.n, a, b, out, |x1, x2, _| {
+            table[scheme.group(x1, x2, w)]
+        });
     }
 
     fn name(&self) -> String {
@@ -215,6 +240,44 @@ mod tests {
     fn rapid_mul_never_exceeds_double_width() {
         let m = RapidMul::new(16, 10);
         check_pairs("rapid-fits-2n", 16, 16, 9, |a, b| m.mul(a, b) < (1u64 << 32));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rapid_div_rejects_zero_groups() {
+        // Mirrors RapidMul::new: without the guard, g = 0 died deep inside
+        // the scheme cache as a raw slice-index panic.
+        let _ = RapidDiv::new(8, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rapid_div_rejects_oversized_group_count() {
+        let _ = RapidDiv::new(8, 16);
+    }
+
+    #[test]
+    fn rapid_batch_matches_scalar() {
+        let m = RapidMul::new(16, 10);
+        let d = RapidDiv::new(8, 9);
+        let mut rng = XorShift256::new(77);
+        let n = 300usize;
+        let ma: Vec<u64> = (0..n).map(|_| rng.bits(16)).collect();
+        let mb: Vec<u64> = (0..n).map(|_| rng.bits(16)).collect();
+        let mut out = vec![0u64; n];
+        m.mul_batch(&ma, &mb, &mut out);
+        for i in 0..n {
+            assert_eq!(out[i], m.mul(ma[i], mb[i]), "mul lane {i}");
+        }
+        let mut da: Vec<u64> = (0..n).map(|_| rng.bits(16)).collect();
+        let mut db: Vec<u64> = (0..n).map(|_| rng.bits(8)).collect();
+        (da[0], db[0]) = (123, 0); // zero divisor → mask(16)
+        (da[1], db[1]) = (0xffff, 1); // overflow → mask(8)
+        (da[2], db[2]) = (0, 5); // zero dividend
+        d.div_batch(&da, &db, &mut out);
+        for i in 0..n {
+            assert_eq!(out[i], d.div(da[i], db[i]), "div lane {i}");
+        }
     }
 
     #[test]

@@ -9,7 +9,9 @@
 
 use std::sync::OnceLock;
 
-use super::mitchell::{mitchell_div_core, mitchell_mul_core};
+use super::mitchell::{
+    mitchell_div_batch_core, mitchell_div_core, mitchell_mul_batch_core, mitchell_mul_core,
+};
 use super::regions::{derive_percell_scheme, PerCellScheme};
 use super::traits::{ApproxDiv, ApproxMul};
 
@@ -78,6 +80,14 @@ impl ApproxMul for SimdiveMul {
             self.table[i][j]
         })
     }
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        let w = self.n - 1;
+        let fb = self.f_bits;
+        let table = &self.table;
+        mitchell_mul_batch_core(self.n, a, b, out, |x1, x2| {
+            table[(x1 >> (w - fb)) as usize][(x2 >> (w - fb)) as usize]
+        });
+    }
     fn name(&self) -> String {
         if self.f_bits == 3 {
             format!("simdive_mul{}", self.n)
@@ -128,6 +138,14 @@ impl ApproxDiv for SimdiveDiv {
             let j = (x2 >> (w - fb)) as usize;
             self.table[i][j]
         })
+    }
+    fn div_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        let w = self.n - 1;
+        let fb = self.f_bits;
+        let table = &self.table;
+        mitchell_div_batch_core(self.n, a, b, out, |x1, x2, _| {
+            table[(x1 >> (w - fb)) as usize][(x2 >> (w - fb)) as usize]
+        });
     }
     fn name(&self) -> String {
         format!("simdive_div{}", self.n)

@@ -11,6 +11,22 @@ pub trait ApproxMul: Send + Sync {
     /// Compute the (possibly approximate) product. Inputs must fit in
     /// `width()` bits; the result fits in `2*width()` bits.
     fn mul(&self, a: u64, b: u64) -> u64;
+    /// Batched product: `out[i] = self.mul(a[i], b[i])` for every lane,
+    /// bit-identical to the scalar path. All three slices must have the
+    /// same length.
+    ///
+    /// The default walks the scalar entry point, so every unit is batch-
+    /// callable for free; hot units (Mitchell / RAPID / exact — the serving
+    /// and sweep workhorses) override it with a specialized loop that hoists
+    /// scheme/table lookups out of the per-element body and pays the virtual
+    /// dispatch once per slice instead of once per element.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = self.mul(x, y);
+        }
+    }
     /// Short identifier used by the registry / reports ("rapid10", "drum6", ...).
     fn name(&self) -> String;
     /// True for bit-exact designs (skipped by error characterisation).
@@ -33,6 +49,18 @@ pub trait ApproxDiv: Send + Sync {
     /// all-ones of the dividend width; overflow (`a >= b << N`) saturates
     /// to `2^N - 1` mirroring a hardware overflow flag.
     fn div(&self, a: u64, b: u64) -> u64;
+    /// Batched quotient: `out[i] = self.div(a[i], b[i])` for every lane,
+    /// bit-identical to the scalar path — including the zero-divisor and
+    /// overflow saturation rules. All three slices must have the same
+    /// length. Default falls back to the scalar entry point; hot units
+    /// override it (see [`ApproxMul::mul_batch`]).
+    fn div_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = self.div(x, y);
+        }
+    }
     fn name(&self) -> String;
     fn is_exact(&self) -> bool {
         false
@@ -74,5 +102,37 @@ mod tests {
         assert_eq!(mask(8), 0xff);
         assert_eq!(mask(32), 0xffff_ffff);
         assert_eq!(mask(64), u64::MAX);
+    }
+
+    struct WrapMul;
+    impl ApproxMul for WrapMul {
+        fn width(&self) -> u32 {
+            8
+        }
+        fn mul(&self, a: u64, b: u64) -> u64 {
+            (a * b) & mask(16)
+        }
+        fn name(&self) -> String {
+            "wrap".into()
+        }
+    }
+
+    #[test]
+    fn default_mul_batch_matches_scalar() {
+        let m = WrapMul;
+        let a = [0u64, 1, 2, 3, 255];
+        let b = [255u64, 254, 3, 3, 255];
+        let mut out = [0u64; 5];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], m.mul(a[i], b[i]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "operand slices must match")]
+    fn mul_batch_rejects_length_mismatch() {
+        let mut out = [0u64; 2];
+        WrapMul.mul_batch(&[1, 2], &[3], &mut out);
     }
 }

@@ -1,15 +1,28 @@
 //! `rapid serve` subcommand: bring up the coordinator over the PJRT
-//! artifacts and drive it with a synthetic client load, printing
-//! throughput/latency metrics — the minimal "serving demo" a user runs to
-//! see the three layers compose.
+//! artifacts (`--backend pjrt`, the default) or over the in-process
+//! functional units (`--backend functional` — any registry name, no
+//! artifacts or libxla needed), drive it with a synthetic client load and
+//! print throughput/latency metrics — the minimal "serving demo" a user
+//! runs to see the three layers compose.
+//!
+//! The functional backend executes every served batch as a single
+//! `mul_batch`/`div_batch` call (see `router::BatchMulFactory`), so it is
+//! also the software-model throughput yardstick the PJRT path is compared
+//! against. Served lanes are u64 bit patterns carried in the i64 wire
+//! format — at `--width 32` full-scale products set the i64 sign bit, and
+//! consumers must reinterpret replies with `as u64` (this demo only counts
+//! elements).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::arith::registry::{make_div, make_mul};
 use crate::runtime::{ArtifactStore, Runtime};
 use crate::util::cli::Args;
 
-use super::router::{Coordinator, CoordinatorConfig, Executor, ExecutorFactory};
+use super::router::{
+    BatchDivFactory, BatchMulFactory, Coordinator, CoordinatorConfig, Executor, ExecutorFactory,
+};
 
 /// Factory building one PJRT client + compiled artifact per worker thread
 /// (xla handles are not `Send`, so each worker owns its own).
@@ -70,40 +83,77 @@ impl Executor for PjrtExecutor {
 }
 
 pub fn run(argv: Vec<String>) {
-    let args = Args::parse(argv, &["artifacts", "artifact", "batch", "workers", "requests", "req-len"]);
+    let args = Args::parse(
+        argv,
+        &["artifacts", "artifact", "batch", "workers", "requests", "req-len", "backend", "unit", "width", "op"],
+    );
     let dir = args.get_or("artifacts", "artifacts");
     let artifact = args.get_or("artifact", "rapid_mul16");
     let batch = args.get_usize("batch", 8192);
     let workers = args.get_usize("workers", 2);
     let n_requests = args.get_usize("requests", 200);
     let req_len = args.get_usize("req-len", 1024);
+    let backend = args.get_or("backend", "pjrt");
+    let width = args.get_u32("width", 16);
+    let op = args.get_or("op", "mul");
+    // Registry divider names differ from multiplier names (rapid9 vs
+    // rapid10) — the default unit must follow the op.
+    let unit_name = args.get_or("unit", if op == "div" { "rapid9" } else { "rapid10" });
 
-    {
-        // Probe the backend up front so a missing libxla (or the API stub
-        // build — see runtime::xla) degrades to a clean message instead of
-        // a worker-thread panic.
-        let runtime = match Runtime::cpu() {
-            Ok(r) => r,
-            Err(e) => {
-                eprintln!("serve: {e}");
-                std::process::exit(1);
+    // Operand widths of the synthetic load: N×N for mul, 2N/N for div.
+    let (bits_a, bits_b, min_b) = if op == "div" { (2 * width, width, 1) } else { (width, width, 0) };
+
+    let exec: Arc<dyn ExecutorFactory> = match backend {
+        "functional" => {
+            // In-process batched functional model — no artifacts, no libxla.
+            if op == "div" {
+                let unit = make_div(unit_name, width).unwrap_or_else(|| {
+                    eprintln!("serve: unknown divider '{unit_name}' (see README registry table)");
+                    std::process::exit(1);
+                });
+                println!("backend: functional {} ({} workers)", unit.name(), workers);
+                Arc::new(BatchDivFactory { unit: Arc::from(unit) })
+            } else {
+                let unit = make_mul(unit_name, width).unwrap_or_else(|| {
+                    eprintln!("serve: unknown multiplier '{unit_name}' (see README registry table)");
+                    std::process::exit(1);
+                });
+                println!("backend: functional {} ({} workers)", unit.name(), workers);
+                Arc::new(BatchMulFactory { unit: Arc::from(unit) })
             }
-        };
-        println!("platform: {} ({} devices)", runtime.platform(), runtime.device_count());
-        let store = match ArtifactStore::open(runtime, dir) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("serve: {e}");
-                std::process::exit(1);
-            }
-        };
-        println!("artifacts: {:?}", store.list());
-    }
-    let exec = Arc::new(PjrtExecutorFactory {
-        artifacts_dir: dir.to_string(),
-        artifact: artifact.to_string(),
-        batch,
-    });
+        }
+        "pjrt" => {
+            // Probe the backend up front so a missing libxla (or the API
+            // stub build — see runtime::xla) degrades to a clean message
+            // instead of a worker-thread panic.
+            let runtime = match Runtime::cpu() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    eprintln!("serve: hint — `--backend functional` serves the in-process model without PJRT");
+                    std::process::exit(1);
+                }
+            };
+            println!("platform: {} ({} devices)", runtime.platform(), runtime.device_count());
+            let store = match ArtifactStore::open(runtime, dir) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    std::process::exit(1);
+                }
+            };
+            println!("artifacts: {:?}", store.list());
+            Arc::new(PjrtExecutorFactory {
+                artifacts_dir: dir.to_string(),
+                artifact: artifact.to_string(),
+                batch,
+            })
+        }
+        other => {
+            eprintln!("serve: unknown backend '{other}' (expected 'pjrt' or 'functional')");
+            std::process::exit(1);
+        }
+    };
     let cfg = CoordinatorConfig {
         batch_capacity: batch,
         max_wait: Duration::from_micros(500),
@@ -112,13 +162,13 @@ pub fn run(argv: Vec<String>) {
     };
     let coord = Coordinator::start(exec, cfg);
 
-    // synthetic client load: uniform random 16-bit operands
+    // synthetic client load: uniform random operands in the unit's domain
     let mut rng = crate::util::XorShift256::new(42);
     let t0 = Instant::now();
     let mut checked = 0u64;
     for _ in 0..n_requests {
-        let a: Vec<i64> = (0..req_len).map(|_| rng.bits(16) as i64).collect();
-        let b: Vec<i64> = (0..req_len).map(|_| rng.bits(16) as i64).collect();
+        let a: Vec<i64> = (0..req_len).map(|_| rng.bits(bits_a) as i64).collect();
+        let b: Vec<i64> = (0..req_len).map(|_| rng.bits(bits_b).max(min_b) as i64).collect();
         let out = coord.call(a.clone(), b.clone());
         assert_eq!(out.len(), req_len);
         checked += out.len() as u64;

@@ -17,4 +17,4 @@ pub mod cli;
 
 pub use batcher::{Batch, DynamicBatcher};
 pub use metrics::Metrics;
-pub use router::{Coordinator, Request, Response};
+pub use router::{BatchDivFactory, BatchMulFactory, Coordinator, Request, Response};

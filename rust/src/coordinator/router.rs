@@ -52,6 +52,67 @@ where
     }
 }
 
+/// In-process functional serving over a shared multiplier unit: each worker
+/// executes a served batch as **one** [`crate::arith::ApproxMul::mul_batch`]
+/// call instead of N virtual `mul` calls. The per-worker executor keeps its
+/// operand/result scratch buffers across batches, so the steady-state path
+/// is allocation-free up to the reply vector.
+///
+/// Wire format: the `Executor` API carries i64 lanes; operands and results
+/// are reinterpreted as u64 bit patterns (`as u64` / `as i64`). For a
+/// 32-bit unit a full-scale product sets the i64 sign bit — callers must
+/// convert replies back with `as u64`, exactly like the PJRT path's i64
+/// buffers.
+pub struct BatchMulFactory {
+    pub unit: Arc<dyn crate::arith::ApproxMul>,
+}
+
+impl ExecutorFactory for BatchMulFactory {
+    fn make(&self) -> Box<dyn Executor> {
+        Box::new(BatchUnitExecutor { op: BatchOp::Mul(self.unit.clone()), a: Vec::new(), b: Vec::new(), out: Vec::new() })
+    }
+}
+
+/// Divider twin of [`BatchMulFactory`]: one
+/// [`crate::arith::ApproxDiv::div_batch`] per served batch.
+pub struct BatchDivFactory {
+    pub unit: Arc<dyn crate::arith::ApproxDiv>,
+}
+
+impl ExecutorFactory for BatchDivFactory {
+    fn make(&self) -> Box<dyn Executor> {
+        Box::new(BatchUnitExecutor { op: BatchOp::Div(self.unit.clone()), a: Vec::new(), b: Vec::new(), out: Vec::new() })
+    }
+}
+
+enum BatchOp {
+    Mul(Arc<dyn crate::arith::ApproxMul>),
+    Div(Arc<dyn crate::arith::ApproxDiv>),
+}
+
+struct BatchUnitExecutor {
+    op: BatchOp,
+    a: Vec<u64>,
+    b: Vec<u64>,
+    out: Vec<u64>,
+}
+
+impl Executor for BatchUnitExecutor {
+    fn execute(&mut self, a: &[i64], b: &[i64]) -> Vec<i64> {
+        self.a.clear();
+        self.a.extend(a.iter().map(|&x| x as u64));
+        self.b.clear();
+        self.b.extend(b.iter().map(|&x| x as u64));
+        self.out.clear();
+        self.out.resize(a.len(), 0);
+        match &self.op {
+            BatchOp::Mul(u) => u.mul_batch(&self.a, &self.b, &mut self.out),
+            BatchOp::Div(u) => u.div_batch(&self.a, &self.b, &mut self.out),
+        }
+        self.out.iter().map(|&x| x as i64).collect()
+    }
+}
+
 /// One enqueued request.
 pub struct Request {
     pub id: u64,
@@ -404,6 +465,32 @@ mod tests {
         }
         let want: Vec<i64> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn batch_unit_executor_serves_mul_and_div() {
+        use crate::arith::{ApproxDiv, ApproxMul, ExactDiv, RapidMul};
+        let unit = RapidMul::new(16, 10);
+        let model = RapidMul::new(16, 10);
+        let c = Coordinator::start(Arc::new(BatchMulFactory { unit: Arc::new(unit) }), small_cfg());
+        let a = vec![3i64, 58, 1000, 0, 65535];
+        let b = vec![7i64, 18, 999, 5, 65535];
+        let got = c.call(a.clone(), b.clone());
+        for i in 0..a.len() {
+            assert_eq!(got[i], model.mul(a[i] as u64, b[i] as u64) as i64, "lane {i}");
+        }
+
+        let d = Coordinator::start(
+            Arc::new(BatchDivFactory { unit: Arc::new(ExactDiv { n: 8 }) }),
+            small_cfg(),
+        );
+        let da = vec![5000i64, 9, 0, 200];
+        let db = vec![77i64, 3, 3, 10];
+        let got = d.call(da.clone(), db.clone());
+        let dm = ExactDiv { n: 8 };
+        for i in 0..da.len() {
+            assert_eq!(got[i], dm.div(da[i] as u64, db[i] as u64) as i64, "lane {i}");
+        }
     }
 
     #[test]

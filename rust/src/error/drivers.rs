@@ -34,29 +34,84 @@ fn default_threads() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Lane count per `mul_batch`/`div_batch` call in the sweep loops: large
+/// enough to amortise the per-batch virtual dispatch and let the unit's
+/// specialized loop unroll, small enough that the three operand/result
+/// buffers stay in L1.
+const BATCH_CHUNK: usize = 4096;
+
+/// Push one flushed multiplier chunk into the accumulator (the oracle is
+/// the exact product, recomputed here — cheaper than a second unit).
+fn flush_mul(unit: &dyn ApproxMul, acc: &mut ErrorAcc, a: &[u64], b: &[u64], out: &mut [u64]) {
+    let out = &mut out[..a.len()];
+    unit.mul_batch(a, b, out);
+    for ((&x, &y), &p) in a.iter().zip(b).zip(out.iter()) {
+        acc.push((x as u128 * y as u128) as f64, p as f64);
+    }
+}
+
+/// Push one flushed divider chunk (integer-quotient oracle).
+fn flush_div(unit: &dyn ApproxDiv, acc: &mut ErrorAcc, a: &[u64], b: &[u64], out: &mut [u64]) {
+    let out = &mut out[..a.len()];
+    unit.div_batch(a, b, out);
+    for ((&x, &y), &q) in a.iter().zip(b).zip(out.iter()) {
+        acc.push((x / y) as f64, q as f64);
+    }
+}
+
 /// Characterise a multiplier (both operands `width()`-bit, nonzero).
+///
+/// Both the exhaustive and Monte-Carlo paths accumulate operand pairs into
+/// chunk buffers and flush them through [`ApproxMul::mul_batch`], so the
+/// sweep's hot loop pays one virtual call per [`BATCH_CHUNK`] lanes instead
+/// of one per pair.
 pub fn characterize_mul(unit: &dyn ApproxMul, opts: &CharacterizeOpts) -> ErrorReport {
     let n = unit.width();
     let pairs = 1u128 << (2 * n);
     if pairs <= opts.exhaustive_limit as u128 {
         let mut acc = ErrorAcc::new();
-        for a in 1..(1u64 << n) {
-            for b in 1..(1u64 << n) {
-                let exact = (a as u128 * b as u128) as f64;
-                acc.push(exact, unit.mul(a, b) as f64);
+        let lim = 1u64 << n;
+        let mut ab = Vec::with_capacity(BATCH_CHUNK);
+        let mut bb = Vec::with_capacity(BATCH_CHUNK);
+        let mut ob = vec![0u64; BATCH_CHUNK];
+        for a in 1..lim {
+            for b in 1..lim {
+                ab.push(a);
+                bb.push(b);
+                if ab.len() == BATCH_CHUNK {
+                    flush_mul(unit, &mut acc, &ab, &bb, &mut ob);
+                    ab.clear();
+                    bb.clear();
+                }
             }
+        }
+        if !ab.is_empty() {
+            flush_mul(unit, &mut acc, &ab, &bb, &mut ob);
         }
         acc.report(&unit.name())
     } else {
-        mc_parallel(opts, |acc, rng| {
-            let a = rng.bits(n);
-            let b = rng.bits(n);
-            if a == 0 || b == 0 {
-                acc.skip();
-                return;
+        mc_parallel(opts, |acc, rng, count| {
+            let mut ab = Vec::with_capacity(BATCH_CHUNK);
+            let mut bb = Vec::with_capacity(BATCH_CHUNK);
+            let mut ob = vec![0u64; BATCH_CHUNK];
+            let mut done = 0u64;
+            while done < count {
+                let take = (BATCH_CHUNK as u64).min(count - done);
+                ab.clear();
+                bb.clear();
+                for _ in 0..take {
+                    let a = rng.bits(n);
+                    let b = rng.bits(n);
+                    if a == 0 || b == 0 {
+                        acc.skip();
+                    } else {
+                        ab.push(a);
+                        bb.push(b);
+                    }
+                }
+                flush_mul(unit, acc, &ab, &bb, &mut ob);
+                done += take;
             }
-            let exact = (a as u128 * b as u128) as f64;
-            acc.push(exact, unit.mul(a, b) as f64);
         })
         .report(&unit.name())
     }
@@ -73,23 +128,47 @@ pub fn characterize_div(unit: &dyn ApproxDiv, opts: &CharacterizeOpts) -> ErrorR
     let pairs = 1u128 << (3 * n);
     if pairs <= opts.exhaustive_limit as u128 {
         let mut acc = ErrorAcc::new();
+        let mut ab = Vec::with_capacity(BATCH_CHUNK);
+        let mut bb = Vec::with_capacity(BATCH_CHUNK);
+        let mut ob = vec![0u64; BATCH_CHUNK];
         for b in 1..(1u64 << n) {
             for a in b..(b << n) {
-                let exact = (a / b) as f64;
-                acc.push(exact, unit.div(a, b) as f64);
+                ab.push(a);
+                bb.push(b);
+                if ab.len() == BATCH_CHUNK {
+                    flush_div(unit, &mut acc, &ab, &bb, &mut ob);
+                    ab.clear();
+                    bb.clear();
+                }
             }
+        }
+        if !ab.is_empty() {
+            flush_div(unit, &mut acc, &ab, &bb, &mut ob);
         }
         acc.report(&unit.name())
     } else {
-        mc_parallel(opts, |acc, rng| {
-            let b = rng.bits(n);
-            let a = rng.bits(2 * n);
-            if b == 0 || a < b || a >= (b << n) {
-                acc.skip();
-                return;
+        mc_parallel(opts, |acc, rng, count| {
+            let mut ab = Vec::with_capacity(BATCH_CHUNK);
+            let mut bb = Vec::with_capacity(BATCH_CHUNK);
+            let mut ob = vec![0u64; BATCH_CHUNK];
+            let mut done = 0u64;
+            while done < count {
+                let take = (BATCH_CHUNK as u64).min(count - done);
+                ab.clear();
+                bb.clear();
+                for _ in 0..take {
+                    let b = rng.bits(n);
+                    let a = rng.bits(2 * n);
+                    if b == 0 || a < b || a >= (b << n) {
+                        acc.skip();
+                    } else {
+                        ab.push(a);
+                        bb.push(b);
+                    }
+                }
+                flush_div(unit, acc, &ab, &bb, &mut ob);
+                done += take;
             }
-            let exact = (a / b) as f64;
-            acc.push(exact, unit.div(a, b) as f64);
         })
         .report(&unit.name())
     }
@@ -97,10 +176,11 @@ pub fn characterize_div(unit: &dyn ApproxDiv, opts: &CharacterizeOpts) -> ErrorR
 
 /// Threaded Monte-Carlo: each worker owns a decorrelated PRNG stream and a
 /// private accumulator; results merge at the end (scoped threads — the
-/// closure only needs `Sync`).
+/// closure only needs `Sync`). The closure receives its whole sample quota
+/// so it can batch lanes through the units' slice entry points.
 fn mc_parallel<F>(opts: &CharacterizeOpts, f: F) -> ErrorAcc
 where
-    F: Fn(&mut ErrorAcc, &mut XorShift256) + Sync,
+    F: Fn(&mut ErrorAcc, &mut XorShift256, u64) + Sync,
 {
     let threads = opts.threads.max(1);
     let per = opts.mc_samples / threads as u64;
@@ -112,9 +192,7 @@ where
                 s.spawn(move || {
                     let mut local = ErrorAcc::new();
                     let mut rng = XorShift256::new(opts.seed.wrapping_add(0x9e37 * (t as u64 + 1)));
-                    for _ in 0..per {
-                        f(&mut local, &mut rng);
-                    }
+                    f(&mut local, &mut rng, per);
                     local
                 })
             })

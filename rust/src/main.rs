@@ -6,7 +6,8 @@
 //! * `characterize`  — ARE/PRE/bias of a unit (Table III accuracy columns).
 //! * `synth`         — netlist resources/timing/power of a unit (Table III).
 //! * `app`           — run an end-to-end application with chosen arithmetic.
-//! * `serve`         — start the streaming coordinator on PJRT artifacts.
+//! * `serve`         — start the streaming coordinator on PJRT artifacts or
+//!   the in-process batched functional model (`--backend functional`).
 
 use rapid::util::cli::Args;
 
@@ -55,8 +56,10 @@ fn usage() {
                                                 LUT/FF/latency/power of one unit\n\
            app           --name {{pantompkins|jpeg|harris}} --mul NAME --div NAME\n\
                                                 end-to-end application run + QoR\n\
-           serve         --artifacts DIR [--batch B] [--workers W] [--requests R]\n\
-                                                streaming coordinator demo over PJRT\n"
+           serve         [--backend {{pjrt|functional}}] [--artifacts DIR] [--unit NAME]\n\
+                         [--width N] [--op {{mul|div}}] [--batch B] [--workers W] [--requests R]\n\
+                                                streaming coordinator demo (PJRT artifacts,\n\
+                                                or the in-process batched functional model)\n"
     );
 }
 

@@ -7,15 +7,17 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use rapid::arith::{ApproxMul, RapidMul};
-use rapid::coordinator::router::{Coordinator, CoordinatorConfig, ExecutorFactory, FnFactory};
+use rapid::arith::{ApproxDiv, ApproxMul, RapidDiv, RapidMul};
+use rapid::coordinator::router::{
+    BatchDivFactory, BatchMulFactory, Coordinator, CoordinatorConfig, ExecutorFactory,
+};
 use rapid::util::XorShift256;
 
+/// The in-process functional serving path: one `mul_batch` per served
+/// batch (router::BatchMulFactory) — the executor the `serve
+/// --backend functional` CLI uses.
 fn rapid_exec() -> Arc<dyn ExecutorFactory> {
-    Arc::new(FnFactory(|a: &[i64], b: &[i64]| {
-        let m = RapidMul::new(16, 10);
-        a.iter().zip(b).map(|(&x, &y)| m.mul(x as u64, y as u64) as i64).collect::<Vec<i64>>()
-    }))
+    Arc::new(BatchMulFactory { unit: Arc::new(RapidMul::new(16, 10)) })
 }
 
 fn cfg(batch: usize, workers: usize) -> CoordinatorConfig {
@@ -69,6 +71,26 @@ fn concurrent_clients_isolation() {
         h.join().unwrap();
     }
     assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 240);
+}
+
+#[test]
+fn served_div_matches_direct_model() {
+    // The divider twin of the functional path, including zero-divisor and
+    // overflow lanes travelling through a served batch.
+    let c = Coordinator::start(
+        Arc::new(BatchDivFactory { unit: Arc::new(RapidDiv::new(8, 9)) }),
+        cfg(128, 2),
+    );
+    let model = RapidDiv::new(8, 9);
+    let mut rng = XorShift256::new(9);
+    let mut a: Vec<i64> = (0..200).map(|_| rng.bits(16) as i64).collect();
+    let mut b: Vec<i64> = (0..200).map(|_| rng.bits(8) as i64).collect();
+    (a[0], b[0]) = (123, 0); // divide-by-zero lane
+    (a[1], b[1]) = (0xffff, 1); // overflow lane
+    let got = c.call(a.clone(), b.clone());
+    for i in 0..a.len() {
+        assert_eq!(got[i], model.div(a[i] as u64, b[i] as u64) as i64, "lane {i}");
+    }
 }
 
 #[test]
