@@ -22,7 +22,8 @@ bench:
 	done
 
 # One-command refresh of the EXPERIMENTS.md §Perf rows (scalar vs batched
-# unit throughput, sweeps, netlist eval, PJRT path when artifacts exist).
+# unit throughput, sweeps, gate-level eval scalar vs compiled bit-parallel,
+# PJRT path when artifacts exist). Also rewrites BENCH_hotpath.json.
 bench-hotpath:
 	cargo bench --bench hotpath
 

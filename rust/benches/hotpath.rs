@@ -6,8 +6,10 @@
 //! iterations.
 
 use rapid::arith::registry::{make_div, make_mul};
+use rapid::bench_support::record::Recorder;
 use rapid::bench_support::table::Table;
 use rapid::circuit::netlist::Netlist;
+use rapid::circuit::sim::{pair_chunk, CompiledNetlist};
 use rapid::circuit::synth::multiplier::rapid_mul_netlist;
 use rapid::error::{characterize_mul, CharacterizeOpts};
 use rapid::util::timer::{bench, black_box, fmt_ns};
@@ -15,6 +17,7 @@ use rapid::util::XorShift256;
 
 fn main() {
     let mut t = Table::new("§Perf — hot-path microbenchmarks", &["path", "time", "throughput"]);
+    let mut rec = Recorder::new("hotpath");
 
     // 1. functional unit throughput (the app kernels' inner loop), scalar
     //    virtual dispatch vs the batched slice entry points — the
@@ -31,6 +34,7 @@ fn main() {
         black_box(acc);
     });
     t.row(&["rapid10 mul16 (scalar)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    rec.add("rapid10_mul16_scalar", &r, 4096.0);
 
     let ma: Vec<u64> = ops.iter().map(|&(a, _)| a).collect();
     let mb: Vec<u64> = ops.iter().map(|&(_, b)| b).collect();
@@ -40,6 +44,7 @@ fn main() {
         black_box(mout[4095]);
     });
     t.row(&["rapid10 mul16 (batched)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    rec.add("rapid10_mul16_batched", &r, 4096.0);
 
     let dops: Vec<(u64, u64)> = (0..4096).map(|_| (rng.bits(16), rng.bits(8).max(1))).collect();
     let r = bench("rapid9_div8 scalar x4096", || {
@@ -50,6 +55,7 @@ fn main() {
         black_box(acc);
     });
     t.row(&["rapid9 div8 (scalar)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    rec.add("rapid9_div8_scalar", &r, 4096.0);
 
     let da: Vec<u64> = dops.iter().map(|&(a, _)| a).collect();
     let db: Vec<u64> = dops.iter().map(|&(_, b)| b).collect();
@@ -59,6 +65,7 @@ fn main() {
         black_box(dout[4095]);
     });
     t.row(&["rapid9 div8 (batched)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    rec.add("rapid9_div8_batched", &r, 4096.0);
 
     // 2. exhaustive 8-bit error sweep (Table III accuracy inner loop)
     let m8 = make_mul("rapid10", 8).unwrap();
@@ -67,6 +74,7 @@ fn main() {
         black_box(rep.are);
     });
     t.row(&["exhaustive 8-bit ARE sweep".into(), fmt_ns(r.median_ns), format!("{:.1} Mpairs/s", 65025.0 / (r.median_ns * 1e-9) / 1e6)]);
+    rec.add("exhaustive_8bit_are_sweep", &r, 65025.0);
 
     // 3. Monte-Carlo 32-bit characterisation (threaded)
     let m32 = make_mul("rapid10", 32).unwrap();
@@ -76,14 +84,45 @@ fn main() {
         black_box(rep.are);
     });
     t.row(&["Monte-Carlo 32-bit (1M pairs)".into(), fmt_ns(r.median_ns), format!("{:.1} Mpairs/s", 1e6 / (r.median_ns * 1e-9) / 1e6)]);
+    rec.add("mc_32bit_1m", &r, 1e6);
 
-    // 4. gate-level netlist evaluation (power/equivalence inner loop)
+    // 4. gate-level netlist evaluation (power/equivalence inner loop):
+    //    the scalar reference interpreter vs the compiled bit-parallel
+    //    engine (64 vectors per pass, `circuit::sim`) — the speedup that
+    //    unlocks exhaustive Table III sweeps at 8/16 bit.
     let nl = rapid_mul_netlist(16, 10);
     let bits = Netlist::pack_inputs(&[16, 16], &[12345, 6789]);
-    let r = bench("netlist-eval", || {
+    let r_scalar = bench("netlist-eval-scalar", || {
         black_box(nl.eval_outputs(&bits));
     });
-    t.row(&["gate-level eval (16-bit RAPID)".into(), fmt_ns(r.median_ns), format!("{:.1} kevals/s", 1.0 / (r.median_ns * 1e-9) / 1e3)]);
+    t.row(&["gate-level eval (16-bit RAPID, scalar)".into(), fmt_ns(r_scalar.median_ns), format!("{:.1} kevals/s", 1.0 / (r_scalar.median_ns * 1e-9) / 1e3)]);
+    rec.add("gate_eval_mul16_scalar", &r_scalar, 1.0);
+
+    let mut sim = CompiledNetlist::compile(&nl);
+    let words: Vec<u64> = (0..sim.n_inputs()).map(|_| rng.next_u64()).collect();
+    let r_packed = bench("netlist-eval-compiled", || {
+        black_box(sim.eval_words(&words)[0]);
+    });
+    t.row(&["gate-level eval (compiled, 64 lanes/pass)".into(), fmt_ns(r_packed.median_ns / 64.0), format!("{:.2} Mevals/s", 64.0 / (r_packed.median_ns * 1e-9) / 1e6)]);
+    rec.add("gate_eval_mul16_compiled_64lane", &r_packed, 64.0);
+    let speedup = r_scalar.median_ns / (r_packed.median_ns / 64.0);
+    t.row(&["gate-level compiled speedup (per vector)".into(), format!("{speedup:.1}x"), "-".into()]);
+
+    // 4b. the netlist_equivalence workload: full 65 536-pair space of an
+    //     8-bit unit, packing included
+    let nl8 = rapid_mul_netlist(8, 10);
+    let mut sim8 = CompiledNetlist::compile(&nl8);
+    let r = bench("netlist-sweep-8bit-compiled", || {
+        let mut acc = 0u128;
+        for chunk in 0..1024u64 {
+            let (a, b) = pair_chunk(chunk, 8);
+            let out = sim8.eval_lanes(&[8, 8], &[&a, &b]);
+            acc ^= out[63];
+        }
+        black_box(acc);
+    });
+    t.row(&["exhaustive 8-bit netlist sweep (compiled)".into(), fmt_ns(r.median_ns), format!("{:.1} Mvecs/s", 65536.0 / (r.median_ns * 1e-9) / 1e6)]);
+    rec.add("netlist_sweep_8bit_compiled", &r, 65536.0);
 
     // 5. batched PJRT serving path (optional: needs artifacts + a real
     // PJRT client — the API-stub build reports a skip row instead)
@@ -111,9 +150,14 @@ fn main() {
             black_box(out[0][0]);
         });
         t.row(&["PJRT batched mul (8192)".into(), fmt_ns(r.median_ns), format!("{:.2} Melem/s", 8192.0 / (r.median_ns * 1e-9) / 1e6)]);
+        rec.add("pjrt_batched_mul_8192", &r, 8192.0);
     } else {
         t.row(&["PJRT batched mul".into(), "skipped (no artifacts / no PJRT)".into(), "-".into()]);
     }
 
     t.print();
+    match rec.write("BENCH_hotpath.json") {
+        Ok(()) => println!("\nrecorded -> BENCH_hotpath.json (the EXPERIMENTS.md §Perf trajectory)"),
+        Err(e) => eprintln!("\ncould not write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -3,6 +3,14 @@
 //! prints paper-vs-measured side by side.
 
 pub mod paper;
+pub mod record;
 pub mod table;
 
 pub use table::Table;
+
+/// Switching-activity sample size per Table III design point, shared by
+/// `table3_mul`/`table3_div` so the two power columns stay comparable.
+/// The compiled bit-parallel simulator (`circuit::sim`) made power
+/// estimation ~64× cheaper per vector, so the sample is 1 024 vectors
+/// (was 120 on the scalar interpreter).
+pub const POWER_VECTORS: usize = 1024;

@@ -1,0 +1,116 @@
+//! Machine-readable bench recording: each harness can dump its measured
+//! rows as `BENCH_<name>.json` at the repo root so EXPERIMENTS.md §Perf
+//! has a committed trajectory across optimization iterations (no serde in
+//! the offline vendor set — the writer emits the small fixed schema by
+//! hand).
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::timer::BenchResult;
+
+/// Collects named results and writes them as one JSON document.
+pub struct Recorder {
+    bench: String,
+    rows: Vec<Row>,
+}
+
+struct Row {
+    name: String,
+    median_ns: f64,
+    items_per_iter: f64,
+}
+
+impl Recorder {
+    pub fn new(bench: &str) -> Self {
+        Recorder { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one measurement; `items_per_iter` is the work amount per
+    /// closure call (elements, vectors, pairs, ...) so `ns_per_item`
+    /// survives in the JSON.
+    pub fn add(&mut self, name: &str, r: &BenchResult, items_per_iter: f64) {
+        self.rows.push(Row {
+            name: name.to_string(),
+            median_ns: r.median_ns,
+            items_per_iter,
+        });
+    }
+
+    /// Serialize (stable key order, one row per line).
+    pub fn to_json(&self) -> String {
+        let unix_time = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", escape(&self.bench)));
+        s.push_str("  \"status\": \"recorded\",\n");
+        s.push_str(&format!("  \"unix_time\": {unix_time},\n"));
+        s.push_str("  \"rows\": [\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            let sep = if i + 1 == self.rows.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_ns\": {:.3}, \
+                 \"items_per_iter\": {}, \"ns_per_item\": {:.3}}}{sep}\n",
+                escape(&row.name),
+                row.median_ns,
+                row.items_per_iter,
+                row.median_ns / row.items_per_iter.max(1e-300)
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json`-style output to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_result(median_ns: f64) -> BenchResult {
+        BenchResult {
+            name: "sample".into(),
+            median_ns,
+            mean_ns: median_ns,
+            min_ns: median_ns,
+            max_ns: median_ns,
+            samples: 1,
+            iters_per_sample: 1,
+        }
+    }
+
+    #[test]
+    fn json_has_rows_and_derived_per_item() {
+        let mut rec = Recorder::new("hotpath");
+        rec.add(r#"scalar "x""#, &sample_result(6400.0), 64.0);
+        rec.add("packed", &sample_result(128.0), 64.0);
+        let j = rec.to_json();
+        assert!(j.contains("\"bench\": \"hotpath\""));
+        assert!(j.contains("\\\"x\\\""), "quotes escaped: {j}");
+        assert!(j.contains("\"ns_per_item\": 100.000"), "{j}");
+        assert!(j.contains("\"ns_per_item\": 2.000"), "{j}");
+        // rows array well-formed: one comma between the two rows
+        assert_eq!(j.matches("},").count(), 1, "{j}");
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let mut rec = Recorder::new("t");
+        rec.add("row", &sample_result(1.0), 1.0);
+        let path = std::env::temp_dir().join("rapid_bench_record_test.json");
+        rec.write(path.to_str().unwrap()).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert!(back.contains("\"status\": \"recorded\""));
+        let _ = std::fs::remove_file(&path);
+    }
+}

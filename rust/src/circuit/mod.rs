@@ -6,6 +6,7 @@
 
 pub mod primitive;
 pub mod netlist;
+pub mod sim;
 pub mod timing;
 pub mod power;
 pub mod pipeline;
@@ -16,3 +17,4 @@ pub mod cli;
 pub use netlist::Netlist;
 pub use primitive::Net;
 pub use report::UnitReport;
+pub use sim::CompiledNetlist;

@@ -121,6 +121,13 @@ impl Netlist {
 
     /// Evaluate combinationally (FFs transparent): returns the value of
     /// every net. Cells must be in definition order (builders guarantee it).
+    ///
+    /// This walks one vector at a time and is the *reference semantics*;
+    /// hot paths (power, equivalence sweeps, pipeline verification) lower
+    /// the netlist once via [`Netlist::compiled`] and evaluate 64 vectors
+    /// per pass — the compiled engine is pinned bit-identical to this
+    /// interpreter by `circuit::sim`'s tests and the exhaustive sweeps in
+    /// `rust/tests/netlist_equivalence.rs`.
     pub fn eval(&self, input_values: &[bool]) -> Vec<bool> {
         assert_eq!(input_values.len(), self.inputs.len(), "input arity mismatch");
         let mut v = vec![false; self.n_nets as usize];
@@ -154,8 +161,20 @@ impl Netlist {
         v
     }
 
+    /// Lower once for bit-parallel evaluation (64 vectors per pass); see
+    /// [`crate::circuit::sim`].
+    pub fn compiled(&self) -> super::sim::CompiledNetlist {
+        super::sim::CompiledNetlist::compile(self)
+    }
+
     /// Evaluate and return only the output bits as a u128 (LSB-first).
     pub fn eval_outputs(&self, input_values: &[bool]) -> u128 {
+        assert!(
+            self.outputs.len() <= 128,
+            "{}: {} output bits exceed eval_outputs' u128 window",
+            self.name,
+            self.outputs.len()
+        );
         let v = self.eval(input_values);
         let mut out = 0u128;
         for (i, n) in self.outputs.iter().enumerate() {
@@ -167,11 +186,18 @@ impl Netlist {
     }
 
     /// Helper: pack integer operands into the input bit vector (LSB-first
-    /// per bus, buses in declaration order).
+    /// per bus, buses in declaration order). Buses wider than 64 bits or
+    /// values that do not fit their bus are rejected (they used to shift
+    /// to nonsense or silently truncate).
     pub fn pack_inputs(widths: &[u32], values: &[u64]) -> Vec<bool> {
         assert_eq!(widths.len(), values.len());
         let mut bits = Vec::new();
-        for (w, val) in widths.iter().zip(values) {
+        for (bus, (w, val)) in widths.iter().zip(values).enumerate() {
+            assert!(*w <= 64, "pack_inputs: bus {bus} is {w} bits wide (max 64)");
+            assert!(
+                *w == 64 || *val >> *w == 0,
+                "pack_inputs: value {val:#x} exceeds the {w}-bit bus {bus}"
+            );
             for i in 0..*w {
                 bits.push((val >> i) & 1 == 1);
             }
@@ -463,6 +489,28 @@ mod tests {
         assert!(nl.count_luts() < before, "{} !< {before}", nl.count_luts());
         assert_eq!(nl.eval_outputs(&[false]), f0);
         assert_eq!(nl.eval_outputs(&[true]), f1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the 4-bit bus")]
+    fn pack_inputs_rejects_oversized_value() {
+        let _ = Netlist::pack_inputs(&[4, 4], &[16, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "max 64")]
+    fn pack_inputs_rejects_overwide_bus() {
+        let _ = Netlist::pack_inputs(&[65], &[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "u128 window")]
+    fn eval_outputs_rejects_more_than_128_bits() {
+        let mut nl = Netlist::new("wide");
+        let ins = nl.input_bus(129);
+        nl.set_outputs(&ins);
+        let bits = vec![false; 129];
+        let _ = nl.eval_outputs(&bits);
     }
 
     #[test]

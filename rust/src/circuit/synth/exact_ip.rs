@@ -153,13 +153,9 @@ mod tests {
 
     #[test]
     fn mul_exhaustive_6bit() {
+        // compiled engine over the full 4 096-pair space + scalar stride
         let nl = exact_mul_netlist(6);
-        for a in 0..64u64 {
-            for b in 0..64u64 {
-                let bits = Netlist::pack_inputs(&[6, 6], &[a, b]);
-                assert_eq!(nl.eval_outputs(&bits) as u64, a * b, "{a}x{b}");
-            }
-        }
+        crate::circuit::sim::assert_exhaustive_pairs(&nl, [6, 6], 17, &|a, b| (a * b) as u128);
     }
 
     #[test]
@@ -176,12 +172,9 @@ mod tests {
         let nl = exact_div_netlist(4);
         let model = crate::arith::exact::ExactDiv { n: 4 };
         use crate::arith::ApproxDiv;
-        for b in 0..16u64 {
-            for a in 0..256u64 {
-                let bits = Netlist::pack_inputs(&[8, 4], &[a, b]);
-                assert_eq!(nl.eval_outputs(&bits) as u64, model.div(a, b), "{a}/{b}");
-            }
-        }
+        crate::circuit::sim::assert_exhaustive_pairs(&nl, [8, 4], 17, &|a, b| {
+            model.div(a, b) as u128
+        });
     }
 
     #[test]

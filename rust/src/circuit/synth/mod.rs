@@ -13,3 +13,33 @@ pub mod mux;
 pub mod multiplier;
 pub mod divider;
 pub mod exact_ip;
+
+use crate::circuit::netlist::Netlist;
+
+/// Gate-level netlist behind a registry multiplier name, for the names
+/// that have a LUT mapping (`exact`, `mitchell`, `rapid3/5/10`); the
+/// remaining registry designs are accuracy-only functional models. Used
+/// by the registry-wide equivalence and `optimize()`-preservation sweeps.
+pub fn netlist_for_mul(name: &str, n: u32) -> Option<Netlist> {
+    match name {
+        "exact" => Some(exact_ip::exact_mul_netlist(n)),
+        "mitchell" => Some(multiplier::mitchell_mul_netlist(n)),
+        "rapid3" => Some(multiplier::rapid_mul_netlist(n, 3)),
+        "rapid5" => Some(multiplier::rapid_mul_netlist(n, 5)),
+        "rapid10" => Some(multiplier::rapid_mul_netlist(n, 10)),
+        _ => None,
+    }
+}
+
+/// Divider counterpart of [`netlist_for_mul`] (`exact`, `mitchell`,
+/// `rapid3/5/9`); `n` is the divisor width, the dividend is `2n` bits.
+pub fn netlist_for_div(name: &str, n: u32) -> Option<Netlist> {
+    match name {
+        "exact" => Some(exact_ip::exact_div_netlist(n)),
+        "mitchell" => Some(divider::mitchell_div_netlist(n)),
+        "rapid3" => Some(divider::rapid_div_netlist(n, 3)),
+        "rapid5" => Some(divider::rapid_div_netlist(n, 5)),
+        "rapid9" => Some(divider::rapid_div_netlist(n, 9)),
+        _ => None,
+    }
+}

@@ -1,88 +1,150 @@
 //! Netlist ≡ functional-model equivalence and pipelining invariants at
-//! integration scale: every synthesized unit, at several widths, in every
-//! pipeline configuration, against the bit-accurate models — the guarantee
-//! that Table III's circuit columns describe circuits that really compute
-//! the reported arithmetic.
+//! integration scale, on the compiled bit-parallel engine (`circuit::sim`):
+//! every synthesized registry unit, at several widths, in pipelined
+//! configurations, against the bit-accurate models — the guarantee that
+//! Table III's circuit columns describe circuits that really compute the
+//! reported arithmetic. The same sweeps pin the compiled engine
+//! bit-identical to the scalar reference interpreter `Netlist::eval`
+//! (`scalar_stride = 1` ⇒ every single pair is cross-checked).
 
-use rapid::arith::exact::{ExactDiv, ExactMul};
-use rapid::arith::mitchell::{MitchellDiv, MitchellMul};
-use rapid::arith::rapid::{RapidDiv, RapidMul};
-use rapid::arith::{ApproxDiv, ApproxMul};
-use rapid::circuit::netlist::Netlist;
+use rapid::arith::registry::{make_div, make_mul, ALL_DIVS, ALL_MULS};
 use rapid::circuit::pipeline::pipeline;
 use rapid::circuit::primitive::Delays;
+use rapid::circuit::sim::{assert_exhaustive_pairs, assert_pairs};
 use rapid::circuit::synth::divider::rapid_div_netlist;
-use rapid::circuit::synth::exact_ip::{exact_div_netlist, exact_mul_netlist};
 use rapid::circuit::synth::multiplier::rapid_mul_netlist;
+use rapid::circuit::synth::{netlist_for_div, netlist_for_mul};
 use rapid::util::XorShift256;
 
-fn check_mul(nl: &Netlist, model: &dyn ApproxMul, n: u32, cases: usize, seed: u64) {
+fn random_pairs(count: usize, bits_a: u32, bits_b: u32, seed: u64) -> Vec<(u64, u64)> {
     let mut rng = XorShift256::new(seed);
-    let d = Delays::default();
-    let p2 = pipeline(nl, 2, &d);
-    let p4 = pipeline(nl, 4, &d);
-    for _ in 0..cases {
-        let a = rng.bits(n);
-        let b = rng.bits(n);
-        let bits = Netlist::pack_inputs(&[n, n], &[a, b]);
-        let want = model.mul(a, b) as u128;
-        assert_eq!(nl.eval_outputs(&bits), want, "{}: {a}x{b}", nl.name);
-        assert_eq!(p2.netlist.eval_outputs(&bits), want, "{} p2: {a}x{b}", nl.name);
-        assert_eq!(p4.netlist.eval_outputs(&bits), want, "{} p4: {a}x{b}", nl.name);
-    }
+    (0..count).map(|_| (rng.bits(bits_a), rng.bits(bits_b))).collect()
 }
 
-fn check_div(nl: &Netlist, model: &dyn ApproxDiv, n: u32, cases: usize, seed: u64) {
-    let mut rng = XorShift256::new(seed);
+#[test]
+fn mul8_full_pair_space_every_registry_unit() {
+    // All 65 536 8-bit pairs (1 024 packed passes), every registry
+    // multiplier with a gate-level mapping: compiled vs scalar vs model
+    // on every single pair, plus S=2/S=4 pipelined variants (compiled on
+    // the full space, scalar on a stride).
     let d = Delays::default();
-    let p3 = pipeline(nl, 3, &d);
-    for _ in 0..cases {
-        let a = rng.bits(2 * n);
-        let b = rng.bits(n);
-        let bits = Netlist::pack_inputs(&[2 * n, n], &[a, b]);
-        let want = model.div(a, b) as u128;
-        assert_eq!(nl.eval_outputs(&bits), want, "{}: {a}/{b}", nl.name);
-        assert_eq!(p3.netlist.eval_outputs(&bits), want, "{} p3: {a}/{b}", nl.name);
+    for &name in ALL_MULS {
+        let nl = match netlist_for_mul(name, 8) {
+            Some(nl) => nl,
+            None => continue, // accuracy-only model, no LUT mapping
+        };
+        let model = make_mul(name, 8).unwrap();
+        let want = |a: u64, b: u64| model.mul(a, b) as u128;
+        assert_exhaustive_pairs(&nl, [8, 8], 1, &want);
+        for stages in [2usize, 4] {
+            let p = pipeline(&nl, stages, &d);
+            assert_exhaustive_pairs(&p.netlist, [8, 8], 977, &want);
+        }
     }
 }
 
 #[test]
-fn mul_netlists_all_widths_and_schemes() {
-    for n in [8u32, 16] {
-        for g in [3usize, 5, 10] {
-            check_mul(&rapid_mul_netlist(n, g), &RapidMul::new(n, g), n, 150, n as u64 * 10 + g as u64);
+fn div4_full_pair_space_every_registry_unit() {
+    // 8/4 dividers: the full 12-bit pair space, including b = 0 and the
+    // overflow region — compiled vs scalar vs model on every pair.
+    let d = Delays::default();
+    for &name in ALL_DIVS {
+        let nl = match netlist_for_div(name, 4) {
+            Some(nl) => nl,
+            None => continue,
+        };
+        let model = make_div(name, 4).unwrap();
+        let want = |a: u64, b: u64| model.div(a, b) as u128;
+        assert_exhaustive_pairs(&nl, [8, 4], 1, &want);
+        for stages in [2usize, 4] {
+            let p = pipeline(&nl, stages, &d);
+            assert_exhaustive_pairs(&p.netlist, [8, 4], 61, &want);
         }
-        check_mul(&rapid_mul_netlist(n, 0), &MitchellMul { n }, n, 150, n as u64);
-        check_mul(&exact_mul_netlist(n), &ExactMul { n }, n, 150, n as u64 + 1);
+    }
+}
+
+#[test]
+fn mul16_sampled_every_registry_unit() {
+    // 16-bit: 16 384 sampled pairs per unit (256 packed passes), scalar
+    // cross-check every 128th pair, pipelined S=2/S=4 compiled + scalar
+    // stride — the widened sampling the compiled engine affords.
+    let d = Delays::default();
+    for (i, &name) in ALL_MULS.iter().enumerate() {
+        let nl = match netlist_for_mul(name, 16) {
+            Some(nl) => nl,
+            None => continue,
+        };
+        let model = make_mul(name, 16).unwrap();
+        let want = |a: u64, b: u64| model.mul(a, b) as u128;
+        let pairs = random_pairs(16384, 16, 16, 1000 + i as u64);
+        assert_pairs(&nl, [16, 16], &pairs, 128, &want);
+        for stages in [2usize, 4] {
+            let p = pipeline(&nl, stages, &d);
+            assert_pairs(&p.netlist, [16, 16], &pairs, 1024, &want);
+        }
+    }
+}
+
+#[test]
+fn div8_sampled_every_registry_unit() {
+    // 16/8 dividers: 16 384 sampled pairs (full-range dividend, so the
+    // zero/overflow/negative-exponent muxes are all exercised), scalar
+    // stride, plus the paper's 3-stage configuration.
+    let d = Delays::default();
+    for (i, &name) in ALL_DIVS.iter().enumerate() {
+        let nl = match netlist_for_div(name, 8) {
+            Some(nl) => nl,
+            None => continue,
+        };
+        let model = make_div(name, 8).unwrap();
+        let want = |a: u64, b: u64| model.div(a, b) as u128;
+        let pairs = random_pairs(16384, 16, 8, 2000 + i as u64);
+        assert_pairs(&nl, [16, 8], &pairs, 128, &want);
+        let p = pipeline(&nl, 3, &d);
+        assert_pairs(&p.netlist, [16, 8], &pairs, 1024, &want);
     }
 }
 
 #[test]
 fn mul_netlist_32bit_spot() {
-    check_mul(&rapid_mul_netlist(32, 10), &RapidMul::new(32, 10), 32, 60, 99);
-    check_mul(&exact_mul_netlist(32), &ExactMul { n: 32 }, 32, 40, 98);
-}
-
-#[test]
-fn div_netlists_all_widths_and_schemes() {
-    for n in [4u32, 8] {
-        for g in [3usize, 5, 9] {
-            check_div(&rapid_div_netlist(n, g), &RapidDiv::new(n, g), n, 150, 70 + n as u64 + g as u64);
-        }
-        check_div(&rapid_div_netlist(n, 0), &MitchellDiv { n }, n, 150, 80 + n as u64);
-        check_div(&exact_div_netlist(n), &ExactDiv { n }, n, 150, 90 + n as u64);
+    let d = Delays::default();
+    let model = make_mul("rapid10", 32).unwrap();
+    let want = |a: u64, b: u64| model.mul(a, b) as u128;
+    let nl = rapid_mul_netlist(32, 10);
+    let pairs = random_pairs(4096, 32, 32, 99);
+    assert_pairs(&nl, [32, 32], &pairs, 64, &want);
+    for stages in [2usize, 4] {
+        let p = pipeline(&nl, stages, &d);
+        assert_pairs(&p.netlist, [32, 32], &pairs, 512, &want);
     }
+    let exact = make_mul("exact", 32).unwrap();
+    let pairs = random_pairs(2048, 32, 32, 98);
+    assert_pairs(&netlist_for_mul("exact", 32).unwrap(), [32, 32], &pairs, 64, &|a, b| {
+        exact.mul(a, b) as u128
+    });
 }
 
 #[test]
 fn div_netlist_16bit_spot() {
-    check_div(&rapid_div_netlist(16, 9), &RapidDiv::new(16, 9), 16, 50, 97);
+    let d = Delays::default();
+    let model = make_div("rapid9", 16).unwrap();
+    let want = |a: u64, b: u64| model.div(a, b) as u128;
+    let nl = rapid_div_netlist(16, 9);
+    let pairs = random_pairs(4096, 32, 16, 97);
+    assert_pairs(&nl, [32, 16], &pairs, 64, &want);
+    let p = pipeline(&nl, 3, &d);
+    assert_pairs(&p.netlist, [32, 16], &pairs, 512, &want);
 }
 
 #[test]
 fn pipelined_ff_counts_monotone() {
     let d = Delays::default();
-    for nl in [rapid_mul_netlist(16, 10), rapid_div_netlist(8, 9), exact_mul_netlist(16)] {
+    let units = [
+        rapid_mul_netlist(16, 10),
+        rapid_div_netlist(8, 9),
+        netlist_for_mul("exact", 16).unwrap(),
+    ];
+    for nl in units {
         let p2 = pipeline(&nl, 2, &d);
         let p3 = pipeline(&nl, 3, &d);
         let p4 = pipeline(&nl, 4, &d);

@@ -1,0 +1,82 @@
+//! Registry-wide `optimize()` function-preservation property: for every
+//! `make_mul`/`make_div` name with a gate-level mapping at width 8, the
+//! synthesis cleanups (constant folding, CSE, dead-cone elimination) must
+//! not change the computed function — checked by batched random-vector
+//! equivalence on the compiled engine, against both the pre-`optimize()`
+//! netlist and the functional model. Builders run `optimize()` once
+//! internally, so the re-run here additionally pins idempotence; the
+//! pipelined variants exercise the passes on FF-bearing netlists, which
+//! no builder ever optimizes.
+
+use rapid::arith::registry::{make_div, make_mul, ALL_DIVS, ALL_MULS};
+use rapid::circuit::pipeline::pipeline;
+use rapid::circuit::primitive::Delays;
+use rapid::circuit::sim::{assert_pairs, equivalent_random};
+use rapid::circuit::synth::{netlist_for_div, netlist_for_mul};
+use rapid::util::XorShift256;
+
+/// Random operand sweep of `nl` against `want` on the compiled engine.
+fn matches_model(
+    nl: &rapid::circuit::Netlist,
+    widths: [u32; 2],
+    count: usize,
+    seed: u64,
+    want: &dyn Fn(u64, u64) -> u128,
+) {
+    let mut rng = XorShift256::new(seed);
+    let pairs: Vec<(u64, u64)> =
+        (0..count).map(|_| (rng.bits(widths[0]), rng.bits(widths[1]))).collect();
+    assert_pairs(nl, widths, &pairs, 0, want);
+}
+
+#[test]
+fn optimize_preserves_every_mul_netlist_at_width_8() {
+    for (i, &name) in ALL_MULS.iter().enumerate() {
+        let nl = match netlist_for_mul(name, 8) {
+            Some(nl) => nl,
+            None => continue, // accuracy-only model, no LUT mapping
+        };
+        let mut opt = nl.clone();
+        opt.optimize();
+        if let Err(e) = equivalent_random(&nl, &opt, 32, 0x5EED + i as u64) {
+            panic!("{name}: optimize() changed the function: {e}");
+        }
+        let model = make_mul(name, 8).unwrap();
+        matches_model(&opt, [8, 8], 1024, 0xA1 + i as u64, &|a, b| model.mul(a, b) as u128);
+    }
+}
+
+#[test]
+fn optimize_preserves_every_div_netlist_at_width_8() {
+    for (i, &name) in ALL_DIVS.iter().enumerate() {
+        let nl = match netlist_for_div(name, 8) {
+            Some(nl) => nl,
+            None => continue,
+        };
+        let mut opt = nl.clone();
+        opt.optimize();
+        if let Err(e) = equivalent_random(&nl, &opt, 32, 0xD1_5EED + i as u64) {
+            panic!("{name}: optimize() changed the function: {e}");
+        }
+        let model = make_div(name, 8).unwrap();
+        matches_model(&opt, [16, 8], 1024, 0xB2 + i as u64, &|a, b| model.div(a, b) as u128);
+    }
+}
+
+#[test]
+fn optimize_preserves_pipelined_netlists() {
+    // FF-bearing netlists: const-fold may legally swallow registers on
+    // constant nets, but the combinational function must hold.
+    let d = Delays::default();
+    for name in ["rapid10", "exact"] {
+        let nl = netlist_for_mul(name, 8).unwrap();
+        for stages in [2usize, 3] {
+            let p = pipeline(&nl, stages, &d);
+            let mut opt = p.netlist.clone();
+            opt.optimize();
+            if let Err(e) = equivalent_random(&p.netlist, &opt, 32, stages as u64) {
+                panic!("{name} P{stages}: optimize() changed the function: {e}");
+            }
+        }
+    }
+}
