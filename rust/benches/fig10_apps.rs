@@ -4,7 +4,7 @@
 //! Uses the kernel census (`apps::census`) with circuit-model unit
 //! reports, mirroring the paper's HLS swap-the-unit flow.
 
-use rapid::apps::census::rollup;
+use rapid::apps::census::rollup_all;
 use rapid::bench_support::paper;
 use rapid::bench_support::table::{f2, Table};
 use rapid::circuit::report::characterize;
@@ -27,17 +27,30 @@ fn main() {
         "Fig. 10 — end-to-end area / latency / ADP (improvement vs accurate)",
         &["app", "config", "LUTs", "lat(ns)", "ADP", "area -%", "lat -%", "ADP -%"],
     );
+    // the whole app × config grid rolls up in one parallel sweep
+    // (apps::census::rollup_all — results in input order, so the table
+    // rows are identical to the old serial nested loop)
+    let mut grid: Vec<(&str, &str, _, _)> = Vec::new();
     for app in ["pantompkins", "jpeg", "harris"] {
-        let base = rollup(app, &acc_m, &acc_d);
         for (label, m, d) in [
             ("accurate", &acc_m, &acc_d),
             ("RAPID", &rap_m, &rap_d),
             ("SIMDive-class", &sim_m, &sim_d),
         ] {
-            let r = rollup(app, m, d);
+            grid.push((app, label, m, d));
+        }
+    }
+    let flat: Vec<(&str, &rapid::circuit::report::UnitReport, &rapid::circuit::report::UnitReport)> =
+        grid.iter().map(|&(app, _, m, d)| (app, m, d)).collect();
+    let rollups = rollup_all(&flat);
+    // walk per app (3 configs each); the app's baseline is its own
+    // "accurate" row, the first config of its chunk
+    for (app_grid, app_rollups) in grid.chunks(3).zip(rollups.chunks(3)) {
+        let base = &app_rollups[0];
+        for ((app, label, _, _), r) in app_grid.iter().zip(app_rollups) {
             t.row(&[
-                app.into(),
-                label.into(),
+                (*app).into(),
+                (*label).into(),
                 r.luts.to_string(),
                 f2(r.latency_ns),
                 f2(r.adp() / 1e3),

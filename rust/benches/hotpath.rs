@@ -1,17 +1,21 @@
 //! §Perf — this repo's own hot paths (not a paper figure): throughput of
 //! the bit-accurate units (scalar dispatch vs the batched slice entry
 //! points), the error-characterisation sweeps, gate-level netlist
-//! evaluation, and the batched PJRT serving path (when artifacts exist).
-//! Records the numbers EXPERIMENTS.md §Perf tracks across optimization
-//! iterations.
+//! evaluation (scalar vs compiled vs multi-core), and the batched PJRT
+//! serving path (when artifacts exist). The scalar → batched → compiled →
+//! parallel rows form the optimization ladder EXPERIMENTS.md §Perf
+//! tracks; everything is recorded to `BENCH_hotpath.json`.
 
 use rapid::arith::registry::{make_div, make_mul};
 use rapid::bench_support::record::Recorder;
 use rapid::bench_support::table::Table;
 use rapid::circuit::netlist::Netlist;
+use rapid::circuit::power;
+use rapid::circuit::primitive::Energies;
 use rapid::circuit::sim::{pair_chunk, CompiledNetlist};
 use rapid::circuit::synth::multiplier::rapid_mul_netlist;
 use rapid::error::{characterize_mul, CharacterizeOpts};
+use rapid::util::par;
 use rapid::util::timer::{bench, black_box, fmt_ns};
 use rapid::util::XorShift256;
 
@@ -124,7 +128,73 @@ fn main() {
     t.row(&["exhaustive 8-bit netlist sweep (compiled)".into(), fmt_ns(r.median_ns), format!("{:.1} Mvecs/s", 65536.0 / (r.median_ns * 1e-9) / 1e6)]);
     rec.add("netlist_sweep_8bit_compiled", &r, 65536.0);
 
-    // 5. batched PJRT serving path (optional: needs artifacts + a real
+    // 5. the serial → parallel rung of the ladder (util::par): the same
+    //    deterministic sweeps at 1 worker vs RAPID_THREADS/all cores.
+    //    Results are bit-identical at both settings — only wall-clock
+    //    moves, which is exactly what these rows record.
+    let n_threads = par::threads();
+
+    //    5a. exhaustive 8-bit error sweep (the Table III accuracy loop)
+    let r_t1 = bench("exhaustive-8bit-char-t1", || {
+        let rep = par::with_threads(1, || characterize_mul(m8.as_ref(), &CharacterizeOpts::default()));
+        black_box(rep.are);
+    });
+    t.row(&["exhaustive 8-bit ARE sweep (1 thread)".into(), fmt_ns(r_t1.median_ns), format!("{:.1} Mpairs/s", 65025.0 / (r_t1.median_ns * 1e-9) / 1e6)]);
+    rec.add("exhaustive_8bit_are_sweep_t1", &r_t1, 65025.0);
+    let r_tn = bench("exhaustive-8bit-char-tN", || {
+        let rep = characterize_mul(m8.as_ref(), &CharacterizeOpts::default());
+        black_box(rep.are);
+    });
+    t.row(&[format!("exhaustive 8-bit ARE sweep ({n_threads} threads)"), fmt_ns(r_tn.median_ns), format!("{:.1} Mpairs/s", 65025.0 / (r_tn.median_ns * 1e-9) / 1e6)]);
+    rec.add("exhaustive_8bit_are_sweep_par", &r_tn, 65025.0);
+    t.row(&["error-sweep parallel speedup".into(), format!("{:.1}x", r_t1.median_ns / r_tn.median_ns), "-".into()]);
+
+    //    5b. switching-activity power vectors (the Table III power loop)
+    let e = Energies::default();
+    let r_t1 = bench("power-1024vec-t1", || {
+        let p = par::with_threads(1, || power::estimate(&nl, &e, 1024, 7));
+        black_box(p.charge_per_op);
+    });
+    t.row(&["power 1024 vectors (1 thread)".into(), fmt_ns(r_t1.median_ns), format!("{:.1} kvec/s", 1024.0 / (r_t1.median_ns * 1e-9) / 1e3)]);
+    rec.add("power_1024vec_t1", &r_t1, 1024.0);
+    let r_tn = bench("power-1024vec-tN", || {
+        let p = power::estimate(&nl, &e, 1024, 7);
+        black_box(p.charge_per_op);
+    });
+    t.row(&[format!("power 1024 vectors ({n_threads} threads)"), fmt_ns(r_tn.median_ns), format!("{:.1} kvec/s", 1024.0 / (r_tn.median_ns * 1e-9) / 1e3)]);
+    rec.add("power_1024vec_par", &r_tn, 1024.0);
+    t.row(&["power parallel speedup".into(), format!("{:.1}x", r_t1.median_ns / r_tn.median_ns), "-".into()]);
+
+    //    5c. the exhaustive netlist pair sweep, sharded across cores
+    let sweep_once = || {
+        let shards = par::par_chunks_init(
+            1024u64,
+            64,
+            || CompiledNetlist::compile(&nl8),
+            |sim, _c, range| {
+                let mut acc = 0u128;
+                for chunk in range {
+                    let (a, b) = pair_chunk(chunk, 8);
+                    acc ^= sim.eval_lanes(&[8, 8], &[&a, &b])[63];
+                }
+                acc
+            },
+        );
+        shards.into_iter().fold(0u128, |a, b| a ^ b)
+    };
+    let r_t1 = bench("netlist-sweep-8bit-t1", || {
+        black_box(par::with_threads(1, &sweep_once));
+    });
+    t.row(&["exhaustive 8-bit netlist sweep (1 thread)".into(), fmt_ns(r_t1.median_ns), format!("{:.1} Mvecs/s", 65536.0 / (r_t1.median_ns * 1e-9) / 1e6)]);
+    rec.add("netlist_sweep_8bit_t1", &r_t1, 65536.0);
+    let r_tn = bench("netlist-sweep-8bit-tN", || {
+        black_box(sweep_once());
+    });
+    t.row(&[format!("exhaustive 8-bit netlist sweep ({n_threads} threads)"), fmt_ns(r_tn.median_ns), format!("{:.1} Mvecs/s", 65536.0 / (r_tn.median_ns * 1e-9) / 1e6)]);
+    rec.add("netlist_sweep_8bit_par", &r_tn, 65536.0);
+    t.row(&["netlist-sweep parallel speedup".into(), format!("{:.1}x", r_t1.median_ns / r_tn.median_ns), "-".into()]);
+
+    // 6. batched PJRT serving path (optional: needs artifacts + a real
     // PJRT client — the API-stub build reports a skip row instead)
     let pjrt_client = if std::path::Path::new("artifacts/rapid_mul16.hlo.txt").exists() {
         rapid::runtime::Runtime::cpu().ok()

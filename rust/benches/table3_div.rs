@@ -13,6 +13,7 @@ use rapid::circuit::sim::{pair_chunk, CompiledNetlist};
 use rapid::circuit::synth::divider::rapid_div_netlist;
 use rapid::circuit::synth::exact_ip::exact_div_netlist;
 use rapid::error::{characterize_div, CharacterizeOpts};
+use rapid::util::par;
 
 fn accuracy(name: &str, n: u32) -> (f64, f64, f64) {
     match make_div(name, n) {
@@ -101,23 +102,36 @@ fn main() {
 
     // gate-level exhaustive equivalence on the compiled bit-parallel
     // engine: the 16/8 RAPID-9 netlist against its functional model over
-    // the FULL 2^24 pair space (262 144 packed passes) — a sweep the
-    // scalar interpreter made impractical.
+    // the FULL 2^24 pair space (262 144 packed passes), sharded across
+    // cores by the deterministic parallel engine (1 024-pass chunks, one
+    // compiled engine per worker, per-chunk mismatch counts merged in
+    // chunk order) — a sweep the scalar interpreter made impractical and
+    // a single core made slow. Honors RAPID_THREADS.
     let nl = rapid_div_netlist(8, 9);
-    let mut sim = CompiledNetlist::compile(&nl);
     let model = make_div("rapid9", 8).unwrap();
-    let mut mismatches = 0u64;
-    for chunk in 0..(1u64 << 18) {
-        let (a, b) = pair_chunk(chunk, 16);
-        let q = sim.eval_lanes(&[16, 8], &[&a, &b]);
-        for lane in 0..64 {
-            if q[lane] as u64 != model.div(a[lane], b[lane]) {
-                mismatches += 1;
+    let mismatches: u64 = par::par_chunks_init(
+        1u64 << 18,
+        1024,
+        || CompiledNetlist::compile(&nl),
+        |sim, _c, range| {
+            let mut bad = 0u64;
+            for chunk in range {
+                let (a, b) = pair_chunk(chunk, 16);
+                let q = sim.eval_lanes(&[16, 8], &[&a, &b]);
+                for lane in 0..64 {
+                    if q[lane] as u64 != model.div(a[lane], b[lane]) {
+                        bad += 1;
+                    }
+                }
             }
-        }
-    }
+            bad
+        },
+    )
+    .into_iter()
+    .sum();
     println!(
-        "gate-level exhaustive check (compiled sim, rapid9 div16/8): {} pairs swept, {mismatches} model mismatches",
+        "gate-level exhaustive check (compiled sim, rapid9 div16/8, {} threads): {} pairs swept, {mismatches} model mismatches",
+        par::threads(),
         1u64 << 24
     );
 }

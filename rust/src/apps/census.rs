@@ -14,12 +14,17 @@ use crate::coordinator::pipeline_sched::{schedule, KernelStage, UnitTiming};
 /// instantiates and how many unit-ops one input item triggers.
 #[derive(Clone, Debug)]
 pub struct KernelSpec {
+    /// Kernel name (stage label in the paper's figures).
     pub name: &'static str,
+    /// Multiplier unit instances the kernel instantiates.
     pub mul_units: usize,
+    /// Divider unit instances the kernel instantiates.
     pub div_units: usize,
     /// exact glue logic (adders, muxes, control) in LUTs
     pub glue_luts: usize,
+    /// Multiplications issued per input item.
     pub mul_ops_per_item: usize,
+    /// Divisions issued per input item.
     pub div_ops_per_item: usize,
 }
 
@@ -57,13 +62,18 @@ pub fn app_kernels(app: &str) -> Vec<KernelSpec> {
 /// End-to-end roll-up of one configuration.
 #[derive(Clone, Debug)]
 pub struct AppRollup {
+    /// Application name the roll-up describes.
     pub app: String,
+    /// Total LUTs (glue + instantiated units).
     pub luts: usize,
+    /// End-to-end latency of one item through the kernel chain (ns).
     pub latency_ns: f64,
+    /// Steady-state items per µs.
     pub throughput_per_us: f64,
 }
 
 impl AppRollup {
+    /// Area-delay product (LUTs × ns) — the Fig. 10 efficiency metric.
     pub fn adp(&self) -> f64 {
         self.luts as f64 * self.latency_ns
     }
@@ -115,6 +125,27 @@ pub fn rollup(app: &str, mul: &UnitReport, div: &UnitReport) -> AppRollup {
     }
 }
 
+/// Roll up a whole configuration grid — `(app, multiplier report,
+/// divider report)` triples — across the deterministic parallel engine,
+/// results in input order. This is the design-space-sweep shape the
+/// Fig. 10/12 benches iterate (every app × every unit design × every
+/// pipeline depth); each [`rollup`] is pure, so the fan-out is trivially
+/// bit-identical at any thread count. One rollup is microseconds of
+/// work, so configurations batch 8 per chunk — small grids (one figure's
+/// nine rows) stay on one or two workers, while a full design-space
+/// sweep spreads out.
+pub fn rollup_all(configs: &[(&str, &UnitReport, &UnitReport)]) -> Vec<AppRollup> {
+    crate::util::par::par_chunks(configs.len() as u64, 8, |_c, range| {
+        configs[range.start as usize..range.end as usize]
+            .iter()
+            .map(|&(app, mul, div)| rollup(app, mul, div))
+            .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +167,24 @@ mod tests {
             let rap = rollup(app, &rm, &rd);
             assert!(rap.luts < acc.luts, "{app}: {} !< {} LUTs", rap.luts, acc.luts);
             assert!(rap.adp() < acc.adp(), "{app} ADP");
+        }
+    }
+
+    #[test]
+    fn rollup_all_matches_individual_rollups() {
+        let m = characterize(&rapid_mul_netlist(16, 10), 1, 40, 1);
+        let d = characterize(&rapid_div_netlist(8, 9), 1, 40, 1);
+        let configs: Vec<(&str, &_, &_)> =
+            ["pantompkins", "jpeg", "harris"].iter().map(|&a| (a, &m, &d)).collect();
+        for t in [1usize, 3] {
+            let grid = crate::util::par::with_threads(t, || rollup_all(&configs));
+            assert_eq!(grid.len(), 3);
+            for (got, &(app, _, _)) in grid.iter().zip(&configs) {
+                let want = rollup(app, &m, &d);
+                assert_eq!(got.app, want.app);
+                assert_eq!(got.luts, want.luts);
+                assert_eq!(got.latency_ns.to_bits(), want.latency_ns.to_bits(), "{app} t={t}");
+            }
         }
     }
 

@@ -11,6 +11,7 @@ use super::jpeg::roundtrip;
 use super::pantompkins;
 use super::qor::{correct_vector_ratio, psnr, Sensitivity};
 
+/// Entry point of the `app` subcommand (argv = everything after it).
 pub fn run(argv: Vec<String>) {
     let args = Args::parse(argv, &["name", "mul", "div", "seconds", "images", "seed"]);
     let name = args.get_or("name", "jpeg");

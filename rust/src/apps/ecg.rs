@@ -8,6 +8,7 @@
 
 use crate::util::XorShift256;
 
+/// Synthetic ECG generator knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct EcgConfig {
     /// sample rate (Hz); Pan-Tompkins' classic design point is 200 Hz
@@ -44,6 +45,7 @@ pub struct EcgRecord {
     pub samples: Vec<i64>,
     /// ground-truth R-peak indices
     pub r_peaks: Vec<usize>,
+    /// Sample rate the record was generated at (Hz).
     pub fs: f64,
 }
 

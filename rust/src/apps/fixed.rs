@@ -7,14 +7,23 @@
 
 use crate::arith::traits::mask;
 use crate::arith::{ApproxDiv, ApproxMul};
+use crate::util::par;
+
+/// Lanes per parallel shard in the `*_batch_par` entry points: fixed so
+/// the shard decomposition never depends on the thread count (lanes are
+/// independent, so this only matters for cache behaviour, but a stable
+/// decomposition keeps profiles comparable across machines).
+const PAR_LANE_CHUNK: usize = 4096;
 
 /// Signed multiply via an unsigned unit: |a|·|b| with the product sign
 /// recombined. Saturates magnitudes into the unit's width.
 pub struct SignedMul<'a> {
+    /// The unsigned unit doing the magnitude arithmetic.
     pub unit: &'a dyn ApproxMul,
 }
 
 impl<'a> SignedMul<'a> {
+    /// Wrap an unsigned multiplier for signed/fixed-point use.
     pub fn new(unit: &'a dyn ApproxMul) -> Self {
         SignedMul { unit }
     }
@@ -80,14 +89,40 @@ impl<'a> SignedMul<'a> {
             *o = if *o >= 0 { *o >> frac } else { -((-*o) >> frac) };
         }
     }
+
+    /// Multi-core [`Self::mul_batch`]: shards `out` into
+    /// [`PAR_LANE_CHUNK`]-lane chunks across the deterministic parallel
+    /// engine. Lanes are independent, so the result is bit-identical to
+    /// the serial batch (and to the scalar loop) at every thread count.
+    /// Top-level whole-image/whole-plane kernels call this; inner loops
+    /// that already run inside a parallel region must keep calling the
+    /// serial [`Self::mul_batch`] (the engine is non-nesting).
+    pub fn mul_batch_par(&self, a: &[i64], b: &[i64], out: &mut [i64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        par::par_chunks_mut(out, PAR_LANE_CHUNK, |_c, off, o| {
+            self.mul_batch(&a[off..off + o.len()], &b[off..off + o.len()], o);
+        });
+    }
+
+    /// Multi-core [`Self::mul_q_batch`] (see [`Self::mul_batch_par`]).
+    pub fn mul_q_batch_par(&self, a: &[i64], b: &[i64], frac: u32, out: &mut [i64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        par::par_chunks_mut(out, PAR_LANE_CHUNK, |_c, off, o| {
+            self.mul_q_batch(&a[off..off + o.len()], &b[off..off + o.len()], frac, o);
+        });
+    }
 }
 
 /// Signed divide via an unsigned 2N/N unit.
 pub struct SignedDiv<'a> {
+    /// The unsigned unit doing the magnitude arithmetic.
     pub unit: &'a dyn ApproxDiv,
 }
 
 impl<'a> SignedDiv<'a> {
+    /// Wrap an unsigned divider for signed/fixed-point use.
     pub fn new(unit: &'a dyn ApproxDiv) -> Self {
         SignedDiv { unit }
     }
@@ -144,6 +179,18 @@ impl<'a> SignedDiv<'a> {
                 }
             };
         }
+    }
+
+    /// Multi-core [`Self::div_batch`]: shards `out` across the
+    /// deterministic parallel engine; bit-identical to the serial batch
+    /// (including the divide-by-zero convention) at every thread count.
+    /// See [`SignedMul::mul_batch_par`] for the nesting rule.
+    pub fn div_batch_par(&self, a: &[i64], b: &[i64], out: &mut [i64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must match");
+        assert_eq!(a.len(), out.len(), "output slice must match operands");
+        par::par_chunks_mut(out, PAR_LANE_CHUNK, |_c, off, o| {
+            self.div_batch(&a[off..off + o.len()], &b[off..off + o.len()], o);
+        });
     }
 }
 
@@ -236,6 +283,32 @@ mod tests {
         for i in 0..a.len() {
             assert_eq!(out[i], d.div(a[i], b[i]), "div lane {i}");
         }
+    }
+
+    #[test]
+    fn par_batches_match_serial_batches() {
+        // sharded entry points ≡ serial batches, across thread counts and
+        // across the PAR_LANE_CHUNK boundary (len > one chunk)
+        let um = RapidMul::new(16, 10);
+        let m = SignedMul::new(&um);
+        let ud = ExactDiv { n: 8 };
+        let d = SignedDiv::new(&ud);
+        let n = PAR_LANE_CHUNK + 333;
+        let a: Vec<i64> = (0..n as i64).map(|i| (i * 7919) % 60000 - 30000).collect();
+        let b: Vec<i64> = (0..n as i64).map(|i| (i * 104729) % 512 - 256).collect();
+        let mut serial = vec![0i64; n];
+        let mut parallel = vec![0i64; n];
+        m.mul_batch(&a, &b, &mut serial);
+        for t in [1usize, 2, 7] {
+            crate::util::par::with_threads(t, || m.mul_batch_par(&a, &b, &mut parallel));
+            assert_eq!(serial, parallel, "mul t={t}");
+        }
+        m.mul_q_batch(&a, &b, 4, &mut serial);
+        crate::util::par::with_threads(3, || m.mul_q_batch_par(&a, &b, 4, &mut parallel));
+        assert_eq!(serial, parallel, "mul_q");
+        d.div_batch(&a, &b, &mut serial);
+        crate::util::par::with_threads(3, || d.div_batch_par(&a, &b, &mut parallel));
+        assert_eq!(serial, parallel, "div");
     }
 
     #[test]

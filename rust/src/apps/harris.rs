@@ -28,8 +28,9 @@ pub fn sobel(img: &Image) -> (Vec<Vec<i64>>, Vec<Vec<i64>>) {
 /// 3×3 binomial window (adds).
 ///
 /// The gradient products are the detector's hottest loop: all three planes
-/// are computed as whole-image [`SignedMul::mul_batch`] calls (three unit
-/// dispatches per frame instead of three per pixel).
+/// are computed as whole-image [`SignedMul::mul_batch_par`] calls — one
+/// unit dispatch per 4 096-lane shard, sharded across cores, bit-identical
+/// to the scalar per-pixel loop at every thread count.
 pub fn structure_tensor(
     gx: &[Vec<i64>],
     gy: &[Vec<i64>],
@@ -47,9 +48,9 @@ pub fn structure_tensor(
     let mut pxx = vec![0i64; npix];
     let mut pyy = vec![0i64; npix];
     let mut pxy = vec![0i64; npix];
-    m.mul_batch(&ga, &ga, &mut pxx);
-    m.mul_batch(&gb, &gb, &mut pyy);
-    m.mul_batch(&ga, &gb, &mut pxy);
+    m.mul_batch_par(&ga, &ga, &mut pxx);
+    m.mul_batch_par(&gb, &gb, &mut pyy);
+    m.mul_batch_par(&ga, &gb, &mut pxy);
     let unflatten = |p: &[i64]| -> Vec<Vec<i64>> {
         (0..h).map(|y| p[y * w..(y + 1) * w].to_vec()).collect()
     };
@@ -102,12 +103,12 @@ pub fn response(
     let npix = h * w;
     let mut ab = vec![0i64; npix];
     let mut cc = vec![0i64; npix];
-    m.mul_batch(&a, &b, &mut ab);
-    m.mul_batch(&c, &c, &mut cc);
+    m.mul_batch_par(&a, &b, &mut ab);
+    m.mul_batch_par(&c, &c, &mut cc);
     let det: Vec<i64> = ab.iter().zip(&cc).map(|(&p, &q)| (p - q).max(0)).collect();
     let denom: Vec<i64> = a.iter().zip(&b).map(|(&p, &q)| (p + q) / 2 + 1).collect();
     let mut resp = vec![0i64; npix];
-    d.div_batch(&det, &denom, &mut resp);
+    d.div_batch_par(&det, &denom, &mut resp);
     (0..h).map(|y| resp[y * w..(y + 1) * w].to_vec()).collect()
 }
 

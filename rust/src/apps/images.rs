@@ -9,16 +9,21 @@ use crate::util::XorShift256;
 /// 8-bit grayscale image.
 #[derive(Clone, Debug)]
 pub struct Image {
+    /// Width in pixels.
     pub w: usize,
+    /// Height in pixels.
     pub h: usize,
-    pub px: Vec<i64>, // row-major, 0..=255
+    /// Pixels, row-major, values 0..=255.
+    pub px: Vec<i64>,
 }
 
 impl Image {
+    /// Pixel at `(x, y)` (panics out of bounds).
     pub fn at(&self, x: usize, y: usize) -> i64 {
         self.px[y * self.w + x]
     }
 
+    /// Copy out as a row-major vec-of-rows (the kernel-facing layout).
     pub fn rows(&self) -> Vec<Vec<i64>> {
         (0..self.h).map(|y| self.px[y * self.w..(y + 1) * self.w].to_vec()).collect()
     }

@@ -249,16 +249,25 @@ pub fn rle(z: &[i64; 64]) -> Vec<(u8, i64)> {
 
 /// Full encode→decode of a grayscale image; returns (reconstructed image,
 /// compressed symbol count).
+///
+/// Blocks are independent, so the image fans out across cores as 8-row
+/// bands (each band a contiguous, disjoint slice of the reconstruction
+/// buffer; per-band symbol counts merge in band order) — bit-identical to
+/// the serial block walk at every thread count. Block processing inside a
+/// band stays on the serial batched kernels ([`dct2d`], [`quantise`]); the
+/// parallel engine is non-nesting by design.
 pub fn roundtrip(img: &Image, mul: &dyn ApproxMul, div: &dyn ApproxDiv) -> (Image, usize) {
-    let mut recon = vec![0i64; img.w * img.h];
-    let mut symbols = 0usize;
-    for by in (0..img.h).step_by(8) {
-        for bx in (0..img.w).step_by(8) {
+    let (w, h) = (img.w, img.h);
+    let mut recon = vec![0i64; w * h];
+    let band_syms = crate::util::par::par_chunks_mut(&mut recon, 8 * w, |band, _off, out| {
+        let by = band as usize * 8;
+        let mut symbols = 0usize;
+        for bx in (0..w).step_by(8) {
             let mut block = [[0i64; 8]; 8];
             for r in 0..8 {
                 for c in 0..8 {
-                    let y = (by + r).min(img.h - 1);
-                    let x = (bx + c).min(img.w - 1);
+                    let y = (by + r).min(h - 1);
+                    let x = (bx + c).min(w - 1);
                     block[r][c] = img.at(x, y) - 128; // level shift
                 }
             }
@@ -271,14 +280,15 @@ pub fn roundtrip(img: &Image, mul: &dyn ApproxMul, div: &dyn ApproxDiv) -> (Imag
                 for c in 0..8 {
                     let y = by + r;
                     let x = bx + c;
-                    if y < img.h && x < img.w {
-                        recon[y * img.w + x] = (rec[r][c] + 128).clamp(0, 255);
+                    if y < h && x < w {
+                        out[(y - by) * w + x] = (rec[r][c] + 128).clamp(0, 255);
                     }
                 }
             }
         }
-    }
-    (Image { w: img.w, h: img.h, px: recon }, symbols)
+        symbols
+    });
+    (Image { w, h, px: recon }, band_syms.into_iter().sum())
 }
 
 #[cfg(test)]

@@ -30,8 +30,11 @@ pub fn psnr2d(reference: &[Vec<i64>], test: &[Vec<i64>], peak: f64) -> f64 {
 /// QRS detection quality vs ground-truth annotations.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Sensitivity {
+    /// Detections matched to a ground-truth beat.
     pub true_positives: usize,
+    /// Ground-truth beats with no matching detection.
     pub false_negatives: usize,
+    /// Detections matching no ground-truth beat.
     pub false_positives: usize,
 }
 
@@ -63,6 +66,7 @@ impl Sensitivity {
         Sensitivity { true_positives: tp, false_negatives: fne, false_positives: fp }
     }
 
+    /// Recall: TP / (TP + FN); 0 when there are no truth beats.
     pub fn sensitivity(&self) -> f64 {
         let denom = self.true_positives + self.false_negatives;
         if denom == 0 {
@@ -72,6 +76,7 @@ impl Sensitivity {
         }
     }
 
+    /// F1 score balancing missed beats and spurious detections.
     pub fn f1(&self) -> f64 {
         let tp = self.true_positives as f64;
         let denom = tp + 0.5 * (self.false_positives + self.false_negatives) as f64;

@@ -42,11 +42,14 @@ fn approx_core_div(steps: u32, a: u64, b: u64) -> u64 {
 
 /// AAXD(2k/k): `k` is the divisor window (Table III: AAXD 6/3, 8/4, 12/6).
 pub struct AaxdDiv {
+    /// Divisor width N (dividend is 2N bits).
     pub n: u32,
+    /// Truncation window width.
     pub k: u32,
 }
 
 impl AaxdDiv {
+    /// AAXD divider with divisor width `n` and window `k` (2 ≤ k ≤ n).
     pub fn new(n: u32, k: u32) -> Self {
         assert!(k >= 2 && k <= n);
         AaxdDiv { n, k }

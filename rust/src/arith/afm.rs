@@ -38,10 +38,12 @@ fn modular_mul(bits: u32, a: u64, b: u64) -> u64 {
 
 /// AFM multiplier (approximate-elementary-module design).
 pub struct AfmMul {
+    /// Operand width N (must be a power of two ≥ 2).
     pub n: u32,
 }
 
 impl AfmMul {
+    /// AFM multiplier at power-of-two width `n`.
     pub fn new(n: u32) -> Self {
         assert!(n.is_power_of_two() && n >= 2, "AFM decomposition needs power-of-two width");
         AfmMul { n }

@@ -7,12 +7,16 @@
 
 use super::traits::{check_width, mask, ApproxMul};
 
+/// DRUM-k dynamic-range unbiased multiplier.
 pub struct DrumMul {
+    /// Operand width N.
     pub n: u32,
+    /// Retained mantissa width k (DRUM-4, DRUM-6 in Table III).
     pub k: u32,
 }
 
 impl DrumMul {
+    /// DRUM multiplier with width `n` and mantissa `k` (2 ≤ k ≤ n).
     pub fn new(n: u32, k: u32) -> Self {
         assert!(k >= 2 && k <= n);
         DrumMul { n, k }

@@ -6,6 +6,7 @@ use super::traits::{check_width, mask, ApproxDiv, ApproxMul};
 
 /// Exact N×N multiplier (soft-IP functional reference).
 pub struct ExactMul {
+    /// Operand width N.
     pub n: u32,
 }
 
@@ -42,6 +43,7 @@ impl ApproxMul for ExactMul {
 /// saturates to `2^N − 1` when `dividend >= 2^N * divisor` (§IV-B), and a
 /// zero divisor saturates to all-ones.
 pub struct ExactDiv {
+    /// Divisor width N (dividend is 2N bits).
     pub n: u32,
 }
 

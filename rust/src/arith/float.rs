@@ -17,10 +17,13 @@ pub struct RapidFloatMul {
 }
 
 impl RapidFloatMul {
+    /// f32 multiplier whose 24×24 mantissa core uses `groups` coefficients.
     pub fn new(groups: usize) -> Self {
         RapidFloatMul { core: RapidMul::new(24, groups) }
     }
 
+    /// Approximate f32 product (IEEE specials handled exactly, subnormals
+    /// flush to zero).
     pub fn mul(&self, a: f32, b: f32) -> f32 {
         let (sa, ea, ma) = split(a);
         let (sb, eb, mb) = split(b);
@@ -56,10 +59,13 @@ pub struct RapidFloatDiv {
 }
 
 impl RapidFloatDiv {
+    /// f32 divider whose 48/24 mantissa core uses `groups` coefficients.
     pub fn new(groups: usize) -> Self {
         RapidFloatDiv { core: RapidDiv::new(24, groups) }
     }
 
+    /// Approximate f32 quotient (IEEE specials handled exactly,
+    /// subnormals flush to zero).
     pub fn div(&self, a: f32, b: f32) -> f32 {
         let (sa, ea, ma) = split(a);
         let (sb, eb, mb) = split(b);

@@ -8,15 +8,19 @@ use super::mitchell::{mitchell_div_batch_core, mitchell_div_core};
 use super::rapid::RapidDiv;
 use super::traits::ApproxDiv;
 
+/// INZeD near-zero-bias divider: the single-coefficient (G = 1) point of
+/// the RAPID family.
 pub struct InzedDiv {
     inner: RapidDiv,
 }
 
 impl InzedDiv {
+    /// INZeD divider with divisor width `n`.
     pub fn new(n: u32) -> Self {
         InzedDiv { inner: RapidDiv::new(n, 1) }
     }
 
+    /// The single derived correction coefficient (quantised).
     pub fn coefficient(&self) -> u64 {
         self.inner.table()[0]
     }

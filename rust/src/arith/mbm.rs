@@ -18,10 +18,12 @@ pub struct MbmMul {
 }
 
 impl MbmMul {
+    /// MBM multiplier at width `n` (the G = 1 point of the RAPID family).
     pub fn new(n: u32) -> Self {
         MbmMul { inner: RapidMul::new(n, 1) }
     }
 
+    /// The single derived correction coefficient (quantised).
     pub fn coefficient(&self) -> u64 {
         self.inner.table()[0]
     }

@@ -148,6 +148,7 @@ fn div_kernel<F: Fn(u64, u64, bool) -> u64>(n: u32, w: u32, a: u64, b: u64, coef
 /// Plain Mitchell multiplier [18] — the paper's accuracy baseline
 /// (ARE ≈ 3.8 %, Table III "Mitchell" rows).
 pub struct MitchellMul {
+    /// Operand width N.
     pub n: u32,
 }
 
@@ -168,6 +169,7 @@ impl ApproxMul for MitchellMul {
 
 /// Plain Mitchell divider [18] (ARE ≈ 4.1 %).
 pub struct MitchellDiv {
+    /// Divisor width N (dividend is 2N bits).
     pub n: u32,
 }
 

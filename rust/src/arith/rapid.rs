@@ -37,6 +37,8 @@ pub struct RapidMul {
 }
 
 impl RapidMul {
+    /// RAPID multiplier at width `n` with `g` coefficient groups
+    /// (1 ≤ g ≤ 15, widths 2..=32).
     pub fn new(n: u32, g: usize) -> Self {
         assert!((2..=32).contains(&n), "width {n} unsupported");
         assert!(g >= 1 && g <= 15);
@@ -45,10 +47,12 @@ impl RapidMul {
         RapidMul { n, scheme, table }
     }
 
+    /// Coefficient group count G.
     pub fn groups(&self) -> usize {
         self.table.len()
     }
 
+    /// The derived region scheme behind the unit.
     pub fn scheme(&self) -> &Scheme {
         self.scheme
     }
@@ -98,6 +102,8 @@ pub struct RapidDiv {
 }
 
 impl RapidDiv {
+    /// RAPID divider at divisor width `n` with `g` coefficient groups
+    /// (1 ≤ g ≤ 15, widths 2..=32).
     pub fn new(n: u32, g: usize) -> Self {
         assert!((2..=32).contains(&n), "divisor width {n} unsupported");
         assert!(g >= 1 && g <= 15);
@@ -106,14 +112,17 @@ impl RapidDiv {
         RapidDiv { n, scheme, table }
     }
 
+    /// Coefficient group count G.
     pub fn groups(&self) -> usize {
         self.table.len()
     }
 
+    /// The derived region scheme behind the unit.
     pub fn scheme(&self) -> &Scheme {
         self.scheme
     }
 
+    /// Quantised coefficient table (shared with the netlist synthesizer).
     pub fn table(&self) -> &[u64] {
         &self.table
     }

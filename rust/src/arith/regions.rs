@@ -20,6 +20,7 @@ use crate::util::stats::weighted_median;
 
 /// Fraction MSBs considered by the partitioning (paper: 4 → 16×16 grid).
 pub const F_BITS: u32 = 4;
+/// Side length of the region grid (2^[`F_BITS`]).
 pub const GRID: usize = 1 << F_BITS;
 
 /// A derived error-reduction scheme: a 16×16 map from (x1-MSBs, x2-MSBs) to
@@ -59,6 +60,7 @@ impl Scheme {
         self.grid[i][j] as usize
     }
 
+    /// Coefficient group count G.
     pub fn n_groups(&self) -> usize {
         self.coeffs.len()
     }
@@ -271,11 +273,14 @@ pub fn derive_percell_scheme(f_bits: u32, for_div: bool) -> PerCellScheme {
 /// One coefficient per (i, j) sub-region — the REALM/SIMDive strategy.
 #[derive(Clone, Debug)]
 pub struct PerCellScheme {
+    /// Fraction MSBs of the cell grid (grid side = 2^f_bits).
     pub f_bits: u32,
+    /// Per-cell coefficients, indexed `[i][j]` by operand MSBs.
     pub coeffs: Vec<Vec<f64>>,
 }
 
 impl PerCellScheme {
+    /// Coefficient of the cell the operand fractions fall in.
     pub fn coeff(&self, x1: u64, x2: u64, frac_bits: u32) -> f64 {
         let (i, j) = if frac_bits >= self.f_bits {
             ((x1 >> (frac_bits - self.f_bits)) as usize, (x2 >> (frac_bits - self.f_bits)) as usize)
@@ -284,6 +289,8 @@ impl PerCellScheme {
         };
         self.coeffs[i][j]
     }
+
+    /// Stored coefficient count (grid side squared).
     pub fn n_coeffs(&self) -> usize {
         let s = 1usize << self.f_bits;
         s * s

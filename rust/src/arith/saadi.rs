@@ -12,13 +12,16 @@ use super::traits::{check_width, mask, ApproxDiv};
 /// Fixed-point bits of the internal reciprocal datapath.
 const RBITS: u32 = 16;
 
+/// SAADI-EC reciprocal-multiplicative divider.
 pub struct SaadiDiv {
+    /// Divisor width N (dividend is 2N bits).
     pub n: u32,
     /// Newton–Raphson refinement iterations (0 = linear seed only).
     pub iters: u32,
 }
 
 impl SaadiDiv {
+    /// SAADI divider with divisor width `n` and `iters` NR refinements.
     pub fn new(n: u32, iters: u32) -> Self {
         SaadiDiv { n, iters }
     }

@@ -44,6 +44,7 @@ pub struct SimdiveMul {
 }
 
 impl SimdiveMul {
+    /// SIMDive multiplier at width `n` (F = 3 → 64 coefficients).
     pub fn new(n: u32) -> Self {
         Self::with_f(n, 3)
     }
@@ -61,6 +62,7 @@ impl SimdiveMul {
         SimdiveMul { n, f_bits, table }
     }
 
+    /// Stored coefficient count (grid side squared).
     pub fn n_coeffs(&self) -> usize {
         let s = 1usize << self.f_bits;
         s * s
@@ -105,10 +107,12 @@ pub struct SimdiveDiv {
 }
 
 impl SimdiveDiv {
+    /// SIMDive divider at divisor width `n` (F = 3 → 64 coefficients).
     pub fn new(n: u32) -> Self {
         Self::with_f(n, 3)
     }
 
+    /// Variant with an explicit cell-grid resolution (F = `f_bits` MSBs).
     pub fn with_f(n: u32, f_bits: u32) -> Self {
         let cells = div_cells(f_bits);
         let w = n - 1;
@@ -120,6 +124,7 @@ impl SimdiveDiv {
         SimdiveDiv { n, f_bits, table }
     }
 
+    /// Stored coefficient count (grid side squared).
     pub fn n_coeffs(&self) -> usize {
         let s = 1usize << self.f_bits;
         s * s

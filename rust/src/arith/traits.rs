@@ -42,6 +42,7 @@ pub trait ApproxMul: Send + Sync {
 pub trait ApproxDiv: Send + Sync {
     /// Divisor width N; the dividend width is `2*N`.
     fn divisor_width(&self) -> u32;
+    /// Dividend width (always `2 * divisor_width()`).
     fn dividend_width(&self) -> u32 {
         2 * self.divisor_width()
     }
@@ -61,14 +62,17 @@ pub trait ApproxDiv: Send + Sync {
             *o = self.div(x, y);
         }
     }
+    /// Short identifier used by the registry / reports ("rapid9", "aaxd", ...).
     fn name(&self) -> String;
+    /// True for bit-exact designs (skipped by error characterisation).
     fn is_exact(&self) -> bool {
         false
     }
 }
 
-/// Object-safe boxed aliases used by the application layer.
+/// Object-safe boxed multiplier used by the application layer.
 pub type MulUnit = Box<dyn ApproxMul>;
+/// Object-safe boxed divider used by the application layer.
 pub type DivUnit = Box<dyn ApproxDiv>;
 
 /// Validate that an operand fits its declared width (debug builds only —

@@ -6,17 +6,27 @@
 /// Virtex-7 testbed; our simulator is compared on *ratios*).
 #[derive(Clone, Copy, Debug)]
 pub struct PaperRow {
+    /// Registry-style unit name (`acc_ip_p4`, `rapid10_p4`, ...).
     pub name: &'static str,
+    /// Published LUT count.
     pub luts: u32,
+    /// Published flip-flop count.
     pub ffs: u32,
+    /// Published end-to-end latency (ns).
     pub latency_ns: f64,
+    /// Published throughput relative to the non-pipelined accurate IP.
     pub rel_tput: f64,
+    /// Published dynamic power (mW).
     pub power_mw: f64,
+    /// Published average relative error (%).
     pub are_pct: f64,
+    /// Published peak relative error (%).
     pub pre_pct: f64,
+    /// Published mean signed error (%).
     pub bias_pct: f64,
 }
 
+/// Table III, 16×16 multiplier rows.
 pub const MUL16: &[PaperRow] = &[
     PaperRow { name: "acc_ip_np", luts: 287, ffs: 64, latency_ns: 4.88, rel_tput: 1.0, power_mw: 47.81, are_pct: 0.0, pre_pct: 0.0, bias_pct: 0.0 },
     PaperRow { name: "acc_ip_p4", luts: 249, ffs: 343, latency_ns: 9.60, rel_tput: 2.03, power_mw: 150.73, are_pct: 0.0, pre_pct: 0.0, bias_pct: 0.0 },
@@ -29,6 +39,7 @@ pub const MUL16: &[PaperRow] = &[
     PaperRow { name: "afm", luts: 261, ffs: 66, latency_ns: 7.32, rel_tput: 0.67, power_mw: 44.78, are_pct: 1.34, pre_pct: 17.80, bias_pct: 1.34 },
 ];
 
+/// Table III, 16/8 divider rows.
 pub const DIV16_8: &[PaperRow] = &[
     PaperRow { name: "acc_ip_np", luts: 169, ffs: 76, latency_ns: 18.23, rel_tput: 1.0, power_mw: 17.97, are_pct: 0.0, pre_pct: 0.0, bias_pct: 0.0 },
     PaperRow { name: "acc_ip_p4", luts: 181, ffs: 168, latency_ns: 20.09, rel_tput: 3.63, power_mw: 56.21, are_pct: 0.0, pre_pct: 0.0, bias_pct: 0.0 },
@@ -45,15 +56,21 @@ pub const DIV16_8: &[PaperRow] = &[
 pub mod headline {
     /// 32-bit pipelined RAPID multiplier vs 4-stage accurate IP.
     pub const MUL32_TPUT_GAIN: f64 = 3.3;
+    /// Multiplier throughput-per-Watt gain at 32 bit.
     pub const MUL32_TPUT_PER_WATT_GAIN: f64 = 2.3;
+    /// Multiplier LUT saving at 32 bit (fraction).
     pub const MUL32_LUT_SAVING: f64 = 0.52;
     /// 32/16 pipelined RAPID divider vs 4-stage accurate IP.
     pub const DIV32_TPUT_GAIN: f64 = 5.1;
+    /// Divider throughput-per-Watt gain at 32/16.
     pub const DIV32_TPUT_PER_WATT_GAIN: f64 = 6.8;
+    /// Divider LUT saving at 32/16 (fraction).
     pub const DIV32_LUT_SAVING: f64 = 0.31;
-    /// End-to-end app improvements (up to): area, latency, ADP.
+    /// End-to-end app area improvement, up to (fraction).
     pub const APP_AREA: f64 = 0.35;
+    /// End-to-end app latency improvement, up to (fraction).
     pub const APP_LATENCY: f64 = 0.33;
+    /// End-to-end app area-delay-product improvement, up to (fraction).
     pub const APP_ADP: f64 = 0.45;
 }
 

@@ -21,6 +21,7 @@ struct Row {
 }
 
 impl Recorder {
+    /// Empty recorder for the named bench (`"hotpath"` → `BENCH_hotpath.json`).
     pub fn new(bench: &str) -> Self {
         Recorder { bench: bench.to_string(), rows: Vec::new() }
     }

@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -17,15 +18,18 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header column count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// [`Self::row`] taking an owned cell vector.
     pub fn rowf(&mut self, cells: Vec<String>) {
         self.row(&cells);
     }
 
+    /// Print the title, headers and column-aligned rows to stdout.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -55,16 +59,19 @@ pub fn vs_paper(measured: f64, paper: f64) -> String {
     format!("{measured:.2} (paper {paper:.2})")
 }
 
-/// Shorthand numeric formatting.
+/// Shorthand numeric formatting: one decimal.
 pub fn f1(x: f64) -> String {
     format!("{x:.1}")
 }
+/// Shorthand numeric formatting: two decimals.
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
 }
+/// Shorthand numeric formatting: three decimals.
 pub fn f3(x: f64) -> String {
     format!("{x:.3}")
 }
+/// Format a fraction as a percentage with two decimals.
 pub fn pct(x: f64) -> String {
     format!("{:.2}%", x * 100.0)
 }

@@ -8,6 +8,7 @@ use super::synth::divider::rapid_div_netlist;
 use super::synth::exact_ip::{exact_div_netlist, exact_mul_netlist};
 use super::synth::multiplier::rapid_mul_netlist;
 
+/// Entry point of the `synth` subcommand (argv = everything after it).
 pub fn run(argv: Vec<String>) {
     let args = Args::parse(argv, &["unit", "width", "stages", "vectors"]);
     let unit = args.get_or("unit", "rapid10");

@@ -9,11 +9,15 @@ use super::primitive::{Cell, Net};
 pub struct Netlist {
     /// number of nets allocated
     pub n_nets: u32,
+    /// Cells in definition (topological) order — the evaluation order.
     pub cells: Vec<Cell>,
+    /// Primary input nets, in declaration order.
     pub inputs: Vec<Net>,
+    /// Primary output nets, in declaration order.
     pub outputs: Vec<Net>,
     /// nets tied to constants: (net, value)
     pub consts: Vec<(Net, bool)>,
+    /// Human-readable identifier used in reports and assertion messages.
     pub name: String,
     /// LUTs absorbed into fractured LUT6 pairs (O5/O6 dual outputs): a
     /// builder that maps two ≤5-input functions of shared inputs onto one
@@ -23,30 +27,36 @@ pub struct Netlist {
 }
 
 impl Netlist {
+    /// Empty named netlist.
     pub fn new(name: &str) -> Self {
         Netlist { name: name.to_string(), ..Default::default() }
     }
 
+    /// Allocate one fresh net.
     pub fn net(&mut self) -> Net {
         let id = self.n_nets;
         self.n_nets += 1;
         id
     }
 
+    /// Allocate `count` fresh nets.
     pub fn nets(&mut self, count: usize) -> Vec<Net> {
         (0..count).map(|_| self.net()).collect()
     }
 
+    /// Allocate and register one primary input.
     pub fn input(&mut self) -> Net {
         let n = self.net();
         self.inputs.push(n);
         n
     }
 
+    /// Allocate a `width`-bit primary input bus (LSB first).
     pub fn input_bus(&mut self, width: u32) -> Vec<Net> {
         (0..width).map(|_| self.input()).collect()
     }
 
+    /// Allocate a net tied to a constant value.
     pub fn constant(&mut self, value: bool) -> Net {
         let n = self.net();
         self.consts.push((n, value));
@@ -88,6 +98,7 @@ impl Netlist {
         q
     }
 
+    /// Declare the primary outputs (replaces any previous set).
     pub fn set_outputs(&mut self, outs: &[Net]) {
         self.outputs = outs.to_vec();
     }
@@ -106,6 +117,7 @@ impl Netlist {
             .saturating_sub(self.absorbed_luts)
     }
 
+    /// Individual carry-chain bits (MUXCY/XORCY pairs).
     pub fn count_carry_bits(&self) -> usize {
         self.cells.iter().filter(|c| matches!(c, Cell::CarryBit { .. })).count()
     }
@@ -115,6 +127,7 @@ impl Netlist {
         (self.count_carry_bits() + 3) / 4
     }
 
+    /// Pipeline registers (FDREs).
     pub fn count_ffs(&self) -> usize {
         self.cells.iter().filter(|c| matches!(c, Cell::Ff { .. })).count()
     }

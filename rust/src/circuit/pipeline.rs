@@ -16,7 +16,9 @@ use super::timing::{arrival_times, arrival_times_opts};
 /// Result of pipelining a netlist.
 #[derive(Clone, Debug)]
 pub struct Pipelined {
+    /// The registered netlist (FDREs inserted on stage-crossing nets).
     pub netlist: Netlist,
+    /// Stage count the cut targeted.
     pub stages: usize,
     /// measured per-stage combinational delay (ns), Fig. 4 style
     pub stage_delays: Vec<f64>,

@@ -7,15 +7,21 @@
 //! Simulation runs on the compiled bit-parallel engine (`circuit::sim`):
 //! 64 consecutive random vectors per pass, with toggles counted word-wide
 //! as `((w ^ (w >> 1)) & mask).count_ones()` per monitored net instead of
-//! a branch per net per vector. The random vector stream (and hence the
-//! counted toggle set) is drawn in exactly the order the scalar
-//! implementation used, so reported charges are reproducible run-to-run
-//! and seed-compatible across the refactor.
+//! a branch per net per vector.
+//!
+//! Random vector *v* is a pure function of `(seed, v)` — its bits come
+//! from the split stream `XorShift256::new(seed).split(v)` — so any
+//! transition range can be evaluated independently: the transition space
+//! shards into fixed-size parallel chunks ([`crate::util::par`]), each
+//! chunk re-deriving its boundary reference vector locally, and per-chunk
+//! charges merge in canonical chunk order. Key invariant: the reported
+//! charge is **bit-identical at every `RAPID_THREADS` value**, pinned by
+//! `tests/par_determinism.rs` and the scalar-reference unit test below.
 
 use super::netlist::Netlist;
 use super::primitive::{Cell, Energies};
 use super::sim::CompiledNetlist;
-use crate::util::XorShift256;
+use crate::util::{par, XorShift256};
 
 /// Dynamic-power estimate of one netlist.
 #[derive(Clone, Copy, Debug)]
@@ -39,58 +45,94 @@ impl PowerReport {
     }
 }
 
-/// Estimate switching activity over `vectors` random input transitions.
-pub fn estimate(nl: &Netlist, e: &Energies, vectors: usize, seed: u64) -> PowerReport {
-    let mut rng = XorShift256::new(seed);
-    let n_in = nl.inputs.len();
-    let mut sim = CompiledNetlist::compile(nl);
-    // monitored nets: (slot, charge per toggle) — every cell output is
-    // mapped by the lowering, so the unwraps are total.
-    let mut mon: Vec<(u32, f64)> = Vec::new();
-    for cell in &nl.cells {
-        match cell {
-            Cell::Lut { out, .. } => mon.push((sim.net_slot(*out).unwrap(), e.lut_toggle)),
-            Cell::CarryBit { o, co, .. } => {
-                mon.push((sim.net_slot(*o).unwrap(), e.carry_toggle));
-                mon.push((sim.net_slot(*co).unwrap(), e.carry_toggle));
-            }
-            Cell::Ff { q, .. } => mon.push((sim.net_slot(*q).unwrap(), e.ff_clock)),
-        }
-    }
+/// Transitions per parallel chunk: fixed (never thread-derived) so the
+/// chunk decomposition — and with it the f64 charge association — is
+/// identical no matter how many workers run it.
+const POWER_CHUNK: u64 = 256;
 
-    let mut charge = 0.0f64;
-    // lane l of a pass = vector (passes_so_far*64 + l); transitions are
-    // counted between consecutive lanes within a word plus the seam to
-    // the previous pass's last lane.
-    let mut last_bits: Vec<u64> = vec![0; mon.len()];
-    let mut have_prev = false;
-    let mut remaining = vectors + 1; // + the initial reference vector
-    let mut words = vec![0u64; n_in];
-    while remaining > 0 {
-        let m = remaining.min(64);
-        words.fill(0);
-        // same draw order as the scalar path: vector by vector, bit by bit
-        for lane in 0..m {
-            for w in words.iter_mut() {
-                if rng.next_u64() & 1 == 1 {
-                    *w |= 1u64 << lane;
-                }
-            }
+/// Pour random vector `v` (derived from `base.split(v)`, bit *i* of the
+/// vector from draw *i* of that stream) into lane `lane` of `words`.
+#[inline]
+fn pour_vector(base: &XorShift256, v: u64, lane: usize, words: &mut [u64]) {
+    let mut rng = base.split(v);
+    for w in words.iter_mut() {
+        if rng.next_u64() & 1 == 1 {
+            *w |= 1u64 << lane;
         }
-        sim.eval_words(&words);
-        let within_mask: u64 = if m >= 2 { (1u64 << (m - 1)) - 1 } else { 0 };
-        for (j, &(slot, en)) in mon.iter().enumerate() {
-            let w = sim.slot_word(slot);
-            let mut toggles = ((w ^ (w >> 1)) & within_mask).count_ones();
-            if have_prev && (w & 1) != last_bits[j] {
-                toggles += 1; // seam between passes
-            }
-            charge += toggles as f64 * en;
-            last_bits[j] = (w >> (m - 1)) & 1;
-        }
-        have_prev = true;
-        remaining -= m;
     }
+}
+
+/// Estimate switching activity over `vectors` random input transitions.
+///
+/// Transition *t* is counted between vectors *t* and *t + 1* (vector 0 is
+/// the reference). The transition range fans out in [`POWER_CHUNK`]-sized
+/// chunks; a chunk evaluates its vectors in 64-lane passes, counting
+/// within-pass toggles word-wide plus the seam to the previous pass, and
+/// its first vector *is* the previous chunk's last — re-derived locally,
+/// since vectors are indexed, not streamed. Charges merge in chunk order.
+pub fn estimate(nl: &Netlist, e: &Energies, vectors: usize, seed: u64) -> PowerReport {
+    let base = XorShift256::new(seed);
+    let n_in = nl.inputs.len();
+    // monitored nets: (slot, charge per toggle) — every cell output is
+    // mapped by the lowering, so the unwraps are total. Slots are a pure
+    // function of the netlist, so each worker derives the identical list
+    // from its own compile (one compile per worker, none up front).
+    let monitored = |sim: &CompiledNetlist| -> Vec<(u32, f64)> {
+        let mut mon = Vec::new();
+        for cell in &nl.cells {
+            match cell {
+                Cell::Lut { out, .. } => mon.push((sim.net_slot(*out).unwrap(), e.lut_toggle)),
+                Cell::CarryBit { o, co, .. } => {
+                    mon.push((sim.net_slot(*o).unwrap(), e.carry_toggle));
+                    mon.push((sim.net_slot(*co).unwrap(), e.carry_toggle));
+                }
+                Cell::Ff { q, .. } => mon.push((sim.net_slot(*q).unwrap(), e.ff_clock)),
+            }
+        }
+        mon
+    };
+
+    let charge: f64 = par::par_chunks_init(
+        vectors as u64,
+        POWER_CHUNK,
+        || {
+            let sim = CompiledNetlist::compile(nl);
+            let mon = monitored(&sim);
+            (sim, vec![0u64; n_in], mon)
+        },
+        |state, _c, range| {
+            let (sim, words, mon) = state;
+            let mut chunk_charge = 0.0f64;
+            let mut last_bits: Vec<u64> = vec![0; mon.len()];
+            let mut have_prev = false;
+            // vectors range.start ..= range.end, i.e. the chunk's
+            // transitions plus the boundary reference vector
+            let mut v = range.start;
+            while v <= range.end {
+                let m = ((range.end - v + 1) as usize).min(64);
+                words.fill(0);
+                for lane in 0..m {
+                    pour_vector(&base, v + lane as u64, lane, words);
+                }
+                sim.eval_words(words);
+                let within_mask: u64 = if m >= 2 { (1u64 << (m - 1)) - 1 } else { 0 };
+                for (j, &(slot, en)) in mon.iter().enumerate() {
+                    let w = sim.slot_word(slot);
+                    let mut toggles = ((w ^ (w >> 1)) & within_mask).count_ones();
+                    if have_prev && (w & 1) != last_bits[j] {
+                        toggles += 1; // seam between passes
+                    }
+                    chunk_charge += toggles as f64 * en;
+                    last_bits[j] = (w >> (m - 1)) & 1;
+                }
+                have_prev = true;
+                v += m as u64;
+            }
+            chunk_charge
+        },
+    )
+    .into_iter()
+    .sum();
 
     let ffs = nl.count_ffs() as f64;
     PowerReport {
@@ -133,9 +175,12 @@ mod tests {
 
     #[test]
     fn packed_toggle_count_matches_scalar_reference() {
-        // Re-implement the pre-refactor per-bool walk and pin the packed
-        // estimator's toggle arithmetic against it (integer-exact; the
-        // f64 charge sum differs only in association order).
+        // Re-implement a scalar per-bool walk over the same indexed
+        // vector derivation and pin the packed, chunked estimator's
+        // toggle arithmetic against it (integer-exact; the f64 charge
+        // sum differs only in association order). The vector counts
+        // straddle the 64-lane pass boundary and the 256-transition
+        // parallel chunk boundary.
         let e = Energies {
             lut_toggle: 1.0,
             carry_toggle: 1.0,
@@ -143,18 +188,20 @@ mod tests {
             clock_per_ff: 0.0,
         };
         let nl = binary_adder_netlist(6);
-        for (vectors, seed) in [(1usize, 5u64), (63, 6), (64, 7), (65, 8), (200, 9)] {
+        let n_in = nl.inputs.len();
+        for (vectors, seed) in [(1usize, 5u64), (63, 6), (64, 7), (65, 8), (200, 9), (300, 10)] {
             let packed = estimate(&nl, &e, vectors, seed);
-            // scalar reference: identical RNG stream, per-vector eval
-            let mut rng = XorShift256::new(seed);
-            let n_in = nl.inputs.len();
-            let rand_vec = |rng: &mut XorShift256| -> Vec<bool> {
+            // scalar reference: vector v from base.split(v), bit i from
+            // draw i — the derivation `estimate` documents
+            let base = XorShift256::new(seed);
+            let rand_vec = |v: u64| -> Vec<bool> {
+                let mut rng = base.split(v);
                 (0..n_in).map(|_| rng.next_u64() & 1 == 1).collect()
             };
-            let mut prev = nl.eval(&rand_vec(&mut rng));
+            let mut prev = nl.eval(&rand_vec(0));
             let mut toggles = 0u64;
-            for _ in 0..vectors {
-                let cur = nl.eval(&rand_vec(&mut rng));
+            for v in 0..vectors {
+                let cur = nl.eval(&rand_vec(v as u64 + 1));
                 for cell in &nl.cells {
                     let outs: Vec<u32> = match cell {
                         Cell::Lut { out, .. } => vec![*out],
@@ -175,6 +222,24 @@ mod tests {
                 "vectors={vectors}: packed {} vs scalar {}",
                 packed.charge_per_op,
                 want
+            );
+        }
+    }
+
+    #[test]
+    fn charge_is_thread_count_invariant() {
+        // the determinism pin at unit granularity: 1 ≡ 2 ≡ 7 workers,
+        // bit for bit (per-vector derived streams + chunk-order merge)
+        use crate::util::par;
+        let e = Energies::default();
+        let nl = binary_adder_netlist(8);
+        let reference = par::with_threads(1, || estimate(&nl, &e, 700, 42));
+        for t in [2usize, 7] {
+            let p = par::with_threads(t, || estimate(&nl, &e, 700, 42));
+            assert_eq!(
+                p.charge_per_op.to_bits(),
+                reference.charge_per_op.to_bits(),
+                "threads={t}"
             );
         }
     }

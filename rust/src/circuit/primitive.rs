@@ -58,8 +58,11 @@ impl Default for Delays {
 /// scale maps them to mW against the accurate-IP power rows).
 #[derive(Clone, Copy, Debug)]
 pub struct Energies {
+    /// Charge per LUT output toggle.
     pub lut_toggle: f64,
+    /// Charge per carry o/co toggle (the fast spine is cheap).
     pub carry_toggle: f64,
+    /// Charge per FF output toggle.
     pub ff_clock: f64,
     /// static-ish per-LUT leakage share of dynamic clock tree
     pub clock_per_ff: f64,

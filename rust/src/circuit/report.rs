@@ -13,12 +13,19 @@ use super::timing::{critical_path, min_clock};
 /// (47.8 mW at its own clock); every other row is then a prediction.
 pub const POWER_SCALE_MW: f64 = 0.00086;
 
+/// The circuit half of one Table III row: resources, timing, throughput
+/// and power of one synthesized unit at one pipeline depth.
 #[derive(Clone, Debug)]
 pub struct UnitReport {
+    /// Netlist name plus pipeline suffix (`rapid10_mul16_p4`, ...).
     pub name: String,
+    /// Pipeline stages (1 = combinational).
     pub stages: usize,
+    /// LUT count after absorption.
     pub luts: usize,
+    /// CARRY4 blocks (4 carry bits each, rounded up).
     pub carry4: usize,
+    /// Flip-flop count (IO + pipeline registers).
     pub ffs: usize,
     /// end-to-end latency of one datum (ns)
     pub latency_ns: f64,
@@ -38,10 +45,12 @@ pub struct UnitReport {
 }
 
 impl UnitReport {
+    /// Results per µs per mW — the paper's efficiency headline metric.
     pub fn throughput_per_watt(&self) -> f64 {
         self.throughput_per_us / self.power_mw.max(1e-9)
     }
 
+    /// One-line human-readable Table III row.
     pub fn row(&self) -> String {
         format!(
             "{:<22} S={} LUT={:<5} FF={:<5} lat={:6.2}ns clk={:5.2}ns tput={:6.1}/µs P={:7.2}mW E/op={:7.2} T/W={:7.3}",

@@ -28,7 +28,7 @@ use std::collections::HashMap;
 
 use super::netlist::Netlist;
 use super::primitive::{Cell, Net};
-use crate::util::XorShift256;
+use crate::util::{par, XorShift256};
 
 /// Dense-slot word operation. `dst`/sources index the state vector; the
 /// op list is the whole program for one 64-lane pass.
@@ -87,6 +87,15 @@ pub fn pair_chunk(chunk: u64, bits_a: u32) -> ([u64; 64], [u64; 64]) {
     (a, b)
 }
 
+/// Pair-space oracle closure: `Sync` so the sweep helpers can fan it out
+/// across the deterministic parallel engine's workers.
+pub type PairOracle<'a> = &'a (dyn Fn(u64, u64) -> u128 + Sync);
+
+/// 64-lane passes per parallel task in the sweep helpers (64 Ki pairs):
+/// coarse enough to amortise one `CompiledNetlist::compile` per worker,
+/// fixed so the task decomposition never depends on the thread count.
+const SWEEP_TASK_PASSES: u64 = 1024;
+
 /// One packed pass of `check`: every lane of `(a, b)` against `want`.
 fn check_lanes(
     nl: &Netlist,
@@ -94,7 +103,7 @@ fn check_lanes(
     widths: [u32; 2],
     a: &[u64],
     b: &[u64],
-    want: &dyn Fn(u64, u64) -> u128,
+    want: PairOracle,
 ) {
     let got = sim.eval_lanes(&widths, &[a, b]);
     for (lane, (&av, &bv)) in a.iter().zip(b).enumerate() {
@@ -104,42 +113,57 @@ fn check_lanes(
 
 /// Strided scalar-interpreter re-check (stride 0 = skip) — combined with
 /// the packed sweep against the same `want`, this pins compiled ≡ scalar.
+/// The sampled pairs fan out in 4 096-pair parallel chunks (the scalar
+/// interpreter is the slow half of a full-space sweep); assertion panics
+/// carry their pair in the payload either way.
 fn scalar_stride_recheck(
     nl: &Netlist,
     widths: [u32; 2],
     stride: usize,
     pairs: impl Iterator<Item = (u64, u64)>,
-    want: &dyn Fn(u64, u64) -> u128,
+    want: PairOracle,
 ) {
     if stride == 0 {
         return;
     }
-    for (av, bv) in pairs.step_by(stride) {
-        let bits = Netlist::pack_inputs(&widths, &[av, bv]);
-        assert_eq!(nl.eval_outputs(&bits), want(av, bv), "{}: a={av} b={bv} (scalar)", nl.name);
-    }
+    let sampled: Vec<(u64, u64)> = pairs.step_by(stride).collect();
+    par::par_chunks(sampled.len() as u64, 4096, |_c, range| {
+        for &(av, bv) in &sampled[range.start as usize..range.end as usize] {
+            let bits = Netlist::pack_inputs(&widths, &[av, bv]);
+            assert_eq!(nl.eval_outputs(&bits), want(av, bv), "{}: a={av} b={bv} (scalar)", nl.name);
+        }
+    });
 }
 
 /// Sweep an explicit operand-pair list through the compiled engine in
 /// 64-lane passes, asserting every pair against `want`; additionally
 /// re-check every `scalar_stride`-th pair on the scalar interpreter
-/// (0 = skip). Shared by the sampled integration sweeps.
+/// (0 = skip). Shared by the sampled integration sweeps. The pair list
+/// splits into [`SWEEP_TASK_PASSES`]-pass parallel tasks, each worker
+/// compiling its own engine instance; pass/fail and panic messages are
+/// identical at every thread count (a pure pair-indexed assertion).
 pub fn assert_pairs(
     nl: &Netlist,
     widths: [u32; 2],
     pairs: &[(u64, u64)],
     scalar_stride: usize,
-    want: &dyn Fn(u64, u64) -> u128,
+    want: PairOracle,
 ) {
-    let mut sim = CompiledNetlist::compile(nl);
-    for chunk in pairs.chunks(64) {
-        let (mut a, mut b) = ([0u64; 64], [0u64; 64]);
-        for (l, &(av, bv)) in chunk.iter().enumerate() {
-            a[l] = av;
-            b[l] = bv;
-        }
-        check_lanes(nl, &mut sim, widths, &a[..chunk.len()], &b[..chunk.len()], want);
-    }
+    par::par_chunks_init(
+        pairs.len() as u64,
+        SWEEP_TASK_PASSES * 64,
+        || CompiledNetlist::compile(nl),
+        |sim, _t, range| {
+            for chunk in pairs[range.start as usize..range.end as usize].chunks(64) {
+                let (mut a, mut b) = ([0u64; 64], [0u64; 64]);
+                for (l, &(av, bv)) in chunk.iter().enumerate() {
+                    a[l] = av;
+                    b[l] = bv;
+                }
+                check_lanes(nl, sim, widths, &a[..chunk.len()], &b[..chunk.len()], want);
+            }
+        },
+    );
     scalar_stride_recheck(nl, widths, scalar_stride, pairs.iter().copied(), want);
 }
 
@@ -148,20 +172,30 @@ pub fn assert_pairs(
 /// allocation-free), asserting every pair against `want`; additionally
 /// re-check every `scalar_stride`-th pair on the scalar interpreter
 /// (0 = skip). Shared by the builder unit tests and the integration
-/// equivalence suite so the sweep arithmetic exists exactly once.
+/// equivalence suite so the sweep arithmetic exists exactly once. The
+/// pass space shards into [`SWEEP_TASK_PASSES`]-pass parallel tasks
+/// (one compiled engine per worker) — this is what makes the full
+/// 2^24-pair divider sweeps in `table3_div` and the 65 536-pair
+/// registry sweeps in `tests/netlist_equivalence.rs` scale with cores.
 pub fn assert_exhaustive_pairs(
     nl: &Netlist,
     widths: [u32; 2],
     scalar_stride: usize,
-    want: &dyn Fn(u64, u64) -> u128,
+    want: PairOracle,
 ) {
     let total = widths[0] + widths[1];
     assert!((6..=32).contains(&total), "{}: {total}-bit pair space", nl.name);
-    let mut sim = CompiledNetlist::compile(nl);
-    for chunk in 0..(1u64 << (total - 6)) {
-        let (a, b) = pair_chunk(chunk, widths[0]);
-        check_lanes(nl, &mut sim, widths, &a, &b, want);
-    }
+    par::par_chunks_init(
+        1u64 << (total - 6),
+        SWEEP_TASK_PASSES,
+        || CompiledNetlist::compile(nl),
+        |sim, _t, range| {
+            for chunk in range {
+                let (a, b) = pair_chunk(chunk, widths[0]);
+                check_lanes(nl, sim, widths, &a, &b, want);
+            }
+        },
+    );
     let mask = (1u64 << widths[0]) - 1;
     let every_pair = (0..(1u64 << total)).map(|p| (p & mask, p >> widths[0]));
     scalar_stride_recheck(nl, widths, scalar_stride, every_pair, want);
@@ -254,10 +288,12 @@ impl CompiledNetlist {
         }
     }
 
+    /// Input bit count (one word per input bit in [`Self::eval_words`]).
     pub fn n_inputs(&self) -> usize {
         self.input_slots.len()
     }
 
+    /// Output bit count (one word per output bit per pass).
     pub fn n_outputs(&self) -> usize {
         self.output_slots.len()
     }
@@ -501,37 +537,58 @@ impl Builder {
     }
 }
 
+/// Random passes per parallel chunk in [`equivalent_random`]: each chunk
+/// draws from its own split stream keyed by the chunk index, so the
+/// drawn vectors — and with them the verdict *and* the mismatch message —
+/// are a pure function of `(seed, passes)`, never of the thread count.
+const EQ_CHUNK_PASSES: u64 = 8;
+
 /// Batched random equivalence of two netlists with identical interfaces:
 /// `passes` packed passes of 64 fully random lanes each. Used by the
 /// pipeliner's debug self-check, the `optimize()` preservation property
 /// and the integration equivalence suite. Returns the first mismatching
-/// lane's input assignment on failure.
+/// lane's input assignment on failure — "first" in canonical chunk/pass
+/// order, which keeps the reported counterexample deterministic under
+/// parallel execution. Pass chunks shard across workers (each compiling
+/// its own engine pair); small `passes` counts (the pipeliner's debug
+/// check uses 4) stay on the calling thread.
 pub fn equivalent_random(a: &Netlist, b: &Netlist, passes: usize, seed: u64) -> Result<(), String> {
     assert_eq!(a.inputs.len(), b.inputs.len(), "{} vs {}: input arity", a.name, b.name);
     assert_eq!(a.outputs.len(), b.outputs.len(), "{} vs {}: output arity", a.name, b.name);
-    let mut sa = CompiledNetlist::compile(a);
-    let mut sb = CompiledNetlist::compile(b);
-    let mut rng = XorShift256::new(seed);
-    let mut words = vec![0u64; a.inputs.len()];
-    for pass in 0..passes {
-        for w in words.iter_mut() {
-            *w = rng.next_u64();
-        }
-        let oa = sa.eval_words(&words).to_vec();
-        let ob = sb.eval_words(&words);
-        for (i, (wa, wb)) in oa.iter().zip(ob).enumerate() {
-            if wa != wb {
-                let lane = (wa ^ wb).trailing_zeros();
-                let bits: Vec<u8> =
-                    words.iter().map(|w| ((w >> lane) & 1) as u8).collect();
-                return Err(format!(
-                    "{} vs {}: output bit {i} differs (pass {pass}, lane {lane}, inputs {bits:?})",
-                    a.name, b.name
-                ));
+    let n_in = a.inputs.len();
+    let base = XorShift256::new(seed);
+    let mismatches: Vec<Option<String>> = par::par_chunks_init(
+        passes as u64,
+        EQ_CHUNK_PASSES,
+        || (CompiledNetlist::compile(a), CompiledNetlist::compile(b), vec![0u64; n_in]),
+        |state, c, range| {
+            let (sa, sb, words) = state;
+            let mut rng = base.split(c);
+            for pass in range {
+                for w in words.iter_mut() {
+                    *w = rng.next_u64();
+                }
+                let oa = sa.eval_words(words).to_vec();
+                let ob = sb.eval_words(words);
+                for (i, (wa, wb)) in oa.iter().zip(ob).enumerate() {
+                    if wa != wb {
+                        let lane = (wa ^ wb).trailing_zeros();
+                        let bits: Vec<u8> =
+                            words.iter().map(|w| ((w >> lane) & 1) as u8).collect();
+                        return Some(format!(
+                            "{} vs {}: output bit {i} differs (pass {pass}, lane {lane}, inputs {bits:?})",
+                            a.name, b.name
+                        ));
+                    }
+                }
             }
-        }
+            None
+        },
+    );
+    match mismatches.into_iter().flatten().next() {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
-    Ok(())
 }
 
 #[cfg(test)]

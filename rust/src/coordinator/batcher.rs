@@ -9,7 +9,9 @@ use std::time::{Duration, Instant};
 /// One packed batch plus bookkeeping to route results back.
 #[derive(Debug)]
 pub struct Batch {
+    /// First operand lanes, padded to the batch capacity.
     pub a: Vec<i64>,
+    /// Second operand lanes, padded to the batch capacity.
     pub b: Vec<i64>,
     /// (request id, offset in batch, length, offset within the request) —
     /// the last field reassembles split requests regardless of the order
@@ -30,6 +32,8 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// Batcher producing `capacity`-lane batches, flushing open batches
+    /// after `max_wait`.
     pub fn new(capacity: usize, max_wait: Duration) -> Self {
         DynamicBatcher {
             capacity,
@@ -41,6 +45,7 @@ impl DynamicBatcher {
         }
     }
 
+    /// Lanes waiting in the open (unflushed) batch.
     pub fn pending(&self) -> usize {
         self.cur_a.len()
     }

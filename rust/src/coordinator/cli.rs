@@ -27,8 +27,11 @@ use super::router::{
 /// Factory building one PJRT client + compiled artifact per worker thread
 /// (xla handles are not `Send`, so each worker owns its own).
 pub struct PjrtExecutorFactory {
+    /// Directory holding `*.hlo.txt` artifacts + `schemes/`.
     pub artifacts_dir: String,
+    /// Artifact stem to serve (e.g. `rapid_mul16`).
     pub artifact: String,
+    /// Compiled batch shape of the artifact.
     pub batch: usize,
 }
 
@@ -82,6 +85,7 @@ impl Executor for PjrtExecutor {
     }
 }
 
+/// Entry point of the `serve` subcommand (argv = everything after it).
 pub fn run(argv: Vec<String>) {
     let args = Args::parse(
         argv,

@@ -7,12 +7,18 @@ use std::time::Duration;
 /// Fixed log2 latency histogram (ns buckets from 1µs to ~4s).
 const BUCKETS: usize = 24;
 
+/// Counters and latency histogram shared by leader, workers and callers.
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests submitted.
     pub requests: AtomicU64,
+    /// Operand elements submitted across all requests.
     pub elements: AtomicU64,
+    /// Batches dispatched to workers.
     pub batches: AtomicU64,
+    /// Zero-padding elements added to short batches.
     pub padded_elements: AtomicU64,
+    /// Requests rejected by backpressure (`try_submit` on a full queue).
     pub rejected: AtomicU64,
     hist: [AtomicU64; BUCKETS],
     lat_sum_ns: AtomicU64,
@@ -20,20 +26,24 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// All-zero metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one submitted request of `elements` operand lanes.
     pub fn record_request(&self, elements: usize) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.elements.fetch_add(elements as u64, Ordering::Relaxed);
     }
 
+    /// Count one dispatched batch (`used` live lanes of `capacity`).
     pub fn record_batch(&self, used: usize, capacity: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded_elements.fetch_add((capacity - used) as u64, Ordering::Relaxed);
     }
 
+    /// Record one span's submit-to-reply latency.
     pub fn record_latency(&self, d: Duration) {
         let ns = d.as_nanos() as u64;
         self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
@@ -42,6 +52,7 @@ impl Metrics {
         self.hist[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one backpressure rejection.
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
@@ -64,6 +75,7 @@ impl Metrics {
         1u64 << (BUCKETS + 10)
     }
 
+    /// Mean span latency in ns (0 before any reply).
     pub fn mean_latency_ns(&self) -> f64 {
         let n = self.lat_count.load(Ordering::Relaxed);
         if n == 0 {
@@ -73,6 +85,7 @@ impl Metrics {
         }
     }
 
+    /// One-line human-readable dump of every counter.
     pub fn summary(&self) -> String {
         format!(
             "requests={} elements={} batches={} padding={} rejected={} mean_lat={:.1}µs p50={:.1}µs p99={:.1}µs",

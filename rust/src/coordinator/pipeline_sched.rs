@@ -27,6 +27,7 @@ impl UnitTiming {
         }
     }
 
+    /// Cycles from operand issue to result (the pipeline depth).
     pub fn latency_cycles(&self) -> usize {
         self.stages.max(1)
     }
@@ -37,8 +38,11 @@ impl UnitTiming {
 /// "streaming approach", no function pipelining pragmas).
 #[derive(Clone, Debug)]
 pub struct KernelStage {
+    /// Stage label (matches the kernel census names).
     pub name: String,
+    /// Unit-operations issued per input item.
     pub ops_per_item: usize,
+    /// Timing of the unit instance the stage runs on.
     pub timing: UnitTiming,
 }
 

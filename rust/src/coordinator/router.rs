@@ -36,6 +36,7 @@ where
 
 /// Creates one executor per worker thread.
 pub trait ExecutorFactory: Send + Sync + 'static {
+    /// Build a fresh executor (called once inside each worker thread).
     fn make(&self) -> Box<dyn Executor>;
 }
 
@@ -53,10 +54,17 @@ where
 }
 
 /// In-process functional serving over a shared multiplier unit: each worker
-/// executes a served batch as **one** [`crate::arith::ApproxMul::mul_batch`]
-/// call instead of N virtual `mul` calls. The per-worker executor keeps its
-/// operand/result scratch buffers across batches, so the steady-state path
-/// is allocation-free up to the reply vector.
+/// executes a served batch through [`crate::arith::ApproxMul::mul_batch`] —
+/// one call per [`UNIT_SHARD_LANES`]-lane shard, sharded across cores by
+/// the deterministic parallel engine when the batch exceeds one shard
+/// (lanes are independent, so replies are bit-identical at every thread
+/// count; batches at or below one shard run inline on the worker thread
+/// with no spawn). The per-worker executor keeps its operand/result
+/// scratch buffers across batches; the fan-out path allocates its
+/// bookkeeping per batch, a cost amortised across the shard's thousands
+/// of lanes. Deployments that prefer worker-pool-only parallelism (many
+/// concurrent batches rather than large ones) set `RAPID_THREADS=1`,
+/// which also makes the fan-out path spawn-free.
 ///
 /// Wire format: the `Executor` API carries i64 lanes; operands and results
 /// are reinterpreted as u64 bit patterns (`as u64` / `as i64`). For a
@@ -64,6 +72,7 @@ where
 /// convert replies back with `as u64`, exactly like the PJRT path's i64
 /// buffers.
 pub struct BatchMulFactory {
+    /// The multiplier every worker's executor shares.
     pub unit: Arc<dyn crate::arith::ApproxMul>,
 }
 
@@ -76,6 +85,7 @@ impl ExecutorFactory for BatchMulFactory {
 /// Divider twin of [`BatchMulFactory`]: one
 /// [`crate::arith::ApproxDiv::div_batch`] per served batch.
 pub struct BatchDivFactory {
+    /// The divider every worker's executor shares.
     pub unit: Arc<dyn crate::arith::ApproxDiv>,
 }
 
@@ -89,6 +99,15 @@ enum BatchOp {
     Mul(Arc<dyn crate::arith::ApproxMul>),
     Div(Arc<dyn crate::arith::ApproxDiv>),
 }
+
+/// Lanes per shard when a served batch fans out over
+/// [`crate::util::par`]. Deliberately coarse — the engine spawns scoped
+/// threads per fan-out, so a shard must carry enough `mul_batch` work to
+/// clearly amortise a spawn/join: at the default 8 192-lane batch
+/// capacity this yields two shards, and batches at or below one shard
+/// stay on the worker thread (the engine runs single-chunk ranges
+/// inline, spawn-free).
+const UNIT_SHARD_LANES: usize = 4096;
 
 struct BatchUnitExecutor {
     op: BatchOp,
@@ -105,9 +124,18 @@ impl Executor for BatchUnitExecutor {
         self.b.extend(b.iter().map(|&x| x as u64));
         self.out.clear();
         self.out.resize(a.len(), 0);
+        let (ua, ub) = (&self.a, &self.b);
         match &self.op {
-            BatchOp::Mul(u) => u.mul_batch(&self.a, &self.b, &mut self.out),
-            BatchOp::Div(u) => u.div_batch(&self.a, &self.b, &mut self.out),
+            BatchOp::Mul(u) => {
+                crate::util::par::par_chunks_mut(&mut self.out, UNIT_SHARD_LANES, |_c, off, o| {
+                    u.mul_batch(&ua[off..off + o.len()], &ub[off..off + o.len()], o);
+                });
+            }
+            BatchOp::Div(u) => {
+                crate::util::par::par_chunks_mut(&mut self.out, UNIT_SHARD_LANES, |_c, off, o| {
+                    u.div_batch(&ua[off..off + o.len()], &ub[off..off + o.len()], o);
+                });
+            }
         }
         self.out.iter().map(|&x| x as i64).collect()
     }
@@ -115,10 +143,15 @@ impl Executor for BatchUnitExecutor {
 
 /// One enqueued request.
 pub struct Request {
+    /// Caller-unique id (assigned by the coordinator).
     pub id: u64,
+    /// First operand vector.
     pub a: Vec<i64>,
+    /// Second operand vector (same length as `a`).
     pub b: Vec<i64>,
+    /// Channel the per-span replies go back on.
     pub reply: SyncSender<Response>,
+    /// Submission time for latency accounting.
     pub t_submit: Instant,
 }
 
@@ -127,16 +160,23 @@ pub struct Request {
 /// order; callers reassemble by offset).
 #[derive(Debug)]
 pub struct Response {
+    /// Id of the request the span belongs to.
     pub id: u64,
     /// offset of `values` within the original request
     pub offset: usize,
+    /// Results of this span's lanes.
     pub values: Vec<i64>,
 }
 
+/// Sizing knobs of one coordinator instance.
 pub struct CoordinatorConfig {
+    /// Fixed batch shape requests are packed into.
     pub batch_capacity: usize,
+    /// Deadline after which a short batch is flushed anyway.
     pub max_wait: Duration,
+    /// Executor worker threads.
     pub workers: usize,
+    /// Bounded ingress queue depth (the backpressure point).
     pub queue_depth: usize,
 }
 
@@ -154,6 +194,7 @@ impl Default for CoordinatorConfig {
 /// The leader + worker-pool coordinator.
 pub struct Coordinator {
     ingress: SyncSender<Request>,
+    /// Live counters (shared with the leader and workers).
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     shutdown: Arc<AtomicBool>,
@@ -161,6 +202,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Spawn the leader and `cfg.workers` executor threads and return the
+    /// handle callers submit through. Threads join on drop.
     pub fn start(exec: Arc<dyn ExecutorFactory>, cfg: CoordinatorConfig) -> Arc<Self> {
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -237,6 +280,7 @@ impl Coordinator {
         }
     }
 
+    /// Signal the leader loop to exit (drop joins the threads).
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
     }
@@ -490,6 +534,30 @@ mod tests {
         let dm = ExactDiv { n: 8 };
         for i in 0..da.len() {
             assert_eq!(got[i], dm.div(da[i] as u64, db[i] as u64) as i64, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn sharded_executor_matches_scalar_unit_on_large_batches() {
+        use crate::arith::{ApproxMul, RapidMul};
+        // one request bigger than UNIT_SHARD_LANES so the executor's
+        // parallel fan-out actually engages; replies must equal the
+        // scalar unit lane for lane
+        let cfg = CoordinatorConfig {
+            batch_capacity: 8192,
+            max_wait: Duration::from_micros(100),
+            workers: 2,
+            queue_depth: 8,
+        };
+        let unit = RapidMul::new(16, 10);
+        let model = RapidMul::new(16, 10);
+        let c = Coordinator::start(Arc::new(BatchMulFactory { unit: Arc::new(unit) }), cfg);
+        let n = UNIT_SHARD_LANES * 3 + 17;
+        let a: Vec<i64> = (0..n as i64).map(|i| (i * 31) % 65536).collect();
+        let b: Vec<i64> = (0..n as i64).map(|i| (i * 77 + 5) % 65536).collect();
+        let got = c.call(a.clone(), b.clone());
+        for i in (0..n).step_by(397) {
+            assert_eq!(got[i], model.mul(a[i] as u64, b[i] as u64) as i64, "lane {i}");
         }
     }
 

@@ -1,21 +1,34 @@
-//! Characterisation drivers: exhaustive sweeps for small widths, threaded
+//! Characterisation drivers: exhaustive sweeps for small widths, chunked
 //! Monte-Carlo for 32-bit (paper §V-A: exhaustive for 8/16-bit, ~4.3 G
-//! uniformly-distributed Monte-Carlo pairs for 32-bit).
-
-use std::thread;
+//! uniformly-distributed Monte-Carlo pairs for 32-bit). DESIGN.md §4.
+//!
+//! Both drivers run on the deterministic parallel engine
+//! ([`crate::util::par`]): the pair space (exhaustive) or sample budget
+//! (Monte-Carlo) is cut into fixed-size chunks, each chunk accumulates
+//! into a private [`ErrorAcc`] — Monte-Carlo chunks drawing from their
+//! own [`XorShift256::split`] stream keyed by the chunk index — and the
+//! accumulators merge in canonical chunk order. Key invariant: recorded
+//! ARE/PRE/bias are **bit-identical at every worker count** (and, for
+//! Monte-Carlo, across machines — the streams no longer depend on the
+//! host's parallelism). `tests/par_determinism.rs` pins this.
 
 use crate::arith::{ApproxDiv, ApproxMul};
-use crate::util::XorShift256;
+use crate::util::{par, XorShift256};
 
 use super::metrics::{ErrorAcc, ErrorReport};
 
+/// Knobs of one characterisation run (shared by both unit kinds).
 #[derive(Clone, Copy, Debug)]
 pub struct CharacterizeOpts {
     /// Use exhaustive enumeration when the pair space is at most this big.
     pub exhaustive_limit: u64,
     /// Monte-Carlo samples otherwise.
     pub mc_samples: u64,
+    /// Base seed; per-chunk streams derive from it via seed-mixing splits.
     pub seed: u64,
+    /// Worker threads for the sweeps; 0 = auto (`RAPID_THREADS` override
+    /// or `available_parallelism`). The reported metrics are bit-identical
+    /// for every value — the knob only trades wall-clock.
     pub threads: usize,
 }
 
@@ -25,13 +38,9 @@ impl Default for CharacterizeOpts {
             exhaustive_limit: 1 << 26, // 8-bit (2^16) and 13-bit pairs
             mc_samples: 2_000_000,
             seed: 0x5EED_2A71D,
-            threads: default_threads(),
+            threads: 0,
         }
     }
-}
-
-fn default_threads() -> usize {
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
 /// Lane count per `mul_batch`/`div_batch` call in the sweep loops: large
@@ -39,6 +48,29 @@ fn default_threads() -> usize {
 /// specialized loop unroll, small enough that the three operand/result
 /// buffers stay in L1.
 const BATCH_CHUNK: usize = 4096;
+
+/// Pair/sample indices per parallel chunk. Fixed (never derived from the
+/// thread count) so the chunk decomposition — and with it every f64
+/// accumulation and RNG stream — is identical no matter how many workers
+/// execute it.
+const PAR_CHUNK: u64 = 1 << 16;
+
+/// Per-chunk operand/result staging for the batched unit entry points.
+struct SweepBufs {
+    a: Vec<u64>,
+    b: Vec<u64>,
+    out: Vec<u64>,
+}
+
+impl SweepBufs {
+    fn new() -> Self {
+        SweepBufs {
+            a: Vec::with_capacity(BATCH_CHUNK),
+            b: Vec::with_capacity(BATCH_CHUNK),
+            out: vec![0u64; BATCH_CHUNK],
+        }
+    }
+}
 
 /// Push one flushed multiplier chunk into the accumulator (the oracle is
 /// the exact product, recomputed here — cheaper than a second unit).
@@ -59,57 +91,85 @@ fn flush_div(unit: &dyn ApproxDiv, acc: &mut ErrorAcc, a: &[u64], b: &[u64], out
     }
 }
 
+/// Resolve `opts.threads` (0 = auto) around a sweep body.
+fn with_opt_threads<R>(opts: &CharacterizeOpts, f: impl FnOnce() -> R) -> R {
+    if opts.threads == 0 {
+        f()
+    } else {
+        par::with_threads(opts.threads, f)
+    }
+}
+
+/// Merge per-chunk accumulators in canonical chunk order.
+fn merge_accs(accs: Vec<ErrorAcc>) -> ErrorAcc {
+    let mut whole = ErrorAcc::new();
+    for acc in &accs {
+        whole.merge(acc);
+    }
+    whole
+}
+
 /// Characterise a multiplier (both operands `width()`-bit, nonzero).
 ///
-/// Both the exhaustive and Monte-Carlo paths accumulate operand pairs into
-/// chunk buffers and flush them through [`ApproxMul::mul_batch`], so the
-/// sweep's hot loop pays one virtual call per [`BATCH_CHUNK`] lanes instead
-/// of one per pair.
+/// The exhaustive path flattens the `(lim-1)²` nonzero pair grid into one
+/// index range (`a`-major, the classic nested-loop order) and sweeps it
+/// in [`PAR_CHUNK`]-pair parallel chunks; within a chunk, operands stage
+/// through [`BATCH_CHUNK`]-lane buffers and flush through
+/// [`ApproxMul::mul_batch`], so the hot loop pays one virtual call per
+/// few thousand pairs. The Monte-Carlo path draws each chunk from its own
+/// split stream. Either way the report is thread-count-invariant.
 pub fn characterize_mul(unit: &dyn ApproxMul, opts: &CharacterizeOpts) -> ErrorReport {
     let n = unit.width();
     let pairs = 1u128 << (2 * n);
     if pairs <= opts.exhaustive_limit as u128 {
-        let mut acc = ErrorAcc::new();
-        let lim = 1u64 << n;
-        let mut ab = Vec::with_capacity(BATCH_CHUNK);
-        let mut bb = Vec::with_capacity(BATCH_CHUNK);
-        let mut ob = vec![0u64; BATCH_CHUNK];
-        for a in 1..lim {
-            for b in 1..lim {
-                ab.push(a);
-                bb.push(b);
-                if ab.len() == BATCH_CHUNK {
-                    flush_mul(unit, &mut acc, &ab, &bb, &mut ob);
-                    ab.clear();
-                    bb.clear();
+        let side = (1u64 << n) - 1; // operands 1..=side
+        let total = side * side;
+        let accs = with_opt_threads(opts, || {
+            par::par_chunks_init(total, PAR_CHUNK, SweepBufs::new, |bufs, _c, range| {
+                let mut acc = ErrorAcc::new();
+                // derive (a, b) from the chunk start once, then step —
+                // one div/mod per chunk instead of per pair
+                let mut a = 1 + range.start / side;
+                let mut b = 1 + range.start % side;
+                let mut idx = range.start;
+                while idx < range.end {
+                    let take = (BATCH_CHUNK as u64).min(range.end - idx);
+                    bufs.a.clear();
+                    bufs.b.clear();
+                    for _ in 0..take {
+                        bufs.a.push(a);
+                        bufs.b.push(b);
+                        b += 1;
+                        if b > side {
+                            b = 1;
+                            a += 1;
+                        }
+                    }
+                    flush_mul(unit, &mut acc, &bufs.a, &bufs.b, &mut bufs.out);
+                    idx += take;
                 }
-            }
-        }
-        if !ab.is_empty() {
-            flush_mul(unit, &mut acc, &ab, &bb, &mut ob);
-        }
-        acc.report(&unit.name())
+                acc
+            })
+        });
+        merge_accs(accs).report(&unit.name())
     } else {
-        mc_parallel(opts, |acc, rng, count| {
-            let mut ab = Vec::with_capacity(BATCH_CHUNK);
-            let mut bb = Vec::with_capacity(BATCH_CHUNK);
-            let mut ob = vec![0u64; BATCH_CHUNK];
+        mc_parallel(opts, |acc, rng, count, bufs| {
             let mut done = 0u64;
             while done < count {
                 let take = (BATCH_CHUNK as u64).min(count - done);
-                ab.clear();
-                bb.clear();
+                bufs.a.clear();
+                bufs.b.clear();
                 for _ in 0..take {
                     let a = rng.bits(n);
                     let b = rng.bits(n);
                     if a == 0 || b == 0 {
                         acc.skip();
                     } else {
-                        ab.push(a);
-                        bb.push(b);
+                        bufs.a.push(a);
+                        bufs.b.push(b);
                     }
                 }
-                flush_mul(unit, acc, &ab, &bb, &mut ob);
+                flush_mul(unit, acc, &bufs.a, &bufs.b, &mut bufs.out);
                 done += take;
             }
         })
@@ -123,50 +183,68 @@ pub fn characterize_mul(unit: &dyn ApproxMul, opts: &CharacterizeOpts) -> ErrorR
 /// returns), so `ExactDiv` reports zero error. Inputs outside the
 /// constrained-division domain (`b == 0`, `a < b`, overflow) are skipped,
 /// mirroring the paper's exhaustive C++ harness for 2N-by-N division.
+///
+/// The exhaustive path flattens the full `(2^N − 1) × 2^{2N}` rectangle
+/// (`b`-major, dividend-minor — the nested-loop order) and filters the
+/// constrained-domain pairs per index, which keeps the chunk → pair
+/// mapping trivially splittable; the ~2× index overdraw is pure integer
+/// compare work and parallelises away.
 pub fn characterize_div(unit: &dyn ApproxDiv, opts: &CharacterizeOpts) -> ErrorReport {
     let n = unit.divisor_width();
     let pairs = 1u128 << (3 * n);
     if pairs <= opts.exhaustive_limit as u128 {
-        let mut acc = ErrorAcc::new();
-        let mut ab = Vec::with_capacity(BATCH_CHUNK);
-        let mut bb = Vec::with_capacity(BATCH_CHUNK);
-        let mut ob = vec![0u64; BATCH_CHUNK];
-        for b in 1..(1u64 << n) {
-            for a in b..(b << n) {
-                ab.push(a);
-                bb.push(b);
-                if ab.len() == BATCH_CHUNK {
-                    flush_div(unit, &mut acc, &ab, &bb, &mut ob);
-                    ab.clear();
-                    bb.clear();
+        let a_space = 1u64 << (2 * n);
+        let total = ((1u64 << n) - 1) * a_space; // (b−1, a) rectangle
+        let accs = with_opt_threads(opts, || {
+            par::par_chunks_init(total, PAR_CHUNK, SweepBufs::new, |bufs, _c, range| {
+                let mut acc = ErrorAcc::new();
+                // derive (b, a) from the chunk start once, then step —
+                // one div/mod per chunk instead of per rectangle index
+                let mut b = 1 + range.start / a_space;
+                let mut a = range.start % a_space;
+                let mut idx = range.start;
+                while idx < range.end {
+                    let take = (BATCH_CHUNK as u64).min(range.end - idx);
+                    bufs.a.clear();
+                    bufs.b.clear();
+                    for _ in 0..take {
+                        // constrained-division domain only (the old nested
+                        // loop never visited the rest of the rectangle)
+                        if a >= b && a < (b << n) {
+                            bufs.a.push(a);
+                            bufs.b.push(b);
+                        }
+                        a += 1;
+                        if a == a_space {
+                            a = 0;
+                            b += 1;
+                        }
+                    }
+                    flush_div(unit, &mut acc, &bufs.a, &bufs.b, &mut bufs.out);
+                    idx += take;
                 }
-            }
-        }
-        if !ab.is_empty() {
-            flush_div(unit, &mut acc, &ab, &bb, &mut ob);
-        }
-        acc.report(&unit.name())
+                acc
+            })
+        });
+        merge_accs(accs).report(&unit.name())
     } else {
-        mc_parallel(opts, |acc, rng, count| {
-            let mut ab = Vec::with_capacity(BATCH_CHUNK);
-            let mut bb = Vec::with_capacity(BATCH_CHUNK);
-            let mut ob = vec![0u64; BATCH_CHUNK];
+        mc_parallel(opts, |acc, rng, count, bufs| {
             let mut done = 0u64;
             while done < count {
                 let take = (BATCH_CHUNK as u64).min(count - done);
-                ab.clear();
-                bb.clear();
+                bufs.a.clear();
+                bufs.b.clear();
                 for _ in 0..take {
                     let b = rng.bits(n);
                     let a = rng.bits(2 * n);
                     if b == 0 || a < b || a >= (b << n) {
                         acc.skip();
                     } else {
-                        ab.push(a);
-                        bb.push(b);
+                        bufs.a.push(a);
+                        bufs.b.push(b);
                     }
                 }
-                flush_div(unit, acc, &ab, &bb, &mut ob);
+                flush_div(unit, acc, &bufs.a, &bufs.b, &mut bufs.out);
                 done += take;
             }
         })
@@ -174,34 +252,27 @@ pub fn characterize_div(unit: &dyn ApproxDiv, opts: &CharacterizeOpts) -> ErrorR
     }
 }
 
-/// Threaded Monte-Carlo: each worker owns a decorrelated PRNG stream and a
-/// private accumulator; results merge at the end (scoped threads — the
-/// closure only needs `Sync`). The closure receives its whole sample quota
-/// so it can batch lanes through the units' slice entry points.
+/// Chunked Monte-Carlo: the sample budget splits into [`PAR_CHUNK`]-sized
+/// chunks, chunk `c` draws from `XorShift256::new(seed).split(c)` and
+/// accumulates privately, and the accumulators merge in chunk order —
+/// so the sampled metrics are a pure function of `(seed, mc_samples)`,
+/// independent of worker count *and* host machine. The closure receives
+/// its chunk's sample quota plus per-worker staging buffers so it can
+/// batch lanes through the units' slice entry points.
 fn mc_parallel<F>(opts: &CharacterizeOpts, f: F) -> ErrorAcc
 where
-    F: Fn(&mut ErrorAcc, &mut XorShift256, u64) + Sync,
+    F: Fn(&mut ErrorAcc, &mut XorShift256, u64, &mut SweepBufs) + Sync,
 {
-    let threads = opts.threads.max(1);
-    let per = opts.mc_samples / threads as u64;
-    let mut acc = ErrorAcc::new();
-    thread::scope(|s| {
-        let handles: Vec<_> = (0..threads)
-            .map(|t| {
-                let f = &f;
-                s.spawn(move || {
-                    let mut local = ErrorAcc::new();
-                    let mut rng = XorShift256::new(opts.seed.wrapping_add(0x9e37 * (t as u64 + 1)));
-                    f(&mut local, &mut rng, per);
-                    local
-                })
-            })
-            .collect();
-        for h in handles {
-            acc.merge(&h.join().expect("characterisation worker panicked"));
-        }
+    let base = XorShift256::new(opts.seed);
+    let accs = with_opt_threads(opts, || {
+        par::par_chunks_init(opts.mc_samples, PAR_CHUNK, SweepBufs::new, |bufs, c, range| {
+            let mut acc = ErrorAcc::new();
+            let mut rng = base.split(c);
+            f(&mut acc, &mut rng, range.end - range.start, bufs);
+            acc
+        })
     });
-    acc
+    merge_accs(accs)
 }
 
 #[cfg(test)]
@@ -236,6 +307,17 @@ mod tests {
     }
 
     #[test]
+    fn div_exhaustive_visits_constrained_domain_exactly() {
+        // The flattened-rectangle sweep must visit exactly the pairs the
+        // old nested loop did: Σ_b (b·2^N − b) valid pairs, none skipped.
+        let r = characterize_div(&ExactDiv { n: 3 }, &opts(0));
+        let n = 3u64;
+        let want: u64 = (1..(1 << n)).map(|b| (b << n) - b).sum();
+        assert_eq!(r.samples, want);
+        assert_eq!(r.skipped, 0);
+    }
+
+    #[test]
     fn mc_and_exhaustive_agree_for_8bit() {
         let m = RapidMul::new(8, 5);
         let ex = characterize_mul(&m, &opts(0));
@@ -266,5 +348,26 @@ mod tests {
         let b = characterize_mul(&m, &o);
         assert_eq!(a.are, b.are);
         assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_numbers() {
+        // The determinism pin at driver granularity (the integration-scale
+        // version lives in tests/par_determinism.rs): 1 worker ≡ 5 workers,
+        // bit for bit, on both the exhaustive and Monte-Carlo paths.
+        let m = RapidMul::new(8, 5);
+        let one = characterize_mul(&m, &CharacterizeOpts { threads: 1, ..Default::default() });
+        let five = characterize_mul(&m, &CharacterizeOpts { threads: 5, ..Default::default() });
+        assert_eq!(one.are.to_bits(), five.are.to_bits());
+        assert_eq!(one.pre.to_bits(), five.pre.to_bits());
+        assert_eq!(one.bias.to_bits(), five.bias.to_bits());
+        assert_eq!(one.samples, five.samples);
+
+        let o = |t| CharacterizeOpts { exhaustive_limit: 0, mc_samples: 150_000, threads: t, ..Default::default() };
+        let a = characterize_mul(&m, &o(1));
+        let b = characterize_mul(&m, &o(3));
+        assert_eq!(a.are.to_bits(), b.are.to_bits());
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.skipped, b.skipped);
     }
 }

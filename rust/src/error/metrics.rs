@@ -5,6 +5,7 @@
 /// Accumulates relative-error observations for one unit.
 #[derive(Clone, Debug, Default)]
 pub struct ErrorAcc {
+    /// Observations recorded so far.
     pub n: u64,
     sum_abs: f64,
     sum_signed: f64,
@@ -19,6 +20,7 @@ pub struct ErrorAcc {
 }
 
 impl ErrorAcc {
+    /// Empty accumulator (identity element of [`Self::merge`]).
     pub fn new() -> Self {
         Self::default()
     }
@@ -38,11 +40,15 @@ impl ErrorAcc {
         }
     }
 
+    /// Record one out-of-domain input (divider zero/overflow rules).
     #[inline]
     pub fn skip(&mut self) {
         self.skipped += 1;
     }
 
+    /// Fold another accumulator into this one. Peaks and counts are
+    /// order-independent; the f64 sums associate in call order, which is
+    /// why the parallel drivers merge chunks in canonical chunk order.
     pub fn merge(&mut self, o: &ErrorAcc) {
         self.n += o.n;
         self.sum_abs += o.sum_abs;
@@ -52,6 +58,7 @@ impl ErrorAcc {
         self.skipped += o.skipped;
     }
 
+    /// Finalise into the named report (safe on an empty accumulator).
     pub fn report(&self, name: &str) -> ErrorReport {
         ErrorReport {
             name: name.to_string(),
@@ -69,6 +76,7 @@ impl ErrorAcc {
 /// Table III row).
 #[derive(Clone, Debug)]
 pub struct ErrorReport {
+    /// Unit name the report describes (registry identifier).
     pub name: String,
     /// Average absolute relative error (MRED), as a fraction (0.01 = 1 %).
     pub are: f64,
@@ -79,11 +87,14 @@ pub struct ErrorReport {
     pub pre_large: f64,
     /// Signed mean relative error (positive = underestimates).
     pub bias: f64,
+    /// Observations behind the metrics.
     pub samples: u64,
+    /// Inputs skipped by the divider zero/overflow domain rules.
     pub skipped: u64,
 }
 
 impl ErrorReport {
+    /// One-line human-readable summary (ARE/PRE/bias as percentages).
     pub fn row(&self) -> String {
         format!(
             "{:<16} ARE={:6.3}%  PRE={:7.3}%  bias={:7.3}%  (n={}, skipped={})",

@@ -4,7 +4,8 @@
 //! MultIpliers and Dividers for High-Throughput and Energy-Efficiency*
 //! (Ebrahimi et al., IEEE TCAD 2022).
 //!
-//! The crate is organised in the layers DESIGN.md describes:
+//! The crate is organised in the layers DESIGN.md describes (see
+//! ARCHITECTURE.md at the repo root for the cross-layer tour):
 //!
 //! * [`arith`] — bit-accurate functional models of every unit the paper
 //!   builds or compares against (Mitchell, RAPID-G, MBM, INZeD, SIMDive,
@@ -25,7 +26,11 @@
 //!   `libxla` is absent (DESIGN.md §2).
 //! * [`coordinator`] — the streaming orchestrator: dynamic batcher, worker
 //!   pool, backpressure, pipeline scheduler, metrics.
-//! * [`util`] — zero-dependency PRNG/stats/CLI/bench/property-test helpers.
+//! * [`util`] — zero-dependency PRNG/stats/CLI/bench/property-test helpers,
+//!   including [`util::par`], the deterministic multi-core sweep engine
+//!   every exhaustive/Monte-Carlo/power/equivalence sweep fans out on
+//!   (`RAPID_THREADS` sets the worker count; results are bit-identical at
+//!   every value).
 //!
 //! ## Quickstart
 //!
@@ -38,6 +43,10 @@
 //! let p = m.mul(58, 18);
 //! assert!((p as f64 - 1044.0).abs() / 1044.0 < 0.04);
 //! ```
+
+// Every public item carries rustdoc; CI builds docs with
+// RUSTDOCFLAGS="-D warnings", which promotes any regression to an error.
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod arith;

@@ -13,7 +13,9 @@ use super::xla;
 
 /// One compiled artifact.
 pub struct Artifact {
+    /// Artifact stem (`rapid_mul16`, ...).
     pub name: String,
+    /// The compiled PJRT executable.
     pub exe: xla::PjRtLoadedExecutable,
 }
 
@@ -25,6 +27,7 @@ pub struct ArtifactStore {
 }
 
 impl ArtifactStore {
+    /// Open a store over `dir` (must exist; artifacts compile lazily).
     pub fn open(runtime: Runtime, dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         if !dir.is_dir() {
@@ -33,6 +36,7 @@ impl ArtifactStore {
         Ok(ArtifactStore { runtime, dir, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// The PJRT runtime the store compiles and executes on.
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }

@@ -21,10 +21,12 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// Backend platform name (e.g. `"cpu-stub"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Devices the client sees.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }
@@ -79,7 +81,9 @@ impl Runtime {
 
 /// One artifact input: flat data + dims.
 pub enum Input {
+    /// Operand buffers (int64 lanes).
     I64(Vec<i64>, Vec<usize>),
+    /// Scheme-table parameters (int32).
     I32(Vec<i32>, Vec<usize>),
 }
 

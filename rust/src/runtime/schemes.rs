@@ -11,9 +11,13 @@ use std::path::Path;
 /// One loaded scheme, ready to feed a PJRT artifact.
 #[derive(Clone, Debug)]
 pub struct SchemeTables {
-    pub grid: Vec<i32>,   // 256 entries, row-major 16×16
-    pub coeffs: Vec<i64>, // G entries
+    /// Region grid: 256 group ids, row-major 16×16.
+    pub grid: Vec<i32>,
+    /// Quantised coefficient table (G entries).
+    pub coeffs: Vec<i64>,
+    /// Operand width the tables were quantised for.
     pub width: u32,
+    /// `"mul"` or `"div"`.
     pub kind: String,
 }
 

@@ -46,7 +46,9 @@ impl Data {
 
 /// Element types a [`Literal`] can carry.
 pub trait NativeType: Copy {
+    /// Build a rank-1 literal from a host slice of this type.
     fn literal(data: &[Self]) -> Literal;
+    /// Copy the literal out as this type (None on dtype mismatch).
     fn read(lit: &Literal) -> Option<Vec<Self>>;
 }
 
@@ -102,6 +104,7 @@ impl Literal {
         Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
     }
 
+    /// Total elements across all dims.
     pub fn element_count(&self) -> usize {
         self.data.len()
     }
@@ -130,14 +133,17 @@ impl PjRtClient {
         Err(unavailable())
     }
 
+    /// Backend name (the stub reports `"stub"`).
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Devices the client sees (the stub has none).
     pub fn device_count(&self) -> usize {
         0
     }
 
+    /// Compile a computation (always unavailable in the stub).
     pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Err(unavailable())
     }
@@ -146,10 +152,12 @@ impl PjRtClient {
 /// Parsed HLO module (the stub keeps the text; the real binding parses it,
 /// reassigning 64-bit instruction ids — see `python/compile/aot.py`).
 pub struct HloModuleProto {
+    /// The HLO module text as read from disk.
     pub text: String,
 }
 
 impl HloModuleProto {
+    /// Load HLO text from a file.
     pub fn from_text_file(path: &str) -> Result<Self> {
         match std::fs::read_to_string(path) {
             Ok(text) => Ok(HloModuleProto { text }),
@@ -164,6 +172,7 @@ pub struct XlaComputation {
 }
 
 impl XlaComputation {
+    /// Wrap a parsed HLO module for compilation.
     pub fn from_proto(proto: &HloModuleProto) -> Self {
         XlaComputation { _hlo_text: proto.text.clone() }
     }
@@ -188,6 +197,7 @@ pub struct PjRtBuffer {
 }
 
 impl PjRtBuffer {
+    /// Fetch the buffer to the host (always unavailable in the stub).
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(unavailable())
     }

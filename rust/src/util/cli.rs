@@ -5,10 +5,15 @@
 
 use std::collections::HashMap;
 
+/// Parsed command line: positionals, `--key value` options and bare
+/// `--flag` switches.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Arguments that are not options or flags, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: HashMap<String, String>,
+    /// Bare `--flag` switches, in order of appearance.
     pub flags: Vec<String>,
 }
 
@@ -35,30 +40,37 @@ impl Args {
         out
     }
 
+    /// True when `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of option `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `usize` value of `--name`; `default` when absent or unparsable.
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `u64` value of `--name`; `default` when absent or unparsable.
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `u32` value of `--name`; `default` when absent or unparsable.
     pub fn get_u32(&self, name: &str, default: u32) -> u32 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `f64` value of `--name`; `default` when absent or unparsable.
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

@@ -12,6 +12,7 @@ use std::fmt;
 pub struct Error(String);
 
 impl Error {
+    /// Construct from any displayable message (see also [`crate::err!`]).
     pub fn msg(msg: impl Into<String>) -> Self {
         Error(msg.into())
     }
@@ -36,7 +37,10 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// `anyhow::Context` subset: attach a human-readable layer to failures.
 pub trait Context<T> {
+    /// Wrap the failure with a fixed context message.
     fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the failure with a lazily-built context message (evaluated
+    /// only on the error path).
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

@@ -11,6 +11,7 @@ pub mod proptest;
 pub mod cli;
 pub mod timer;
 pub mod error;
+pub mod par;
 
 pub use rng::XorShift256;
 pub use stats::Summary;

@@ -1,0 +1,348 @@
+//! Deterministic data-parallel execution on `std::thread::scope` — the
+//! zero-dependency fan-out layer every sweep-shaped hot path runs on
+//! (DESIGN.md §Perf, ARCHITECTURE.md "parallel sweep engine").
+//!
+//! The contract that makes the whole crate's numbers reproducible:
+//! **results are a pure function of the chunking, never of the thread
+//! count.** An index range `[0, len)` is cut into fixed-size chunks;
+//! each chunk's work is self-contained (callers derive any randomness
+//! from the *chunk index* via [`crate::util::XorShift256::split`], never
+//! from a worker id); and chunk results are merged back in canonical
+//! chunk order `0, 1, 2, …` regardless of which worker computed which
+//! chunk. Running with 1 thread therefore produces bit-identical output
+//! to running with 64 — the invariant `tests/par_determinism.rs` pins
+//! for the error sweeps, the power estimator, the netlist equivalence
+//! verdicts and the app kernels.
+//!
+//! Worker count resolution, in priority order:
+//! 1. a [`with_threads`] override on the calling thread (tests, benches);
+//! 2. the `RAPID_THREADS` environment variable (CI runs the tier-1 suite
+//!    at 1 and 4 to enforce the determinism pin);
+//! 3. [`std::thread::available_parallelism`].
+//!
+//! Chunks are distributed round-robin over the workers; panics inside a
+//! chunk (sweep assertions) propagate to the caller with their payload
+//! intact. The layer is deliberately non-nesting: a chunk body should
+//! call serial leaf code (`mul_batch`, `eval_words`), not `par_*` again —
+//! an inner call would re-read the resolved thread count on the worker
+//! thread and oversubscribe.
+
+use std::cell::Cell;
+use std::ops::Range;
+
+thread_local! {
+    /// Per-thread worker-count override (see [`with_threads`]).
+    static OVERRIDE: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// Worker threads `par_*` calls on this thread will use: the
+/// [`with_threads`] override if one is active, else `RAPID_THREADS`
+/// (ignored unless it parses to ≥ 1), else
+/// [`std::thread::available_parallelism`]. Always ≥ 1.
+pub fn threads() -> usize {
+    if let Some(n) = OVERRIDE.with(|o| o.get()) {
+        return n;
+    }
+    if let Ok(s) = std::env::var("RAPID_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` with [`threads`] pinned to `n` on the current thread (the
+/// override is scoped: restored on return *and* on panic). This is how
+/// the determinism tests and the `hotpath` serial-vs-parallel rows vary
+/// the worker count without touching the process environment — mutating
+/// `RAPID_THREADS` itself would race the multi-threaded test harness.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|o| o.replace(Some(n.max(1))));
+    let _restore = Restore(prev);
+    f()
+}
+
+#[inline]
+fn chunk_range(c: u64, chunk_size: u64, len: u64) -> Range<u64> {
+    let start = c * chunk_size;
+    start..(start + chunk_size).min(len)
+}
+
+/// Map the index range `[0, len)` in fixed-size chunks: `f(chunk_index,
+/// index_range)` runs once per chunk (possibly on different worker
+/// threads) and the results come back as a `Vec` in chunk order — the
+/// canonical merge order that makes callers thread-count-invariant.
+/// The final chunk may be shorter; `len == 0` returns an empty `Vec`
+/// without calling `f`.
+pub fn par_chunks<R, F>(len: u64, chunk_size: u64, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(u64, Range<u64>) -> R + Sync,
+{
+    par_chunks_init(len, chunk_size, || (), |_, c, r| f(c, r))
+}
+
+/// [`par_chunks`] with per-*worker* scratch state: `init()` runs once on
+/// each worker thread (compile a netlist, allocate batch buffers) and a
+/// mutable reference is passed to every chunk that worker executes.
+/// State must not leak between chunks in any result-visible way — chunk
+/// results stay a function of the chunk index alone.
+pub fn par_chunks_init<S, R, FI, F>(len: u64, chunk_size: u64, init: FI, f: F) -> Vec<R>
+where
+    R: Send,
+    FI: Fn() -> S + Sync,
+    F: Fn(&mut S, u64, Range<u64>) -> R + Sync,
+{
+    assert!(chunk_size >= 1, "par_chunks: chunk_size must be >= 1");
+    if len == 0 {
+        return Vec::new();
+    }
+    let n_chunks = len.div_ceil(chunk_size);
+    let t = (threads() as u64).min(n_chunks);
+    if t <= 1 {
+        // serial oracle: same chunking, same order, no threads
+        let mut state = init();
+        return (0..n_chunks)
+            .map(|c| f(&mut state, c, chunk_range(c, chunk_size, len)))
+            .collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..n_chunks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..t)
+            .map(|w| {
+                let (f, init) = (&f, &init);
+                scope.spawn(move || {
+                    let mut state = init();
+                    let mut got = Vec::new();
+                    let mut c = w;
+                    while c < n_chunks {
+                        got.push((c, f(&mut state, c, chunk_range(c, chunk_size, len))));
+                        c += t;
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(results) => {
+                    for (c, r) in results {
+                        slots[c as usize] = Some(r);
+                    }
+                }
+                // surface sweep assertion failures with their message
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker dropped a chunk result")).collect()
+}
+
+/// Parallel fold: run [`par_chunks`] and merge the chunk results
+/// left-to-right in chunk order starting from `empty`. With an
+/// associative-but-not-exact merge (f64 sums), the fixed merge order is
+/// what keeps the reduction bit-identical at every thread count.
+pub fn par_reduce<A, F, M>(len: u64, chunk_size: u64, empty: A, f: F, merge: M) -> A
+where
+    A: Send,
+    F: Fn(u64, Range<u64>) -> A + Sync,
+    M: FnMut(A, A) -> A,
+{
+    par_chunks(len, chunk_size, f).into_iter().fold(empty, merge)
+}
+
+/// Split `data` into fixed-size chunks and run `f(chunk_index,
+/// element_offset, chunk_slice)` on each, in parallel, returning the
+/// per-chunk results in chunk order. The chunks are disjoint `&mut`
+/// slices, so lane-independent kernels (batched multiplies over an
+/// image plane, a served batch) shard with no synchronisation and
+/// bit-identical output at any thread count. The final chunk may be
+/// shorter; empty `data` returns an empty `Vec`.
+pub fn par_chunks_mut<T, R, F>(data: &mut [T], chunk_size: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(u64, usize, &mut [T]) -> R + Sync,
+{
+    assert!(chunk_size >= 1, "par_chunks_mut: chunk_size must be >= 1");
+    if data.is_empty() {
+        return Vec::new();
+    }
+    let n_chunks = data.len().div_ceil(chunk_size);
+    let t = threads().min(n_chunks);
+    if t <= 1 {
+        return data
+            .chunks_mut(chunk_size)
+            .enumerate()
+            .map(|(c, s)| f(c as u64, c * chunk_size, s))
+            .collect();
+    }
+    // round-robin the disjoint slices over the workers
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..t).map(|_| Vec::new()).collect();
+    for (c, s) in data.chunks_mut(chunk_size).enumerate() {
+        buckets[c % t].push((c, s));
+    }
+    let mut slots: Vec<Option<R>> = (0..n_chunks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                let f = &f;
+                scope.spawn(move || {
+                    bucket
+                        .into_iter()
+                        .map(|(c, s)| (c, f(c as u64, c * chunk_size, s)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(results) => {
+                    for (c, r) in results {
+                        slots[c] = Some(r);
+                    }
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker dropped a chunk result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn threads_is_at_least_one() {
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let outer = threads();
+        with_threads(3, || {
+            assert_eq!(threads(), 3);
+            with_threads(5, || assert_eq!(threads(), 5));
+            assert_eq!(threads(), 3);
+        });
+        assert_eq!(threads(), outer);
+    }
+
+    #[test]
+    fn empty_range_calls_nothing() {
+        let calls = AtomicUsize::new(0);
+        let out: Vec<u64> = par_chunks(0, 8, |c, _| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            c
+        });
+        assert!(out.is_empty());
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+        let mut data: [u8; 0] = [];
+        let out: Vec<()> = par_chunks_mut(&mut data, 4, |_, _, _| ());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn range_smaller_than_chunk_is_one_chunk() {
+        for t in [1usize, 2, 7] {
+            let ranges = with_threads(t, || par_chunks(5, 100, |c, r| (c, r.start, r.end)));
+            assert_eq!(ranges, vec![(0, 0, 5)]);
+        }
+    }
+
+    #[test]
+    fn remainder_chunk_is_short() {
+        let ranges = par_chunks(10, 4, |c, r| (c, r.start, r.end));
+        assert_eq!(ranges, vec![(0, 0, 4), (1, 4, 8), (2, 8, 10)]);
+    }
+
+    #[test]
+    fn results_in_chunk_order_for_every_thread_count() {
+        // ranges smaller than, equal to, and much larger than the pool
+        for len in [1u64, 7, 64, 1000] {
+            let want: Vec<u64> = (0..len.div_ceil(7)).collect();
+            for t in [1usize, 2, 3, 8, 32] {
+                let got = with_threads(t, || par_chunks(len, 7, |c, _| c));
+                assert_eq!(got, want, "len={len} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_matches_serial_sum() {
+        let serial: u64 = (0..1000).sum();
+        for t in [1usize, 2, 7] {
+            let got = with_threads(t, || {
+                par_reduce(1000, 13, 0u64, |_, r| r.sum::<u64>(), |a, b| a + b)
+            });
+            assert_eq!(got, serial, "t={t}");
+        }
+    }
+
+    #[test]
+    fn chunks_mut_covers_every_element_once() {
+        for t in [1usize, 2, 7] {
+            let mut data = vec![0u32; 103];
+            let offsets = with_threads(t, || {
+                par_chunks_mut(&mut data, 10, |_, off, s| {
+                    for (i, v) in s.iter_mut().enumerate() {
+                        *v += (off + i) as u32 + 1;
+                    }
+                    (off, s.len())
+                })
+            });
+            assert_eq!(offsets.len(), 11);
+            assert_eq!(offsets[10], (100, 3), "partial tail chunk");
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as u32 + 1, "element {i} at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_worker_state_initialised_per_thread() {
+        // state is reused across a worker's chunks but results must not
+        // depend on it: here each chunk reports only its own index
+        for t in [1usize, 4] {
+            let got = with_threads(t, || {
+                par_chunks_init(64, 4, || 0u64, |seen, c, _| {
+                    *seen += 1;
+                    c
+                })
+            });
+            assert_eq!(got, (0..16).collect::<Vec<u64>>(), "t={t}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk 3 exploded")]
+    fn worker_panics_propagate_with_payload() {
+        with_threads(2, || {
+            par_chunks(64, 8, |c, _| {
+                assert!(c != 3, "chunk {c} exploded");
+                c
+            })
+        });
+    }
+
+    #[test]
+    fn invalid_env_is_ignored() {
+        // parse failure falls through to available_parallelism; this
+        // only checks the parser path is total (no panic on junk)
+        for s in ["", "0", "-3", "lots"] {
+            let _ = s.trim().parse::<usize>().ok().filter(|&n| n >= 1);
+        }
+        assert!(threads() >= 1);
+    }
+}

@@ -3,7 +3,21 @@
 //! Used by Monte-Carlo error characterisation (Table III, 32-bit rows),
 //! switching-activity power estimation, workload generators and the
 //! property-test harness. Deterministic seeding keeps every experiment
-//! reproducible run-to-run.
+//! reproducible run-to-run, and [`XorShift256::split`] derives the
+//! decorrelated per-chunk streams the parallel sweep engine
+//! ([`crate::util::par`]) needs to stay bit-identical at any thread
+//! count: stream identity is a function of (parent state, stream id),
+//! never of which worker thread consumes it.
+
+/// SplitMix64 finalizer — the avalanche step used by both the seeding
+/// expansion and the stream derivation in [`XorShift256::split`].
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
 
 /// xoshiro256** by Blackman & Vigna (public-domain algorithm), implemented
 /// from the published recurrence.
@@ -28,6 +42,37 @@ impl XorShift256 {
         XorShift256 { s }
     }
 
+    /// Derive an independent child stream keyed by `stream_id`, without
+    /// advancing `self`: the child is a pure function of the parent's
+    /// current state and the id, so two calls with the same id reproduce
+    /// the same stream and different ids give decorrelated streams. This
+    /// is the seed-mixing split the parallel sweep drivers use — chunk
+    /// *c* of a sweep draws from `base.split(c)`, which makes every
+    /// recorded metric independent of the worker count (`RAPID_THREADS`).
+    ///
+    /// ```
+    /// use rapid::util::XorShift256;
+    /// let base = XorShift256::new(42);
+    /// let mut s0 = base.split(0);
+    /// let mut s1 = base.split(1);
+    /// assert_ne!(s0.next_u64(), s1.next_u64()); // streams diverge...
+    /// let mut again = base.split(0);
+    /// assert_eq!(again.next_u64(), base.split(0).next_u64()); // ...reproducibly
+    /// ```
+    pub fn split(&self, stream_id: u64) -> XorShift256 {
+        // Fold the four state words into a 64-bit digest (FNV-style
+        // multiply-rotate), then avalanche the stream id through the
+        // SplitMix64 finalizer so adjacent ids land far apart; `new`
+        // re-expands the combined seed into a full 256-bit state.
+        let mut h = 0xA076_1D64_78BD_642Fu64;
+        for &w in &self.s {
+            h = (h ^ w).wrapping_mul(0x100_0000_01B3);
+            h = h.rotate_left(29);
+        }
+        XorShift256::new(h ^ mix64(stream_id))
+    }
+
+    /// Next raw 64-bit draw (the xoshiro256** output function).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -41,6 +86,8 @@ impl XorShift256 {
         result
     }
 
+    /// Next 32-bit draw (upper half of [`Self::next_u64`] — the better
+    /// bits of the generator).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
@@ -112,6 +159,35 @@ mod tests {
         let mut b = XorShift256::new(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_reproducible_and_decorrelated() {
+        let base = XorShift256::new(0xFEED);
+        // same id → same stream; parent state untouched by splitting
+        let mut a = base.split(7);
+        let mut b = base.split(7);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // adjacent ids → streams with no aligned collisions
+        let mut c = base.split(8);
+        let mut d = base.split(9);
+        let same = (0..64).filter(|_| c.next_u64() == d.next_u64()).count();
+        assert_eq!(same, 0);
+        // child streams differ from the parent's own draw sequence
+        let mut parent = XorShift256::new(0xFEED);
+        let mut child = base.split(0);
+        assert_ne!(parent.next_u64(), child.next_u64());
+    }
+
+    #[test]
+    fn split_depends_on_parent_state() {
+        let mut a = XorShift256::new(1);
+        let before = a.split(3).next_u64();
+        a.next_u64(); // advance the parent
+        let after = a.split(3).next_u64();
+        assert_ne!(before, after, "split must key on the parent state");
     }
 
     #[test]

@@ -4,18 +4,23 @@
 /// plus min/max). Merging supports the parallel Monte-Carlo drivers.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Samples observed so far.
     pub n: u64,
     mean: f64,
     m2: f64,
+    /// Smallest sample (`+inf` when empty).
     pub min: f64,
+    /// Largest sample (`-inf` when empty).
     pub max: f64,
 }
 
 impl Summary {
+    /// Empty summary (identity element of [`Self::merge`]).
     pub fn new() -> Self {
         Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Record one sample.
     #[inline]
     pub fn push(&mut self, x: f64) {
         self.n += 1;
@@ -30,6 +35,7 @@ impl Summary {
         }
     }
 
+    /// Sample mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -38,6 +44,7 @@ impl Summary {
         }
     }
 
+    /// Unbiased sample variance (0 below two samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -46,6 +53,7 @@ impl Summary {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }

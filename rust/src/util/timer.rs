@@ -6,19 +6,28 @@
 
 use std::time::Instant;
 
+/// One measured benchmark: robust per-iteration timings over several
+/// samples.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Label passed to [`bench`].
     pub name: String,
     /// median ns per iteration
     pub median_ns: f64,
+    /// Mean ns per iteration across samples.
     pub mean_ns: f64,
+    /// Fastest sample's ns per iteration.
     pub min_ns: f64,
+    /// Slowest sample's ns per iteration.
     pub max_ns: f64,
+    /// Samples taken.
     pub samples: usize,
+    /// Closure invocations per sample (auto-calibrated).
     pub iters_per_sample: u64,
 }
 
 impl BenchResult {
+    /// Items per second given the per-iteration work amount.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.median_ns * 1e-9)
     }
@@ -73,6 +82,7 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Human-readable duration: picks ns/µs/ms/s units.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")

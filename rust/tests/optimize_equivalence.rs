@@ -15,13 +15,14 @@ use rapid::circuit::sim::{assert_pairs, equivalent_random};
 use rapid::circuit::synth::{netlist_for_div, netlist_for_mul};
 use rapid::util::XorShift256;
 
-/// Random operand sweep of `nl` against `want` on the compiled engine.
+/// Random operand sweep of `nl` against `want` on the compiled engine
+/// (`Sync` because `assert_pairs` shards across the parallel engine).
 fn matches_model(
     nl: &rapid::circuit::Netlist,
     widths: [u32; 2],
     count: usize,
     seed: u64,
-    want: &dyn Fn(u64, u64) -> u128,
+    want: &(dyn Fn(u64, u64) -> u128 + Sync),
 ) {
     let mut rng = XorShift256::new(seed);
     let pairs: Vec<(u64, u64)> =

@@ -1,0 +1,161 @@
+//! The determinism contract of the parallel sweep engine (`util::par`) at
+//! integration scale: every parallelized sweep — error characterisation,
+//! switching-activity power, netlist equivalence verdicts, whole-image
+//! app kernels — produces **bit-identical** results for `RAPID_THREADS`
+//! ∈ {1, 2, 7} on representative registry units. Thread counts are
+//! varied through `par::with_threads` (the scoped override) rather than
+//! the environment, because the test harness itself is multi-threaded;
+//! CI additionally runs the whole tier-1 suite under `RAPID_THREADS=1`
+//! and `RAPID_THREADS=4` so the env path is exercised end-to-end.
+
+use rapid::apps::harris;
+use rapid::apps::images::aerial_scene;
+use rapid::apps::jpeg;
+use rapid::arith::registry::{make_div, make_mul};
+use rapid::circuit::power;
+use rapid::circuit::primitive::{Cell, Energies};
+use rapid::circuit::sim::equivalent_random;
+use rapid::circuit::synth::divider::rapid_div_netlist;
+use rapid::circuit::synth::multiplier::rapid_mul_netlist;
+use rapid::error::{characterize_div, characterize_mul, CharacterizeOpts};
+use rapid::util::par;
+
+/// The three worker counts every sweep is pinned across: serial (the
+/// oracle), an even split, and a prime that never divides the chunk
+/// counts evenly.
+const THREADS: [usize; 3] = [1, 2, 7];
+
+#[test]
+fn exhaustive_error_metrics_are_thread_invariant() {
+    // full 65 536-pair sweeps on a registry multiplier and divider
+    let mul = make_mul("rapid10", 8).unwrap();
+    let div = make_div("rapid9", 4).unwrap();
+    let opts = CharacterizeOpts::default();
+    let m0 = par::with_threads(THREADS[0], || characterize_mul(mul.as_ref(), &opts));
+    let d0 = par::with_threads(THREADS[0], || characterize_div(div.as_ref(), &opts));
+    for &t in &THREADS[1..] {
+        let m = par::with_threads(t, || characterize_mul(mul.as_ref(), &opts));
+        assert_eq!(m.are.to_bits(), m0.are.to_bits(), "mul ARE t={t}");
+        assert_eq!(m.pre.to_bits(), m0.pre.to_bits(), "mul PRE t={t}");
+        assert_eq!(m.pre_large.to_bits(), m0.pre_large.to_bits(), "mul PRE≥8 t={t}");
+        assert_eq!(m.bias.to_bits(), m0.bias.to_bits(), "mul bias t={t}");
+        assert_eq!(m.samples, m0.samples, "mul samples t={t}");
+        let d = par::with_threads(t, || characterize_div(div.as_ref(), &opts));
+        assert_eq!(d.are.to_bits(), d0.are.to_bits(), "div ARE t={t}");
+        assert_eq!(d.pre.to_bits(), d0.pre.to_bits(), "div PRE t={t}");
+        assert_eq!(d.samples, d0.samples, "div samples t={t}");
+        assert_eq!(d.skipped, d0.skipped, "div skipped t={t}");
+    }
+}
+
+#[test]
+fn monte_carlo_error_metrics_are_thread_invariant() {
+    // 32-bit Monte-Carlo: per-chunk split streams make the sampled
+    // metrics a pure function of (seed, mc_samples) — same bits at any
+    // worker count (and on any machine)
+    let mul = make_mul("rapid10", 32).unwrap();
+    let div = make_div("rapid9", 16).unwrap();
+    let opts = CharacterizeOpts { exhaustive_limit: 0, mc_samples: 300_000, ..Default::default() };
+    let m0 = par::with_threads(THREADS[0], || characterize_mul(mul.as_ref(), &opts));
+    let d0 = par::with_threads(THREADS[0], || characterize_div(div.as_ref(), &opts));
+    for &t in &THREADS[1..] {
+        let m = par::with_threads(t, || characterize_mul(mul.as_ref(), &opts));
+        assert_eq!(m.are.to_bits(), m0.are.to_bits(), "mul ARE t={t}");
+        assert_eq!(m.bias.to_bits(), m0.bias.to_bits(), "mul bias t={t}");
+        assert_eq!(m.samples, m0.samples, "mul samples t={t}");
+        assert_eq!(m.skipped, m0.skipped, "mul skipped t={t}");
+        let d = par::with_threads(t, || characterize_div(div.as_ref(), &opts));
+        assert_eq!(d.are.to_bits(), d0.are.to_bits(), "div ARE t={t}");
+        assert_eq!(d.samples, d0.samples, "div samples t={t}");
+        assert_eq!(d.skipped, d0.skipped, "div skipped t={t}");
+    }
+}
+
+#[test]
+fn power_toggle_charges_are_thread_invariant() {
+    // the Table III power loop on real unit netlists, with vector counts
+    // that straddle both the 64-lane pass and 256-transition chunk seams
+    let e = Energies::default();
+    for (nl, vectors, seed) in [
+        (rapid_mul_netlist(16, 10), 1024usize, 11u64),
+        (rapid_div_netlist(8, 9), 700, 12),
+    ] {
+        let p0 = par::with_threads(THREADS[0], || power::estimate(&nl, &e, vectors, seed));
+        for &t in &THREADS[1..] {
+            let p = par::with_threads(t, || power::estimate(&nl, &e, vectors, seed));
+            assert_eq!(
+                p.charge_per_op.to_bits(),
+                p0.charge_per_op.to_bits(),
+                "{} t={t}",
+                nl.name
+            );
+            assert_eq!(p.clock_charge.to_bits(), p0.clock_charge.to_bits(), "{} t={t}", nl.name);
+        }
+    }
+}
+
+#[test]
+fn equivalence_verdicts_are_thread_invariant() {
+    // both the Ok verdict and the Err counterexample (message included —
+    // "first mismatch" is defined in canonical chunk order) must not
+    // depend on the worker count
+    let nl = rapid_mul_netlist(8, 10);
+    let ok0 = par::with_threads(THREADS[0], || equivalent_random(&nl, &nl.clone(), 96, 5));
+    assert!(ok0.is_ok());
+    let mut bad = nl.clone();
+    for cell in bad.cells.iter_mut() {
+        if let Cell::Lut { table, .. } = cell {
+            *table ^= 0b10; // perturb one truth-table entry
+            break;
+        }
+    }
+    let err0 = par::with_threads(THREADS[0], || equivalent_random(&nl, &bad, 96, 5));
+    assert!(err0.is_err(), "perturbed netlist must be caught");
+    for &t in &THREADS[1..] {
+        assert_eq!(par::with_threads(t, || equivalent_random(&nl, &nl.clone(), 96, 5)), ok0);
+        assert_eq!(par::with_threads(t, || equivalent_random(&nl, &bad, 96, 5)), err0, "t={t}");
+    }
+}
+
+#[test]
+fn app_kernels_are_thread_invariant() {
+    // whole-image parallel kernels: JPEG encode→decode (banded) and the
+    // Harris detector (sharded tensor/response planes) — pixel-exact and
+    // symbol-exact across worker counts
+    let img = aerial_scene(72, 53, 77); // height 53: the last band is 5 rows, not 8
+    let mul = make_mul("rapid10", 16).unwrap();
+    let div = make_div("rapid9", 8).unwrap();
+    let (rec0, syms0) =
+        par::with_threads(THREADS[0], || jpeg::roundtrip(&img, mul.as_ref(), div.as_ref()));
+    let corners0 =
+        par::with_threads(THREADS[0], || harris::corners(&img, mul.as_ref(), div.as_ref(), 15));
+    for &t in &THREADS[1..] {
+        let (rec, syms) =
+            par::with_threads(t, || jpeg::roundtrip(&img, mul.as_ref(), div.as_ref()));
+        assert_eq!(rec.px, rec0.px, "JPEG pixels t={t}");
+        assert_eq!(syms, syms0, "JPEG symbols t={t}");
+        let corners =
+            par::with_threads(t, || harris::corners(&img, mul.as_ref(), div.as_ref(), 15));
+        assert_eq!(corners, corners0, "Harris corners t={t}");
+    }
+}
+
+#[test]
+fn par_chunk_edges_hold_at_integration_boundaries() {
+    // the par_chunks edge cases the engine's consumers rely on: empty
+    // work, work smaller than one chunk, and remainder chunks — checked
+    // through the public API at several worker counts
+    for &t in &THREADS {
+        par::with_threads(t, || {
+            assert!(par::par_chunks(0, 64, |c, _| c).is_empty());
+            assert_eq!(par::par_chunks(3, 64, |_, r| (r.start, r.end)), vec![(0, 3)]);
+            assert_eq!(
+                par::par_chunks(130, 64, |_, r| (r.start, r.end)),
+                vec![(0, 64), (64, 128), (128, 130)]
+            );
+            let mut none: [i64; 0] = [];
+            let empty: Vec<i64> = par::par_chunks_mut(&mut none, 8, |_, _, s| s.len() as i64);
+            assert!(empty.is_empty());
+        });
+    }
+}
