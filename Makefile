@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 is `cargo build --release && cargo test -q`.
 
-.PHONY: all test artifacts bench bench-hotpath doc
+.PHONY: all test artifacts bench bench-hotpath bench-explore doc
 
 all:
 	cargo build --release
@@ -17,7 +17,8 @@ artifacts:
 bench:
 	for b in fig1_motivation fig2_error_surface fig4_stage_balance \
 	         fig8_fig9_qor fig10_apps fig11_fig12_pipeline \
-	         table1_accuracy table3_mul table3_div ablations hotpath; do \
+	         table1_accuracy table3_mul table3_div ablations hotpath \
+	         explore; do \
 	    cargo bench --bench $$b; \
 	done
 
@@ -26,6 +27,11 @@ bench:
 # PJRT path when artifacts exist). Also rewrites BENCH_hotpath.json.
 bench-hotpath:
 	cargo bench --bench hotpath
+
+# Design-space exploration ladder (candidates/sec, survivor splits); also
+# rewrites BENCH_explore.json and prints the width-8 accuracy-budget pick.
+bench-explore:
+	cargo bench --bench explore
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,137 @@
+//! §Perf — design-space exploration throughput (not a paper figure):
+//! candidates/second of the successive-halving ladder, screen-vs-refine
+//! survivor counts, and the serial-vs-parallel fan-out rows EXPERIMENTS.md
+//! §Perf "Iteration 6" tracks. Everything is recorded to
+//! `BENCH_explore.json` (`make bench-explore` refreshes it).
+
+use rapid::bench_support::record::Recorder;
+use rapid::bench_support::table::Table;
+use rapid::explore::search::{
+    app_space, explore_app, explore_units, parse_budget, recommend_units, Objective, Pick,
+    SearchOpts,
+};
+use rapid::explore::{EvalOpts, Space};
+use rapid::util::par;
+use rapid::util::timer::{bench_n, black_box, fmt_ns};
+
+fn opts() -> SearchOpts {
+    SearchOpts {
+        screen_samples: 20_000,
+        refine: EvalOpts { mc_samples: 200_000, power_vectors: 48, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut t = Table::new(
+        "§Perf — design-space exploration (explore ladder)",
+        &["stage", "time", "throughput", "notes"],
+    );
+    let mut rec = Recorder::new("explore");
+
+    // 1. the CI-smoke shape: full width-8 multiplier space (all 23
+    //    registry names, 15 of them the RAPID G ladder), depths {1, 2, 4};
+    //    screen is MC, refinement exhaustive. One warm-up run reports the
+    //    survivor split; the timed runs measure the whole ladder.
+    let space = Space::mul_full().at_width(8);
+    let o = opts();
+    let warm = explore_units(&space, &o);
+    let n = warm.n_candidates;
+    println!(
+        "width-8 mul space: {} candidates, {} survivors refined, {} frontier points",
+        n,
+        warm.n_survivors,
+        warm.frontier.len()
+    );
+    let r = bench_n("explore_mul8_full", 3, &mut || {
+        black_box(explore_units(&space, &o).frontier.len());
+    });
+    t.row(&[
+        "mul8 full ladder".into(),
+        fmt_ns(r.median_ns),
+        format!("{:.1} cand/s", 1e9 * n as f64 / r.median_ns),
+        format!("{} → {} survivors → {} frontier", n, warm.n_survivors, warm.frontier.len()),
+    ]);
+    rec.add(
+        &format!("explore_mul8_full_surv{}of{}", warm.n_survivors, n),
+        &r,
+        n as f64,
+    );
+
+    // 1-thread vs all-core rows of the same ladder (the outer fan-out is
+    // the parallel surface; numbers are bit-identical by contract)
+    let r1 = bench_n("explore_mul8_t1", 2, &mut || {
+        par::with_threads(1, || black_box(explore_units(&space, &o).frontier.len()));
+    });
+    t.row(&[
+        "mul8 full ladder (1 thread)".into(),
+        fmt_ns(r1.median_ns),
+        format!("{:.1} cand/s", 1e9 * n as f64 / r1.median_ns),
+        format!("{:.2}x speedup at {} threads", r1.median_ns / r.median_ns, par::threads()),
+    ]);
+    rec.add("explore_mul8_t1", &r1, n as f64);
+    rec.add("explore_mul8_par", &r, n as f64);
+
+    // 2. divider space at width 8: exhaustive refinement sweeps the
+    //    2^24-pair constrained rectangle per survivor — the heavy rung
+    //    successive halving exists to bound.
+    let dspace = Space::div_full().at_width(8).with_stages(&[1, 2]);
+    let dwarm = explore_units(&dspace, &o);
+    let dn = dwarm.n_candidates;
+    let r = bench_n("explore_div8_full", 1, &mut || {
+        black_box(explore_units(&dspace, &o).frontier.len());
+    });
+    t.row(&[
+        "div8 full ladder".into(),
+        fmt_ns(r.median_ns),
+        format!("{:.2} cand/s", 1e9 * dn as f64 / r.median_ns),
+        format!("{} → {} survivors → {} frontier", dn, dwarm.n_survivors, dwarm.frontier.len()),
+    ]);
+    rec.add(
+        &format!("explore_div8_full_surv{}of{}", dwarm.n_survivors, dn),
+        &r,
+        dn as f64,
+    );
+
+    // 3. app-scoped ladder on the paper's JPEG configuration space
+    //    (RAPID mul ladder × RAPID div ladder at the Table III depths)
+    let pairs = app_space(
+        &["exact", "mitchell", "rapid3", "rapid5", "rapid10"],
+        &["exact", "mitchell", "rapid3", "rapid5", "rapid9"],
+        &[1, 2],
+    );
+    let pwarm = explore_app("jpeg", &pairs, &o);
+    let r = bench_n("explore_jpeg", 1, &mut || {
+        black_box(explore_app("jpeg", &pairs, &o).frontier.len());
+    });
+    t.row(&[
+        "jpeg pairing ladder".into(),
+        fmt_ns(r.median_ns),
+        format!("{:.2} pair/s", 1e9 * pairs.len() as f64 / r.median_ns),
+        format!(
+            "{} → {} survivors → {} frontier",
+            pwarm.n_candidates,
+            pwarm.n_survivors,
+            pwarm.frontier.len()
+        ),
+    ]);
+    rec.add(
+        &format!("explore_jpeg_surv{}of{}", pwarm.n_survivors, pwarm.n_candidates),
+        &r,
+        pairs.len() as f64,
+    );
+
+    // headline recommendation, printed so the bench doubles as the
+    // paper-flow demo (Table III pick at an accuracy budget)
+    let budget = parse_budget("are<=0.01").unwrap();
+    match recommend_units(&warm, &budget, Objective::Adp).unwrap() {
+        Pick::Chosen(i) => println!("\nwidth-8 pick at are<=1%: {}", warm.reports[i].row()),
+        Pick::Infeasible => println!("\nwidth-8 pick at are<=1%: infeasible"),
+    }
+
+    t.print();
+    match rec.write("BENCH_explore.json") {
+        Ok(()) => println!("\nrecorded -> BENCH_explore.json (the EXPERIMENTS.md §Perf trajectory)"),
+        Err(e) => eprintln!("\ncould not write BENCH_explore.json: {e}"),
+    }
+}

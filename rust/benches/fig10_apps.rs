@@ -31,7 +31,7 @@ fn main() {
     // (apps::census::rollup_all — results in input order, so the table
     // rows are identical to the old serial nested loop)
     let mut grid: Vec<(&str, &str, _, _)> = Vec::new();
-    for app in ["pantompkins", "jpeg", "harris"] {
+    for &app in rapid::apps::census::APPS {
         for (label, m, d) in [
             ("accurate", &acc_m, &acc_d),
             ("RAPID", &rap_m, &rap_d),

@@ -30,7 +30,7 @@ fn main() {
         })
         .collect();
 
-    for app in ["pantompkins", "jpeg", "harris"] {
+    for &app in rapid::apps::census::APPS {
         let mut t = Table::new(
             &format!("Fig. 11 — {app}: latency & throughput, NP vs pipelined"),
             &["config", "latency(ns)", "tput(items/µs)"],

@@ -28,6 +28,12 @@ pub struct KernelSpec {
     pub div_ops_per_item: usize,
 }
 
+/// Canonical list of the paper's three applications, in figure order —
+/// the single source every app sweep (tests, Fig. 10/12 benches, the
+/// `explore` budget queries) enumerates instead of hand-copied arrays.
+/// Every name is a valid [`app_kernels`] argument.
+pub const APPS: &[&str] = &["pantompkins", "jpeg", "harris"];
+
 /// Application = named chain of kernels (Figs. 5-7 structures).
 pub fn app_kernels(app: &str) -> Vec<KernelSpec> {
     match app {
@@ -162,7 +168,7 @@ mod tests {
         let ed = characterize(&exact_div_netlist(8), 1, 40, 1);
         let rm = characterize(&rapid_mul_netlist(16, 10), 1, 40, 1);
         let rd = characterize(&rapid_div_netlist(8, 9), 1, 40, 1);
-        for app in ["pantompkins", "jpeg", "harris"] {
+        for &app in APPS {
             let acc = rollup(app, &em, &ed);
             let rap = rollup(app, &rm, &rd);
             assert!(rap.luts < acc.luts, "{app}: {} !< {} LUTs", rap.luts, acc.luts);
@@ -174,8 +180,7 @@ mod tests {
     fn rollup_all_matches_individual_rollups() {
         let m = characterize(&rapid_mul_netlist(16, 10), 1, 40, 1);
         let d = characterize(&rapid_div_netlist(8, 9), 1, 40, 1);
-        let configs: Vec<(&str, &_, &_)> =
-            ["pantompkins", "jpeg", "harris"].iter().map(|&a| (a, &m, &d)).collect();
+        let configs: Vec<(&str, &_, &_)> = APPS.iter().map(|&a| (a, &m, &d)).collect();
         for t in [1usize, 3] {
             let grid = crate::util::par::with_threads(t, || rollup_all(&configs));
             assert_eq!(grid.len(), 3);
@@ -190,7 +195,7 @@ mod tests {
 
     #[test]
     fn all_apps_have_kernels() {
-        for app in ["pantompkins", "jpeg", "harris"] {
+        for &app in APPS {
             let ks = app_kernels(app);
             assert!(ks.len() >= 4);
             assert!(ks.iter().any(|k| k.mul_units > 0 || k.div_units > 0));

@@ -28,6 +28,16 @@ fn div_scheme(g: usize) -> &'static Scheme {
     slots[g].get_or_init(|| derive_div_scheme(g))
 }
 
+/// Shared constructor guard for the RAPID units: operand/divisor widths
+/// 2..=32 (the synthesizable range of the circuit layer) and coefficient
+/// group counts 1..=15 — the scheme cache's slot range and exactly the
+/// `rapid1`…`rapid15` keys `arith::registry::parse_rapid` accepts, so a
+/// name that parses always constructs. Panics otherwise, naming the unit.
+fn check_params(n: u32, g: usize, unit: &str) {
+    assert!((2..=32).contains(&n), "{unit}: width {n} unsupported (2..=32)");
+    assert!((1..=15).contains(&g), "{unit}: group count {g} unsupported (1..=15)");
+}
+
 /// RAPID N×N multiplier with G error coefficients.
 pub struct RapidMul {
     n: u32,
@@ -40,8 +50,7 @@ impl RapidMul {
     /// RAPID multiplier at width `n` with `g` coefficient groups
     /// (1 ≤ g ≤ 15, widths 2..=32).
     pub fn new(n: u32, g: usize) -> Self {
-        assert!((2..=32).contains(&n), "width {n} unsupported");
-        assert!(g >= 1 && g <= 15);
+        check_params(n, g, "RapidMul");
         let scheme = mul_scheme(g);
         let table = scheme.coeff_table(n - 1);
         RapidMul { n, scheme, table }
@@ -105,8 +114,7 @@ impl RapidDiv {
     /// RAPID divider at divisor width `n` with `g` coefficient groups
     /// (1 ≤ g ≤ 15, widths 2..=32).
     pub fn new(n: u32, g: usize) -> Self {
-        assert!((2..=32).contains(&n), "divisor width {n} unsupported");
-        assert!(g >= 1 && g <= 15);
+        check_params(n, g, "RapidDiv");
         let scheme = div_scheme(g);
         let table = scheme.coeff_table(n - 1);
         RapidDiv { n, scheme, table }

@@ -14,17 +14,32 @@ use super::saadi::SaadiDiv;
 use super::simdive::{SimdiveDiv, SimdiveMul};
 use super::traits::{DivUnit, MulUnit};
 
+/// Parse a RAPID registry key: `rapid<G>` with G ∈ 1..=15 and no leading
+/// zero (`rapid10` → `Some(10)`; `rapid`, `rapid0`, `rapid05`, `rapid16`,
+/// `rapidx` → `None`). The single place the `rapidN` grammar is defined —
+/// `make_mul`/`make_div`, the netlist lookups and the `synth` CLI all call
+/// it, so the whole G ∈ 1..=15 family is first-class everywhere, not just
+/// the three Table III configurations.
+pub fn parse_rapid(name: &str) -> Option<usize> {
+    let digits = name.strip_prefix("rapid")?;
+    if digits.is_empty() || digits.starts_with('0') || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    let g: usize = digits.parse().ok()?;
+    (1..=15).contains(&g).then_some(g)
+}
+
 /// Instantiate a multiplier by name at width `n`.
-/// Known names: exact, mitchell, mbm, rapid3, rapid5, rapid10, simdive,
-/// realm256, drum4, drum6, afm.
+/// Known names: exact, mitchell, mbm, rapid1…rapid15, simdive, realm256,
+/// drum4, drum6, afm (see [`mul_names`]).
 pub fn make_mul(name: &str, n: u32) -> Option<MulUnit> {
+    if let Some(g) = parse_rapid(name) {
+        return Some(Box::new(RapidMul::new(n, g)));
+    }
     Some(match name {
         "exact" => Box::new(ExactMul { n }),
         "mitchell" => Box::new(MitchellMul { n }),
         "mbm" => Box::new(MbmMul::new(n)),
-        "rapid3" => Box::new(RapidMul::new(n, 3)),
-        "rapid5" => Box::new(RapidMul::new(n, 5)),
-        "rapid10" => Box::new(RapidMul::new(n, 10)),
         "simdive" => Box::new(SimdiveMul::new(n)),
         "realm256" => Box::new(SimdiveMul::with_f(n, 4)),
         "drum4" => Box::new(DrumMul::new(n, 4)),
@@ -35,17 +50,17 @@ pub fn make_mul(name: &str, n: u32) -> Option<MulUnit> {
 }
 
 /// Instantiate a divider by name at divisor width `n` (dividend `2n`).
-/// Known names: exact, mitchell, inzed, rapid3, rapid5, rapid9, simdive,
+/// Known names: exact, mitchell, inzed, rapid1…rapid15, simdive,
 /// aaxd_small (2k/k = 6/3 at n=4 … scaled), aaxd (8/4-style ≈ n/2),
-/// aaxd_large (12/6-style ≈ 3n/4), saadi.
+/// aaxd_large (12/6-style ≈ 3n/4), saadi (see [`div_names`]).
 pub fn make_div(name: &str, n: u32) -> Option<DivUnit> {
+    if let Some(g) = parse_rapid(name) {
+        return Some(Box::new(RapidDiv::new(n, g)));
+    }
     Some(match name {
         "exact" => Box::new(ExactDiv { n }),
         "mitchell" => Box::new(MitchellDiv { n }),
         "inzed" => Box::new(InzedDiv::new(n)),
-        "rapid3" => Box::new(RapidDiv::new(n, 3)),
-        "rapid5" => Box::new(RapidDiv::new(n, 5)),
-        "rapid9" => Box::new(RapidDiv::new(n, 9)),
         "simdive" => Box::new(SimdiveDiv::new(n)),
         "aaxd_small" => Box::new(AaxdDiv::new(n, (n / 2).max(3).min(n))),
         "aaxd" => Box::new(AaxdDiv::new(n, (n / 2).max(2))),
@@ -67,28 +82,74 @@ pub const TABLE3_MULS: &[&str] =
 pub const TABLE3_DIVS: &[&str] =
     &["mitchell", "inzed", "rapid3", "rapid5", "rapid9", "simdive", "aaxd", "saadi"];
 
-/// Every name `make_mul` understands (the README registry table).
-pub const ALL_MULS: &[&str] = &[
-    "exact", "mitchell", "mbm", "rapid3", "rapid5", "rapid10", "simdive", "realm256", "drum4",
-    "drum6", "afm",
+/// The fixed (non-RAPID) multiplier designs.
+const BASE_MULS: &[&str] =
+    &["exact", "mitchell", "mbm", "simdive", "realm256", "drum4", "drum6", "afm"];
+
+/// The fixed (non-RAPID) divider designs.
+const BASE_DIVS: &[&str] =
+    &["exact", "mitchell", "inzed", "simdive", "aaxd_small", "aaxd", "aaxd_large", "saadi"];
+
+/// Every `rapidN` key [`parse_rapid`] accepts, in ascending G order.
+const RAPID_KEYS: &[&str] = &[
+    "rapid1", "rapid2", "rapid3", "rapid4", "rapid5", "rapid6", "rapid7", "rapid8", "rapid9",
+    "rapid10", "rapid11", "rapid12", "rapid13", "rapid14", "rapid15",
 ];
 
-/// Every name `make_div` understands.
-pub const ALL_DIVS: &[&str] = &[
-    "exact", "mitchell", "inzed", "rapid3", "rapid5", "rapid9", "simdive", "aaxd_small", "aaxd",
-    "aaxd_large", "saadi",
-];
+/// Canonical list of every name [`make_mul`] understands (the fixed
+/// designs of the README registry table followed by `rapid1`…`rapid15`).
+/// Single source of truth: the registry tests, the batch/netlist/optimize
+/// equivalence sweeps and the `explore` design space all enumerate this
+/// list rather than hand-maintained copies.
+pub fn mul_names() -> Vec<&'static str> {
+    BASE_MULS.iter().chain(RAPID_KEYS).copied().collect()
+}
+
+/// Divider counterpart of [`mul_names`]: every name [`make_div`]
+/// understands, fixed designs first, then `rapid1`…`rapid15`.
+pub fn div_names() -> Vec<&'static str> {
+    BASE_DIVS.iter().chain(RAPID_KEYS).copied().collect()
+}
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
+    fn parse_rapid_grammar() {
+        for (g, &key) in RAPID_KEYS.iter().enumerate() {
+            assert_eq!(parse_rapid(key), Some(g + 1), "{key}");
+        }
+        for bad in ["rapid", "rapid0", "rapid05", "rapid16", "rapid99", "rapidx", "rapid1x", ""] {
+            assert_eq!(parse_rapid(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn name_lists_are_canonical() {
+        // every listed name instantiates; no duplicates; the Table III
+        // subsets are subsets of the canonical lists
+        let muls = mul_names();
+        let divs = div_names();
+        assert_eq!(muls.len(), BASE_MULS.len() + 15);
+        assert_eq!(divs.len(), BASE_DIVS.len() + 15);
+        for (list, all) in [(TABLE3_MULS, &muls), (TABLE3_DIVS, &divs)] {
+            for name in list {
+                assert!(all.contains(name), "Table III name {name} missing from canonical list");
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        assert!(muls.iter().all(|n| seen.insert(*n)), "duplicate mul name");
+        seen.clear();
+        assert!(divs.iter().all(|n| seen.insert(*n)), "duplicate div name");
+    }
+
+    #[test]
     fn every_documented_mul_instantiates_at_paper_widths() {
         // Table III instantiates every design at 8/16/32 bit; the registry
         // must honour that at every width, with in-range products and the
         // zero-annihilation rule intact.
-        for &name in ALL_MULS {
+        for name in mul_names() {
             for n in [8u32, 16, 32] {
                 let m = make_mul(name, n)
                     .unwrap_or_else(|| panic!("make_mul({name}, {n}) returned None"));
@@ -106,7 +167,7 @@ mod tests {
     fn every_documented_div_instantiates_at_paper_widths() {
         // Divider configurations are 2N/N at N = 8/16/32 (plus the 8/4
         // point Table III also reports — covered by the older smoke test).
-        for &name in ALL_DIVS {
+        for name in div_names() {
             for n in [8u32, 16, 32] {
                 let d = make_div(name, n)
                     .unwrap_or_else(|| panic!("make_div({name}, {n}) returned None"));
@@ -130,7 +191,7 @@ mod tests {
         // ("aaxd8_4_div8", "saadi_ec16_div8") instead of the key, and
         // aaxd/aaxd_small alias to the same window at these widths — for
         // those only prefix + determinism are asserted.
-        for &name in ALL_MULS {
+        for name in mul_names() {
             let a = make_mul(name, 16).unwrap().name();
             let b = make_mul(name, 16).unwrap().name();
             assert_eq!(a, b, "mul name not deterministic for {name}");
@@ -139,7 +200,7 @@ mod tests {
             let again = make_mul(stem, 16).unwrap_or_else(|| panic!("stem {stem} unknown"));
             assert_eq!(again.name(), a);
         }
-        for &name in ALL_DIVS {
+        for name in div_names() {
             let a = make_div(name, 8).unwrap().name();
             let b = make_div(name, 8).unwrap().name();
             assert_eq!(a, b, "div name not deterministic for {name}");
@@ -159,9 +220,11 @@ mod tests {
     fn unknown_names_rejected_at_every_width() {
         for n in [8u32, 16, 32] {
             assert!(make_mul("rapid", n).is_none(), "bare 'rapid' is not a key");
+            assert!(make_mul("rapid0", n).is_none(), "G = 0 is plain mitchell, not a key");
+            assert!(make_mul("rapid16", n).is_none(), "G > 15 exceeds the scheme family");
             assert!(make_mul("drum", n).is_none());
             assert!(make_mul("", n).is_none());
-            assert!(make_div("rapid10", n).is_none(), "rapid10 is a mul-only key");
+            assert!(make_div("rapid16", n).is_none());
             assert!(make_div("mbm", n).is_none(), "mbm is a mul-only key");
             assert!(make_div("", n).is_none());
         }
@@ -169,7 +232,7 @@ mod tests {
 
     #[test]
     fn all_registered_muls_instantiate_and_run() {
-        for name in ["exact", "mitchell", "mbm", "rapid3", "rapid5", "rapid10", "simdive", "realm256", "drum4", "drum6", "afm"] {
+        for name in mul_names() {
             let m = make_mul(name, 16).unwrap_or_else(|| panic!("{name} missing"));
             assert_eq!(m.width(), 16);
             let p = m.mul(1234, 567);
@@ -180,7 +243,7 @@ mod tests {
 
     #[test]
     fn all_registered_divs_instantiate_and_run() {
-        for name in ["exact", "mitchell", "inzed", "rapid3", "rapid5", "rapid9", "simdive", "aaxd", "aaxd_large", "saadi"] {
+        for name in div_names() {
             let d = make_div(name, 8).unwrap_or_else(|| panic!("{name} missing"));
             assert_eq!(d.divisor_width(), 8);
             let q = d.div(5000, 77);

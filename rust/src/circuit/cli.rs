@@ -22,16 +22,15 @@ pub fn run(argv: Vec<String>) {
         ("exact", true) => exact_div_netlist(width),
         ("mitchell", false) => rapid_mul_netlist(width, 0),
         ("mitchell", true) => rapid_div_netlist(width, 0),
-        (u, false) if u.starts_with("rapid") => {
-            let g: usize = u[5..].parse().expect("rapidN");
-            rapid_mul_netlist(width, g)
+        // one grammar for the family: registry::parse_rapid (G ∈ 1..=15)
+        (u, false) if crate::arith::registry::parse_rapid(u).is_some() => {
+            rapid_mul_netlist(width, crate::arith::registry::parse_rapid(u).unwrap())
         }
-        (u, true) if u.starts_with("rapid") => {
-            let g: usize = u[5..].parse().expect("rapidN");
-            rapid_div_netlist(width, g)
+        (u, true) if crate::arith::registry::parse_rapid(u).is_some() => {
+            rapid_div_netlist(width, crate::arith::registry::parse_rapid(u).unwrap())
         }
         (u, _) => {
-            eprintln!("synth: unknown unit '{u}' (exact | mitchell | rapidN)");
+            eprintln!("synth: unknown unit '{u}' (exact | mitchell | rapid1..rapid15)");
             std::process::exit(2);
         }
     };

@@ -14,32 +14,48 @@ pub mod multiplier;
 pub mod divider;
 pub mod exact_ip;
 
+use crate::arith::registry::parse_rapid;
 use crate::circuit::netlist::Netlist;
 
 /// Gate-level netlist behind a registry multiplier name, for the names
-/// that have a LUT mapping (`exact`, `mitchell`, `rapid3/5/10`); the
-/// remaining registry designs are accuracy-only functional models. Used
-/// by the registry-wide equivalence and `optimize()`-preservation sweeps.
+/// that have a LUT mapping (`exact`, `mitchell` and the whole
+/// `rapid1`…`rapid15` family); the remaining registry designs are
+/// accuracy-only functional models. Used by the registry-wide
+/// equivalence and `optimize()`-preservation sweeps and by the `explore`
+/// design space's circuit half.
 pub fn netlist_for_mul(name: &str, n: u32) -> Option<Netlist> {
+    if let Some(g) = parse_rapid(name) {
+        return Some(multiplier::rapid_mul_netlist(n, g));
+    }
     match name {
         "exact" => Some(exact_ip::exact_mul_netlist(n)),
         "mitchell" => Some(multiplier::mitchell_mul_netlist(n)),
-        "rapid3" => Some(multiplier::rapid_mul_netlist(n, 3)),
-        "rapid5" => Some(multiplier::rapid_mul_netlist(n, 5)),
-        "rapid10" => Some(multiplier::rapid_mul_netlist(n, 10)),
         _ => None,
     }
 }
 
 /// Divider counterpart of [`netlist_for_mul`] (`exact`, `mitchell`,
-/// `rapid3/5/9`); `n` is the divisor width, the dividend is `2n` bits.
+/// `rapid1`…`rapid15`); `n` is the divisor width, the dividend is `2n`
+/// bits.
 pub fn netlist_for_div(name: &str, n: u32) -> Option<Netlist> {
+    if let Some(g) = parse_rapid(name) {
+        return Some(divider::rapid_div_netlist(n, g));
+    }
     match name {
         "exact" => Some(exact_ip::exact_div_netlist(n)),
         "mitchell" => Some(divider::mitchell_div_netlist(n)),
-        "rapid3" => Some(divider::rapid_div_netlist(n, 3)),
-        "rapid5" => Some(divider::rapid_div_netlist(n, 5)),
-        "rapid9" => Some(divider::rapid_div_netlist(n, 9)),
         _ => None,
     }
+}
+
+/// True when [`netlist_for_mul`] has a mapping for `name` — without
+/// paying for the synthesis. The `explore` space uses this to tell
+/// circuit-bearing candidates from accuracy-only functional models.
+pub fn has_mul_netlist(name: &str) -> bool {
+    matches!(name, "exact" | "mitchell") || parse_rapid(name).is_some()
+}
+
+/// Divider counterpart of [`has_mul_netlist`].
+pub fn has_div_netlist(name: &str) -> bool {
+    matches!(name, "exact" | "mitchell") || parse_rapid(name).is_some()
 }

@@ -1,0 +1,270 @@
+//! `rapid explore` subcommand: run a design-space exploration and answer
+//! a QoR budget query (DESIGN.md §6).
+//!
+//! Unit-scoped:   `rapid explore --op mul --width 8 --budget "are<=0.02"`
+//! App-scoped:    `rapid explore --app jpeg --qor "psnr>=30"`
+//!
+//! Output is deterministic: the frontier is printed in canonical order
+//! and every number is bit-identical at any `RAPID_THREADS`.
+
+use crate::util::cli::Args;
+
+use super::search::{
+    app_space, explore_app, explore_units, parse_budget, recommend_app, recommend_units,
+    resolve_app, AppExplore, Constraint, Objective, Pick, SearchOpts, UnitExplore,
+};
+use super::space::Space;
+
+/// Entry point of the `explore` subcommand (argv = everything after it).
+pub fn run(argv: Vec<String>) {
+    let args = Args::parse(
+        argv,
+        &[
+            "op", "width", "stages", "units", "muls", "divs", "app", "budget", "qor",
+            "objective", "screen-samples", "samples", "vectors",
+        ],
+    );
+    let budget_str = args.get("qor").or_else(|| args.get("budget")).unwrap_or("");
+    let budget = match parse_budget(budget_str) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("explore: {e}");
+            std::process::exit(2);
+        }
+    };
+    let objective = match Objective::parse(args.get_or("objective", "adp")) {
+        Some(o) => o,
+        None => {
+            eprintln!(
+                "explore: unknown objective '{}' (luts | latency | adp | power)",
+                args.get_or("objective", "adp")
+            );
+            std::process::exit(2);
+        }
+    };
+    let stages = parse_list(args.get_or("stages", "1,2,4"));
+    if stages.is_empty() {
+        eprintln!("explore: --stages must be a comma list of depths (e.g. 1,2,4)");
+        std::process::exit(2);
+    }
+
+    let d = SearchOpts::default();
+    let opts = SearchOpts {
+        screen_samples: args.get_u64("screen-samples", d.screen_samples),
+        refine: super::evaluate::EvalOpts {
+            mc_samples: args.get_u64("samples", d.refine.mc_samples),
+            power_vectors: args.get_usize("vectors", d.refine.power_vectors),
+            ..d.refine
+        },
+        ..d
+    };
+
+    // a filter flag that the selected mode never reads must fail loudly —
+    // silently exploring a different space than the user asked for is the
+    // same bug class reject_unknown guards against
+    let reject_flags = |mode: &str, flags: &[&str]| {
+        for f in flags {
+            if args.get(f).is_some() {
+                eprintln!("explore: --{f} is not an option of {mode} runs");
+                std::process::exit(2);
+            }
+        }
+    };
+    if let Some(app) = args.get("app") {
+        reject_flags("app-scoped (--app)", &["op", "width", "units"]);
+        run_app(app, &args, &stages, &budget, objective, &opts);
+    } else {
+        reject_flags("unit-scoped", &["muls", "divs"]);
+        run_units(&args, &stages, &budget, objective, &opts);
+    }
+}
+
+fn parse_list(s: &str) -> Vec<usize> {
+    let tokens: Vec<&str> =
+        s.split(',').map(|t| t.trim()).filter(|t| !t.is_empty()).collect();
+    let parsed: Vec<usize> = tokens.iter().filter_map(|t| t.parse().ok()).collect();
+    if parsed.len() != tokens.len() {
+        eprintln!("explore: --stages has a non-numeric depth in '{s}'");
+        std::process::exit(2);
+    }
+    parsed
+}
+
+fn split_names(s: &str) -> Vec<&str> {
+    s.split(',').map(|t| t.trim()).filter(|t| !t.is_empty()).collect()
+}
+
+/// A typo in a name filter must fail loudly, not silently shrink the
+/// explored space to whatever happened to match.
+fn reject_unknown(flag: &str, requested: &[&str], known: &[&'static str]) {
+    for r in requested {
+        if !known.iter().any(|&k| k == *r) {
+            eprintln!("explore: {flag} names unknown unit '{r}' (known: {})", known.join(", "));
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run_units(
+    args: &Args,
+    stages: &[usize],
+    budget: &[Constraint],
+    objective: Objective,
+    opts: &SearchOpts,
+) {
+    let op = args.get_or("op", "mul");
+    let width = args.get_u32("width", 16);
+    if !(2..=32).contains(&width) {
+        // fail before any work starts — otherwise RapidMul::new panics
+        // mid-evaluation with a backtrace instead of a usage error
+        eprintln!("explore: --width {width} unsupported (2..=32)");
+        std::process::exit(2);
+    }
+    let space = match op {
+        "mul" => Space::mul_full(),
+        "div" => Space::div_full(),
+        other => {
+            eprintln!("explore: unknown --op '{other}' (mul | div)");
+            std::process::exit(2);
+        }
+    };
+    let keep = split_names(args.get_or("units", ""));
+    reject_unknown("--units", &keep, &space.names);
+    let space = space.at_width(width).with_stages(stages).retain_names(&keep);
+    if space.names.is_empty() {
+        eprintln!("explore: --units filtered the space to nothing");
+        std::process::exit(2);
+    }
+    let ex = explore_units(&space, opts);
+    print_unit_explore(op, width, opts, &ex);
+    report_unit_pick(&ex, budget, objective);
+}
+
+fn print_unit_explore(op: &str, width: u32, opts: &SearchOpts, ex: &UnitExplore) {
+    println!(
+        "explore: {op} space @ width {width} — {} candidates screened ({} MC samples), {} survivors refined",
+        ex.n_candidates, opts.screen_samples, ex.n_survivors
+    );
+    println!("frontier ({} points; axes: LUTs, latency, ADP, power, ARE):", ex.frontier.len());
+    for &i in &ex.frontier {
+        println!("  {}", ex.reports[i].row());
+    }
+    let accuracy_only: Vec<usize> =
+        (0..ex.reports.len()).filter(|&i| ex.reports[i].circuit.is_none()).collect();
+    if !accuracy_only.is_empty() {
+        println!("accuracy-only models (no netlist — excluded from the frontier):");
+        for i in accuracy_only {
+            println!("  {}", ex.reports[i].row());
+        }
+    }
+}
+
+fn report_unit_pick(ex: &UnitExplore, budget: &[Constraint], objective: Objective) {
+    match recommend_units(ex, budget, objective) {
+        Ok(Pick::Chosen(i)) => {
+            println!("recommendation ({}):", describe(budget, objective));
+            println!("  {}", ex.reports[i].row());
+        }
+        Ok(Pick::Infeasible) => {
+            println!("recommendation ({}): infeasible — no frontier point meets the budget", describe(budget, objective));
+        }
+        Err(e) => {
+            eprintln!("explore: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run_app(
+    app: &str,
+    args: &Args,
+    stages: &[usize],
+    budget: &[Constraint],
+    objective: Objective,
+    opts: &SearchOpts,
+) {
+    let app = match resolve_app(app) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("explore: {e}");
+            std::process::exit(2);
+        }
+    };
+    let muls = split_names(args.get_or("muls", ""));
+    let divs = split_names(args.get_or("divs", ""));
+    reject_unknown("--muls", &muls, &crate::arith::registry::mul_names());
+    reject_unknown("--divs", &divs, &crate::arith::registry::div_names());
+    let pairs = app_space(&muls, &divs, stages);
+    if pairs.is_empty() {
+        // all requested names were accuracy-only models (no netlist) —
+        // the pairing space needs circuit-bearing units for the roll-up
+        eprintln!(
+            "explore: --muls/--divs left no circuit-bearing pairings (exact | mitchell | rapid1..rapid15)"
+        );
+        std::process::exit(2);
+    }
+    let ex = explore_app(app, &pairs, opts);
+    print_app_explore(&ex);
+    match recommend_app(&ex, budget, objective) {
+        Ok(Pick::Chosen(i)) => {
+            println!("recommendation ({}):", describe(budget, objective));
+            println!("  {}", app_row(&ex, i));
+        }
+        Ok(Pick::Infeasible) => {
+            println!("recommendation ({}): infeasible — no frontier point meets the budget", describe(budget, objective));
+        }
+        Err(e) => {
+            eprintln!("explore: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_app_explore(ex: &AppExplore) {
+    println!(
+        "explore: app {} — {} mul+div pairings screened, {} survivors refined (QoR metric: {})",
+        ex.app, ex.n_candidates, ex.n_survivors, ex.qor_metric
+    );
+    println!("frontier ({} points; axes: LUTs, latency, ADP, {}):", ex.frontier.len(), ex.qor_metric);
+    for &i in &ex.frontier {
+        println!("  {}", app_row(ex, i));
+    }
+}
+
+fn app_row(ex: &AppExplore, i: usize) -> String {
+    let p = &ex.points[i];
+    format!(
+        "{:<24} {}={:8.3}  LUT={:<6} lat={:9.2}ns ADP={:12.1}",
+        p.pair.key(),
+        ex.qor_metric,
+        p.qor,
+        p.rollup.luts,
+        p.rollup.latency_ns,
+        p.rollup.adp()
+    )
+}
+
+fn describe(budget: &[Constraint], objective: Objective) -> String {
+    // (re-rendered rather than echoing the raw CLI string so the line is
+    // normalised: lower-case metrics, canonical spacing)
+    let b = if budget.is_empty() {
+        "no budget".to_string()
+    } else {
+        budget
+            .iter()
+            .map(|c| {
+                format!(
+                    "{}{}{}",
+                    c.metric,
+                    match c.cmp {
+                        super::search::Cmp::Le => "<=",
+                        super::search::Cmp::Ge => ">=",
+                    },
+                    c.value
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    format!("budget: {b}; objective: {objective:?}")
+}

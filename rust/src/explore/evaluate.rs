@@ -1,0 +1,275 @@
+//! Candidate evaluation: fuse the accuracy half (ARE/PRE from
+//! [`crate::error::drivers`]) with the circuit half
+//! ([`crate::circuit::report::UnitReport`]) into one [`CandidateReport`]
+//! per configuration-space point (DESIGN.md §6).
+//!
+//! The fan-out contract: candidates are evaluated one per
+//! [`crate::util::par`] chunk (outer parallelism across the space), and
+//! every sweep *inside* a chunk — error characterisation, power vectors,
+//! pipeline self-checks — is pinned to one worker
+//! (`par::with_threads(1)` / `CharacterizeOpts.threads = 1`). The engine
+//! is deliberately non-nesting, and each inner sweep is already
+//! thread-count-invariant, so pinning it serial changes nothing except
+//! avoiding oversubscription; the per-candidate results are a pure
+//! function of the candidate and the options, making the whole
+//! evaluation bit-identical at any `RAPID_THREADS`.
+
+use crate::arith::registry::{make_div, make_mul};
+use crate::circuit::report::{characterize, UnitReport};
+use crate::circuit::synth::{netlist_for_div, netlist_for_mul};
+use crate::error::{characterize_div, characterize_mul, CharacterizeOpts};
+use crate::error::metrics::ErrorReport;
+use crate::util::par;
+
+use super::space::{Candidate, Op};
+
+/// Evaluation fidelity knobs shared by the screen and refine rungs.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOpts {
+    /// Accuracy driver: exhaustive when the pair space fits, else
+    /// Monte-Carlo (`exhaustive_limit = 0` forces MC — the screen rung).
+    pub exhaustive_limit: u64,
+    /// Monte-Carlo sample budget per unit.
+    pub mc_samples: u64,
+    /// Base seed of the accuracy sweeps.
+    pub seed: u64,
+    /// Random vectors for the switching-activity power estimate.
+    pub power_vectors: usize,
+    /// Seed of the power vectors.
+    pub power_seed: u64,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts {
+            exhaustive_limit: CharacterizeOpts::default().exhaustive_limit,
+            mc_samples: CharacterizeOpts::default().mc_samples,
+            seed: CharacterizeOpts::default().seed,
+            power_vectors: 100,
+            power_seed: 7,
+        }
+    }
+}
+
+impl EvalOpts {
+    fn accuracy(&self) -> CharacterizeOpts {
+        CharacterizeOpts {
+            exhaustive_limit: self.exhaustive_limit,
+            mc_samples: self.mc_samples,
+            seed: self.seed,
+            // inner sweeps run serial; the outer candidate fan-out owns
+            // the worker pool
+            threads: 1,
+        }
+    }
+}
+
+/// One evaluated configuration-space point: the Table-III-shaped fusion
+/// of accuracy and circuit metrics the Pareto layer consumes.
+#[derive(Clone, Debug)]
+pub struct CandidateReport {
+    /// The configuration the report describes.
+    pub cand: Candidate,
+    /// Accuracy half (ARE / PRE / bias; exhaustive or MC per the opts).
+    pub error: ErrorReport,
+    /// Circuit half; `None` for accuracy-only functional models, which
+    /// therefore never enter cost-axis frontiers.
+    pub circuit: Option<UnitReport>,
+}
+
+impl CandidateReport {
+    /// Area-delay product (LUTs × latency ns) of the circuit half.
+    pub fn adp(&self) -> Option<f64> {
+        self.circuit.as_ref().map(|c| c.luts as f64 * c.latency_ns)
+    }
+
+    /// Cost axes `[LUTs, latency ns, ADP, power mW]`, when circuit-bearing.
+    pub fn costs(&self) -> Option<[f64; 4]> {
+        self.circuit.as_ref().map(|c| {
+            [c.luts as f64, c.latency_ns, c.luts as f64 * c.latency_ns, c.power_mw]
+        })
+    }
+
+    /// One-line human-readable row (frontier/CLI output).
+    pub fn row(&self) -> String {
+        match &self.circuit {
+            Some(c) => format!(
+                "{:<22} ARE={:6.3}%  LUT={:<5} lat={:6.2}ns ADP={:9.1} P={:7.2}mW",
+                self.cand.key(),
+                self.error.are * 100.0,
+                c.luts,
+                c.latency_ns,
+                c.luts as f64 * c.latency_ns,
+                c.power_mw
+            ),
+            None => format!(
+                "{:<22} ARE={:6.3}%  (accuracy-only model — no netlist)",
+                self.cand.key(),
+                self.error.are * 100.0
+            ),
+        }
+    }
+}
+
+/// Distinct `(op, name, width)` units of a candidate list, first-seen
+/// order — the accuracy half does not depend on the pipeline depth, so
+/// sweeps are shared across the stages axis.
+pub fn distinct_units(cands: &[Candidate]) -> Vec<(Op, &'static str, u32)> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for c in cands {
+        if seen.insert((c.op, c.name, c.width)) {
+            out.push((c.op, c.name, c.width));
+        }
+    }
+    out
+}
+
+/// Characterise the accuracy of each distinct unit (one unit per parallel
+/// chunk, inner sweep serial). Results in input order.
+pub fn accuracy_all(units: &[(Op, &'static str, u32)], opts: &EvalOpts) -> Vec<ErrorReport> {
+    let acc = opts.accuracy();
+    par::par_chunks(units.len() as u64, 1, |i, _| {
+        let (op, name, width) = units[i as usize];
+        match op {
+            Op::Mul => {
+                let m = make_mul(name, width)
+                    .unwrap_or_else(|| panic!("explore: unknown multiplier '{name}'"));
+                characterize_mul(m.as_ref(), &acc)
+            }
+            Op::Div => {
+                let d = make_div(name, width)
+                    .unwrap_or_else(|| panic!("explore: unknown divider '{name}'"));
+                characterize_div(d.as_ref(), &acc)
+            }
+        }
+    })
+}
+
+/// Synthesize + characterise the circuit half of every synthesizable
+/// candidate: returns one `Option<UnitReport>` per input candidate, in
+/// input order (`None` for accuracy-only models). The netlist is built
+/// once per distinct `(op, name, width)` and characterised at each
+/// requested depth inside the same chunk.
+pub fn circuit_all(cands: &[Candidate], opts: &EvalOpts) -> Vec<Option<UnitReport>> {
+    // distinct synthesizable units, with their stage sets in first-seen order
+    let mut order: Vec<(Op, &'static str, u32)> = Vec::new();
+    let mut stages_of: std::collections::HashMap<(Op, &'static str, u32), Vec<usize>> =
+        std::collections::HashMap::new();
+    for c in cands.iter().filter(|c| c.synthesizable()) {
+        let k = (c.op, c.name, c.width);
+        let entry = stages_of.entry(k).or_insert_with(|| {
+            order.push(k);
+            Vec::new()
+        });
+        if !entry.contains(&c.stages) {
+            entry.push(c.stages);
+        }
+    }
+    let per_unit: Vec<Vec<(usize, UnitReport)>> =
+        par::par_chunks(order.len() as u64, 1, |i, _| {
+            let (op, name, width) = order[i as usize];
+            // pin the inner power / pipeline-verification sweeps serial
+            par::with_threads(1, || {
+                let nl = match op {
+                    Op::Mul => netlist_for_mul(name, width),
+                    Op::Div => netlist_for_div(name, width),
+                }
+                .unwrap_or_else(|| panic!("explore: no netlist for {name}@{width}"));
+                stages_of[&(op, name, width)]
+                    .iter()
+                    .map(|&s| (s, characterize(&nl, s, opts.power_vectors, opts.power_seed)))
+                    .collect()
+            })
+        });
+    let mut by_key: std::collections::HashMap<(Op, &'static str, u32, usize), UnitReport> =
+        std::collections::HashMap::new();
+    for (k, reports) in order.iter().zip(per_unit) {
+        for (s, r) in reports {
+            by_key.insert((k.0, k.1, k.2, s), r);
+        }
+    }
+    cands
+        .iter()
+        .map(|c| by_key.get(&(c.op, c.name, c.width, c.stages)).cloned())
+        .collect()
+}
+
+/// Evaluate every candidate at one fidelity: accuracy per distinct unit,
+/// circuit per synthesizable configuration, fused in candidate order.
+pub fn evaluate_all(cands: &[Candidate], opts: &EvalOpts) -> Vec<CandidateReport> {
+    let units = distinct_units(cands);
+    let errors = accuracy_all(&units, opts);
+    let by_unit: std::collections::HashMap<(Op, &'static str, u32), ErrorReport> =
+        units.into_iter().zip(errors).collect();
+    let circuits = circuit_all(cands, opts);
+    cands
+        .iter()
+        .zip(circuits)
+        .map(|(c, circuit)| CandidateReport {
+            cand: c.clone(),
+            error: by_unit[&(c.op, c.name, c.width)].clone(),
+            circuit,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::space::Space;
+
+    fn small_opts() -> EvalOpts {
+        EvalOpts { mc_samples: 20_000, power_vectors: 24, ..Default::default() }
+    }
+
+    #[test]
+    fn evaluation_matches_direct_characterisation() {
+        // the fused report must be bit-identical to calling the error and
+        // circuit layers directly with the same knobs
+        let cands = vec![
+            Candidate { op: Op::Mul, name: "rapid5", width: 8, stages: 1 },
+            Candidate { op: Op::Mul, name: "rapid5", width: 8, stages: 2 },
+            Candidate { op: Op::Mul, name: "drum6", width: 8, stages: 1 },
+        ];
+        let opts = small_opts();
+        let reports = evaluate_all(&cands, &opts);
+        assert_eq!(reports.len(), 3);
+
+        let m = make_mul("rapid5", 8).unwrap();
+        let direct = characterize_mul(m.as_ref(), &opts.accuracy());
+        assert_eq!(reports[0].error.are.to_bits(), direct.are.to_bits());
+        assert_eq!(reports[1].error.are.to_bits(), direct.are.to_bits(), "shared across stages");
+
+        let nl = netlist_for_mul("rapid5", 8).unwrap();
+        let direct_c = characterize(&nl, 2, opts.power_vectors, opts.power_seed);
+        let got = reports[1].circuit.as_ref().unwrap();
+        assert_eq!(got.luts, direct_c.luts);
+        assert_eq!(got.power_mw.to_bits(), direct_c.power_mw.to_bits());
+        assert_eq!(got.stages, 2);
+
+        // accuracy-only model: no circuit half, error still present
+        assert!(reports[2].circuit.is_none());
+        assert!(reports[2].error.are > 0.0);
+        assert!(reports[2].costs().is_none());
+    }
+
+    #[test]
+    fn distinct_units_dedupe_across_stages() {
+        let cands = Space::mul_full().at_width(8).retain_names(&["exact", "rapid3"]).candidates();
+        assert_eq!(cands.len(), 6); // 2 names × 3 depths
+        let units = distinct_units(&cands);
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[0], (Op::Mul, "exact", 8));
+    }
+
+    #[test]
+    fn exact_has_zero_error_and_a_circuit() {
+        let cands = vec![Candidate { op: Op::Div, name: "exact", width: 4, stages: 1 }];
+        let r = &evaluate_all(&cands, &small_opts())[0];
+        assert_eq!(r.error.are, 0.0);
+        let c = r.circuit.as_ref().unwrap();
+        assert!(c.luts > 0);
+        assert!(r.adp().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! Design-space exploration: turn QoR budgets into unit recommendations
+//! (DESIGN.md §6).
+//!
+//! The paper's end-to-end deliverable is a *choice*: per application
+//! kernel, the approximate unit whose area/latency/ADP savings come at
+//! negligible QoR loss (Table III, Fig. 10). This subsystem automates
+//! that choice over the whole registry:
+//!
+//! * [`space`] — enumerate the configuration grid (every registry unit
+//!   name, incl. the full RAPID G ∈ 1..=15 refinement ladder × widths
+//!   {8, 16, 32} × pipeline depths {1, 2, 4}) in canonical order;
+//! * [`evaluate`] — fuse each candidate's circuit half
+//!   (LUTs/latency/ADP/power from [`crate::circuit::report`]) with its
+//!   accuracy half (ARE/PRE from [`crate::error::drivers`]) — one
+//!   candidate per parallel chunk, inner sweeps pinned serial;
+//! * [`pareto`] — exact multi-objective frontiers with a deterministic
+//!   tie order;
+//! * [`search`] — the successive-halving ladder (coarse MC screen →
+//!   exhaustive/full-MC refinement of the survivors), QoR budget parsing
+//!   (`"psnr>=30"`), and the recommendation rule: cheapest frontier
+//!   point meeting the budget, per app or per unit space;
+//! * [`cli`] — the `rapid explore` subcommand.
+//!
+//! Determinism contract: every number produced here — error metrics,
+//! unit reports, QoR runs, frontier membership and order, the final
+//! recommendation — is bit-identical at any `RAPID_THREADS` (pinned at
+//! integration scale by `tests/par_determinism.rs` and the frontier
+//! invariants in `tests/explore.rs`).
+
+pub mod cli;
+pub mod evaluate;
+pub mod pareto;
+pub mod search;
+pub mod space;
+
+pub use evaluate::{CandidateReport, EvalOpts};
+pub use pareto::{frontier, Point};
+pub use search::{
+    explore_app, explore_units, parse_budget, recommend_app, recommend_units, AppExplore,
+    Objective, Pick, SearchOpts, UnitExplore,
+};
+pub use space::{Candidate, Op, Space};

@@ -1,0 +1,191 @@
+//! Exact multi-objective Pareto frontiers with a deterministic tie order
+//! (DESIGN.md §6).
+//!
+//! Orientation convention: every axis is **lower-is-better**. Callers
+//! negate higher-is-better quality metrics (PSNR, sensitivity, correct
+//! vectors) when building points, so dominance is a single rule here.
+//! Frontier membership is decided by exhaustive pairwise dominance
+//! (spaces are a few hundred points — O(n²·d) is exact and cheap), and
+//! ties are broken canonically: points are ordered by axis values
+//! lexicographically, then by their candidate key, and of several points
+//! with *identical* axes only the canonically first survives. The result
+//! is therefore a pure function of the point set — bit-identical across
+//! thread counts, machines and insertion orders.
+
+use std::cmp::Ordering;
+
+/// One point of a frontier computation: oriented axis values (lower is
+/// better on every axis) plus the canonical tie-order key.
+#[derive(Clone, Debug)]
+pub struct Point {
+    /// Canonical identity key (e.g. `mul/rapid10/w16/s04`); total order
+    /// among points with equal axes.
+    pub key: String,
+    /// Oriented axis values; must be NaN-free and of uniform length.
+    pub axes: Vec<f64>,
+}
+
+/// True when `a` Pareto-dominates `b`: no worse on every axis, strictly
+/// better on at least one (both oriented lower-is-better).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Canonical point order: axis values lexicographically, then key. With
+/// NaN-free axes this is a total order.
+pub fn canonical_cmp(a: &Point, b: &Point) -> Ordering {
+    for (x, y) in a.axes.iter().zip(&b.axes) {
+        match x.partial_cmp(y).expect("NaN axis in Pareto point") {
+            Ordering::Equal => continue,
+            ord => return ord,
+        }
+    }
+    a.key.cmp(&b.key)
+}
+
+/// Indices of the exact Pareto frontier of `points`, in canonical order.
+///
+/// Properties (pinned by `tests/explore.rs`):
+/// * no returned point dominates another returned point;
+/// * every dropped point is dominated by some returned point, or shares
+///   identical axes with a canonically earlier one;
+/// * the result is independent of the input order of `points` up to the
+///   indices it maps back to.
+///
+/// Panics on NaN axes or mismatched axis counts.
+pub fn frontier(points: &[Point]) -> Vec<usize> {
+    if points.is_empty() {
+        return Vec::new();
+    }
+    let d = points[0].axes.len();
+    for p in points {
+        assert_eq!(p.axes.len(), d, "axis count mismatch for {}", p.key);
+        assert!(p.axes.iter().all(|v| !v.is_nan()), "NaN axis for {}", p.key);
+    }
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&i, &j| canonical_cmp(&points[i], &points[j]));
+    let mut keep: Vec<usize> = Vec::new();
+    'candidate: for (pos, &i) in order.iter().enumerate() {
+        for (qpos, &j) in order.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            if dominates(&points[j].axes, &points[i].axes) {
+                continue 'candidate;
+            }
+            // identical axes: only the canonically first copy survives
+            if qpos < pos && points[j].axes == points[i].axes {
+                continue 'candidate;
+            }
+        }
+        keep.push(i);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(key: &str, axes: &[f64]) -> Point {
+        Point { key: key.to_string(), axes: axes.to_vec() }
+    }
+
+    #[test]
+    fn dominance_rule() {
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(dominates(&[0.5, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0]), "equal points do not dominate");
+        assert!(!dominates(&[0.5, 4.0], &[1.0, 3.0]), "trade-off points do not dominate");
+        assert!(!dominates(&[2.0, 2.0], &[1.0, 3.0]));
+    }
+
+    #[test]
+    fn frontier_of_a_classic_trade_off() {
+        // (cost, error): a, b, c form the front; d is dominated by b;
+        // e duplicates b's axes and loses the canonical tie.
+        let pts = vec![
+            pt("a", &[1.0, 9.0]),
+            pt("b", &[5.0, 5.0]),
+            pt("c", &[9.0, 1.0]),
+            pt("d", &[6.0, 6.0]),
+            pt("e", &[5.0, 5.0]),
+        ];
+        let f = frontier(&pts);
+        let keys: Vec<&str> = f.iter().map(|&i| pts[i].key.as_str()).collect();
+        assert_eq!(keys, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn frontier_invariants_hold_on_a_grid() {
+        // dense 2-D grid with collinear and duplicate values; brute-check
+        // both frontier invariants
+        let mut pts = Vec::new();
+        for i in 0..6i64 {
+            for j in 0..6i64 {
+                // third axis deliberately non-monotone in (i, j) so the
+                // frontier is a nontrivial subset with real trade-offs
+                pts.push(pt(&format!("p{i}_{j}"), &[i as f64, j as f64, ((i * 7 + j * 3) % 5) as f64]));
+            }
+        }
+        let f = frontier(&pts);
+        for (ai, &a) in f.iter().enumerate() {
+            for (bi, &b) in f.iter().enumerate() {
+                if ai != bi {
+                    assert!(
+                        !dominates(&pts[a].axes, &pts[b].axes),
+                        "frontier point {} dominates {}",
+                        pts[a].key,
+                        pts[b].key
+                    );
+                }
+            }
+        }
+        for (i, p) in pts.iter().enumerate() {
+            if !f.contains(&i) {
+                let covered = f.iter().any(|&a| {
+                    dominates(&pts[a].axes, &p.axes) || pts[a].axes == p.axes
+                });
+                assert!(covered, "dropped point {} is not covered", p.key);
+            }
+        }
+    }
+
+    #[test]
+    fn result_independent_of_input_order() {
+        let pts = vec![
+            pt("a", &[1.0, 9.0]),
+            pt("b", &[5.0, 5.0]),
+            pt("c", &[9.0, 1.0]),
+            pt("d", &[6.0, 6.0]),
+        ];
+        let mut rev = pts.clone();
+        rev.reverse();
+        let keys = |ps: &[Point], f: &[usize]| -> Vec<String> {
+            f.iter().map(|&i| ps[i].key.clone()).collect()
+        };
+        assert_eq!(keys(&pts, &frontier(&pts)), keys(&rev, &frontier(&rev)));
+    }
+
+    #[test]
+    fn single_and_empty_inputs() {
+        assert!(frontier(&[]).is_empty());
+        assert_eq!(frontier(&[pt("only", &[3.0])]), vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN axis")]
+    fn nan_axes_rejected() {
+        let _ = frontier(&[pt("bad", &[f64::NAN])]);
+    }
+}

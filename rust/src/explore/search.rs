@@ -1,0 +1,764 @@
+//! Budget-driven search over the configuration space (DESIGN.md §6): the
+//! successive-halving evaluation ladder, QoR budget grammar, and the
+//! recommendation rule ("cheapest frontier point meeting the budget").
+//!
+//! ## Successive halving
+//!
+//! Full-fidelity accuracy is exhaustive at width 8 (and the 8/4 divider
+//! rectangle) but Monte-Carlo in the millions at 16/32 bit — too slow to
+//! spend on configurations that are obviously dominated. The ladder
+//! therefore runs two rungs:
+//!
+//! 1. **screen** — every candidate gets the full circuit half (that part
+//!    is cheap and exact) plus a *coarse* MC accuracy estimate;
+//! 2. **refine** — candidates that are not beaten by a clear margin
+//!    (another candidate no worse on every cost axis and better on the
+//!    noisy quality axis by more than the slack) re-run accuracy at full
+//!    fidelity; only they are eligible for the frontier.
+//!
+//! The margin rule only ever drops candidates whose screened quality is
+//! *strictly* worse than a cost-no-worse rival by the slack factor, so
+//! the true frontier survives screening as long as the MC screen is
+//! within the slack — and the whole ladder is deterministic: fixed
+//! seeds, fixed chunking, canonical merge order, bit-identical at any
+//! `RAPID_THREADS` (pinned by `tests/par_determinism.rs`).
+
+use crate::apps::census::{self, AppRollup};
+use crate::apps::ecg::{generate, EcgConfig};
+use crate::apps::harris;
+use crate::apps::images::{aerial_scene, frame_pair};
+use crate::apps::jpeg;
+use crate::apps::pantompkins;
+use crate::apps::qor::{correct_vector_ratio, psnr, Sensitivity};
+use crate::arith::registry::{div_names, make_div, make_mul, mul_names};
+use crate::util::par;
+
+use super::evaluate::{
+    accuracy_all, circuit_all, distinct_units, evaluate_all, CandidateReport, EvalOpts,
+};
+use super::pareto::{self, Point};
+use super::space::{Candidate, Op, Space};
+
+// ---------------------------------------------------------------------------
+// QoR budgets
+// ---------------------------------------------------------------------------
+
+/// Budget comparison direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    /// Metric must be `<=` the bound (cost-style).
+    Le,
+    /// Metric must be `>=` the bound (quality-style).
+    Ge,
+}
+
+/// One parsed budget constraint, e.g. `psnr >= 30` or `luts <= 400`.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    /// Lower-cased metric name (`are`, `psnr`, `luts`, ...).
+    pub metric: String,
+    /// Comparison direction.
+    pub cmp: Cmp,
+    /// Bound value.
+    pub value: f64,
+}
+
+impl Constraint {
+    /// Does a measured value satisfy the constraint?
+    pub fn satisfied(&self, v: f64) -> bool {
+        match self.cmp {
+            Cmp::Le => v <= self.value,
+            Cmp::Ge => v >= self.value,
+        }
+    }
+}
+
+/// Parse a budget string: comma/semicolon-separated `metric>=value` /
+/// `metric<=value` terms (spaces allowed). Empty input parses to no
+/// constraints (everything feasible).
+///
+/// ```
+/// use rapid::explore::search::parse_budget;
+/// let b = parse_budget("psnr >= 30, luts<=400").unwrap();
+/// assert_eq!(b.len(), 2);
+/// assert_eq!(b[0].metric, "psnr");
+/// assert!(b[0].satisfied(31.0) && !b[0].satisfied(29.0));
+/// ```
+pub fn parse_budget(s: &str) -> Result<Vec<Constraint>, String> {
+    let mut out = Vec::new();
+    for part in s.split([',', ';']) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (idx, cmp) = match (part.find(">="), part.find("<=")) {
+            (Some(i), None) => (i, Cmp::Ge),
+            (None, Some(i)) => (i, Cmp::Le),
+            _ => {
+                return Err(format!(
+                    "budget term '{part}' must be '<metric> >= <value>' or '<metric> <= <value>'"
+                ))
+            }
+        };
+        let metric = part[..idx].trim().to_lowercase();
+        if metric.is_empty() {
+            return Err(format!("budget term '{part}' is missing a metric name"));
+        }
+        let value: f64 = part[idx + 2..]
+            .trim()
+            .parse()
+            .map_err(|_| format!("budget term '{part}' has a non-numeric bound"))?;
+        out.push(Constraint { metric, cmp, value });
+    }
+    Ok(out)
+}
+
+/// Cost objective a recommendation minimises over the feasible frontier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// LUT count (units) / total LUTs (apps).
+    Luts,
+    /// End-to-end latency in ns.
+    Latency,
+    /// Area-delay product — the paper's Fig. 10 headline (default).
+    Adp,
+    /// Dynamic power in mW (unit mode only).
+    Power,
+}
+
+impl Objective {
+    /// Parse a CLI objective name.
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s {
+            "luts" => Some(Objective::Luts),
+            "latency" => Some(Objective::Latency),
+            "adp" => Some(Objective::Adp),
+            "power" => Some(Objective::Power),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of a budget query.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Pick {
+    /// Index (into the explore result's reports/points) of the cheapest
+    /// frontier point meeting every constraint.
+    Chosen(usize),
+    /// No frontier point meets the budget.
+    Infeasible,
+}
+
+// ---------------------------------------------------------------------------
+// Search options
+// ---------------------------------------------------------------------------
+
+/// Knobs of one exploration run.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchOpts {
+    /// Monte-Carlo samples of the coarse screen rung.
+    pub screen_samples: u64,
+    /// Full-fidelity evaluation options of the refine rung.
+    pub refine: EvalOpts,
+    /// Relative margin on the screened ARE axis: a candidate is dropped
+    /// only when a cost-no-worse rival's screened ARE is better by more
+    /// than this factor (`rival * (1 + slack) <= own`).
+    pub are_slack: f64,
+    /// Additive dB margin for PSNR-style app screening.
+    pub qor_slack_db: f64,
+    /// Additive margin for [0, 1] app QoR metrics (sensitivity, vectors).
+    pub qor_slack_frac: f64,
+}
+
+impl Default for SearchOpts {
+    fn default() -> Self {
+        SearchOpts {
+            screen_samples: 60_000,
+            refine: EvalOpts::default(),
+            are_slack: 0.35,
+            qor_slack_db: 1.5,
+            qor_slack_frac: 0.05,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unit-scoped exploration
+// ---------------------------------------------------------------------------
+
+/// Result of a unit-scoped exploration.
+#[derive(Clone, Debug)]
+pub struct UnitExplore {
+    /// One report per candidate, in canonical space order. Every report
+    /// of a unit that reached the refine rung carries refine-rung
+    /// accuracy (accuracy is depth-independent, so stage siblings share
+    /// it); fully screened-out units keep the coarse MC estimate (see
+    /// [`UnitExplore::refined`]).
+    pub reports: Vec<CandidateReport>,
+    /// Whether each report's accuracy half is refine-rung fidelity.
+    pub refined: Vec<bool>,
+    /// Frontier indices into `reports`: the exact Pareto set over
+    /// [LUTs, latency, ADP, power, ARE] among refined circuit-bearing
+    /// candidates, computed **per width** (points at different widths
+    /// compute different functions and are never comparable) and
+    /// concatenated in width order, canonical order within a width.
+    pub frontier: Vec<usize>,
+    /// Candidates evaluated in the screen rung.
+    pub n_candidates: usize,
+    /// Circuit-bearing candidates that survived into the refine rung.
+    pub n_survivors: usize,
+}
+
+/// Metric lookup on one unit report; frontier points always carry the
+/// circuit half, so cost metrics resolve there.
+fn unit_metric(r: &CandidateReport, metric: &str) -> Result<f64, String> {
+    let circuit = |f: fn(&crate::circuit::report::UnitReport) -> f64| {
+        r.circuit
+            .as_ref()
+            .map(f)
+            .ok_or_else(|| format!("candidate {} has no circuit half", r.cand.key()))
+    };
+    match metric {
+        "are" => Ok(r.error.are),
+        "pre" => Ok(r.error.pre),
+        "luts" => circuit(|c| c.luts as f64),
+        "latency" => circuit(|c| c.latency_ns),
+        "clock" => circuit(|c| c.clock_ns),
+        "adp" => circuit(|c| c.luts as f64 * c.latency_ns),
+        "power" => circuit(|c| c.power_mw),
+        "energy" => circuit(|c| c.energy_per_op),
+        other => Err(format!(
+            "unknown unit metric '{other}' (are | pre | luts | latency | clock | adp | power | energy)"
+        )),
+    }
+}
+
+/// Explore a unit space: screen, refine the survivors, compute the
+/// frontier. See the module docs for the ladder's contract.
+pub fn explore_units(space: &Space, opts: &SearchOpts) -> UnitExplore {
+    // accuracy-only designs have no pipeline axis — keep their first
+    // depth only, so they appear once in the report instead of three times
+    let first_stage = space.stages.first().copied().unwrap_or(1);
+    let cands: Vec<Candidate> = space
+        .candidates()
+        .into_iter()
+        .filter(|c| c.synthesizable() || c.stages == first_stage)
+        .collect();
+
+    // screen rung: coarse MC accuracy (exhaustive_limit = 0 forces MC),
+    // full circuit half
+    let screen_opts = EvalOpts {
+        exhaustive_limit: 0,
+        mc_samples: opts.screen_samples,
+        ..opts.refine
+    };
+    let screened = evaluate_all(&cands, &screen_opts);
+
+    // margin-dominance drop rule on the screened estimates
+    let survive: Vec<bool> = (0..screened.len())
+        .map(|i| {
+            let ci = match screened[i].costs() {
+                Some(c) => c,
+                None => return true, // accuracy-only: no cost axes to lose on
+            };
+            // candidates at different widths compute different functions
+            // and are never comparable — dominance is per width
+            !screened.iter().any(|r| {
+                if let Some(cj) = r.costs() {
+                    r.cand.width == screened[i].cand.width
+                        && cj.iter().zip(&ci).all(|(a, b)| a <= b)
+                        && r.error.are * (1.0 + opts.are_slack) <= screened[i].error.are
+                        && r.error.are < screened[i].error.are
+                } else {
+                    false
+                }
+            })
+        })
+        .collect();
+
+    // refine rung: full-fidelity accuracy for surviving units
+    let refine_cands: Vec<Candidate> = cands
+        .iter()
+        .zip(&survive)
+        .filter(|(_, &s)| s)
+        .map(|(c, _)| c.clone())
+        .collect();
+    let refine_units = distinct_units(&refine_cands);
+    let refined_errors = accuracy_all(&refine_units, &opts.refine);
+    let by_unit: std::collections::HashMap<_, _> =
+        refine_units.into_iter().zip(refined_errors).collect();
+
+    // apply the refined accuracy to *every* report of a refined unit —
+    // accuracy is depth-independent by construction, so a margin-dropped
+    // stage sibling of a survivor must not keep a stale coarse estimate
+    let mut reports = screened;
+    let mut refined = vec![false; reports.len()];
+    for (i, r) in reports.iter_mut().enumerate() {
+        if let Some(e) = by_unit.get(&(r.cand.op, r.cand.name, r.cand.width)) {
+            r.error = e.clone();
+            refined[i] = true;
+        }
+    }
+
+    // frontier over refined circuit-bearing candidates, computed per
+    // width (different widths compute different functions — their cost/
+    // accuracy points are incomparable), concatenated in width order
+    let mut widths = space.widths.clone();
+    let mut seen_w = std::collections::HashSet::new();
+    widths.retain(|w| seen_w.insert(*w));
+    let mut frontier: Vec<usize> = Vec::new();
+    for &w in &widths {
+        let eligible: Vec<usize> = (0..reports.len())
+            .filter(|&i| {
+                refined[i] && reports[i].circuit.is_some() && reports[i].cand.width == w
+            })
+            .collect();
+        let points: Vec<Point> = eligible
+            .iter()
+            .map(|&i| {
+                let c = reports[i].costs().unwrap();
+                Point {
+                    key: reports[i].cand.key(),
+                    axes: vec![c[0], c[1], c[2], c[3], reports[i].error.are],
+                }
+            })
+            .collect();
+        frontier.extend(pareto::frontier(&points).into_iter().map(|p| eligible[p]));
+    }
+
+    let n_survivors = cands
+        .iter()
+        .zip(&survive)
+        .filter(|(c, &s)| s && c.synthesizable())
+        .count();
+    UnitExplore { n_candidates: cands.len(), n_survivors, reports, refined, frontier }
+}
+
+/// Budget query over a unit frontier: the cheapest (by `objective`)
+/// frontier point satisfying every constraint; canonical frontier order
+/// breaks objective ties. `Err` on unknown metric names.
+pub fn recommend_units(
+    ex: &UnitExplore,
+    budget: &[Constraint],
+    objective: Objective,
+) -> Result<Pick, String> {
+    let obj = |r: &CandidateReport| -> Result<f64, String> {
+        match objective {
+            Objective::Luts => unit_metric(r, "luts"),
+            Objective::Latency => unit_metric(r, "latency"),
+            Objective::Adp => unit_metric(r, "adp"),
+            Objective::Power => unit_metric(r, "power"),
+        }
+    };
+    // validate every metric name up front: a typo'd metric must error
+    // even when an earlier constraint already rules a point out
+    if let Some(&probe) = ex.frontier.first() {
+        for c in budget {
+            unit_metric(&ex.reports[probe], &c.metric)?;
+        }
+    }
+    let mut best: Option<(usize, f64)> = None;
+    for &i in &ex.frontier {
+        let r = &ex.reports[i];
+        let mut ok = true;
+        for c in budget {
+            if !c.satisfied(unit_metric(r, &c.metric)?) {
+                ok = false;
+                break;
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let v = obj(r)?;
+        if best.map_or(true, |(_, bv)| v < bv) {
+            best = Some((i, v));
+        }
+    }
+    Ok(match best {
+        Some((i, _)) => Pick::Chosen(i),
+        None => Pick::Infeasible,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// App-scoped exploration
+// ---------------------------------------------------------------------------
+
+/// One point of an application space: a multiplier/divider pairing at a
+/// shared pipeline depth (paper configuration: 16-bit mul, 16/8 div).
+#[derive(Clone, Debug)]
+pub struct AppCandidate {
+    /// Multiplier half (width 16).
+    pub mul: Candidate,
+    /// Divider half (divisor width 8).
+    pub div: Candidate,
+}
+
+impl AppCandidate {
+    /// Canonical identity / tie-order key, e.g. `rapid10+rapid9/s2`.
+    pub fn key(&self) -> String {
+        format!("{}+{}/s{}", self.mul.name, self.div.name, self.mul.stages)
+    }
+}
+
+/// Resolve a CLI app name (`ecg` is an alias for `pantompkins`) against
+/// the canonical [`census::APPS`] list.
+pub fn resolve_app(name: &str) -> Result<&'static str, String> {
+    let name = if name == "ecg" { "pantompkins" } else { name };
+    census::APPS
+        .iter()
+        .copied()
+        .find(|&a| a == name)
+        .ok_or_else(|| format!("unknown app '{name}' (pantompkins/ecg | jpeg | harris)"))
+}
+
+/// The app QoR metric's canonical name.
+pub fn app_qor_metric(app: &str) -> &'static str {
+    match app {
+        "pantompkins" => "sensitivity",
+        "jpeg" => "psnr",
+        "harris" => "vectors",
+        other => panic!("unknown app '{other}'"),
+    }
+}
+
+/// The default application pairing space: every circuit-bearing
+/// multiplier at width 16 × every circuit-bearing divider at width 8 ×
+/// the given pipeline depths (mul-major, then div, then stages).
+pub fn app_space(muls: &[&str], divs: &[&str], stages: &[usize]) -> Vec<AppCandidate> {
+    let muls: Vec<&'static str> = mul_names()
+        .into_iter()
+        .filter(|n| muls.is_empty() || muls.contains(n))
+        .filter(|&n| Candidate { op: Op::Mul, name: n, width: 16, stages: 1 }.synthesizable())
+        .collect();
+    let divs: Vec<&'static str> = div_names()
+        .into_iter()
+        .filter(|n| divs.is_empty() || divs.contains(n))
+        .filter(|&n| Candidate { op: Op::Div, name: n, width: 8, stages: 1 }.synthesizable())
+        .collect();
+    let mut out = Vec::new();
+    for &m in &muls {
+        for &d in &divs {
+            for &s in stages {
+                out.push(AppCandidate {
+                    mul: Candidate { op: Op::Mul, name: m, width: 16, stages: s },
+                    div: Candidate { op: Op::Div, name: d, width: 8, stages: s },
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Kernel QoR of one (app, mul, div) configuration on the fixed seeded
+/// workload. `heavy` selects the refine-rung workload (more frames /
+/// longer record); the screen rung uses a smaller one. PSNR is capped at
+/// 99 dB so a lossless round-trip (exact/exact on a flat image) keeps
+/// the quality axis finite.
+fn run_app_qor(app: &str, mul_name: &str, div_name: &str, heavy: bool, seed: u64) -> f64 {
+    let mul = make_mul(mul_name, 16).unwrap_or_else(|| panic!("unknown multiplier '{mul_name}'"));
+    let div = make_div(div_name, 8).unwrap_or_else(|| panic!("unknown divider '{div_name}'"));
+    match app {
+        "jpeg" => {
+            let (count, side) = if heavy { (2usize, 64) } else { (1, 32) };
+            let mut total = 0.0;
+            for i in 0..count {
+                let img = aerial_scene(side, side, seed + i as u64);
+                let (rec, _) = jpeg::roundtrip(&img, mul.as_ref(), div.as_ref());
+                total += psnr(&img.px, &rec.px, 255.0).min(99.0);
+            }
+            total / count as f64
+        }
+        "pantompkins" => {
+            let secs = if heavy { 120 } else { 40 };
+            let rec = generate(200 * secs, &EcgConfig::default(), seed);
+            let (_, peaks, delay) = pantompkins::run(&rec.samples, rec.fs, mul.as_ref(), div.as_ref());
+            Sensitivity::measure(&rec.r_peaks, &peaks, delay, 30).sensitivity()
+        }
+        "harris" => {
+            let shifts: &[(i64, i64)] = if heavy { &[(3, -2), (-4, 1)] } else { &[(2, -1)] };
+            let side = if heavy { 96 } else { 64 };
+            let mut total = 0.0;
+            for (i, &(dx, dy)) in shifts.iter().enumerate() {
+                let (a, b) = frame_pair(side, side, dx, dy, seed + i as u64);
+                let cs = harris::corners(&a, mul.as_ref(), div.as_ref(), 30);
+                let v = harris::motion_vectors(&a, &b, &cs, 6);
+                total += correct_vector_ratio(&v, (-dx as f64, -dy as f64), 1.5);
+            }
+            total / shifts.len() as f64
+        }
+        other => panic!("unknown app '{other}'"),
+    }
+}
+
+/// One evaluated application pairing.
+#[derive(Clone, Debug)]
+pub struct AppPoint {
+    /// The pairing the point describes.
+    pub pair: AppCandidate,
+    /// Kernel QoR (PSNR dB / sensitivity / correct-vector ratio).
+    pub qor: f64,
+    /// Area/latency/ADP roll-up over the app's kernel census.
+    pub rollup: AppRollup,
+}
+
+/// Result of an app-scoped exploration.
+#[derive(Clone, Debug)]
+pub struct AppExplore {
+    /// Application name (canonical).
+    pub app: String,
+    /// Which QoR metric `qor` carries (`psnr` | `sensitivity` | `vectors`).
+    pub qor_metric: &'static str,
+    /// One point per pairing, canonical space order.
+    pub points: Vec<AppPoint>,
+    /// Whether each point's QoR is refine-rung fidelity.
+    pub refined: Vec<bool>,
+    /// Frontier indices into `points`: exact Pareto set over
+    /// [LUTs, latency, ADP, −QoR] among refined survivors.
+    pub frontier: Vec<usize>,
+    /// Pairings evaluated in the screen rung.
+    pub n_candidates: usize,
+    /// Pairings that survived into the refine rung.
+    pub n_survivors: usize,
+}
+
+/// Metric lookup on one app point. The app's own QoR name (and the
+/// generic `qor`) resolves to the quality axis; cost metrics resolve to
+/// the census roll-up.
+fn app_metric(p: &AppPoint, qor_metric: &str, metric: &str) -> Result<f64, String> {
+    if metric == "qor"
+        || metric == qor_metric
+        || (metric == "sens" && qor_metric == "sensitivity")
+        || (metric == "ratio" && qor_metric == "vectors")
+    {
+        return Ok(p.qor);
+    }
+    match metric {
+        "luts" => Ok(p.rollup.luts as f64),
+        "latency" => Ok(p.rollup.latency_ns),
+        "adp" => Ok(p.rollup.adp()),
+        other => Err(format!(
+            "unknown app metric '{other}' (this app's QoR metric is '{qor_metric}'; costs: luts | latency | adp)"
+        )),
+    }
+}
+
+/// Explore an application space: QoR screen → margin survivors → QoR
+/// refine → frontier. Costs come from the kernel census roll-up
+/// ([`census::rollup`]) over the pairing's unit reports; QoR from the
+/// seeded end-to-end kernel runs.
+pub fn explore_app(app: &str, pairs: &[AppCandidate], opts: &SearchOpts) -> AppExplore {
+    let app = resolve_app(app).unwrap_or_else(|e| panic!("{e}"));
+    let qor_metric = app_qor_metric(app);
+
+    // circuit halves of every distinct unit configuration
+    let mut unit_cands: Vec<Candidate> = Vec::new();
+    for p in pairs {
+        unit_cands.push(p.mul.clone());
+        unit_cands.push(p.div.clone());
+    }
+    let mut seen = std::collections::HashSet::new();
+    unit_cands.retain(|c| seen.insert((c.op, c.name, c.width, c.stages)));
+    let unit_reports = circuit_all(&unit_cands, &opts.refine);
+    let by_cfg: std::collections::HashMap<_, _> = unit_cands
+        .iter()
+        .zip(unit_reports)
+        .map(|(c, r)| {
+            ((c.op, c.name, c.width, c.stages), r.unwrap_or_else(|| panic!("{} not synthesizable", c.key())))
+        })
+        .collect();
+
+    // cost roll-ups (pure, cheap) + screen-rung QoR per distinct name pair
+    let rollups: Vec<AppRollup> = pairs
+        .iter()
+        .map(|p| {
+            let m = &by_cfg[&(Op::Mul, p.mul.name, p.mul.width, p.mul.stages)];
+            let d = &by_cfg[&(Op::Div, p.div.name, p.div.width, p.div.stages)];
+            census::rollup(app, m, d)
+        })
+        .collect();
+    let qor_of = |name_pairs: &[(&'static str, &'static str)], heavy: bool| -> Vec<f64> {
+        par::par_chunks(name_pairs.len() as u64, 1, |i, _| {
+            let (m, d) = name_pairs[i as usize];
+            // kernels fan out internally; pin them serial under the
+            // outer candidate fan-out
+            par::with_threads(1, || run_app_qor(app, m, d, heavy, opts.refine.seed))
+        })
+    };
+    let mut name_pairs: Vec<(&'static str, &'static str)> =
+        pairs.iter().map(|p| (p.mul.name, p.div.name)).collect();
+    let mut np_seen = std::collections::HashSet::new();
+    name_pairs.retain(|np| np_seen.insert(*np));
+    let screen_qor = qor_of(&name_pairs, false);
+    let qor_by_names: std::collections::HashMap<_, _> =
+        name_pairs.iter().copied().zip(screen_qor).collect();
+
+    let mut points: Vec<AppPoint> = pairs
+        .iter()
+        .zip(rollups)
+        .map(|(p, rollup)| AppPoint {
+            pair: p.clone(),
+            qor: qor_by_names[&(p.mul.name, p.div.name)],
+            rollup,
+        })
+        .collect();
+
+    // margin survivors on the screened QoR
+    let slack = if qor_metric == "psnr" { opts.qor_slack_db } else { opts.qor_slack_frac };
+    let costs =
+        |p: &AppPoint| -> [f64; 3] { [p.rollup.luts as f64, p.rollup.latency_ns, p.rollup.adp()] };
+    let survive: Vec<bool> = (0..points.len())
+        .map(|i| {
+            let ci = costs(&points[i]);
+            // strict quality guard: like the unit rule, a rival must be
+            // *strictly* better on the noisy axis, so a zero slack never
+            // makes a point (or an equal-QoR twin) kill itself
+            !points.iter().any(|q| {
+                costs(q).iter().zip(&ci).all(|(a, b)| a <= b)
+                    && q.qor >= points[i].qor + slack
+                    && q.qor > points[i].qor
+            })
+        })
+        .collect();
+
+    // refine rung: heavy QoR workload for surviving name pairs
+    let survivor_names: Vec<(&'static str, &'static str)> = {
+        let mut v: Vec<_> = points
+            .iter()
+            .zip(&survive)
+            .filter(|(_, &s)| s)
+            .map(|(p, _)| (p.pair.mul.name, p.pair.div.name))
+            .collect();
+        let mut seen = std::collections::HashSet::new();
+        v.retain(|np| seen.insert(*np));
+        v
+    };
+    let refined_qor = qor_of(&survivor_names, true);
+    let refined_by_names: std::collections::HashMap<_, _> =
+        survivor_names.iter().copied().zip(refined_qor).collect();
+    let mut refined = vec![false; points.len()];
+    for (i, p) in points.iter_mut().enumerate() {
+        if survive[i] {
+            p.qor = refined_by_names[&(p.pair.mul.name, p.pair.div.name)];
+            refined[i] = true;
+        }
+    }
+
+    // frontier over refined survivors: costs + negated quality
+    let eligible: Vec<usize> = (0..points.len()).filter(|&i| refined[i]).collect();
+    let fpoints: Vec<Point> = eligible
+        .iter()
+        .map(|&i| {
+            let c = costs(&points[i]);
+            Point { key: points[i].pair.key(), axes: vec![c[0], c[1], c[2], -points[i].qor] }
+        })
+        .collect();
+    let frontier: Vec<usize> =
+        pareto::frontier(&fpoints).into_iter().map(|p| eligible[p]).collect();
+
+    let n_survivors = survive.iter().filter(|&&s| s).count();
+    AppExplore {
+        app: app.to_string(),
+        qor_metric,
+        n_candidates: points.len(),
+        n_survivors,
+        points,
+        refined,
+        frontier,
+    }
+}
+
+/// Budget query over an app frontier: cheapest (by `objective`) frontier
+/// point meeting every constraint. `Objective::Power` is unit-only.
+pub fn recommend_app(
+    ex: &AppExplore,
+    budget: &[Constraint],
+    objective: Objective,
+) -> Result<Pick, String> {
+    let obj = |p: &AppPoint| -> Result<f64, String> {
+        match objective {
+            Objective::Luts => Ok(p.rollup.luts as f64),
+            Objective::Latency => Ok(p.rollup.latency_ns),
+            Objective::Adp => Ok(p.rollup.adp()),
+            Objective::Power => Err("objective 'power' is unit-scoped only".to_string()),
+        }
+    };
+    // up-front metric-name validation, mirroring recommend_units
+    if let Some(&probe) = ex.frontier.first() {
+        for c in budget {
+            app_metric(&ex.points[probe], ex.qor_metric, &c.metric)?;
+        }
+    }
+    let mut best: Option<(usize, f64)> = None;
+    for &i in &ex.frontier {
+        let p = &ex.points[i];
+        let mut ok = true;
+        for c in budget {
+            if !c.satisfied(app_metric(p, ex.qor_metric, &c.metric)?) {
+                ok = false;
+                break;
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let v = obj(p)?;
+        if best.map_or(true, |(_, bv)| v < bv) {
+            best = Some((i, v));
+        }
+    }
+    Ok(match best {
+        Some((i, _)) => Pick::Chosen(i),
+        None => Pick::Infeasible,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_grammar_parses_and_rejects() {
+        let b = parse_budget(" are <= 0.01 ; luts<=300,psnr>=30 ").unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].metric, "are");
+        assert_eq!(b[0].cmp, Cmp::Le);
+        assert!(b[2].satisfied(30.0));
+        assert!(!b[2].satisfied(29.999));
+        assert!(parse_budget("").unwrap().is_empty());
+        assert!(parse_budget("are < 0.01").is_err(), "strict < is not in the grammar");
+        assert!(parse_budget(">= 3").is_err(), "metric name required");
+        assert!(parse_budget("are >= fast").is_err(), "numeric bound required");
+    }
+
+    #[test]
+    fn objective_names() {
+        assert_eq!(Objective::parse("adp"), Some(Objective::Adp));
+        assert_eq!(Objective::parse("power"), Some(Objective::Power));
+        assert_eq!(Objective::parse("speed"), None);
+    }
+
+    #[test]
+    fn app_aliases_resolve() {
+        assert_eq!(resolve_app("ecg").unwrap(), "pantompkins");
+        assert_eq!(resolve_app("jpeg").unwrap(), "jpeg");
+        assert!(resolve_app("sorting").is_err());
+        assert_eq!(app_qor_metric("harris"), "vectors");
+    }
+
+    #[test]
+    fn app_space_is_synthesizable_and_ordered() {
+        let pairs = app_space(&["rapid10", "exact", "drum6"], &["rapid9", "exact"], &[1, 2]);
+        // drum6 has no netlist and is filtered out of the pairing space
+        assert_eq!(pairs.len(), 2 * 2 * 2);
+        assert!(pairs.iter().all(|p| p.mul.synthesizable() && p.div.synthesizable()));
+        assert_eq!(pairs[0].mul.width, 16);
+        assert_eq!(pairs[0].div.width, 8);
+        let keys: Vec<String> = pairs.iter().map(|p| p.key()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), keys.len(), "duplicate pairing keys");
+    }
+}

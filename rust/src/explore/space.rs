@@ -1,0 +1,205 @@
+//! Configuration-space enumeration for the design-space explorer
+//! (DESIGN.md §6): which (unit, width, pipeline depth) points exist, in
+//! which canonical order, and which of them carry a gate-level circuit
+//! half.
+//!
+//! The paper-scale axes are every registry unit name
+//! ([`crate::arith::registry::mul_names`] / `div_names`, i.e. the fixed
+//! designs plus the whole RAPID G ∈ 1..=15 refinement ladder), operand
+//! widths {8, 16, 32} and pipeline depths {1, 2, 4}. Candidate order is
+//! deterministic (name-major in canonical list order, then width, then
+//! stages), which is what makes every downstream fan-out, frontier and
+//! recommendation bit-identical across thread counts.
+
+use crate::arith::registry;
+use crate::circuit::synth::{has_div_netlist, has_mul_netlist};
+
+/// Which operation a candidate implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Op {
+    /// N×N multiplier.
+    Mul,
+    /// 2N-by-N divider (width = divisor width).
+    Div,
+}
+
+impl Op {
+    /// Lower-case label used in keys and CLI output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Op::Mul => "mul",
+            Op::Div => "div",
+        }
+    }
+}
+
+/// One point of the configuration space: a registry unit at one operand
+/// width and one pipeline depth.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    /// Operation kind.
+    pub op: Op,
+    /// Registry key (`"rapid10"`, `"exact"`, `"drum6"`, ...).
+    pub name: &'static str,
+    /// Operand width N (divisor width for dividers).
+    pub width: u32,
+    /// Pipeline stages (1 = combinational).
+    pub stages: usize,
+}
+
+impl Candidate {
+    /// Canonical identity / tie-order key: `mul/rapid10/w16/s04`. Widths
+    /// and stages are zero-padded to two digits so lexicographic order
+    /// equals numeric order across the whole supported range.
+    pub fn key(&self) -> String {
+        format!("{}/{}/w{:02}/s{:02}", self.op.label(), self.name, self.width, self.stages)
+    }
+
+    /// True when the design has a LUT mapping, i.e. the evaluator can
+    /// produce the circuit half (LUTs / latency / ADP / power) for it.
+    /// Accuracy-only functional models (drum, mbm, aaxd, ...) report
+    /// error metrics but never enter cost-axis frontiers.
+    pub fn synthesizable(&self) -> bool {
+        match self.op {
+            Op::Mul => has_mul_netlist(self.name),
+            Op::Div => has_div_netlist(self.name),
+        }
+    }
+}
+
+/// The paper's width axis (Table III characterises 8/16/32 bit).
+pub const WIDTHS: &[u32] = &[8, 16, 32];
+
+/// The paper's pipeline-depth axis (Figs. 4/11/12: NP, 2, 4 stages).
+pub const STAGES: &[usize] = &[1, 2, 4];
+
+/// A rectangular slice of the configuration space.
+#[derive(Clone, Debug)]
+pub struct Space {
+    /// Operation kind of every candidate in this space.
+    pub op: Op,
+    /// Registry names, in canonical list order.
+    pub names: Vec<&'static str>,
+    /// Operand widths.
+    pub widths: Vec<u32>,
+    /// Pipeline depths.
+    pub stages: Vec<usize>,
+}
+
+impl Space {
+    /// The full multiplier space: every registry name × {8,16,32} ×
+    /// stages {1,2,4}.
+    pub fn mul_full() -> Space {
+        Space {
+            op: Op::Mul,
+            names: registry::mul_names(),
+            widths: WIDTHS.to_vec(),
+            stages: STAGES.to_vec(),
+        }
+    }
+
+    /// The full divider space.
+    pub fn div_full() -> Space {
+        Space {
+            op: Op::Div,
+            names: registry::div_names(),
+            widths: WIDTHS.to_vec(),
+            stages: STAGES.to_vec(),
+        }
+    }
+
+    /// Restrict to one width (the usual CLI / CI-smoke shape).
+    pub fn at_width(mut self, w: u32) -> Space {
+        self.widths = vec![w];
+        self
+    }
+
+    /// Keep only the named units (unknown names are ignored); order stays
+    /// canonical. An empty `keep` leaves the space unchanged.
+    pub fn retain_names(mut self, keep: &[&str]) -> Space {
+        if !keep.is_empty() {
+            self.names.retain(|n| keep.contains(n));
+        }
+        self
+    }
+
+    /// Pin the stages axis.
+    pub fn with_stages(mut self, stages: &[usize]) -> Space {
+        self.stages = stages.to_vec();
+        self
+    }
+
+    /// Enumerate the candidates in canonical order (name-major, then
+    /// width, then stages). Every candidate instantiates via the
+    /// registry — names come from the canonical lists.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        let mut out = Vec::with_capacity(self.names.len() * self.widths.len() * self.stages.len());
+        for &name in &self.names {
+            for &width in &self.widths {
+                for &stages in &self.stages {
+                    out.push(Candidate { op: self.op, name, width, stages });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_spaces_cover_the_paper_axes() {
+        let m = Space::mul_full().candidates();
+        let d = Space::div_full().candidates();
+        // 8 fixed designs + 15 RAPID levels, × 3 widths × 3 depths
+        assert_eq!(m.len(), 23 * 3 * 3);
+        assert_eq!(d.len(), 23 * 3 * 3);
+        // every candidate instantiates via the registry
+        for c in m.iter().take(40) {
+            assert!(crate::arith::registry::make_mul(c.name, c.width).is_some(), "{}", c.key());
+        }
+        // the RAPID refinement ladder is fully present
+        for g in 1..=15usize {
+            let name = format!("rapid{g}");
+            assert!(m.iter().any(|c| c.name == name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn candidate_order_is_canonical_and_keys_unique() {
+        let cands = Space::mul_full().candidates();
+        let mut keys: Vec<String> = cands.iter().map(|c| c.key()).collect();
+        let before = keys.clone();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), before.len(), "duplicate candidate keys");
+        // name-major enumeration: the first three candidates differ only
+        // in stages
+        assert_eq!(cands[0].name, cands[2].name);
+        assert_eq!(cands[0].width, cands[2].width);
+        assert_ne!(cands[0].stages, cands[2].stages);
+    }
+
+    #[test]
+    fn synthesizable_matches_netlist_availability() {
+        for c in Space::mul_full().at_width(8).with_stages(&[1]).candidates() {
+            let has = crate::circuit::synth::netlist_for_mul(c.name, 8).is_some();
+            assert_eq!(c.synthesizable(), has, "{}", c.key());
+        }
+        // spot: the RAPID family and exact are circuit-bearing, DRUM not
+        let mk = |name| Candidate { op: Op::Mul, name, width: 8, stages: 1 };
+        assert!(mk("rapid7").synthesizable());
+        assert!(mk("exact").synthesizable());
+        assert!(!mk("drum6").synthesizable());
+    }
+
+    #[test]
+    fn retain_names_filters_and_empty_keep_is_noop() {
+        let s = Space::mul_full().retain_names(&["exact", "rapid10", "nope"]);
+        assert_eq!(s.names, vec!["exact", "rapid10"]);
+        let s = Space::mul_full().retain_names(&[]);
+        assert_eq!(s.names.len(), 23);
+    }
+}

@@ -19,6 +19,11 @@
 //! * [`apps`] — the three end-to-end applications (Pan-Tompkins QRS,
 //!   JPEG compression, Harris corner tracking) over pluggable arithmetic
 //!   (Figs. 5-12).
+//! * [`explore`] — Pareto design-space exploration: enumerate the whole
+//!   registry × width × pipeline grid, fuse circuit and accuracy halves,
+//!   compute exact multi-objective frontiers and answer QoR budget
+//!   queries (`rapid explore --app jpeg --qor "psnr>=30"`), with a
+//!   successive-halving screen so the 16/32-bit sweeps stay tractable.
 //! * `runtime` — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text produced by `python/compile/aot.py`). Behind the
 //!   default-on `pjrt` cargo feature; `--no-default-features` builds are
@@ -53,6 +58,7 @@ pub mod arith;
 pub mod error;
 pub mod circuit;
 pub mod apps;
+pub mod explore;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod coordinator;

@@ -6,6 +6,8 @@
 //! * `characterize`  — ARE/PRE/bias of a unit (Table III accuracy columns).
 //! * `synth`         — netlist resources/timing/power of a unit (Table III).
 //! * `app`           — run an end-to-end application with chosen arithmetic.
+//! * `explore`       — Pareto design-space exploration + QoR budget queries
+//!   (`rapid explore --app jpeg --qor "psnr>=30"`).
 //! * `serve`         — start the streaming coordinator on PJRT artifacts or
 //!   the in-process batched functional model (`--backend functional`).
 
@@ -23,6 +25,7 @@ fn main() {
         "characterize" => cmd_characterize(argv),
         "synth" => rapid::circuit::cli::run(argv),
         "app" => rapid::apps::cli::run(argv),
+        "explore" => rapid::explore::cli::run(argv),
         "serve" => {
             #[cfg(feature = "pjrt")]
             rapid::coordinator::cli::run(argv);
@@ -56,6 +59,12 @@ fn usage() {
                                                 LUT/FF/latency/power of one unit\n\
            app           --name {{pantompkins|jpeg|harris}} --mul NAME --div NAME\n\
                                                 end-to-end application run + QoR\n\
+           explore       [--op {{mul|div}} --width N | --app {{jpeg|ecg|harris}}]\n\
+                         [--qor BUDGET] [--objective {{adp|luts|latency|power}}]\n\
+                         [--units A,B] [--muls A,B] [--divs A,B] [--stages 1,2,4]\n\
+                         [--screen-samples N] [--samples N] [--vectors V]\n\
+                                                Pareto design-space exploration; BUDGET\n\
+                                                is e.g. \"psnr>=30\" or \"are<=0.02,luts<=400\"\n\
            serve         [--backend {{pjrt|functional}}] [--artifacts DIR] [--unit NAME]\n\
                          [--width N] [--op {{mul|div}}] [--batch B] [--workers W] [--requests R]\n\
                                                 streaming coordinator demo (PJRT artifacts,\n\

@@ -4,8 +4,10 @@
 //! zero-divisor and overflow saturation lanes. Units that override the
 //! default batch loop (Mitchell, RAPID, SIMDive, exact) are exercised with
 //! their specialized paths; everything else checks the default fallback.
+//! Names come from the canonical `mul_names()`/`div_names()` lists, so the
+//! whole RAPID G ∈ 1..=15 ladder is swept, not just the Table III trio.
 
-use rapid::arith::registry::{make_div, make_mul, ALL_DIVS, ALL_MULS};
+use rapid::arith::registry::{div_names, make_div, make_mul, mul_names};
 use rapid::arith::traits::mask;
 use rapid::util::XorShift256;
 
@@ -14,7 +16,7 @@ const LANES: usize = 513;
 
 #[test]
 fn mul_batch_matches_scalar_for_every_registry_unit() {
-    for &name in ALL_MULS {
+    for name in mul_names() {
         for n in [8u32, 16, 32] {
             let m = make_mul(name, n).unwrap_or_else(|| panic!("make_mul({name}, {n})"));
             let mut rng = XorShift256::new(0xBA7C + n as u64);
@@ -44,7 +46,7 @@ fn mul_batch_matches_scalar_for_every_registry_unit() {
 
 #[test]
 fn div_batch_matches_scalar_for_every_registry_unit() {
-    for &name in ALL_DIVS {
+    for name in div_names() {
         for n in [8u32, 16, 32] {
             let d = make_div(name, n).unwrap_or_else(|| panic!("make_div({name}, {n})"));
             let mut rng = XorShift256::new(0xD1BB + n as u64);

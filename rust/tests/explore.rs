@@ -1,0 +1,197 @@
+//! Integration contract of the design-space explorer (DESIGN.md §6):
+//! frontier invariants (no frontier point dominates another; every
+//! dropped circuit-bearing survivor is covered by the frontier; `exact`
+//! is frontier-feasible at any pure-QoR budget), budget-respecting
+//! recommendations with deterministic infeasibility, and the app-scoped
+//! flow on all three paper applications.
+
+use rapid::explore::pareto::dominates;
+use rapid::explore::search::{
+    app_space, explore_app, explore_units, parse_budget, recommend_app, recommend_units,
+    Objective, Pick, SearchOpts,
+};
+use rapid::explore::space::Space;
+use rapid::explore::EvalOpts;
+
+/// Small-but-representative options: coarse MC screen, exhaustive
+/// refinement at width 8, light power vectors.
+fn opts() -> SearchOpts {
+    SearchOpts {
+        screen_samples: 15_000,
+        refine: EvalOpts { mc_samples: 60_000, power_vectors: 24, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The explored mul space: Table III spread + one extra RAPID level and
+/// one accuracy-only design, at width 8, depths {1, 2}.
+fn small_space() -> Space {
+    Space::mul_full()
+        .at_width(8)
+        .with_stages(&[1, 2])
+        .retain_names(&["exact", "mitchell", "rapid1", "rapid3", "rapid10", "drum6"])
+}
+
+/// Oriented frontier axes of a report (must mirror `search`'s choice).
+fn axes(r: &rapid::explore::CandidateReport) -> Vec<f64> {
+    let c = r.costs().unwrap();
+    vec![c[0], c[1], c[2], c[3], r.error.are]
+}
+
+#[test]
+fn frontier_invariants_and_budget_queries() {
+    let ex = explore_units(&small_space(), &opts());
+
+    // 5 circuit-bearing names × 2 depths + 1 accuracy-only (one depth)
+    assert_eq!(ex.reports.len(), 11);
+    assert!(!ex.frontier.is_empty());
+    assert!(ex.n_survivors >= 1 && ex.n_survivors <= ex.n_candidates);
+
+    // frontier points are refined, circuit-bearing, and mutually
+    // non-dominating
+    for &i in &ex.frontier {
+        assert!(ex.refined[i], "frontier point {} not refined", ex.reports[i].cand.key());
+        assert!(ex.reports[i].circuit.is_some());
+    }
+    for &a in &ex.frontier {
+        for &b in &ex.frontier {
+            if a != b {
+                assert!(
+                    !dominates(&axes(&ex.reports[a]), &axes(&ex.reports[b])),
+                    "frontier point {} dominates {}",
+                    ex.reports[a].cand.key(),
+                    ex.reports[b].cand.key()
+                );
+            }
+        }
+    }
+    // every refined circuit-bearing non-frontier report is covered
+    for i in 0..ex.reports.len() {
+        if ex.refined[i] && ex.reports[i].circuit.is_some() && !ex.frontier.contains(&i) {
+            let covered = ex.frontier.iter().any(|&a| {
+                dominates(&axes(&ex.reports[a]), &axes(&ex.reports[i]))
+                    || axes(&ex.reports[a]) == axes(&ex.reports[i])
+            });
+            assert!(covered, "dropped point {} uncovered", ex.reports[i].cand.key());
+        }
+    }
+
+    // `exact` reaches the frontier set with zero error, so every
+    // satisfiable pure-accuracy budget is feasible — including the
+    // tightest one
+    let zero = parse_budget("are<=0.0").unwrap();
+    match recommend_units(&ex, &zero, Objective::Adp).unwrap() {
+        Pick::Chosen(i) => {
+            assert_eq!(ex.reports[i].error.are, 0.0);
+            assert_eq!(ex.reports[i].cand.name, "exact");
+        }
+        Pick::Infeasible => panic!("'are<=0' must be feasible — exact is on the frontier"),
+    }
+    for bound in ["are<=0.005", "are<=0.02", "are<=0.04", "are<=1.0"] {
+        let b = parse_budget(bound).unwrap();
+        match recommend_units(&ex, &b, Objective::Adp).unwrap() {
+            Pick::Chosen(i) => {
+                let r = &ex.reports[i];
+                assert!(r.error.are <= b[0].value, "{bound}: pick violates budget");
+                // the pick is the cheapest feasible frontier point
+                for &j in &ex.frontier {
+                    if ex.reports[j].error.are <= b[0].value {
+                        assert!(
+                            r.adp().unwrap() <= ex.reports[j].adp().unwrap(),
+                            "{bound}: {} not cheapest",
+                            r.cand.key()
+                        );
+                    }
+                }
+            }
+            Pick::Infeasible => panic!("{bound} must be feasible"),
+        }
+    }
+
+    // impossible cost budget → deterministic infeasibility, not a panic
+    let b = parse_budget("luts<=0.5").unwrap();
+    assert_eq!(recommend_units(&ex, &b, Objective::Adp).unwrap(), Pick::Infeasible);
+    // unknown metric → clean error
+    assert!(recommend_units(&ex, &parse_budget("zorp<=1").unwrap(), Objective::Adp).is_err());
+
+    // a tighter accuracy budget can only cost more (ADP of the pick is
+    // monotone in the budget bound)
+    let pick_adp = |bound: &str| -> f64 {
+        match recommend_units(&ex, &parse_budget(bound).unwrap(), Objective::Adp).unwrap() {
+            Pick::Chosen(i) => ex.reports[i].adp().unwrap(),
+            Pick::Infeasible => f64::INFINITY,
+        }
+    };
+    assert!(pick_adp("are<=0.0") >= pick_adp("are<=0.04"));
+}
+
+#[test]
+fn jpeg_app_budget_queries() {
+    let pairs = app_space(&["exact", "rapid10"], &["exact", "rapid9"], &[1]);
+    assert_eq!(pairs.len(), 4);
+    let ex = explore_app("jpeg", &pairs, &opts());
+    assert_eq!(ex.qor_metric, "psnr");
+    assert_eq!(ex.points.len(), 4);
+    assert!(!ex.frontier.is_empty());
+
+    // frontier points mutually non-dominating on (costs, −psnr)
+    let app_axes = |i: usize| -> Vec<f64> {
+        let p = &ex.points[i];
+        vec![p.rollup.luts as f64, p.rollup.latency_ns, p.rollup.adp(), -p.qor]
+    };
+    for &a in &ex.frontier {
+        for &b in &ex.frontier {
+            if a != b {
+                assert!(!dominates(&app_axes(a), &app_axes(b)));
+            }
+        }
+    }
+
+    // a lossy-compression PSNR band every configuration clears
+    let b = parse_budget("psnr>=15").unwrap();
+    match recommend_app(&ex, &b, Objective::Adp).unwrap() {
+        Pick::Chosen(i) => {
+            assert!(ex.points[i].qor >= 15.0);
+            // cheapest feasible frontier point by ADP
+            for &j in &ex.frontier {
+                if ex.points[j].qor >= 15.0 {
+                    assert!(ex.points[i].rollup.adp() <= ex.points[j].rollup.adp());
+                }
+            }
+        }
+        Pick::Infeasible => panic!("psnr>=15 must be feasible"),
+    }
+    // PSNR is capped at 99 dB, so a 1000 dB budget is cleanly infeasible
+    let b = parse_budget("psnr>=1000").unwrap();
+    assert_eq!(recommend_app(&ex, &b, Objective::Adp).unwrap(), Pick::Infeasible);
+    // the generic alias resolves to the same axis
+    let b = parse_budget("qor>=15").unwrap();
+    assert!(matches!(recommend_app(&ex, &b, Objective::Adp).unwrap(), Pick::Chosen(_)));
+    // a sensitivity budget is a metric error on a PSNR app
+    assert!(recommend_app(&ex, &parse_budget("sens>=0.9").unwrap(), Objective::Adp).is_err());
+}
+
+#[test]
+fn ecg_and_harris_explore_smoke() {
+    // single-pair spaces: the full ladder runs end-to-end on the other
+    // two paper apps and the budget queries answer on their own metrics
+    let pairs = app_space(&["rapid10"], &["rapid9"], &[1]);
+    assert_eq!(pairs.len(), 1);
+
+    let ecg = explore_app("ecg", &pairs, &opts());
+    assert_eq!(ecg.app, "pantompkins");
+    assert_eq!(ecg.qor_metric, "sensitivity");
+    assert_eq!(ecg.frontier, vec![0]);
+    let q = ecg.points[0].qor;
+    assert!((0.0..=1.0).contains(&q), "sensitivity {q}");
+    let b = parse_budget(&format!("sensitivity>={:.3}", (q - 0.01).max(0.0))).unwrap();
+    assert!(matches!(recommend_app(&ecg, &b, Objective::Adp).unwrap(), Pick::Chosen(0)));
+
+    let hcd = explore_app("harris", &pairs, &opts());
+    assert_eq!(hcd.qor_metric, "vectors");
+    assert_eq!(hcd.frontier, vec![0]);
+    let q = hcd.points[0].qor;
+    assert!((0.0..=1.0).contains(&q), "vector ratio {q}");
+    let b = parse_budget("ratio>=1.01").unwrap();
+    assert_eq!(recommend_app(&hcd, &b, Objective::Adp).unwrap(), Pick::Infeasible);
+}

@@ -8,7 +8,7 @@
 //! pipelined variants exercise the passes on FF-bearing netlists, which
 //! no builder ever optimizes.
 
-use rapid::arith::registry::{make_div, make_mul, ALL_DIVS, ALL_MULS};
+use rapid::arith::registry::{div_names, make_div, make_mul, mul_names};
 use rapid::circuit::pipeline::pipeline;
 use rapid::circuit::primitive::Delays;
 use rapid::circuit::sim::{assert_pairs, equivalent_random};
@@ -32,7 +32,7 @@ fn matches_model(
 
 #[test]
 fn optimize_preserves_every_mul_netlist_at_width_8() {
-    for (i, &name) in ALL_MULS.iter().enumerate() {
+    for (i, name) in mul_names().into_iter().enumerate() {
         let nl = match netlist_for_mul(name, 8) {
             Some(nl) => nl,
             None => continue, // accuracy-only model, no LUT mapping
@@ -49,7 +49,7 @@ fn optimize_preserves_every_mul_netlist_at_width_8() {
 
 #[test]
 fn optimize_preserves_every_div_netlist_at_width_8() {
-    for (i, &name) in ALL_DIVS.iter().enumerate() {
+    for (i, name) in div_names().into_iter().enumerate() {
         let nl = match netlist_for_div(name, 8) {
             Some(nl) => nl,
             None => continue,

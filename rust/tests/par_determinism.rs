@@ -141,6 +141,51 @@ fn app_kernels_are_thread_invariant() {
 }
 
 #[test]
+fn explore_results_are_thread_invariant() {
+    // the design-space explorer end to end — screen, survivors, refine,
+    // frontier, recommendation — bit-identical at RAPID_THREADS ∈ {1, 4}
+    // (the ISSUE-5 pin; the whole ladder is an outer par fan-out with
+    // inner sweeps pinned serial)
+    use rapid::explore::search::{explore_units, parse_budget, recommend_units, Objective, SearchOpts};
+    use rapid::explore::{EvalOpts, Space};
+    let space = Space::mul_full()
+        .at_width(8)
+        .with_stages(&[1, 2])
+        .retain_names(&["exact", "rapid3", "rapid10", "drum4"]);
+    let opts = SearchOpts {
+        screen_samples: 10_000,
+        refine: EvalOpts { mc_samples: 40_000, power_vectors: 16, ..Default::default() },
+        ..Default::default()
+    };
+    let budget = parse_budget("are<=0.02").unwrap();
+    let base = par::with_threads(1, || explore_units(&space, &opts));
+    let base_pick = recommend_units(&base, &budget, Objective::Adp).unwrap();
+    let fp = |ex: &rapid::explore::UnitExplore| -> Vec<(String, u64, usize, u64, bool)> {
+        ex.reports
+            .iter()
+            .zip(&ex.refined)
+            .map(|(r, &ref_)| {
+                let (luts, power) = match &r.circuit {
+                    Some(c) => (c.luts, c.power_mw.to_bits()),
+                    None => (0, 0),
+                };
+                (r.cand.key(), r.error.are.to_bits(), luts, power, ref_)
+            })
+            .collect()
+    };
+    let t = 4usize;
+    let ex = par::with_threads(t, || explore_units(&space, &opts));
+    assert_eq!(fp(&ex), fp(&base), "reports differ at t={t}");
+    assert_eq!(ex.frontier, base.frontier, "frontier differs at t={t}");
+    assert_eq!(ex.n_survivors, base.n_survivors, "survivors differ at t={t}");
+    assert_eq!(
+        recommend_units(&ex, &budget, Objective::Adp).unwrap(),
+        base_pick,
+        "recommendation differs at t={t}"
+    );
+}
+
+#[test]
 fn par_chunk_edges_hold_at_integration_boundaries() {
     // the par_chunks edge cases the engine's consumers rely on: empty
     // work, work smaller than one chunk, and remainder chunks — checked
