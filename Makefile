@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 is `cargo build --release && cargo test -q`.
 
-.PHONY: all test artifacts bench bench-hotpath bench-explore doc
+.PHONY: all test artifacts bench bench-hotpath bench-explore bench-emit emit-artifacts doc
 
 all:
 	cargo build --release
@@ -18,7 +18,7 @@ bench:
 	for b in fig1_motivation fig2_error_surface fig4_stage_balance \
 	         fig8_fig9_qor fig10_apps fig11_fig12_pipeline \
 	         table1_accuracy table3_mul table3_div ablations hotpath \
-	         explore; do \
+	         explore emit; do \
 	    cargo bench --bench $$b; \
 	done
 
@@ -32,6 +32,22 @@ bench-hotpath:
 # rewrites BENCH_explore.json and prints the width-8 accuracy-budget pick.
 bench-explore:
 	cargo bench --bench explore
+
+# RTL export throughput (lowering, reparse round-trip, vector oracles);
+# also rewrites BENCH_emit.json.
+bench-emit:
+	cargo bench --bench emit
+
+# The Table III trio as synthesizable RTL bundles (module + self-checking
+# testbench + $readmemh vectors) under rtl/. With iverilog installed,
+# each bundle self-checks:
+#   cd rtl && iverilog -g2012 -o sim rapid10_mul16.sv rapid10_mul16_tb.sv && vvp sim
+emit-artifacts:
+	cargo run --release -- emit --unit rapid10 --op mul --width 16 --out rtl
+	cargo run --release -- emit --unit rapid9 --op div --width 8 --out rtl
+	cargo run --release -- emit --unit exact --op mul --width 16 --out rtl
+	cargo run --release -- emit --unit rapid10 --op mul --width 16 --stages 4 --out rtl
+	cargo run --release -- emit --unit rapid9 --op div --width 8 --stages 3 --out rtl
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

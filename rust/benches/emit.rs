@@ -1,0 +1,110 @@
+//! §Perf — RTL export throughput (not a paper figure): cells/second of
+//! the SystemVerilog lowering, the reparse round-trip, and vectors/second
+//! of the two testbench oracles (scalar reference vs compiled
+//! bit-parallel engine) — the costs behind `rapid emit`. Recorded to
+//! `BENCH_emit.json` (`make bench-emit` refreshes it).
+
+use rapid::bench_support::record::Recorder;
+use rapid::bench_support::table::Table;
+use rapid::circuit::emit::reparse::reparse_module;
+use rapid::circuit::emit::vectors::{generate, Oracle, VectorPlan};
+use rapid::circuit::emit::{emit_netlist, module_file};
+use rapid::circuit::pipeline::pipeline;
+use rapid::circuit::primitive::Delays;
+use rapid::circuit::synth::multiplier::rapid_mul_netlist;
+use rapid::util::timer::{bench_n, black_box, fmt_ns};
+
+fn main() {
+    let mut t = Table::new(
+        "§Perf — RTL export (rapid emit)",
+        &["stage", "time", "throughput", "notes"],
+    );
+    let mut rec = Recorder::new("emit");
+
+    // the Table III headline configuration: rapid10 16x16, comb and S=4
+    let nl = rapid_mul_netlist(16, 10);
+    let p4 = pipeline(&nl, 4, &Delays::default()).netlist;
+    let cells = nl.cells.len();
+    let p4_cells = p4.cells.len();
+
+    // 1. lowering alone (includes the built-in reparse + equivalence
+    //    round-trip — the cost a `rapid emit` user actually pays)
+    let r = bench_n("emit_module_mul16", 20, &mut || {
+        black_box(module_file(&nl).unwrap().0.len());
+    });
+    t.row(&[
+        "lower rapid10_mul16".into(),
+        fmt_ns(r.median_ns),
+        format!("{:.0} cells/ms", 1e6 * cells as f64 / r.median_ns),
+        format!("{cells} cells, verified round-trip"),
+    ]);
+    rec.add("emit_module_mul16", &r, cells as f64);
+
+    let r = bench_n("emit_module_mul16_p4", 20, &mut || {
+        black_box(module_file(&p4).unwrap().0.len());
+    });
+    t.row(&[
+        "lower rapid10_mul16_p4".into(),
+        fmt_ns(r.median_ns),
+        format!("{:.0} cells/ms", 1e6 * p4_cells as f64 / r.median_ns),
+        format!("{p4_cells} cells incl. stage FFs"),
+    ]);
+    rec.add("emit_module_mul16_p4", &r, p4_cells as f64);
+
+    // 2. reparse alone, on a pre-emitted module
+    let (sv, _) = module_file(&nl).unwrap();
+    let r = bench_n("reparse_mul16", 20, &mut || {
+        black_box(reparse_module(&sv).unwrap().cells.len());
+    });
+    t.row(&[
+        "reparse rapid10_mul16".into(),
+        fmt_ns(r.median_ns),
+        format!("{:.0} cells/ms", 1e6 * cells as f64 / r.median_ns),
+        format!("{} bytes of RTL", sv.len()),
+    ]);
+    rec.add("reparse_mul16", &r, cells as f64);
+
+    // 3. vector oracles head to head: 4 096 random vectors, scalar
+    //    reference interpreter vs compiled bit-parallel engine
+    let plan = VectorPlan { exhaustive_max_bits: 0, random_count: 4096, seed: 0xE317 };
+    let r_s = bench_n("vectors_scalar_mul16", 3, &mut || {
+        black_box(generate(&nl, &plan, Oracle::Scalar).expected.len());
+    });
+    t.row(&[
+        "vectors (scalar oracle)".into(),
+        fmt_ns(r_s.median_ns),
+        format!("{:.1} kvec/s", 1e6 * 4096.0 / r_s.median_ns),
+        "reference interpreter, 4096 vectors".into(),
+    ]);
+    rec.add("vectors_scalar_mul16", &r_s, 4096.0);
+
+    let r_c = bench_n("vectors_compiled_mul16", 10, &mut || {
+        black_box(generate(&nl, &plan, Oracle::Compiled).expected.len());
+    });
+    t.row(&[
+        "vectors (compiled oracle)".into(),
+        fmt_ns(r_c.median_ns),
+        format!("{:.1} kvec/s", 1e6 * 4096.0 / r_c.median_ns),
+        format!("{:.1}x over scalar", r_s.median_ns / r_c.median_ns),
+    ]);
+    rec.add("vectors_compiled_mul16", &r_c, 4096.0);
+
+    // 4. the full bundle a CLI invocation produces (compiled oracle)
+    let r = bench_n("emit_bundle_mul16", 5, &mut || {
+        let b = emit_netlist(&nl, &plan, Oracle::Compiled).unwrap();
+        black_box(b.module_sv.len() + b.testbench_sv.len() + b.stim_mem.len());
+    });
+    t.row(&[
+        "full bundle".into(),
+        fmt_ns(r.median_ns),
+        format!("{:.1} bundle/s", 1e9 / r.median_ns),
+        "module + tb + 2 .mem files".into(),
+    ]);
+    rec.add("emit_bundle_mul16", &r, 1.0);
+
+    t.print();
+    match rec.write("BENCH_emit.json") {
+        Ok(()) => println!("\nrecorded -> BENCH_emit.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_emit.json: {e}"),
+    }
+}

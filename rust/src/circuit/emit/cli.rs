@@ -1,0 +1,55 @@
+//! `rapid emit` subcommand: lower one registry unit to SystemVerilog and
+//! write the RTL + self-checking testbench + vector files.
+
+use std::path::Path;
+
+use crate::util::cli::Args;
+
+use super::vectors::{Oracle, VectorPlan};
+
+/// Entry point of the `emit` subcommand (argv = everything after it).
+pub fn run(argv: Vec<String>) {
+    let args = Args::parse(argv, &["unit", "op", "width", "stages", "out", "vectors", "seed"]);
+    let unit = args.get_or("unit", "rapid10");
+    let op = args.get_or("op", "mul");
+    let width = args.get_u32("width", 16);
+    let stages = args.get_usize("stages", 1);
+    let out = args.get_or("out", "rtl");
+    let plan = VectorPlan {
+        random_count: args.get_usize("vectors", 4096),
+        seed: args.get_u64("seed", 0xE317),
+        ..VectorPlan::default()
+    };
+    // --compiled-oracle switches the expected-vector engine; the default
+    // is the scalar reference interpreter (the two are pinned identical
+    // by rust/tests/emit_equivalence.rs)
+    let oracle = if args.flag("compiled-oracle") { Oracle::Compiled } else { Oracle::Scalar };
+
+    let bundle = match super::emit_unit(unit, op, width, stages, &plan, oracle) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("emit: {e}");
+            std::process::exit(2);
+        }
+    };
+    let paths = match bundle.write_to(Path::new(out)) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("emit: writing to '{out}': {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "emitted {} (latency {} cycles, {} vectors):",
+        bundle.module_name,
+        bundle.latency,
+        bundle.vectors.stimulus.len()
+    );
+    for p in &paths {
+        println!("  {}", p.display());
+    }
+    println!(
+        "simulate: cd {out} && iverilog -g2012 -o {0}_sim {0}.sv {0}_tb.sv && vvp {0}_sim",
+        bundle.module_name
+    );
+}

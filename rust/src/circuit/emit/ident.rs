@@ -1,0 +1,137 @@
+//! Verilog identifier sanitization. Netlist names are free-form report
+//! strings (`rapid10_mul16_p4`, and user code may build names like
+//! `rapid10/16x16`); module/instance names in the emitted RTL must be
+//! legal simple SystemVerilog identifiers: `[A-Za-z_][A-Za-z0-9_$]*` and
+//! not a reserved word. [`sanitize_ident`] maps any string onto that set
+//! deterministically; every registry netlist name is covered by the unit
+//! tests below and the same function guards instance and file names.
+
+/// Reserved words that would otherwise survive sanitization unchanged.
+/// Not the full IEEE 1800 list — only words made of `[a-z_]` that a unit
+/// or instance name could plausibly collide with; anything here gets an
+/// `_x` suffix.
+const SV_KEYWORDS: &[&str] = &[
+    "always", "and", "assign", "begin", "bit", "buf", "byte", "case", "cell", "clk",
+    "const", "default", "design", "disable", "do", "edge", "else", "end", "endcase",
+    "endmodule", "enum", "event", "expect", "export", "final", "for", "force", "forever",
+    "function", "generate", "genvar", "if", "initial", "inout", "input", "int", "integer",
+    "localparam", "logic", "longint", "module", "nand", "negedge", "nor", "not", "or",
+    "output", "parameter", "posedge", "primitive", "real", "reg", "repeat", "return",
+    "shortint", "signed", "static", "string", "struct", "table", "task", "time", "tri",
+    "type", "typedef", "union", "unique", "unsigned", "var", "void", "wait", "while",
+    "wire", "xnor", "xor",
+];
+
+/// Map an arbitrary netlist name onto a legal SystemVerilog simple
+/// identifier. Total and deterministic:
+///
+/// * every character outside `[A-Za-z0-9_]` becomes `_` (so
+///   `rapid10/16x16` → `rapid10_16x16`);
+/// * a leading digit gets a `u_` prefix (`16x16` → `u_16x16`);
+/// * the empty string becomes `u_anon`;
+/// * reserved words (see [`SV_KEYWORDS`]) get an `_x` suffix so `table`
+///   or `module` can never collide with the grammar.
+///
+/// Distinct inputs may collapse to the same identifier (`a/b` and `a.b`
+/// both map to `a_b`); the emitter only ever emits one module per file,
+/// so collisions cannot produce illegal RTL — callers that bundle many
+/// modules must deduplicate names themselves.
+pub fn sanitize_ident(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 2);
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        return "u_anon".to_string();
+    }
+    if out.as_bytes()[0].is_ascii_digit() {
+        out.insert_str(0, "u_");
+    }
+    if SV_KEYWORDS.contains(&out.as_str()) {
+        out.push_str("_x");
+    }
+    out
+}
+
+/// True when `s` already is a legal simple SystemVerilog identifier that
+/// [`sanitize_ident`] would return unchanged (the emitter asserts this on
+/// everything it writes).
+pub fn is_legal_ident(s: &str) -> bool {
+    !s.is_empty()
+        && !s.as_bytes()[0].is_ascii_digit()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        && !SV_KEYWORDS.contains(&s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::registry::{div_names, mul_names};
+    use crate::circuit::synth::{netlist_for_div, netlist_for_mul};
+
+    #[test]
+    fn registry_netlist_names_all_sanitize_to_themselves() {
+        // Every circuit-bearing registry unit, at every Table III width,
+        // in combinational and pipelined (`_p2`/`_p4` suffix) form: the
+        // builder names are already legal, and sanitization must be the
+        // identity on them (golden files and testbench cross-references
+        // rely on the name surviving unchanged).
+        for name in mul_names() {
+            for n in [8u32, 16, 32] {
+                if let Some(nl) = netlist_for_mul(name, n) {
+                    for variant in [nl.name.clone(), format!("{}_p2", nl.name), format!("{}_p4", nl.name)] {
+                        assert!(is_legal_ident(&variant), "{variant}");
+                        assert_eq!(sanitize_ident(&variant), variant);
+                    }
+                }
+            }
+        }
+        for name in div_names() {
+            for n in [4u32, 8, 16] {
+                if let Some(nl) = netlist_for_div(name, n) {
+                    assert!(is_legal_ident(&nl.name), "{}", nl.name);
+                    assert_eq!(sanitize_ident(&nl.name), nl.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slash_style_names_are_escaped() {
+        assert_eq!(sanitize_ident("rapid10/16x16"), "rapid10_16x16");
+        assert_eq!(sanitize_ident("rapid10/16x16/p4"), "rapid10_16x16_p4");
+        assert_eq!(sanitize_ident("a b.c-d"), "a_b_c_d");
+    }
+
+    #[test]
+    fn leading_digits_empty_and_keywords() {
+        assert_eq!(sanitize_ident("16x16"), "u_16x16");
+        assert_eq!(sanitize_ident(""), "u_anon");
+        assert_eq!(sanitize_ident("///"), "___");
+        assert_eq!(sanitize_ident("module"), "module_x");
+        assert_eq!(sanitize_ident("table"), "table_x");
+        assert_eq!(sanitize_ident("expect"), "expect_x");
+        assert!(!is_legal_ident("module"));
+        assert!(!is_legal_ident("9lives"));
+        assert!(!is_legal_ident(""));
+        assert!(is_legal_ident("rapid9_div8"));
+    }
+
+    #[test]
+    fn sanitized_output_is_always_legal() {
+        // property: sanitize ∘ sanitize = sanitize, and the result is
+        // always legal — over a pile of adversarial inputs
+        for s in [
+            "rapid10/16x16", "", "0", "always", "a$b", "ü", "x y", "end", "n0",
+            "__", "-", "rapid9_div8", "1'b0", "in_bits[3]",
+        ] {
+            let once = sanitize_ident(s);
+            assert!(is_legal_ident(&once), "{s:?} → {once:?}");
+            assert_eq!(sanitize_ident(&once), once, "{s:?} not idempotent");
+        }
+    }
+}

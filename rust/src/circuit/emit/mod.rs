@@ -1,0 +1,245 @@
+//! RTL export backend: lower a [`Netlist`] — combinational, or an
+//! FF-bearing cut from [`circuit::pipeline`](crate::circuit::pipeline) —
+//! into synthesizable SystemVerilog, with a self-checking testbench whose
+//! stimulus/expected vectors come from the repo's own evaluators.
+//!
+//! One [`EmitBundle`] is four files:
+//!
+//! * `<name>.sv`        — behavioral primitive library + the unit module
+//!   (`emit::verilog`, primitives mirroring `circuit/primitive.rs`);
+//! * `<name>_tb.sv`     — streaming self-checking testbench
+//!   (`emit::testbench`);
+//! * `<name>_stim.mem`  — `$readmemh` stimulus vectors;
+//! * `<name>_expect.mem`— `$readmemh` expected outputs (`emit::vectors`,
+//!   scalar-interpreter oracle by default).
+//!
+//! Verification is layered so no HDL simulator is required for
+//! correctness (the container has none; iverilog runs as an advisory CI
+//! job):
+//!
+//! 1. pipelined cuts pass [`Pipelined::verify`] — uniform register depth
+//!    plus random equivalence against the combinational original — before
+//!    any staged RTL is written;
+//! 2. every emitted module is parsed back by `emit::reparse` and checked
+//!    equivalent to the source netlist, cell for cell;
+//! 3. `rust/tests/emit_equivalence.rs` pins the vector oracles against
+//!    each other across the registry and a randomized
+//!    [`testgen`](crate::circuit::testgen) corpus, and
+//!    `rust/tests/emit_golden.rs` snapshots the Table III trio.
+//!
+//! CLI: `rapid emit --unit rapid10 --op mul --width 16 --stages 4 --out
+//! rtl/` (see `emit::cli`).
+
+pub mod cli;
+pub mod ident;
+pub mod reparse;
+pub mod testbench;
+pub mod vectors;
+pub mod verilog;
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::circuit::netlist::Netlist;
+use crate::circuit::pipeline::{pipeline, reg_depth};
+use crate::circuit::primitive::Delays;
+use crate::circuit::sim::equivalent_random;
+
+use ident::sanitize_ident;
+use vectors::{generate, to_mem, Oracle, VectorPlan, VectorSet};
+
+/// Everything `rapid emit` produces for one unit, in memory. Pure data —
+/// byte-identical for the same netlist and plan on any machine; only
+/// [`EmitBundle::write_to`] touches the filesystem.
+#[derive(Clone, Debug)]
+pub struct EmitBundle {
+    /// Sanitized module name — also the file-name stem.
+    pub module_name: String,
+    /// Uniform register latency in cycles (0 for combinational units).
+    pub latency: usize,
+    /// Primitive library + unit module (`<name>.sv`).
+    pub module_sv: String,
+    /// Self-checking testbench (`<name>_tb.sv`).
+    pub testbench_sv: String,
+    /// Stimulus vectors (`<name>_stim.mem`).
+    pub stim_mem: String,
+    /// Expected outputs (`<name>_expect.mem`).
+    pub expect_mem: String,
+    /// The vectors themselves, for callers that cross-check in Rust.
+    pub vectors: VectorSet,
+}
+
+/// Lower one netlist into a full RTL bundle.
+///
+/// The netlist's register depth is measured (and must be uniform — see
+/// [`reg_depth`]); the emitted module is round-trip verified by parsing
+/// it back and checking random equivalence against `nl` before the bundle
+/// is returned, so a bundle in hand is already a checked artifact.
+pub fn emit_netlist(nl: &Netlist, plan: &VectorPlan, oracle: Oracle) -> Result<EmitBundle, String> {
+    let (module_sv, latency) = module_file(nl)?;
+    let module_name = sanitize_ident(&nl.name);
+    let vectors = generate(nl, plan, oracle);
+    let stim_name = format!("{module_name}_stim.mem");
+    let expect_name = format!("{module_name}_expect.mem");
+    let testbench_sv = emit_tb(&module_name, &vectors, latency, &stim_name, &expect_name);
+    let stim_mem = to_mem(
+        &vectors.stimulus,
+        vectors.n_in,
+        &format!("{module_name} stimulus ({} vectors)", vectors.stimulus.len()),
+    );
+    let expect_mem = to_mem(
+        &vectors.expected,
+        vectors.n_out,
+        &format!("{module_name} expected outputs (latency {latency})"),
+    );
+    Ok(EmitBundle { module_name, latency, module_sv, testbench_sv, stim_mem, expect_mem, vectors })
+}
+
+fn emit_tb(name: &str, v: &VectorSet, latency: usize, stim: &str, expect: &str) -> String {
+    testbench::emit_testbench(name, v.n_in, v.n_out, v.stimulus.len(), latency, stim, expect)
+}
+
+/// The complete `<name>.sv` file (timescale + primitive library + unit
+/// module) and its measured register latency — the exact bytes
+/// [`emit_netlist`] puts in [`EmitBundle::module_sv`], exposed separately
+/// so golden-file tests can snapshot RTL without generating vectors.
+///
+/// The text is round-trip verified before it is returned: `emit::reparse`
+/// parses it back and the result must be randomly equivalent to `nl`.
+pub fn module_file(nl: &Netlist) -> Result<(String, usize), String> {
+    let latency = reg_depth(nl).map_err(|e| format!("{}: not emittable: {e}", nl.name))?;
+    let body = verilog::emit_module(nl, latency)?;
+    let module_sv = format!("`timescale 1ns/1ps\n\n{}\n{body}", verilog::PRIMITIVES_SV);
+    let back = reparse::reparse_module(&module_sv)
+        .map_err(|e| format!("{}: emitted RTL failed reparse: {e}", nl.name))?;
+    equivalent_random(nl, &back, 4, 0x3317 ^ nl.n_nets as u64)
+        .map_err(|e| format!("{}: emitted RTL is not equivalent: {e}", nl.name))?;
+    Ok((module_sv, latency))
+}
+
+/// Lower one registry unit (`unit` ∈ exact | mitchell | rapid1..rapid15,
+/// `op` ∈ mul | div) at `width`, optionally pipelined into `stages`.
+///
+/// For `stages > 1` the cut is re-verified in release mode
+/// ([`Pipelined::verify`](crate::circuit::pipeline::Pipelined::verify))
+/// before lowering — a ragged or non-equivalent cut aborts the emit.
+pub fn emit_unit(
+    unit: &str,
+    op: &str,
+    width: u32,
+    stages: usize,
+    plan: &VectorPlan,
+    oracle: Oracle,
+) -> Result<EmitBundle, String> {
+    let nl = unit_netlist(unit, op, width)?;
+    if stages <= 1 {
+        return emit_netlist(&nl, plan, oracle);
+    }
+    let p = pipeline(&nl, stages, &Delays::default());
+    p.verify(&nl, 4, 0xBA1A + stages as u64)?;
+    emit_netlist(&p.netlist, plan, oracle)
+}
+
+/// Resolve a registry unit name to its combinational netlist.
+pub fn unit_netlist(unit: &str, op: &str, width: u32) -> Result<Netlist, String> {
+    use crate::circuit::synth::{netlist_for_div, netlist_for_mul};
+    let lookup = match op {
+        "mul" => netlist_for_mul(unit, width),
+        "div" => netlist_for_div(unit, width),
+        other => return Err(format!("emit: unknown op '{other}' (mul | div)")),
+    };
+    lookup.ok_or_else(|| {
+        format!("emit: no circuit for unit '{unit}' op '{op}' (exact | mitchell | rapid1..rapid15)")
+    })
+}
+
+impl EmitBundle {
+    /// The four file names of the bundle, in write order.
+    pub fn file_names(&self) -> [String; 4] {
+        [
+            format!("{}.sv", self.module_name),
+            format!("{}_tb.sv", self.module_name),
+            format!("{}_stim.mem", self.module_name),
+            format!("{}_expect.mem", self.module_name),
+        ]
+    }
+
+    /// Write the bundle into `dir` (created if missing); returns the
+    /// paths written. `iverilog -g2012 -o tb <name>.sv <name>_tb.sv &&
+    /// vvp tb` from inside `dir` then self-checks the artifact.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let contents =
+            [&self.module_sv, &self.testbench_sv, &self.stim_mem, &self.expect_mem];
+        let mut paths = Vec::with_capacity(4);
+        for (name, text) in self.file_names().iter().zip(contents) {
+            let path = dir.join(name);
+            let mut f = std::fs::File::create(&path)?;
+            f.write_all(text.as_bytes())?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::synth::adder::binary_adder_netlist;
+
+    #[test]
+    fn adder_bundle_is_coherent() {
+        let nl = binary_adder_netlist(4);
+        let b = emit_netlist(&nl, &VectorPlan::default(), Oracle::Scalar).unwrap();
+        assert_eq!(b.module_name, "add4");
+        assert_eq!(b.latency, 0);
+        assert!(b.module_sv.contains("module add4 ("));
+        assert!(b.module_sv.contains("module rapid_lut"));
+        assert!(b.testbench_sv.contains("module add4_tb;"));
+        assert!(b.testbench_sv.contains("add4_stim.mem"));
+        // .mem contents round-trip to the in-memory vectors
+        assert_eq!(
+            vectors::parse_mem(&b.stim_mem, b.vectors.n_in).unwrap(),
+            b.vectors.stimulus
+        );
+        assert_eq!(
+            vectors::parse_mem(&b.expect_mem, b.vectors.n_out).unwrap(),
+            b.vectors.expected
+        );
+        assert_eq!(b.file_names()[0], "add4.sv");
+    }
+
+    #[test]
+    fn pipelined_unit_records_its_latency() {
+        let plan = VectorPlan { random_count: 64, ..VectorPlan::default() };
+        let b = emit_unit("rapid10", "mul", 8, 4, &plan, Oracle::Compiled).unwrap();
+        assert_eq!(b.latency, 3);
+        assert_eq!(b.module_name, "rapid10_mul8_p4");
+        assert!(b.testbench_sv.contains("localparam int LATENCY = 3;"));
+        assert!(b.module_sv.contains("rapid_fdre"));
+    }
+
+    #[test]
+    fn unknown_units_and_ops_fail_cleanly() {
+        let plan = VectorPlan::default();
+        assert!(emit_unit("rapid99", "mul", 8, 1, &plan, Oracle::Scalar).is_err());
+        assert!(emit_unit("rapid10", "sqrt", 8, 1, &plan, Oracle::Scalar).is_err());
+        // drum/booth-style registry names have no structural netlist
+        assert!(unit_netlist("drum6", "mul", 8).is_err());
+    }
+
+    #[test]
+    fn write_to_creates_all_four_files() {
+        let nl = binary_adder_netlist(2);
+        let b = emit_netlist(&nl, &VectorPlan::default(), Oracle::Scalar).unwrap();
+        let dir = std::env::temp_dir().join(format!("rapid_emit_test_{}", std::process::id()));
+        let paths = b.write_to(&dir).unwrap();
+        assert_eq!(paths.len(), 4);
+        for p in &paths {
+            assert!(p.exists(), "{p:?}");
+        }
+        let on_disk = std::fs::read_to_string(&paths[0]).unwrap();
+        assert_eq!(on_disk, b.module_sv);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

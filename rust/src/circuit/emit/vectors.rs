@@ -1,0 +1,237 @@
+//! Stimulus / expected-vector generation for the emitted testbenches.
+//!
+//! The testbench's expected outputs are produced *in Rust* and written as
+//! `$readmemh` files next to the RTL, so an HDL simulation of the emitted
+//! module checks itself against the exact same semantics the repo's own
+//! equivalence suites pin: the scalar interpreter [`Netlist::eval`] is the
+//! reference [`Oracle`], the compiled bit-parallel engine
+//! [`CompiledNetlist`] the fast one, and `rust/tests/emit_equivalence.rs`
+//! asserts the two produce bit-identical vector sets for every registry
+//! unit and for randomized `circuit::testgen` netlists. Generation is a
+//! pure function of `(netlist, plan)` — no thread-count or wall-clock
+//! dependence — so emitted artifacts are reproducible byte-for-byte.
+
+use crate::circuit::netlist::Netlist;
+use crate::circuit::sim::CompiledNetlist;
+use crate::util::XorShift256;
+
+/// How many and which vectors to generate.
+#[derive(Clone, Copy, Debug)]
+pub struct VectorPlan {
+    /// Input bit counts up to this bound sweep the *full* input space
+    /// (width-8 multipliers: 16 bits → all 65 536 pairs).
+    pub exhaustive_max_bits: u32,
+    /// Seeded-random vector count used above the exhaustive bound.
+    pub random_count: usize,
+    /// Seed of the random stimulus stream.
+    pub seed: u64,
+}
+
+impl Default for VectorPlan {
+    fn default() -> Self {
+        VectorPlan { exhaustive_max_bits: 16, random_count: 4096, seed: 0xE317 }
+    }
+}
+
+/// Which evaluation engine computes the expected outputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Oracle {
+    /// The scalar reference interpreter (`Netlist::eval`) — the default
+    /// for emitted artifacts: vectors come from the slow independent
+    /// path, and the test suite pins them against [`Oracle::Compiled`].
+    Scalar,
+    /// The compiled bit-parallel engine (64 vectors per pass).
+    Compiled,
+}
+
+/// One generated stimulus/expected pair list. Bit *i* of a stimulus word
+/// is primary input *i* (declaration order — identical to the packing of
+/// `Netlist::eval` and the emitted module's `in_bits[i]`); bit *j* of an
+/// expected word is primary output *j* (`out_bits[j]`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VectorSet {
+    /// Primary input count (≤ 128 — the stimulus word is a `u128`).
+    pub n_in: usize,
+    /// Primary output count (≤ 128).
+    pub n_out: usize,
+    /// One word per vector, input bits LSB-first.
+    pub stimulus: Vec<u128>,
+    /// One word per vector, output bits LSB-first.
+    pub expected: Vec<u128>,
+}
+
+/// Generate the stimulus list of `plan` for an `n_in`-bit input space:
+/// exhaustive when it fits the plan's bound, seeded-random otherwise.
+pub fn stimulus(n_in: usize, plan: &VectorPlan) -> Vec<u128> {
+    assert!(n_in >= 1 && n_in <= 128, "{n_in} input bits (want 1..=128)");
+    // exhaustive sweeps are hard-capped at 2^30 vectors regardless of the
+    // plan bound — beyond that the file would not fit a filesystem anyway
+    if (n_in as u32) <= plan.exhaustive_max_bits.min(30) {
+        return (0..(1u128 << n_in)).collect();
+    }
+    let mut rng = XorShift256::new(plan.seed);
+    (0..plan.random_count)
+        .map(|_| {
+            if n_in <= 64 {
+                rng.bits(n_in as u32) as u128
+            } else {
+                let lo = rng.next_u64() as u128;
+                let hi = rng.bits(n_in as u32 - 64) as u128;
+                lo | (hi << 64)
+            }
+        })
+        .collect()
+}
+
+/// Generate the full vector set for `nl` under `plan`, with expected
+/// outputs from the chosen `oracle`. Both oracles are contractually
+/// bit-identical (pinned by `rust/tests/emit_equivalence.rs`); the
+/// stimulus list never depends on the oracle.
+pub fn generate(nl: &Netlist, plan: &VectorPlan, oracle: Oracle) -> VectorSet {
+    let n_in = nl.inputs.len();
+    let n_out = nl.outputs.len();
+    assert!(n_out >= 1 && n_out <= 128, "{}: {n_out} output bits (want 1..=128)", nl.name);
+    let stim = stimulus(n_in, plan);
+    let expected = match oracle {
+        Oracle::Scalar => expected_scalar(nl, &stim),
+        Oracle::Compiled => expected_compiled(nl, &stim),
+    };
+    VectorSet { n_in, n_out, stimulus: stim, expected }
+}
+
+fn expected_scalar(nl: &Netlist, stim: &[u128]) -> Vec<u128> {
+    let n_in = nl.inputs.len();
+    let mut bits = vec![false; n_in];
+    stim.iter()
+        .map(|&v| {
+            for (i, b) in bits.iter_mut().enumerate() {
+                *b = (v >> i) & 1 == 1;
+            }
+            nl.eval_outputs(&bits)
+        })
+        .collect()
+}
+
+fn expected_compiled(nl: &Netlist, stim: &[u128]) -> Vec<u128> {
+    let n_in = nl.inputs.len();
+    let mut sim = CompiledNetlist::compile(nl);
+    let n_out = sim.n_outputs();
+    let mut out = Vec::with_capacity(stim.len());
+    let mut words = vec![0u64; n_in];
+    for chunk in stim.chunks(64) {
+        for w in words.iter_mut() {
+            *w = 0;
+        }
+        for (lane, &v) in chunk.iter().enumerate() {
+            for (i, w) in words.iter_mut().enumerate() {
+                *w |= (((v >> i) & 1) as u64) << lane;
+            }
+        }
+        let outs = sim.eval_words(&words).to_vec();
+        for lane in 0..chunk.len() {
+            let mut o = 0u128;
+            for (j, w) in outs.iter().enumerate().take(n_out) {
+                o |= (((w >> lane) & 1) as u128) << j;
+            }
+            out.push(o);
+        }
+    }
+    out
+}
+
+/// Hex digits per `$readmemh` token for a `bits`-wide word.
+fn hex_digits(bits: usize) -> usize {
+    bits.div_ceil(4)
+}
+
+/// Render one word list as a `$readmemh` file: a header comment, then one
+/// fixed-width lowercase-hex token per line, MSB-first (the orientation
+/// `$readmemh` loads into a `logic [W-1:0]` memory).
+pub fn to_mem(words: &[u128], bits: usize, header: &str) -> String {
+    let digits = hex_digits(bits);
+    let mut s = String::with_capacity(words.len() * (digits + 1) + header.len() + 8);
+    s.push_str("// ");
+    s.push_str(header);
+    s.push('\n');
+    for &w in words {
+        s.push_str(&format!("{w:0digits$x}\n"));
+    }
+    s
+}
+
+/// Parse a `$readmemh`-style file back into words: `//` comments and blank
+/// lines skipped, one hex token per remaining line. The exact inverse of
+/// [`to_mem`] on its own output (pinned by the round-trip tests); rejects
+/// tokens wider than `bits`.
+pub fn parse_mem(text: &str, bits: usize) -> Result<Vec<u128>, String> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = match raw.find("//") {
+            Some(i) => &raw[..i],
+            None => raw,
+        };
+        for tok in line.split_whitespace() {
+            let v = u128::from_str_radix(tok, 16)
+                .map_err(|e| format!("mem line {}: bad token {tok:?}: {e}", ln + 1))?;
+            if bits < 128 && v >> bits != 0 {
+                return Err(format!("mem line {}: {tok} exceeds {bits} bits", ln + 1));
+            }
+            out.push(v);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::synth::adder::binary_adder_netlist;
+
+    #[test]
+    fn exhaustive_adder_vectors_match_arithmetic() {
+        // 4-bit adder: 8 input bits → exhaustive 256 vectors; expected
+        // words must equal a+b under both oracles.
+        let nl = binary_adder_netlist(4);
+        let plan = VectorPlan::default();
+        let vs = generate(&nl, &plan, Oracle::Scalar);
+        let vc = generate(&nl, &plan, Oracle::Compiled);
+        assert_eq!(vs, vc, "scalar vs compiled oracle");
+        assert_eq!(vs.stimulus.len(), 256);
+        for (&s, &e) in vs.stimulus.iter().zip(&vs.expected) {
+            let (a, b) = (s & 0xf, (s >> 4) & 0xf);
+            assert_eq!(e, a + b, "{a}+{b}");
+        }
+    }
+
+    #[test]
+    fn random_vectors_are_seed_deterministic_and_in_range() {
+        let nl = binary_adder_netlist(16); // 32 input bits → random mode
+        let plan = VectorPlan { exhaustive_max_bits: 16, random_count: 300, seed: 42 };
+        let a = generate(&nl, &plan, Oracle::Compiled);
+        let b = generate(&nl, &plan, Oracle::Compiled);
+        assert_eq!(a, b, "same plan must regenerate identically");
+        assert_eq!(a.stimulus.len(), 300);
+        for &s in &a.stimulus {
+            assert_eq!(s >> 32, 0, "stimulus exceeds the 32-bit input space");
+        }
+        let other = generate(
+            &nl,
+            &VectorPlan { seed: 43, ..plan },
+            Oracle::Compiled,
+        );
+        assert_ne!(a.stimulus, other.stimulus, "seed must matter");
+    }
+
+    #[test]
+    fn mem_roundtrip_exact() {
+        let words = vec![0u128, 1, 0xdead_beef, (1u128 << 77) | 5];
+        let text = to_mem(&words, 80, "test vectors");
+        for line in text.lines().skip(1) {
+            assert_eq!(line.len(), 20, "fixed-width tokens: {line:?}");
+        }
+        assert_eq!(parse_mem(&text, 80).unwrap(), words);
+        assert!(parse_mem("zz\n", 8).is_err());
+        assert!(parse_mem("1ff\n", 8).is_err(), "overflow token must be rejected");
+        assert!(parse_mem("// only comments\n\n", 8).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,319 @@
+//! Netlist → synthesizable SystemVerilog lowering.
+//!
+//! One `Netlist` becomes one module instantiating the three behavioral
+//! primitive equivalents of `circuit/primitive.rs`:
+//!
+//! * `rapid_lut`   — K-input LUT as a 64-bit `INIT` truth-table lookup,
+//!   bit *i* of the index being input *i* (the scalar evaluator's exact
+//!   orientation; unused high index bits tied to zero at the call site);
+//! * `rapid_carry` — one CARRY4 bit: `o = s ^ ci` (XORCY),
+//!   `co = s ? ci : di` (MUXCY);
+//! * `rapid_fdre`  — posedge D flip-flop (FDRE with CE/R tied active).
+//!
+//! The port contract is deliberately flat and latency-sensitive, like the
+//! Calyx `static<N>` pipelined primitives: `clk`, `in_bits[n_in-1:0]`
+//! (primary inputs in declaration order, bit *i* = input *i*),
+//! `out_bits[n_out-1:0]`. A pipelined netlist (FDREs from
+//! `circuit::pipeline` cuts) streams one result per clock after a fixed
+//! register latency; a combinational netlist ignores `clk`.
+//!
+//! The emitted text is line-regular on purpose: `emit::reparse` parses it
+//! back into a `Netlist` for the round-trip differential check, so every
+//! construct here has exactly one grammar production there.
+
+use super::ident::{is_legal_ident, sanitize_ident};
+use crate::circuit::netlist::Netlist;
+use crate::circuit::primitive::Cell;
+
+/// Behavioral primitive library prepended to every emitted file. The
+/// truth-table/carry semantics mirror `circuit/primitive.rs` exactly —
+/// that equivalence is what the generated self-checking testbenches pin.
+pub const PRIMITIVES_SV: &str = "\
+// --- behavioral Virtex-7-class primitives (circuit/primitive.rs) -------------
+// rapid_lut:   K-input LUT (K <= 6); INIT bit i of the index is input i.
+// rapid_carry: one CARRY4 bit — XORCY sum, MUXCY carry.
+// rapid_fdre:  pipeline register (FDRE with CE=1, R=0).
+
+module rapid_lut #(
+  parameter int K = 6,
+  parameter logic [63:0] INIT = 64'h0
+) (
+  input  logic [5:0] i,
+  output logic       o
+);
+  assign o = INIT[i];
+endmodule
+
+module rapid_carry (
+  input  logic s,
+  input  logic di,
+  input  logic ci,
+  output logic o,
+  output logic co
+);
+  assign o  = s ^ ci;
+  assign co = s ? ci : di;
+endmodule
+
+module rapid_fdre (
+  input  logic clk,
+  input  logic d,
+  output logic q
+);
+  always_ff @(posedge clk) q <= d;
+endmodule
+";
+
+/// Mask a LUT truth table down to its 2^k meaningful bits (the scalar
+/// evaluator never reads beyond them; `INIT` must not carry the junk).
+fn masked_table(table: u64, k: usize) -> u64 {
+    if k >= 6 {
+        table
+    } else {
+        table & ((1u64 << (1usize << k)) - 1)
+    }
+}
+
+/// Lower `nl` into one synthesizable SystemVerilog module named
+/// `sanitize_ident(nl.name)`. `latency` is recorded in the header comment
+/// (computed by the caller via `circuit::pipeline::reg_depth`).
+///
+/// Fails (rather than emitting illegal or ambiguous RTL) when the netlist
+/// has no inputs or outputs, drives a net twice, or a cell references a
+/// net outside the allocated range.
+pub fn emit_module(nl: &Netlist, latency: usize) -> Result<String, String> {
+    let name = sanitize_ident(&nl.name);
+    debug_assert!(is_legal_ident(&name));
+    let n_in = nl.inputs.len();
+    let n_out = nl.outputs.len();
+    if n_in == 0 {
+        return Err(format!("{}: cannot emit a module with no primary inputs", nl.name));
+    }
+    if n_out == 0 {
+        return Err(format!("{}: cannot emit a module with no primary outputs", nl.name));
+    }
+    let n_nets = nl.n_nets as usize;
+    let in_range = |net: u32, what: &str| -> Result<(), String> {
+        if (net as usize) < n_nets {
+            Ok(())
+        } else {
+            Err(format!("{}: {what} references net n{net} >= n_nets {n_nets}", nl.name))
+        }
+    };
+
+    // Single-driver check + undriven-net census. The evaluators treat an
+    // undriven net as constant-false; four-state SV would float it to 'z',
+    // so every referenced-but-undriven net gets an explicit 0 tie below.
+    let mut driven = vec![false; n_nets];
+    let mut referenced = vec![false; n_nets];
+    let drive = |net: u32, what: &str, driven: &mut Vec<bool>| -> Result<(), String> {
+        let i = net as usize;
+        if driven[i] {
+            return Err(format!("{}: net n{net} driven twice (at {what})", nl.name));
+        }
+        driven[i] = true;
+        Ok(())
+    };
+    for n in &nl.inputs {
+        in_range(*n, "input list")?;
+        drive(*n, "input list", &mut driven)?;
+    }
+    for (n, _) in &nl.consts {
+        in_range(*n, "const list")?;
+        drive(*n, "const list", &mut driven)?;
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        match cell {
+            Cell::Lut { ins, out, .. } => {
+                if ins.len() > 6 {
+                    return Err(format!("{}: cell {ci} is a {}-input LUT", nl.name, ins.len()));
+                }
+                for n in ins {
+                    in_range(*n, "LUT input")?;
+                    referenced[*n as usize] = true;
+                }
+                in_range(*out, "LUT output")?;
+                drive(*out, &format!("cell {ci}"), &mut driven)?;
+            }
+            Cell::CarryBit { s, di, ci: cin, o, co } => {
+                for n in [*s, *di, *cin] {
+                    in_range(n, "carry input")?;
+                    referenced[n as usize] = true;
+                }
+                in_range(*o, "carry sum")?;
+                in_range(*co, "carry out")?;
+                drive(*o, &format!("cell {ci}"), &mut driven)?;
+                drive(*co, &format!("cell {ci}"), &mut driven)?;
+            }
+            Cell::Ff { d, q } => {
+                in_range(*d, "FF d")?;
+                referenced[*d as usize] = true;
+                in_range(*q, "FF q")?;
+                drive(*q, &format!("cell {ci}"), &mut driven)?;
+            }
+        }
+    }
+    for n in &nl.outputs {
+        in_range(*n, "output list")?;
+        referenced[*n as usize] = true;
+    }
+
+    let mut s = String::with_capacity(64 * n_nets + 2048);
+    s.push_str(&format!("// {} — generated by `rapid emit`; do not edit.\n", nl.name));
+    s.push_str(&format!(
+        "// luts={} carry_bits={} ffs={} nets={} latency={}\n",
+        nl.count_luts(),
+        nl.count_carry_bits(),
+        nl.count_ffs(),
+        n_nets,
+        latency
+    ));
+    s.push_str(&format!("module {name} (\n"));
+    s.push_str("  input  logic clk,\n");
+    s.push_str(&format!("  input  logic [{}:0] in_bits,\n", n_in - 1));
+    s.push_str(&format!("  output logic [{}:0] out_bits\n", n_out - 1));
+    s.push_str(");\n");
+
+    // one wire per allocated net — regular, and the reparse grammar's
+    // source of n_nets
+    for id in 0..n_nets {
+        s.push_str(&format!("  logic n{id};\n"));
+    }
+
+    for (k, n) in nl.inputs.iter().enumerate() {
+        s.push_str(&format!("  assign n{n} = in_bits[{k}];\n"));
+    }
+    for (n, v) in &nl.consts {
+        s.push_str(&format!("  assign n{n} = 1'b{};\n", u8::from(*v)));
+    }
+    // evaluator semantics for undriven nets: constant false
+    for id in 0..n_nets {
+        if referenced[id] && !driven[id] {
+            s.push_str(&format!("  assign n{id} = 1'b0;\n"));
+        }
+    }
+
+    for (gi, cell) in nl.cells.iter().enumerate() {
+        match cell {
+            Cell::Lut { ins, table, out } => {
+                let k = ins.len();
+                // index concat is MSB-first: optional zero pad, then
+                // ins[k-1] … ins[0] so i[j] = ins[j]
+                let mut parts: Vec<String> = Vec::with_capacity(k + 1);
+                if k < 6 {
+                    parts.push(format!("{}'b0", 6 - k));
+                }
+                for n in ins.iter().rev() {
+                    parts.push(format!("n{n}"));
+                }
+                s.push_str(&format!(
+                    "  rapid_lut #(.K({k}), .INIT(64'h{:016x})) g{gi} (.i({{{}}}), .o(n{out}));\n",
+                    masked_table(*table, k),
+                    parts.join(", ")
+                ));
+            }
+            Cell::CarryBit { s: cs, di, ci, o, co } => {
+                s.push_str(&format!(
+                    "  rapid_carry g{gi} (.s(n{cs}), .di(n{di}), .ci(n{ci}), .o(n{o}), .co(n{co}));\n"
+                ));
+            }
+            Cell::Ff { d, q } => {
+                s.push_str(&format!("  rapid_fdre g{gi} (.clk(clk), .d(n{d}), .q(n{q}));\n"));
+            }
+        }
+    }
+
+    for (j, n) in nl.outputs.iter().enumerate() {
+        s.push_str(&format!("  assign out_bits[{j}] = n{n};\n"));
+    }
+    s.push_str("endmodule\n");
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::synth::adder::binary_adder_netlist;
+
+    #[test]
+    fn adder_module_shape() {
+        let nl = binary_adder_netlist(4);
+        let sv = emit_module(&nl, 0).unwrap();
+        assert!(sv.contains("module add4 ("), "{sv}");
+        assert!(sv.contains("input  logic [7:0] in_bits"));
+        assert!(sv.contains("output logic [4:0] out_bits"));
+        assert!(sv.contains("rapid_carry"));
+        assert!(sv.contains("rapid_lut"));
+        assert!(sv.ends_with("endmodule\n"));
+        // every emitted line is one grammar production: decl, assign,
+        // instance, or the module frame
+        for line in sv.lines() {
+            let t = line.trim_start();
+            assert!(
+                t.starts_with("//")
+                    || t.starts_with("module ")
+                    || t.starts_with("input ")
+                    || t.starts_with("output ")
+                    || t.starts_with("logic n")
+                    || t.starts_with("assign ")
+                    || t.starts_with("rapid_lut")
+                    || t.starts_with("rapid_carry")
+                    || t.starts_with("rapid_fdre")
+                    || t == ");"
+                    || t == "endmodule",
+                "unexpected line {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn lut_tables_are_masked_and_padded() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        let b = nl.input();
+        // junk above the 4 meaningful bits must not reach INIT
+        let out = nl.lut(vec![a, b], 0b1000 | 0xdead_0000);
+        nl.set_outputs(&[out]);
+        let sv = emit_module(&nl, 0).unwrap();
+        assert!(sv.contains(".INIT(64'h0000000000000008)"), "{sv}");
+        assert!(sv.contains(".i({4'b0, n1, n0})"), "{sv}");
+    }
+
+    #[test]
+    fn illegal_netlists_are_rejected() {
+        let mut no_out = Netlist::new("no_out");
+        let _ = no_out.input();
+        assert!(emit_module(&no_out, 0).unwrap_err().contains("no primary outputs"));
+
+        let mut no_in = Netlist::new("no_in");
+        let c = no_in.constant(true);
+        no_in.set_outputs(&[c]);
+        assert!(emit_module(&no_in, 0).unwrap_err().contains("no primary inputs"));
+
+        let mut dup = Netlist::new("dup");
+        let a = dup.input();
+        let o = dup.lut(vec![a], 0b01);
+        dup.cells.push(Cell::Lut { ins: vec![a], table: 0b10, out: o });
+        dup.set_outputs(&[o]);
+        assert!(emit_module(&dup, 0).unwrap_err().contains("driven twice"));
+
+        let mut oob = Netlist::new("oob");
+        let a = oob.input();
+        let o = oob.lut(vec![a], 0b10);
+        oob.cells.push(Cell::Ff { d: 99, q: o + 1 });
+        oob.n_nets += 1; // q in range, d not
+        oob.set_outputs(&[o]);
+        assert!(emit_module(&oob, 0).unwrap_err().contains("n99"));
+    }
+
+    #[test]
+    fn undriven_referenced_nets_are_tied_low() {
+        let mut nl = Netlist::new("tie");
+        let a = nl.input();
+        let ghost = nl.net(); // never driven — eval treats it as false
+        let o = nl.lut(vec![a, ghost], 0b0010);
+        nl.set_outputs(&[o]);
+        let sv = emit_module(&nl, 0).unwrap();
+        assert!(sv.contains(&format!("assign n{ghost} = 1'b0;")), "{sv}");
+    }
+}

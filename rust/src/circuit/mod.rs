@@ -13,6 +13,8 @@ pub mod pipeline;
 pub mod synth;
 pub mod report;
 pub mod cli;
+pub mod emit;
+pub mod testgen;
 
 pub use netlist::Netlist;
 pub use primitive::Net;

@@ -32,6 +32,42 @@ impl Pipelined {
         self.stage_delays.iter().fold(0.0f64, |a, &b| a.max(b)) + d.ff_overhead
     }
 
+    /// Uniform register latency of the cut: every input→output path
+    /// crosses `stages − 1` FFs, so a streaming consumer sees one result
+    /// per clock delayed by exactly this many cycles.
+    pub fn latency_cycles(&self) -> usize {
+        self.stages - 1
+    }
+
+    /// Verify the stage cut against the combinational `original`, in
+    /// release builds too. Two independent checks:
+    ///
+    /// 1. **structural** — [`reg_depth`] proves every input→output path
+    ///    crosses exactly `stages − 1` registers (the streaming-latency
+    ///    contract the emitted testbenches rely on);
+    /// 2. **functional** — batched random equivalence on the compiled
+    ///    bit-parallel engine ([`equivalent_random`][1], `passes` × 64
+    ///    vectors), ignoring FFs, against the original.
+    ///
+    /// `pipeline()` runs this automatically in debug builds; the RTL
+    /// emitter calls it unconditionally before writing staged output.
+    ///
+    /// [1]: super::sim::equivalent_random
+    pub fn verify(&self, original: &Netlist, passes: usize, seed: u64) -> Result<(), String> {
+        let depth = reg_depth(&self.netlist)
+            .map_err(|e| format!("{}: ragged cut: {e}", self.netlist.name))?;
+        if depth != self.latency_cycles() {
+            return Err(format!(
+                "{}: register depth {depth}, want {} for {} stages",
+                self.netlist.name,
+                self.latency_cycles(),
+                self.stages
+            ));
+        }
+        super::sim::equivalent_random(original, &self.netlist, passes, seed)
+            .map_err(|e| format!("pipeline({}) broke {}: {e}", self.stages, original.name))
+    }
+
     /// End-to-end latency of one datum = stages × clock (registered output).
     pub fn latency_ns(&self, d: &Delays) -> f64 {
         self.stages as f64 * self.clock_ns(d)
@@ -140,14 +176,6 @@ pub fn pipeline(nl: &Netlist, stages: usize, d: &Delays) -> Pipelined {
         .collect();
     out.set_outputs(&outputs);
 
-    // Debug self-check: every stage cut must leave the netlist
-    // combinationally equivalent to the original — verified on the
-    // compiled bit-parallel engine, 64 random vectors per pass.
-    #[cfg(debug_assertions)]
-    if let Err(e) = super::sim::equivalent_random(nl, &out, 4, 0xBA1A + stages as u64) {
-        panic!("pipeline({stages}) broke {}: {e}", nl.name);
-    }
-
     // Per-stage delays: restart timing at FFs and histogram by the
     // assigned stage of each cell.
     let t2 = arrival_times_opts(&out, d, false);
@@ -161,7 +189,75 @@ pub fn pipeline(nl: &Netlist, stages: usize, d: &Delays) -> Pipelined {
         let st = src.get(&net).copied().unwrap_or(0).min(stages - 1);
         stage_delays[st] = stage_delays[st].max(t2[net as usize]);
     }
-    Pipelined { netlist: out, stages, stage_delays, ffs_inserted }
+    let p = Pipelined { netlist: out, stages, stage_delays, ffs_inserted };
+    // Debug self-check: depth uniformity + combinational equivalence. The
+    // emitter repeats this in release builds before writing staged RTL.
+    #[cfg(debug_assertions)]
+    if let Err(e) = p.verify(nl, 4, 0xBA1A + stages as u64) {
+        panic!("pipeline self-check: {e}");
+    }
+    p
+}
+
+/// The uniform register depth of `nl`: the FF count on every input→output
+/// path, or an error when two paths disagree (a "ragged" cut — poison for
+/// a streaming pipeline, where all of a result's bits must emerge on the
+/// same cycle).
+///
+/// Constant cones are wildcards: a net fed only by constants is valid at
+/// any depth (it holds the same value every cycle after reset, so it can
+/// join a path of any latency). Undriven nets — constant false in every
+/// evaluator — are wildcards for the same reason. A netlist whose outputs
+/// are all constant has depth 0 by convention.
+pub fn reg_depth(nl: &Netlist) -> Result<usize, String> {
+    // None = wildcard (constant cone); Some(d) = d FFs from the inputs.
+    let mut depth: Vec<Option<usize>> = vec![None; nl.n_nets as usize];
+    for n in &nl.inputs {
+        depth[*n as usize] = Some(0);
+    }
+    for (i, cell) in nl.cells.iter().enumerate() {
+        match cell {
+            Cell::Lut { ins, out, .. } => {
+                let d = merge_depths(&depth, ins, || format!("LUT #{i}"))?;
+                depth[*out as usize] = d;
+            }
+            Cell::CarryBit { s, di, ci, o, co } => {
+                let d = merge_depths(&depth, &[*s, *di, *ci], || format!("carry #{i}"))?;
+                depth[*o as usize] = d;
+                depth[*co as usize] = d;
+            }
+            Cell::Ff { d, q } => {
+                depth[*q as usize] = depth_at(&depth, *d).map(|x| x + 1);
+            }
+        }
+    }
+    Ok(merge_depths(&depth, &nl.outputs, || "outputs".to_string())?.unwrap_or(0))
+}
+
+/// Merge the depths of several nets: wildcards (`None`) defer, concrete
+/// depths must all agree.
+fn merge_depths(
+    depth: &[Option<usize>],
+    nets: &[Net],
+    who: impl Fn() -> String,
+) -> Result<Option<usize>, String> {
+    let mut acc: Option<usize> = None;
+    for n in nets {
+        match (acc, depth_at(depth, *n)) {
+            (_, None) => {}
+            (None, d) => acc = d,
+            (Some(a), Some(b)) if a != b => {
+                return Err(format!("{} mixes depths {a} and {b}", who()));
+            }
+            _ => {}
+        }
+    }
+    Ok(acc)
+}
+
+/// Depth of one net, treating out-of-range ids as undriven (wildcard).
+fn depth_at(depth: &[Option<usize>], n: Net) -> Option<usize> {
+    depth.get(n as usize).copied().flatten()
 }
 
 impl Netlist {
@@ -242,5 +338,79 @@ mod tests {
         // an adder is carry-dominated; the cut should still leave both
         // stages nonempty within 4x of each other
         assert!(min * 8.0 >= max || min == 0.0, "stages {:?}", p.stage_delays);
+    }
+
+    #[test]
+    fn verify_accepts_every_honest_cut() {
+        let nl = binary_adder_netlist(12);
+        let d = Delays::default();
+        for stages in [1usize, 2, 3, 5] {
+            let p = pipeline(&nl, stages, &d);
+            assert_eq!(reg_depth(&p.netlist).unwrap(), stages - 1, "stages={stages}");
+            assert_eq!(p.latency_cycles(), stages - 1);
+            p.verify(&nl, 4, 7).unwrap_or_else(|e| panic!("stages={stages}: {e}"));
+        }
+    }
+
+    #[test]
+    fn verify_catches_a_corrupted_cut() {
+        let nl = binary_adder_netlist(8);
+        let d = Delays::default();
+        let p = pipeline(&nl, 3, &d);
+
+        // Dropping a register (FF → identity LUT) makes one path shallower
+        // than the rest: the structural depth check must flag it.
+        let mut dropped = p.clone();
+        let at = dropped
+            .netlist
+            .cells
+            .iter()
+            .position(|c| matches!(c, Cell::Ff { .. }))
+            .expect("3-stage cut has FFs");
+        if let Cell::Ff { d: din, q } = dropped.netlist.cells[at].clone() {
+            dropped.netlist.cells[at] = Cell::Lut { ins: vec![din], table: 0b10, out: q };
+        }
+        let e = dropped.verify(&nl, 4, 7).unwrap_err();
+        assert!(e.contains("depth") || e.contains("ragged"), "{e}");
+
+        // Flipping one truth-table bit keeps the depth uniform but breaks
+        // the function: the equivalence check must flag it.
+        let mut flipped = p.clone();
+        let at = flipped
+            .netlist
+            .cells
+            .iter()
+            .position(|c| matches!(c, Cell::Lut { .. }))
+            .expect("adder has LUTs");
+        if let Cell::Lut { table, .. } = &mut flipped.netlist.cells[at] {
+            *table ^= 1;
+        }
+        assert!(flipped.verify(&nl, 4, 7).is_err(), "flipped LUT must not verify");
+    }
+
+    #[test]
+    fn reg_depth_edge_cases() {
+        // Combinational netlist: depth 0.
+        let nl = binary_adder_netlist(4);
+        assert_eq!(reg_depth(&nl).unwrap(), 0);
+
+        // Constant cones are wildcards: a registered path plus an
+        // unregistered constant-driven output still has a well-defined
+        // depth (the constant joins any latency).
+        let mut nl = Netlist::new("wildcard");
+        let a = nl.input_bus(1);
+        let q = nl.ff(a[0]);
+        let k = nl.constant(true);
+        nl.set_outputs(&[q, k]);
+        assert_eq!(reg_depth(&nl).unwrap(), 1);
+
+        // A genuinely ragged netlist — one output registered, one not —
+        // must be rejected.
+        let mut nl = Netlist::new("ragged");
+        let a = nl.input_bus(2);
+        let q = nl.ff(a[0]);
+        nl.set_outputs(&[q, a[1]]);
+        let e = reg_depth(&nl).unwrap_err();
+        assert!(e.contains("mixes depths"), "{e}");
     }
 }

@@ -5,6 +5,9 @@
 //!   build-time Python layer (`make artifacts` runs this).
 //! * `characterize`  — ARE/PRE/bias of a unit (Table III accuracy columns).
 //! * `synth`         — netlist resources/timing/power of a unit (Table III).
+//! * `emit`          — lower a unit's netlist to synthesizable SystemVerilog
+//!   with a self-checking testbench (`rapid emit --unit rapid10 --op mul
+//!   --width 16 --stages 4 --out rtl/`).
 //! * `app`           — run an end-to-end application with chosen arithmetic.
 //! * `explore`       — Pareto design-space exploration + QoR budget queries
 //!   (`rapid explore --app jpeg --qor "psnr>=30"`).
@@ -24,6 +27,7 @@ fn main() {
         "export-scheme" => cmd_export_scheme(argv),
         "characterize" => cmd_characterize(argv),
         "synth" => rapid::circuit::cli::run(argv),
+        "emit" => rapid::circuit::emit::cli::run(argv),
         "app" => rapid::apps::cli::run(argv),
         "explore" => rapid::explore::cli::run(argv),
         "serve" => {
@@ -57,6 +61,10 @@ fn usage() {
                                                 ARE/PRE/bias of one unit\n\
            synth         --unit NAME --width N [--div] [--stages S]\n\
                                                 LUT/FF/latency/power of one unit\n\
+           emit          --unit NAME --op {{mul|div}} --width N [--stages S]\n\
+                         [--out DIR] [--vectors V] [--seed S] [--compiled-oracle]\n\
+                                                SystemVerilog RTL + self-checking\n\
+                                                testbench + $readmemh vector files\n\
            app           --name {{pantompkins|jpeg|harris}} --mul NAME --div NAME\n\
                                                 end-to-end application run + QoR\n\
            explore       [--op {{mul|div}} --width N | --app {{jpeg|ecg|harris}}]\n\

@@ -1,0 +1,75 @@
+//! Golden-file snapshots of the emitted RTL for the Table III trio —
+//! rapid10 16×16 multiplier, rapid9 16/8 divider, and the exact
+//! multiplier IP. The committed `.sv` files pin the emitter's exact
+//! output bytes, so an unintentional change to the grammar, primitive
+//! library, name sanitization or instance ordering shows up as a diff.
+//!
+//! Blessing protocol (mirrors the repo's `BENCH_*.json` convention):
+//! files starting with the `// PENDING` marker are placeholders awaiting
+//! their first toolchain-equipped run. For those, the test verifies the
+//! emitter is self-consistent (two emits are byte-identical, and the
+//! output round-trips through `emit::reparse`) and reminds how to bless;
+//! once blessed, the test is a strict byte comparison. Regenerate with:
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test --test emit_golden
+//! ```
+
+use std::path::PathBuf;
+
+use rapid::circuit::emit::module_file;
+use rapid::circuit::emit::reparse::reparse_module;
+use rapid::circuit::sim::equivalent_random;
+use rapid::circuit::synth::{netlist_for_div, netlist_for_mul};
+use rapid::circuit::Netlist;
+
+const PENDING: &str = "// PENDING";
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn check_golden(file: &str, nl: &Netlist) {
+    let (sv, _latency) = module_file(nl).unwrap_or_else(|e| panic!("{file}: {e}"));
+    let path = golden_dir().join(file);
+    if std::env::var_os("UPDATE_GOLDEN").is_some() {
+        std::fs::write(&path, &sv).unwrap_or_else(|e| panic!("bless {path:?}: {e}"));
+        eprintln!("blessed {} ({} bytes)", path.display(), sv.len());
+        return;
+    }
+    let golden = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden {path:?}: {e}"));
+    if golden.starts_with(PENDING) {
+        // Placeholder: the snapshot has not been blessed yet. Verify what
+        // can be verified without it — determinism and the round-trip —
+        // so the pending state still tests the emitter end to end.
+        let (again, _) = module_file(nl).unwrap();
+        assert_eq!(sv, again, "{file}: emitter not deterministic");
+        let back = reparse_module(&sv).unwrap_or_else(|e| panic!("{file}: {e}"));
+        equivalent_random(nl, &back, 4, 0x601d).unwrap_or_else(|e| panic!("{file}: {e}"));
+        eprintln!(
+            "golden {file} is pending — bless with UPDATE_GOLDEN=1 cargo test --test emit_golden"
+        );
+        return;
+    }
+    assert_eq!(
+        golden, sv,
+        "{file}: emitted RTL drifted from the blessed snapshot \
+         (intentional? re-bless with UPDATE_GOLDEN=1 cargo test --test emit_golden)"
+    );
+}
+
+#[test]
+fn golden_rapid10_mul16() {
+    check_golden("rapid10_mul16.sv", &netlist_for_mul("rapid10", 16).unwrap());
+}
+
+#[test]
+fn golden_rapid9_div8() {
+    check_golden("rapid9_div8.sv", &netlist_for_div("rapid9", 8).unwrap());
+}
+
+#[test]
+fn golden_exact_mul16() {
+    check_golden("exact_mul16.sv", &netlist_for_mul("exact", 16).unwrap());
+}

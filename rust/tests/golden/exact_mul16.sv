@@ -1,0 +1,5 @@
+// PENDING: golden snapshot of the emitted RTL for exact_mul16, awaiting its first
+// toolchain-equipped run. While this marker is present, emit_golden.rs
+// verifies emitter determinism and the reparse round-trip instead of a
+// byte comparison. Bless with:
+//   UPDATE_GOLDEN=1 cargo test --test emit_golden
