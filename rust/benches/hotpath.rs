@@ -6,13 +6,16 @@
 //! parallel rows form the optimization ladder EXPERIMENTS.md §Perf
 //! tracks; everything is recorded to `BENCH_hotpath.json`.
 
+use rapid::arith::mitchell::{
+    mitchell_mul_batch_core, mitchell_mul_batch_core_scalar, mitchell_mul_core,
+};
 use rapid::arith::registry::{make_div, make_mul};
 use rapid::bench_support::record::Recorder;
 use rapid::bench_support::table::Table;
 use rapid::circuit::netlist::Netlist;
 use rapid::circuit::power;
 use rapid::circuit::primitive::Energies;
-use rapid::circuit::sim::{pair_chunk, CompiledNetlist};
+use rapid::circuit::sim::{pair_chunk, BlockSim, CompiledNetlist};
 use rapid::circuit::synth::multiplier::rapid_mul_netlist;
 use rapid::error::{characterize_mul, CharacterizeOpts};
 use rapid::util::par;
@@ -127,6 +130,71 @@ fn main() {
     });
     t.row(&["exhaustive 8-bit netlist sweep (compiled)".into(), fmt_ns(r.median_ns), format!("{:.1} Mvecs/s", 65536.0 / (r.median_ns * 1e-9) / 1e6)]);
     rec.add("netlist_sweep_8bit_compiled", &r, 65536.0);
+
+    // 4c. the six-rung raw-speed ladder (EXPERIMENTS.md §Perf): one
+    //     workload — a width-16 Mitchell-core multiply — climbed from a
+    //     scalar call loop to sub-word SIMD packing, and one netlist —
+    //     the 16-bit RAPID multiplier — climbed from 64-lane words to
+    //     512-lane blocks. All six rungs are contractually bit-identical;
+    //     only the vectors-per-pass shape changes.
+    let lops: Vec<(u64, u64)> = (0..4096).map(|_| (rng.bits(16), rng.bits(16))).collect();
+    let la: Vec<u64> = lops.iter().map(|&(a, _)| a).collect();
+    let lb: Vec<u64> = lops.iter().map(|&(_, b)| b).collect();
+    let mut lout = vec![0u64; la.len()];
+    let r = bench("ladder-mul16-scalar", || {
+        let mut acc = 0u64;
+        for &(a, b) in &lops {
+            acc = acc.wrapping_add(mitchell_mul_core(16, a, b, |_, _| 0));
+        }
+        black_box(acc);
+    });
+    t.row(&["ladder: mul16 core (scalar)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    rec.add("ladder_mul16_scalar", &r, 4096.0);
+    let r = bench("ladder-mul16-batched", || {
+        mitchell_mul_batch_core_scalar(16, &la, &lb, &mut lout, |_, _| 0);
+        black_box(lout[4095]);
+    });
+    t.row(&["ladder: mul16 core (batched)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    rec.add("ladder_mul16_batched", &r, 4096.0);
+    let r = bench("ladder-mul16-packed", || {
+        mitchell_mul_batch_core(16, &la, &lb, &mut lout, |_, _| 0);
+        black_box(lout[4095]);
+    });
+    t.row(&["ladder: mul16 core (packed 2/word)".into(), fmt_ns(r.median_ns / 4096.0), format!("{:.1} Mops/s", r.throughput(4096.0) / 1e6)]);
+    rec.add("ladder_mul16_packed", &r, 4096.0);
+
+    //     gate-level rungs: the same compiled program at the three block
+    //     widths (per-vector numbers — wider blocks amortize the op loop)
+    let words1: Vec<[u64; 1]> = (0..sim.n_inputs()).map(|_| [rng.next_u64()]).collect();
+    let r = bench("ladder-gate-eval-64", || {
+        black_box(sim.eval_blocks(&words1)[0][0]);
+    });
+    t.row(&["ladder: gate eval (compiled, 64 lanes)".into(), fmt_ns(r.median_ns / 64.0), format!("{:.2} Mevals/s", 64.0 / (r.median_ns * 1e-9) / 1e6)]);
+    rec.add("ladder_gate_eval_64", &r, 64.0);
+    let mut sim256 = BlockSim::<4>::compile(&nl);
+    let blocks4: Vec<[u64; 4]> = (0..sim256.n_inputs())
+        .map(|_| [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()])
+        .collect();
+    let r = bench("ladder-gate-eval-256", || {
+        black_box(sim256.eval_blocks(&blocks4)[0][0]);
+    });
+    t.row(&["ladder: gate eval (compiled, 256 lanes)".into(), fmt_ns(r.median_ns / 256.0), format!("{:.2} Mevals/s", 256.0 / (r.median_ns * 1e-9) / 1e6)]);
+    rec.add("ladder_gate_eval_256", &r, 256.0);
+    let mut sim512 = BlockSim::<8>::compile(&nl);
+    let blocks8: Vec<[u64; 8]> = (0..sim512.n_inputs())
+        .map(|_| {
+            let mut blk = [0u64; 8];
+            for w in blk.iter_mut() {
+                *w = rng.next_u64();
+            }
+            blk
+        })
+        .collect();
+    let r = bench("ladder-gate-eval-512", || {
+        black_box(sim512.eval_blocks(&blocks8)[0][0]);
+    });
+    t.row(&["ladder: gate eval (compiled, 512 lanes)".into(), fmt_ns(r.median_ns / 512.0), format!("{:.2} Mevals/s", 512.0 / (r.median_ns * 1e-9) / 1e6)]);
+    rec.add("ladder_gate_eval_512", &r, 512.0);
 
     // 5. the serial → parallel rung of the ladder (util::par): the same
     //    deterministic sweeps at 1 worker vs RAPID_THREADS/all cores.

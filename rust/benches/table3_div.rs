@@ -5,13 +5,15 @@
 //! a same-size multiplier, and pipelining multiplies throughput per Watt.
 
 use rapid::arith::registry::make_div;
+use rapid::arith::DivUnit;
 use rapid::bench_support::paper;
 use rapid::bench_support::POWER_VECTORS;
 use rapid::bench_support::table::{f2, Table};
 use rapid::circuit::report::{characterize, UnitReport};
-use rapid::circuit::sim::{pair_chunk, CompiledNetlist};
+use rapid::circuit::sim::{self, pair_lanes, BlockSim, MAX_BLOCK_LANES};
 use rapid::circuit::synth::divider::rapid_div_netlist;
 use rapid::circuit::synth::exact_ip::exact_div_netlist;
+use rapid::circuit::Netlist;
 use rapid::error::{characterize_div, CharacterizeOpts};
 use rapid::util::par;
 
@@ -102,36 +104,55 @@ fn main() {
 
     // gate-level exhaustive equivalence on the compiled bit-parallel
     // engine: the 16/8 RAPID-9 netlist against its functional model over
-    // the FULL 2^24 pair space (262 144 packed passes), sharded across
-    // cores by the deterministic parallel engine (1 024-pass chunks, one
-    // compiled engine per worker, per-chunk mismatch counts merged in
-    // chunk order) — a sweep the scalar interpreter made impractical and
-    // a single core made slow. Honors RAPID_THREADS.
+    // the FULL 2^24 pair space, sharded across cores by the deterministic
+    // parallel engine (1 024-chunk tasks in 64-pair chunks, one compiled
+    // engine per worker, per-chunk mismatch counts merged in chunk
+    // order) — a sweep the scalar interpreter made impractical and a
+    // single core made slow. Honors RAPID_THREADS and RAPID_BLOCK: the
+    // task decomposition is defined in pairs, so the mismatch count is
+    // bit-identical at every thread count and block width; the block
+    // width only sets how many lanes ride one eval_lanes call.
     let nl = rapid_div_netlist(8, 9);
     let model = make_div("rapid9", 8).unwrap();
-    let mismatches: u64 = par::par_chunks_init(
+    let mismatches: u64 = match sim::default_block() {
+        1 => exhaustive_div16_8_sweep::<1>(&nl, &model),
+        4 => exhaustive_div16_8_sweep::<4>(&nl, &model),
+        _ => exhaustive_div16_8_sweep::<8>(&nl, &model),
+    };
+    println!(
+        "gate-level exhaustive check (compiled sim, rapid9 div16/8, {} threads, block {}x64): {} pairs swept, {mismatches} model mismatches",
+        par::threads(),
+        sim::default_block(),
+        1u64 << 24
+    );
+}
+
+/// The 2^24-pair footer sweep at block width `N` (64·N lanes per
+/// `eval_lanes` pass).
+fn exhaustive_div16_8_sweep<const N: usize>(nl: &Netlist, model: &DivUnit) -> u64 {
+    par::par_chunks_init(
         1u64 << 18,
         1024,
-        || CompiledNetlist::compile(&nl),
+        || BlockSim::<N>::compile(nl),
         |sim, _c, range| {
             let mut bad = 0u64;
-            for chunk in range {
-                let (a, b) = pair_chunk(chunk, 16);
-                let q = sim.eval_lanes(&[16, 8], &[&a, &b]);
-                for lane in 0..64 {
+            let (mut a, mut b) = ([0u64; MAX_BLOCK_LANES], [0u64; MAX_BLOCK_LANES]);
+            let mut chunk = range.start;
+            while chunk < range.end {
+                let take = ((range.end - chunk) as usize).min(N);
+                let lanes = take * 64;
+                pair_lanes(chunk * 64, 16, &mut a[..lanes], &mut b[..lanes]);
+                let q = sim.eval_lanes(&[16, 8], &[&a[..lanes], &b[..lanes]]);
+                for lane in 0..lanes {
                     if q[lane] as u64 != model.div(a[lane], b[lane]) {
                         bad += 1;
                     }
                 }
+                chunk += take as u64;
             }
             bad
         },
     )
     .into_iter()
-    .sum();
-    println!(
-        "gate-level exhaustive check (compiled sim, rapid9 div16/8, {} threads): {} pairs swept, {mismatches} model mismatches",
-        par::threads(),
-        1u64 << 24
-    );
+    .sum()
 }

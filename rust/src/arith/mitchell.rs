@@ -6,6 +6,7 @@
 //! coefficient is selected.
 
 use super::lod::log_split;
+use super::swar;
 use super::traits::{check_width, mask, ApproxDiv, ApproxMul};
 
 /// Shared Mitchell multiplier datapath with a pluggable coefficient.
@@ -22,8 +23,44 @@ pub fn mitchell_mul_core<F: Fn(u64, u64) -> u64>(n: u32, a: u64, b: u64, coeff: 
 /// hoisted out of the lane loop and the coefficient closure is monomorphised
 /// once for the whole slice, so units built on this core pay no per-element
 /// dispatch — the fast path every RAPID-family `mul_batch` override routes
-/// through.
+/// through. At the SIMDive-packable widths (N = 8: 4 lanes/word, N = 16:
+/// 2 lanes/word — [`swar::mul_pack_lanes`]) full lane groups run through
+/// the sub-word packed kernel [`swar::mul_packed`]; its guard band falls
+/// back to the scalar kernel per lane whenever packing can't reproduce the
+/// scalar result bit for bit, so callers never observe the difference.
 pub fn mitchell_mul_batch_core<F: Fn(u64, u64) -> u64>(
+    n: u32,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    coeff: F,
+) {
+    assert_eq!(a.len(), b.len(), "operand slices must match");
+    assert_eq!(a.len(), out.len(), "output slice must match operands");
+    let w = n - 1;
+    let lanes = swar::mul_pack_lanes(n);
+    let mut i = 0usize;
+    if lanes != 0 {
+        while i + lanes <= a.len() {
+            let (al, bl, ol) = (&a[i..i + lanes], &b[i..i + lanes], &mut out[i..i + lanes]);
+            if !swar::mul_packed(n, al, bl, ol, &coeff) {
+                for l in 0..lanes {
+                    out[i + l] = mul_kernel(n, w, a[i + l], b[i + l], &coeff);
+                }
+            }
+            i += lanes;
+        }
+    }
+    for l in i..a.len() {
+        out[l] = mul_kernel(n, w, a[l], b[l], &coeff);
+    }
+}
+
+/// [`mitchell_mul_batch_core`] with the sub-word packed fast path disabled:
+/// the plain per-lane scalar loop. Exists so benches can ladder scalar vs
+/// packed and so the determinism suite can pin the two bit-identical;
+/// production callers should use the packed core.
+pub fn mitchell_mul_batch_core_scalar<F: Fn(u64, u64) -> u64>(
     n: u32,
     a: &[u64],
     b: &[u64],
@@ -89,8 +126,43 @@ pub fn mitchell_div_core<F: Fn(u64, u64, bool) -> u64>(n: u32, a: u64, b: u64, c
 /// Batched variant of [`mitchell_div_core`]: `out[i]` is bit-identical to
 /// the scalar call on `(a[i], b[i])`, including the divide-by-zero and
 /// overflow saturation lanes (those short-circuit before the log datapath,
-/// exactly as the scalar core does).
+/// exactly as the scalar core does — the packed kernel resolves them with
+/// mask logic in the same places). At the SIMDive-packable widths (N = 4:
+/// 4 lanes/word, N = 8: 2 lanes/word — [`swar::div_pack_lanes`]) full lane
+/// groups run through [`swar::div_packed`], guard-banded to fall back to
+/// the scalar kernel whenever packing can't reproduce it bit for bit.
 pub fn mitchell_div_batch_core<F: Fn(u64, u64, bool) -> u64>(
+    n: u32,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    coeff: F,
+) {
+    assert_eq!(a.len(), b.len(), "operand slices must match");
+    assert_eq!(a.len(), out.len(), "output slice must match operands");
+    let w = n - 1;
+    let lanes = swar::div_pack_lanes(n);
+    let mut i = 0usize;
+    if lanes != 0 {
+        while i + lanes <= a.len() {
+            let (al, bl, ol) = (&a[i..i + lanes], &b[i..i + lanes], &mut out[i..i + lanes]);
+            if !swar::div_packed(n, al, bl, ol, &coeff) {
+                for l in 0..lanes {
+                    out[i + l] = div_kernel(n, w, a[i + l], b[i + l], &coeff);
+                }
+            }
+            i += lanes;
+        }
+    }
+    for l in i..a.len() {
+        out[l] = div_kernel(n, w, a[l], b[l], &coeff);
+    }
+}
+
+/// [`mitchell_div_batch_core`] with the sub-word packed fast path disabled:
+/// the plain per-lane scalar loop, for bench laddering and the
+/// packed-vs-scalar determinism pins.
+pub fn mitchell_div_batch_core_scalar<F: Fn(u64, u64, bool) -> u64>(
     n: u32,
     a: &[u64],
     b: &[u64],
@@ -312,6 +384,67 @@ mod tests {
         for i in 0..257 {
             assert_eq!(out[i], d.div(da[i], db[i]), "div lane {i}");
         }
+    }
+
+    #[test]
+    fn packed_batch_cores_match_scalar_batch_cores_exhaustively() {
+        // width-8 multiplier: the full 65 536-pair space through the
+        // public batch API (sub-word packed fast path) vs the scalar-only
+        // loop, with a nontrivial coefficient
+        let mcoeff = |x1: u64, x2: u64| ((x1 >> 2) ^ (x2 >> 3)) & 0x7f;
+        let total = 1usize << 16;
+        let mut a = Vec::with_capacity(total);
+        let mut b = Vec::with_capacity(total);
+        for p in 0..total as u64 {
+            a.push(p & 0xff);
+            b.push(p >> 8);
+        }
+        let mut packed = vec![0u64; total];
+        let mut scalar = vec![0u64; total];
+        mitchell_mul_batch_core(8, &a, &b, &mut packed, mcoeff);
+        mitchell_mul_batch_core_scalar(8, &a, &b, &mut scalar, mcoeff);
+        assert_eq!(packed, scalar, "packed mul8 diverges from scalar");
+        // width-4 divider: the full 2^12 rectangle, including every
+        // divide-by-zero / zero-dividend / overflow saturation lane
+        let dcoeff = |x1: u64, x2: u64, borrow: bool| {
+            (if borrow { x2 } else { x1 >> 1 }) & 0x7
+        };
+        let total = 1usize << 12;
+        let mut a = Vec::with_capacity(total);
+        let mut b = Vec::with_capacity(total);
+        for p in 0..total as u64 {
+            a.push(p & 0xff);
+            b.push(p >> 8);
+        }
+        let mut packed = vec![0u64; total];
+        let mut scalar = vec![0u64; total];
+        mitchell_div_batch_core(4, &a, &b, &mut packed, dcoeff);
+        mitchell_div_batch_core_scalar(4, &a, &b, &mut scalar, dcoeff);
+        assert_eq!(packed, scalar, "packed div4 diverges from scalar");
+    }
+
+    #[test]
+    fn packed_guard_band_falls_back_bit_identically() {
+        // a coefficient needing the full W+1 bits defeats the packed
+        // field budget; the batch core must transparently produce the
+        // scalar result anyway (odd length: tail lanes are scalar too)
+        let big = |_: u64, _: u64| 1u64 << 7; // 2^W for N = 8
+        let mut rng = crate::util::XorShift256::new(99);
+        let a: Vec<u64> = (0..131).map(|_| rng.bits(8)).collect();
+        let b: Vec<u64> = (0..131).map(|_| rng.bits(8)).collect();
+        let mut packed = vec![0u64; 131];
+        let mut scalar = vec![0u64; 131];
+        mitchell_mul_batch_core(8, &a, &b, &mut packed, big);
+        mitchell_mul_batch_core_scalar(8, &a, &b, &mut scalar, big);
+        assert_eq!(packed, scalar);
+        let bigd = |_: u64, _: u64, _: bool| 1u64 << 3; // 2^W for N = 4
+        let da: Vec<u64> = (0..131).map(|_| rng.bits(8)).collect();
+        let db: Vec<u64> = (0..131).map(|_| rng.bits(4)).collect();
+        let mut dp = vec![0u64; 131];
+        let mut ds = vec![0u64; 131];
+        mitchell_div_batch_core(4, &da, &db, &mut dp, bigd);
+        mitchell_div_batch_core_scalar(4, &da, &db, &mut ds, bigd);
+        assert_eq!(dp, ds);
     }
 
     #[test]

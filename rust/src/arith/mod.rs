@@ -10,6 +10,7 @@
 pub mod traits;
 pub mod lod;
 pub mod mitchell;
+pub mod swar;
 pub mod regions;
 pub mod rapid;
 pub mod exact;

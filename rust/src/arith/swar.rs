@@ -1,0 +1,557 @@
+//! Sub-word SIMD (SWAR) packing for the Mitchell-family batch cores.
+//!
+//! SIMDive (PAPERS.md, Ebrahimi et al.) builds *hardware* that packs
+//! several narrow Mitchell multiplications/divisions into one wide
+//! datapath; `arith/simdive.rs` models that unit. This module is the same
+//! idea applied to the *runtime*: pack 4×8-bit or 2×16-bit multiplier
+//! operands (4×4-bit or 2×8-bit divider operands) into one `u64`, and run
+//! the whole LOD → fraction-align → ternary-add/sub → anti-log barrel
+//! shift pipeline once per packed word with classic SWAR bit tricks
+//! (broadcast compares, per-field popcounts, masked-blend barrel shifts).
+//!
+//! ## Contract
+//!
+//! [`mul_packed`] / [`div_packed`] are **bit-identical** to running the
+//! scalar `mul_kernel` / `div_kernel` per lane — for every operand pair
+//! and every coefficient the guard band admits. They return `false`
+//! (computing nothing) whenever that identity cannot be guaranteed:
+//!
+//! * an operand exceeds its declared width (the scalar kernel's
+//!   `check_width` debug-panic / release-garbage semantics must come from
+//!   the scalar path itself), or
+//! * a coefficient value needs more than W = N−1 bits (the packed ternary
+//!   adder reserves exactly W bits per field, like the hardware).
+//!
+//! Callers fall back to the per-lane scalar kernel on `false`, so the
+//! packed path is a pure accelerator: `tests/par_determinism.rs` pins a
+//! characterization through the packed units bit-equal to a scalar-only
+//! unit, and the exhaustive width-8 sweeps below prove the identity per
+//! lane. Dead lanes (zero operands, divide-by-zero, quotient overflow)
+//! are resolved by mask logic exactly where the scalar kernel
+//! short-circuits — the coefficient closure is invoked *only* for lanes
+//! the scalar kernel would invoke it for.
+//!
+//! Every per-field add/subtract below is annotated with the range
+//! argument that makes it carry/borrow-free across fields; the compare
+//! helpers additionally require both operands below 2^(F−1) per field,
+//! which each call site establishes.
+
+/// Packed lanes per `u64` for an N×N multiplier (field width 2N): 4 lanes
+/// at N = 8, 2 at N = 16, 0 (no packing) elsewhere.
+pub fn mul_pack_lanes(n: u32) -> usize {
+    match n {
+        8 => 4,
+        16 => 2,
+        _ => 0,
+    }
+}
+
+/// Packed lanes per `u64` for a 2N-by-N divider (field width 4N): 4 lanes
+/// at N = 4, 2 at N = 8, 0 (no packing) elsewhere.
+pub fn div_pack_lanes(n: u32) -> usize {
+    match n {
+        4 => 4,
+        8 => 2,
+        _ => 0,
+    }
+}
+
+/// SWAR field geometry: a `u64` split into `64 / f` fields of `f` bits.
+struct Fields {
+    f: u32,
+    /// bit 0 of every field
+    lsb: u64,
+    /// bit f−1 of every field
+    msb: u64,
+    /// blend rounds for variable shifts/smears: covers shift amounts up
+    /// to f−1 (4 rounds at f = 16, 5 at f = 32)
+    rounds: u32,
+}
+
+impl Fields {
+    fn new(f: u32) -> Self {
+        debug_assert!(f == 16 || f == 32, "swar: field width {f}");
+        let mut lsb = 0u64;
+        let mut i = 0;
+        while i < 64 {
+            lsb |= 1u64 << i;
+            i += f;
+        }
+        Fields { f, lsb, msb: lsb << (f - 1), rounds: if f == 16 { 4 } else { 5 } }
+    }
+
+    /// Broadcast a one-bit-per-field value (bit 0 of each field) to an
+    /// all-ones/all-zeros field mask. Fields never overlap in the
+    /// product, so the multiply is exact.
+    #[inline(always)]
+    fn bcast(&self, bits: u64) -> u64 {
+        bits.wrapping_mul((1u64 << self.f) - 1)
+    }
+
+    /// Per-field `x >= y` as a field mask. Requires every field of both
+    /// operands below 2^(f−1): then `(x | msb) − y` is per-field
+    /// `x − y + 2^(f−1)` with no cross-field borrow, and bit f−1 of the
+    /// result is exactly the comparison.
+    #[inline(always)]
+    fn ge_mask(&self, x: u64, y: u64) -> u64 {
+        self.bcast((((x | self.msb) - y) & self.msb) >> (self.f - 1))
+    }
+
+    /// Per-field `v != 0` as a field mask. Requires fields below 2^(f−1).
+    #[inline(always)]
+    fn nonzero_mask(&self, v: u64) -> u64 {
+        self.bcast((((v | self.msb) - self.lsb) & self.msb) >> (self.f - 1))
+    }
+
+    /// Per-field popcount (classic SWAR folds; byte sums never exceed 32,
+    /// so no fold carries across bytes, and the final mask keeps each
+    /// field's own count).
+    #[inline(always)]
+    fn popcount_fields(&self, v: u64) -> u64 {
+        let m1 = 0x5555_5555_5555_5555u64;
+        let m2 = 0x3333_3333_3333_3333u64;
+        let m4 = 0x0f0f_0f0f_0f0f_0f0fu64;
+        let mut x = v - ((v >> 1) & m1);
+        x = (x & m2) + ((x >> 2) & m2);
+        x = (x + (x >> 4)) & m4;
+        x += x >> 8;
+        if self.f == 16 {
+            x & (self.lsb * 0x1f)
+        } else {
+            x += x >> 16;
+            x & (self.lsb * 0x3f)
+        }
+    }
+
+    /// Per-field left shift by a constant, clearing the low `k` bits of
+    /// each field (the only positions cross-field spill can land in).
+    #[inline(always)]
+    fn shl_const(&self, v: u64, k: u32) -> u64 {
+        (v << k) & !(self.lsb * ((1u64 << k) - 1))
+    }
+
+    /// Per-field right shift by a constant, clearing the top `k` bits of
+    /// each field.
+    #[inline(always)]
+    fn shr_const(&self, v: u64, k: u32) -> u64 {
+        (v >> k) & !((self.lsb * ((1u64 << k) - 1)) << (self.f - k))
+    }
+
+    /// Per-field variable left shift: `rounds` masked-blend rounds, one
+    /// per bit of the per-field shift amount `s` (each field of `s` must
+    /// be below 2^rounds, which every call site bounds far tighter).
+    #[inline(always)]
+    fn shl_fields(&self, v: u64, s: u64) -> u64 {
+        let mut v = v;
+        for b in 0..self.rounds {
+            let sel = self.bcast((s >> b) & self.lsb);
+            v = (self.shl_const(v, 1 << b) & sel) | (v & !sel);
+        }
+        v
+    }
+
+    /// Per-field variable right shift (blend rounds, like [`Self::shl_fields`]).
+    #[inline(always)]
+    fn shr_fields(&self, v: u64, s: u64) -> u64 {
+        let mut v = v;
+        for b in 0..self.rounds {
+            let sel = self.bcast((s >> b) & self.lsb);
+            v = (self.shr_const(v, 1 << b) & sel) | (v & !sel);
+        }
+        v
+    }
+
+    /// Per-field downward bit smear: after this, a field holds
+    /// 2^(k+1) − 1 where k was its leading-one position (fields must be
+    /// non-zero — callers force dead lanes to 1 first).
+    #[inline(always)]
+    fn smear(&self, v: u64) -> u64 {
+        let mut v = v;
+        for b in 0..self.rounds {
+            v |= self.shr_const(v, 1 << b);
+        }
+        v
+    }
+
+    /// Per-field leading-one split of a (non-zero-per-field) packed word:
+    /// returns `(k, low)` where `k` is each field's leading-one index and
+    /// `low` the field with that leading one cleared — the packed mirror
+    /// of `lod()` + the fraction extraction in `log_split`.
+    #[inline(always)]
+    fn lod_split(&self, v: u64) -> (u64, u64) {
+        let sm = self.smear(v);
+        // popcount(2^(k+1)−1) = k+1 per field; counts are ≥ 1 everywhere,
+        // so the −1 per field never borrows across fields.
+        let k = self.popcount_fields(sm) - self.lsb;
+        // (sm >> 1) spills only each upper field's bit 0 into bit f−1
+        // below it; clearing msb leaves the mask of bits strictly below
+        // the leading one.
+        let low = v & ((sm >> 1) & !self.msb);
+        (k, low)
+    }
+}
+
+/// Packed Mitchell multiplication: evaluate `out[i] = mul_kernel(n, n−1,
+/// a[i], b[i], coeff)` for all lanes at once inside one 64-bit word
+/// (field width 2N — see [`mul_pack_lanes`]). Returns `false` without
+/// writing `out` when the guard band rejects the batch (operand wider
+/// than N bits, or a coefficient wider than W = N−1 bits); the caller
+/// must then run the scalar kernel per lane.
+pub fn mul_packed<F: Fn(u64, u64) -> u64>(
+    n: u32,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    coeff: &F,
+) -> bool {
+    let lanes = mul_pack_lanes(n);
+    debug_assert!(lanes != 0, "mul_packed: unsupported width {n}");
+    debug_assert_eq!(a.len(), lanes);
+    debug_assert_eq!(b.len(), lanes);
+    debug_assert_eq!(out.len(), lanes);
+    let w = n - 1;
+    // guard band: every operand must fit N bits (otherwise the scalar
+    // path owns the debug-panic / release-garbage semantics)
+    for i in 0..lanes {
+        if a[i] >> n != 0 || b[i] >> n != 0 {
+            return false;
+        }
+    }
+    let f = Fields::new(2 * n);
+    let fm = (1u64 << f.f) - 1;
+    let (mut pa, mut pb) = (0u64, 0u64);
+    for i in 0..lanes {
+        pa |= a[i] << (i as u32 * f.f);
+        pb |= b[i] << (i as u32 * f.f);
+    }
+    // live-lane mask (operands < 2^n ≤ 2^(f−1), so the compares hold)
+    let zm = f.nonzero_mask(pa) & f.nonzero_mask(pb);
+    // dead lanes are forced to 1 so the LOD stays defined; their result
+    // is masked to 0 at the end, exactly the scalar short-circuit
+    let va = (pa & zm) | (f.lsb & !zm);
+    let vb = (pb & zm) | (f.lsb & !zm);
+    let (pk1, low_a) = f.lod_split(va);
+    let (pk2, low_b) = f.lod_split(vb);
+    // fraction align: k ≤ n−1 = w for N-bit operands, so w − k is
+    // borrow-free per field and the shift is ≤ w (left branch of
+    // log_split, always)
+    let wv = f.lsb * w as u64;
+    let x1 = f.shl_fields(low_a, wv - pk1);
+    let x2 = f.shl_fields(low_b, wv - pk2);
+    // coefficient lanes: invoked only where the scalar kernel would
+    // invoke it; any value needing more than W bits breaks the packed
+    // ternary adder's field budget → fall back
+    let mut pc = 0u64;
+    for i in 0..lanes {
+        let sh = i as u32 * f.f;
+        if (zm >> sh) & 1 == 1 {
+            let c = coeff((x1 >> sh) & fm, (x2 >> sh) & fm);
+            if c >> w != 0 {
+                return false;
+            }
+            pc |= c << sh;
+        }
+    }
+    // ternary add (paper §IV-B): per field < 3·2^w < 2^(w+2) ≤ 2^(f−1),
+    // carry-free and compare-safe
+    let xs = x1 + x2 + pc;
+    let ov = f.ge_mask(xs, f.lsb << w);
+    // anti-log mantissa: no-overflow → 2^w + xs; overflow → xs saturated
+    // at 2^(w+1)−1 (both < 2^(w+1), carry-free)
+    let mant_no = xs + (f.lsb << w);
+    let sat = f.lsb * ((1u64 << (w + 1)) - 1);
+    let gs = f.ge_mask(xs, sat);
+    let mant_ov = (sat & gs) | (xs & !gs);
+    let mant = (mant_ov & ov) | (mant_no & !ov);
+    // exponent k1 + k2 + overflow ≤ 2n−1, carry-free
+    let exp = pk1 + pk2 + (ov & f.lsb);
+    // net barrel shift: (mant << exp) >> w ≡ exp ≥ w ? mant << (exp−w)
+    // (exact, < 2^(w+1+n) = 2^f in-field) : mant >> (w−exp) (identical
+    // truncation). Shift amounts ≤ n / ≤ w respectively.
+    let d = f.ge_mask(exp, wv);
+    let sl = (((exp | f.msb) - wv) & !f.msb) & d;
+    let sr = (((wv | f.msb) - exp) & !f.msb) & !d;
+    let q = ((f.shl_fields(mant, sl) & d) | (f.shr_fields(mant, sr) & !d)) & zm;
+    for i in 0..lanes {
+        out[i] = (q >> (i as u32 * f.f)) & fm;
+    }
+    true
+}
+
+/// Packed Mitchell division: evaluate `out[i] = div_kernel(n, n−1, a[i],
+/// b[i], coeff)` for all lanes at once inside one 64-bit word (field
+/// width 4N — see [`div_pack_lanes`]; the dividend is 2N bits). Returns
+/// `false` without writing `out` when the guard band rejects the batch
+/// (dividend wider than 2N bits, divisor wider than N bits, or a
+/// coefficient wider than W = N−1 bits); the caller must then run the
+/// scalar kernel per lane.
+pub fn div_packed<F: Fn(u64, u64, bool) -> u64>(
+    n: u32,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    coeff: &F,
+) -> bool {
+    let lanes = div_pack_lanes(n);
+    debug_assert!(lanes != 0, "div_packed: unsupported width {n}");
+    debug_assert_eq!(a.len(), lanes);
+    debug_assert_eq!(b.len(), lanes);
+    debug_assert_eq!(out.len(), lanes);
+    let w = n - 1;
+    for i in 0..lanes {
+        if a[i] >> (2 * n) != 0 || b[i] >> n != 0 {
+            return false;
+        }
+    }
+    let f = Fields::new(4 * n);
+    let fm = (1u64 << f.f) - 1;
+    let (mut pa, mut pb) = (0u64, 0u64);
+    for i in 0..lanes {
+        pa |= a[i] << (i as u32 * f.f);
+        pb |= b[i] << (i as u32 * f.f);
+    }
+    // special lanes, resolved exactly where the scalar kernel
+    // short-circuits: b = 0 saturates to mask(2n); a = 0 yields 0;
+    // a ≥ b·2^n saturates to mask(n). Fields stay < 2^(2n) = 2^(f/2), so
+    // every compare below is in range.
+    let zb = f.nonzero_mask(pb);
+    let za = f.nonzero_mask(pa);
+    let ovf = f.ge_mask(pa, pb << n);
+    let nm = zb & za & !ovf;
+    let va = (pa & nm) | (f.lsb & !nm);
+    let vb = (pb & nm) | (f.lsb & !nm);
+    // dividend LOD: k1 ≤ 2n−1 can sit either side of w, so the fraction
+    // align needs both shift directions (log_split's two branches);
+    // amounts are ≤ w left, ≤ n right
+    let (pk1, low_a) = f.lod_split(va);
+    let (pk2, low_b) = f.lod_split(vb);
+    let wv = f.lsb * w as u64;
+    let dl = f.ge_mask(wv, pk1);
+    let sl1 = (((wv | f.msb) - pk1) & !f.msb) & dl;
+    let sr1 = (((pk1 | f.msb) - wv) & !f.msb) & !dl;
+    let x1 = (f.shl_fields(low_a, sl1) & dl) | (f.shr_fields(low_a, sr1) & !dl);
+    // divisor: k2 ≤ n−1 = w always → left shift only, borrow-free
+    let x2 = f.shl_fields(low_b, wv - pk2);
+    // Eq. 7 fraction subtract. Both difference terms are sanitized to
+    // their own lanes *before* the mantissa arithmetic: an unsanitized
+    // opposite-lane difference could reach 2^(f−1)−1 and borrow across
+    // fields in the 2^(w+1) − diff step.
+    let ge = f.ge_mask(x1, x2);
+    let diff_no = (((x1 | f.msb) - x2) & !f.msb) & ge;
+    let mant_no = diff_no + (f.lsb << w);
+    let diff_b = (((x2 | f.msb) - x1) & !f.msb) & !ge;
+    let mant_b = (f.lsb << (w + 1)) - diff_b;
+    let mant0 = (mant_no & ge) | (mant_b & !ge);
+    let mut pc = 0u64;
+    for i in 0..lanes {
+        let sh = i as u32 * f.f;
+        if (nm >> sh) & 1 == 1 {
+            let borrow = (ge >> sh) & 1 == 0;
+            let c = coeff((x1 >> sh) & fm, (x2 >> sh) & fm, borrow);
+            if c >> w != 0 {
+                return false;
+            }
+            pc |= c << sh;
+        }
+    }
+    // mant0.saturating_sub(pc).max(1): underflow and exact-zero lanes
+    // both land on the forced 1, exactly like the scalar kernel
+    let gs = f.ge_mask(mant0, pc);
+    let m = (((mant0 | f.msb) - pc) & !f.msb) & gs;
+    let nz = f.nonzero_mask(m);
+    let mant = (m & nz) | (f.lsb & !nz);
+    // biased exponent eb = k1 + n − k2 − borrow = exp + n ∈ [0, 3n−1]
+    // (≥ 1 before the borrow subtract, so every step is borrow-free)
+    let eb = pk1 + f.lsb * n as u64 - pk2 - (!ge & f.lsb);
+    // net barrel shift by exp − w = eb − (2n−1), both directions; the
+    // scalar kernel's sh ≥ 64 → 0 branch is unreachable for n ≤ 8
+    // (right shifts here are ≤ 2n−1)
+    let t = f.lsb * (2 * n - 1) as u64;
+    let d = f.ge_mask(eb, t);
+    let sl = (((eb | f.msb) - t) & !f.msb) & d;
+    let sr = (((t | f.msb) - eb) & !f.msb) & !d;
+    let q0 = (f.shl_fields(mant, sl) & d) | (f.shr_fields(mant, sr) & !d);
+    let m2n = f.lsb * ((1u64 << (2 * n)) - 1);
+    let mn = f.lsb * ((1u64 << n) - 1);
+    let q = (q0 & nm) | (m2n & !zb) | (mn & zb & ovf);
+    for i in 0..lanes {
+        out[i] = (q >> (i as u32 * f.f)) & fm;
+    }
+    true
+}
+
+/// Scalar reference of the packed multiplier lane — `mul_kernel`
+/// re-derived from its public pieces so the tests below compare two
+/// independent implementations.
+#[cfg(test)]
+fn scalar_mul<F: Fn(u64, u64) -> u64>(n: u32, a: u64, b: u64, coeff: &F) -> u64 {
+    super::mitchell::mitchell_mul_core(n, a, b, coeff)
+}
+
+#[cfg(test)]
+fn scalar_div<F: Fn(u64, u64, bool) -> u64>(n: u32, a: u64, b: u64, coeff: &F) -> u64 {
+    super::mitchell::mitchell_div_core(n, a, b, coeff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift256;
+
+    #[test]
+    fn packed_mul8_matches_scalar_exhaustively() {
+        // every 8×8 pair, zero coefficient AND a nontrivial one — the
+        // full proof at the width the sweeps exercise hardest
+        let zero = |_: u64, _: u64| 0u64;
+        let nontrivial = |x1: u64, x2: u64| ((x1 >> 3) + (x2 >> 4)) & 0x7f;
+        let mut out = [0u64; 4];
+        for a0 in 0..256u64 {
+            for b0 in (0..256u64).step_by(4) {
+                let a = [a0, a0 ^ 0xff, (a0 + 85) & 0xff, 255 - a0];
+                let b = [b0, (b0 + 1) & 0xff, (b0 + 2) & 0xff, (b0 + 3) & 0xff];
+                assert!(mul_packed(8, &a, &b, &mut out, &zero));
+                for i in 0..4 {
+                    assert_eq!(out[i], scalar_mul(8, a[i], b[i], &zero), "zero a={} b={}", a[i], b[i]);
+                }
+                assert!(mul_packed(8, &a, &b, &mut out, &nontrivial));
+                for i in 0..4 {
+                    assert_eq!(
+                        out[i],
+                        scalar_mul(8, a[i], b[i], &nontrivial),
+                        "coeff a={} b={}",
+                        a[i],
+                        b[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_div4_matches_scalar_exhaustively() {
+        // the full 8-bit dividend × 4-bit divisor rectangle, including
+        // b = 0 saturation, a = 0 and quotient-overflow lanes
+        let zero = |_: u64, _: u64, _: bool| 0u64;
+        let nontrivial = |x1: u64, x2: u64, borrow: bool| {
+            (if borrow { x2 >> 1 } else { (x1 ^ x2) >> 2 }) & 0x7
+        };
+        let mut out = [0u64; 4];
+        for a0 in 0..256u64 {
+            for b0 in 0..16u64 {
+                let a = [a0, 255 - a0, (a0 * 7) & 0xff, (a0 + 128) & 0xff];
+                let b = [b0, 15 - b0, (b0 + 5) & 0xf, (b0 * 3) & 0xf];
+                assert!(div_packed(4, &a, &b, &mut out, &zero));
+                for i in 0..4 {
+                    assert_eq!(out[i], scalar_div(4, a[i], b[i], &zero), "zero a={} b={}", a[i], b[i]);
+                }
+                assert!(div_packed(4, &a, &b, &mut out, &nontrivial));
+                for i in 0..4 {
+                    assert_eq!(
+                        out[i],
+                        scalar_div(4, a[i], b[i], &nontrivial),
+                        "coeff a={} b={}",
+                        a[i],
+                        b[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_mul16_matches_scalar_on_corners_and_random() {
+        let coeff = |x1: u64, x2: u64| (x1 >> 8).min(x2 >> 8);
+        let corners = [0u64, 1, 2, 3, 0x7fff, 0x8000, 0x8001, 0xfffe, 0xffff, 0x5555, 0xaaaa];
+        let mut out = [0u64; 2];
+        for &a0 in &corners {
+            for &b0 in &corners {
+                let (a, b) = ([a0, b0], [b0, a0]);
+                assert!(mul_packed(16, &a, &b, &mut out, &coeff));
+                for i in 0..2 {
+                    assert_eq!(out[i], scalar_mul(16, a[i], b[i], &coeff), "a={} b={}", a[i], b[i]);
+                }
+            }
+        }
+        let mut rng = XorShift256::new(0x51D1);
+        for _ in 0..20000 {
+            let a = [rng.bits(16), rng.bits(16)];
+            let b = [rng.bits(16), rng.bits(16)];
+            assert!(mul_packed(16, &a, &b, &mut out, &coeff));
+            for i in 0..2 {
+                assert_eq!(out[i], scalar_mul(16, a[i], b[i], &coeff), "a={} b={}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_div8_matches_scalar_on_corners_and_random() {
+        let coeff = |x1: u64, x2: u64, borrow: bool| {
+            (if borrow { x1 >> 2 } else { x2 >> 1 }) & 0x7f
+        };
+        let corners = [0u64, 1, 2, 127, 128, 255, 256, 0x7fff, 0x8000, 0xffff];
+        let bc = [0u64, 1, 2, 3, 127, 128, 254, 255];
+        let mut out = [0u64; 2];
+        for &a0 in &corners {
+            for &b0 in &bc {
+                let (a, b) = ([a0, a0 ^ 0xffff], [b0, 255 - b0]);
+                assert!(div_packed(8, &a, &b, &mut out, &coeff));
+                for i in 0..2 {
+                    assert_eq!(out[i], scalar_div(8, a[i], b[i], &coeff), "a={} b={}", a[i], b[i]);
+                }
+            }
+        }
+        let mut rng = XorShift256::new(0x51D2);
+        for _ in 0..20000 {
+            let a = [rng.bits(16), rng.bits(16)];
+            let b = [rng.bits(8), rng.bits(8)];
+            assert!(div_packed(8, &a, &b, &mut out, &coeff));
+            for i in 0..2 {
+                assert_eq!(out[i], scalar_div(8, a[i], b[i], &coeff), "a={} b={}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn guard_band_rejects_oversized_operands_and_coefficients() {
+        let mut out = [0u64; 4];
+        // oversized operand: refused before any kernel math, so the
+        // scalar path keeps its own (debug-panic) semantics
+        assert!(!mul_packed(8, &[256, 0, 0, 0], &[1, 1, 1, 1], &mut out, &|_, _| 0));
+        assert!(!mul_packed(8, &[1, 1, 1, 1], &[0, 0, 300, 0], &mut out, &|_, _| 0));
+        assert!(!div_packed(4, &[256, 0, 0, 0], &[1, 1, 1, 1], &mut out, &|_, _, _| 0));
+        assert!(!div_packed(4, &[1, 1, 1, 1], &[0, 16, 0, 0], &mut out, &|_, _, _| 0));
+        // oversized coefficient: the packed field budget is W bits
+        assert!(!mul_packed(8, &[3, 3, 3, 3], &[5, 5, 5, 5], &mut out, &|_, _| 1 << 7));
+        assert!(!div_packed(4, &[30, 30, 30, 30], &[3, 3, 3, 3], &mut out, &|_, _, _| 1 << 3));
+        // unsupported widths simply have no packed lanes
+        assert_eq!(mul_pack_lanes(12), 0);
+        assert_eq!(div_pack_lanes(16), 0);
+    }
+
+    #[test]
+    fn coeff_is_called_exactly_like_the_scalar_kernel() {
+        use std::cell::Cell;
+        // dead lanes (zero operands / div specials) must not reach the
+        // coefficient closure — the scalar kernel short-circuits first
+        let calls = Cell::new(0usize);
+        let count2 = |_: u64, _: u64| {
+            calls.set(calls.get() + 1);
+            0u64
+        };
+        let mut out = [0u64; 4];
+        assert!(mul_packed(8, &[0, 7, 0, 9], &[3, 0, 0, 2], &mut out, &count2));
+        assert_eq!(calls.get(), 1, "only lane 3 is live");
+        assert_eq!(out, [0, 0, 0, scalar_mul(8, 9, 2, &|_, _| 0)]);
+        let calls3 = Cell::new(0usize);
+        let count3 = |_: u64, _: u64, _: bool| {
+            calls3.set(calls3.get() + 1);
+            0u64
+        };
+        // lane 0 live, lane 1 div-by-zero, lane 2 a=0, lane 3 overflow
+        assert!(div_packed(4, &[100, 100, 0, 255], &[7, 0, 3, 1], &mut out, &count3));
+        assert_eq!(calls3.get(), 1, "only lane 0 is live");
+        assert_eq!(out[1], 0xff, "divide-by-zero saturates");
+        assert_eq!(out[2], 0, "zero dividend");
+        assert_eq!(out[3], 0xf, "overflow saturates");
+    }
+}

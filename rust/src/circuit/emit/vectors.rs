@@ -12,7 +12,7 @@
 //! dependence — so emitted artifacts are reproducible byte-for-byte.
 
 use crate::circuit::netlist::Netlist;
-use crate::circuit::sim::CompiledNetlist;
+use crate::circuit::sim::{self, BlockSim};
 use crate::util::XorShift256;
 
 /// How many and which vectors to generate.
@@ -40,7 +40,9 @@ pub enum Oracle {
     /// for emitted artifacts: vectors come from the slow independent
     /// path, and the test suite pins them against [`Oracle::Compiled`].
     Scalar,
-    /// The compiled bit-parallel engine (64 vectors per pass).
+    /// The compiled bit-parallel engine (64·N vectors per pass at the
+    /// `RAPID_BLOCK` width; the expected words are contractually
+    /// identical at every width — the lane packing is pass-shape-free).
     Compiled,
 }
 
@@ -113,25 +115,39 @@ fn expected_scalar(nl: &Netlist, stim: &[u128]) -> Vec<u128> {
 }
 
 fn expected_compiled(nl: &Netlist, stim: &[u128]) -> Vec<u128> {
+    match sim::default_block() {
+        1 => expected_compiled_wide::<1>(nl, stim),
+        4 => expected_compiled_wide::<4>(nl, stim),
+        _ => expected_compiled_wide::<8>(nl, stim),
+    }
+}
+
+/// [`Oracle::Compiled`] at an explicit block width: the stimulus list
+/// chunks into 64·N-lane passes of [`BlockSim::eval_blocks`]. Expected
+/// words depend only on the stimulus order, never on the pass shape — the
+/// cross-width test below pins all three rungs identical.
+fn expected_compiled_wide<const N: usize>(nl: &Netlist, stim: &[u128]) -> Vec<u128> {
     let n_in = nl.inputs.len();
-    let mut sim = CompiledNetlist::compile(nl);
+    let mut sim = BlockSim::<N>::compile(nl);
     let n_out = sim.n_outputs();
     let mut out = Vec::with_capacity(stim.len());
-    let mut words = vec![0u64; n_in];
-    for chunk in stim.chunks(64) {
-        for w in words.iter_mut() {
-            *w = 0;
+    let mut blocks = vec![[0u64; N]; n_in];
+    for chunk in stim.chunks(64 * N) {
+        for blk in blocks.iter_mut() {
+            *blk = [0u64; N];
         }
         for (lane, &v) in chunk.iter().enumerate() {
-            for (i, w) in words.iter_mut().enumerate() {
-                *w |= (((v >> i) & 1) as u64) << lane;
+            let (word, bit) = (lane / 64, lane % 64);
+            for (i, blk) in blocks.iter_mut().enumerate() {
+                blk[word] |= (((v >> i) & 1) as u64) << bit;
             }
         }
-        let outs = sim.eval_words(&words).to_vec();
-        for lane in 0..chunk.len() {
+        let outs = sim.eval_blocks(&blocks).to_vec();
+        for (lane, _) in chunk.iter().enumerate() {
+            let (word, bit) = (lane / 64, lane % 64);
             let mut o = 0u128;
-            for (j, w) in outs.iter().enumerate().take(n_out) {
-                o |= (((w >> lane) & 1) as u128) << j;
+            for (j, blk) in outs.iter().enumerate().take(n_out) {
+                o |= (((blk[word] >> bit) & 1) as u128) << j;
             }
             out.push(o);
         }
@@ -220,6 +236,22 @@ mod tests {
             Oracle::Compiled,
         );
         assert_ne!(a.stimulus, other.stimulus, "seed must matter");
+    }
+
+    #[test]
+    fn compiled_oracle_is_block_width_invariant() {
+        // vector counts that leave ragged tails at every pass width
+        // (256 exact, 300 ragged for N=4 and N=8, 65 sub-block)
+        let nl = binary_adder_netlist(8);
+        for count in [65usize, 256, 300] {
+            let plan = VectorPlan { exhaustive_max_bits: 0, random_count: count, seed: 7 };
+            let stim = stimulus(nl.inputs.len(), &plan);
+            let w1 = expected_compiled_wide::<1>(&nl, &stim);
+            let w4 = expected_compiled_wide::<4>(&nl, &stim);
+            let w8 = expected_compiled_wide::<8>(&nl, &stim);
+            assert_eq!(w1, w4, "count={count}: N=4 diverges");
+            assert_eq!(w1, w8, "count={count}: N=8 diverges");
+        }
     }
 
     #[test]

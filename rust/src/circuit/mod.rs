@@ -19,4 +19,4 @@ pub mod testgen;
 pub use netlist::Netlist;
 pub use primitive::Net;
 pub use report::UnitReport;
-pub use sim::CompiledNetlist;
+pub use sim::{BlockSim, CompiledNetlist};

@@ -201,15 +201,18 @@ impl Netlist {
     /// Helper: pack integer operands into the input bit vector (LSB-first
     /// per bus, buses in declaration order). Buses wider than 64 bits or
     /// values that do not fit their bus are rejected (they used to shift
-    /// to nonsense or silently truncate).
+    /// to nonsense or silently truncate). This is the *scalar* packer —
+    /// one vector at a time; the guard messages say so to distinguish
+    /// them from the block engine's `eval_lanes` guards, which carry the
+    /// `[block=N]` width of the failing rung instead.
     pub fn pack_inputs(widths: &[u32], values: &[u64]) -> Vec<bool> {
         assert_eq!(widths.len(), values.len());
         let mut bits = Vec::new();
         for (bus, (w, val)) in widths.iter().zip(values).enumerate() {
-            assert!(*w <= 64, "pack_inputs: bus {bus} is {w} bits wide (max 64)");
+            assert!(*w <= 64, "pack_inputs[scalar]: bus {bus} is {w} bits wide (max 64)");
             assert!(
                 *w == 64 || *val >> *w == 0,
-                "pack_inputs: value {val:#x} exceeds the {w}-bit bus {bus}"
+                "pack_inputs[scalar]: value {val:#x} exceeds the {w}-bit bus {bus}"
             );
             for i in 0..*w {
                 bits.push((val >> i) & 1 == 1);

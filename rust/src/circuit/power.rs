@@ -4,23 +4,29 @@
 //! constants × operating frequency. One global scale factor maps charge
 //! units to mW (fit once on the accurate-IP rows of Table III).
 //!
-//! Simulation runs on the compiled bit-parallel engine (`circuit::sim`):
-//! 64 consecutive random vectors per pass, with toggles counted word-wide
-//! as `((w ^ (w >> 1)) & mask).count_ones()` per monitored net instead of
-//! a branch per net per vector.
+//! Simulation runs on the compiled bit-parallel engine (`circuit::sim`) at
+//! the [`sim::default_block`] width: 64·N consecutive random vectors per
+//! pass, with toggles counted word-wide as
+//! `((w ^ (w >> 1)) & mask).count_ones()` per monitored net (chained
+//! across the words of a block and across passes) instead of a branch per
+//! net per vector.
 //!
 //! Random vector *v* is a pure function of `(seed, v)` — its bits come
-//! from the split stream `XorShift256::new(seed).split(v)` — so any
-//! transition range can be evaluated independently: the transition space
-//! shards into fixed-size parallel chunks ([`crate::util::par`]), each
-//! chunk re-deriving its boundary reference vector locally, and per-chunk
-//! charges merge in canonical chunk order. Key invariant: the reported
-//! charge is **bit-identical at every `RAPID_THREADS` value**, pinned by
-//! `tests/par_determinism.rs` and the scalar-reference unit test below.
+//! from the split stream `XorShift256::new(seed).split(v)`, one draw per
+//! input bit, regardless of which pass/word/lane the vector lands in — so
+//! any transition range can be evaluated independently: the transition
+//! space shards into fixed-size parallel chunks ([`crate::util::par`]),
+//! each chunk re-deriving its boundary reference vector locally, and
+//! per-chunk charges merge in canonical chunk order. Toggles accumulate as
+//! *integers* per monitored net within a chunk and convert to charge once,
+//! in monitored-net order, at chunk end. Key invariant: the reported
+//! charge is **bit-identical at every `RAPID_THREADS` value and every
+//! `RAPID_BLOCK` width**, pinned by `tests/par_determinism.rs` and the
+//! scalar-reference unit test below.
 
 use super::netlist::Netlist;
 use super::primitive::{Cell, Energies};
-use super::sim::CompiledNetlist;
+use super::sim::{self, BlockSim};
 use crate::util::{par, XorShift256};
 
 /// Dynamic-power estimate of one netlist.
@@ -45,39 +51,93 @@ impl PowerReport {
     }
 }
 
-/// Transitions per parallel chunk: fixed (never thread-derived) so the
-/// chunk decomposition — and with it the f64 charge association — is
-/// identical no matter how many workers run it.
+/// Transitions per parallel chunk: fixed (never thread-derived, never
+/// block-derived) so the chunk decomposition — and with it the charge
+/// association — is identical no matter how many workers run it or how
+/// many lanes one pass carries.
 const POWER_CHUNK: u64 = 256;
 
 /// Pour random vector `v` (derived from `base.split(v)`, bit *i* of the
-/// vector from draw *i* of that stream) into lane `lane` of `words`.
+/// vector from draw *i* of that stream) into lane `lane` of `blocks`.
+/// The derivation is indexed by `(seed, v, i)` only — block width and
+/// lane placement never touch the stream, so every `N` sees identical
+/// vectors.
 #[inline]
-fn pour_vector(base: &XorShift256, v: u64, lane: usize, words: &mut [u64]) {
+fn pour_vector<const N: usize>(base: &XorShift256, v: u64, lane: usize, blocks: &mut [[u64; N]]) {
     let mut rng = base.split(v);
-    for w in words.iter_mut() {
+    let (word, bit) = (lane / 64, lane % 64);
+    for blk in blocks.iter_mut() {
         if rng.next_u64() & 1 == 1 {
-            *w |= 1u64 << lane;
+            blk[word] |= 1u64 << bit;
         }
     }
 }
 
-/// Estimate switching activity over `vectors` random input transitions.
+/// Count the lane-to-lane toggles of one monitored net across the first
+/// `m` lanes of a block, chaining word seams internally and the pass seam
+/// via `prev` (the previous pass's last lane bit; `None` on a chunk's
+/// reference pass). Returns `(toggles, last lane bit)`. Pure integer
+/// arithmetic: the count for a fixed vector sequence is the same however
+/// the lanes are grouped into words and passes.
+#[inline]
+fn block_toggles<const N: usize>(blk: &[u64; N], m: usize, prev: Option<u64>) -> (u64, u64) {
+    let mut toggles = 0u64;
+    let mut prev_bit = prev;
+    let mut done = 0usize;
+    let mut widx = 0usize;
+    while done < m {
+        let lw = (m - done).min(64);
+        let w = blk[widx];
+        let within_mask: u64 = if lw >= 2 { (1u64 << (lw - 1)) - 1 } else { 0 };
+        toggles += (((w ^ (w >> 1)) & within_mask).count_ones()) as u64;
+        if let Some(p) = prev_bit {
+            if (w & 1) != p {
+                toggles += 1; // seam to the previous word / pass
+            }
+        }
+        prev_bit = Some((w >> (lw - 1)) & 1);
+        widx += 1;
+        done += lw;
+    }
+    (toggles, prev_bit.unwrap_or(0))
+}
+
+/// Estimate switching activity over `vectors` random input transitions at
+/// the [`sim::default_block`] width (`RAPID_BLOCK`). Dispatches to
+/// [`estimate_wide`]; the result is contractually identical at every
+/// supported width.
+pub fn estimate(nl: &Netlist, e: &Energies, vectors: usize, seed: u64) -> PowerReport {
+    match sim::default_block() {
+        1 => estimate_wide::<1>(nl, e, vectors, seed),
+        4 => estimate_wide::<4>(nl, e, vectors, seed),
+        _ => estimate_wide::<8>(nl, e, vectors, seed),
+    }
+}
+
+/// [`estimate`] at an explicit block width `N`.
 ///
 /// Transition *t* is counted between vectors *t* and *t + 1* (vector 0 is
 /// the reference). The transition range fans out in [`POWER_CHUNK`]-sized
-/// chunks; a chunk evaluates its vectors in 64-lane passes, counting
-/// within-pass toggles word-wide plus the seam to the previous pass, and
-/// its first vector *is* the previous chunk's last — re-derived locally,
-/// since vectors are indexed, not streamed. Charges merge in chunk order.
-pub fn estimate(nl: &Netlist, e: &Energies, vectors: usize, seed: u64) -> PowerReport {
+/// chunks; a chunk evaluates its vectors in 64·N-lane passes, counting
+/// within-pass toggles word-wide plus the seams between words and passes,
+/// and its first vector *is* the previous chunk's last — re-derived
+/// locally, since vectors are indexed, not streamed. Per-net integer
+/// toggle counts convert to charge once per chunk (monitored-net order),
+/// and charges merge in chunk order: the result is a pure function of
+/// `(netlist, energies, vectors, seed)`.
+pub fn estimate_wide<const N: usize>(
+    nl: &Netlist,
+    e: &Energies,
+    vectors: usize,
+    seed: u64,
+) -> PowerReport {
     let base = XorShift256::new(seed);
     let n_in = nl.inputs.len();
     // monitored nets: (slot, charge per toggle) — every cell output is
     // mapped by the lowering, so the unwraps are total. Slots are a pure
     // function of the netlist, so each worker derives the identical list
     // from its own compile (one compile per worker, none up front).
-    let monitored = |sim: &CompiledNetlist| -> Vec<(u32, f64)> {
+    let monitored = |sim: &BlockSim<N>| -> Vec<(u32, f64)> {
         let mut mon = Vec::new();
         for cell in &nl.cells {
             match cell {
@@ -96,37 +156,41 @@ pub fn estimate(nl: &Netlist, e: &Energies, vectors: usize, seed: u64) -> PowerR
         vectors as u64,
         POWER_CHUNK,
         || {
-            let sim = CompiledNetlist::compile(nl);
+            let sim = BlockSim::<N>::compile(nl);
             let mon = monitored(&sim);
-            (sim, vec![0u64; n_in], mon)
+            let counts = vec![0u64; mon.len()];
+            let last_bits = vec![0u64; mon.len()];
+            (sim, vec![[0u64; N]; n_in], mon, counts, last_bits)
         },
         |state, _c, range| {
-            let (sim, words, mon) = state;
-            let mut chunk_charge = 0.0f64;
-            let mut last_bits: Vec<u64> = vec![0; mon.len()];
+            let (sim, blocks, mon, counts, last_bits) = state;
+            counts.fill(0); // worker state persists across chunks
             let mut have_prev = false;
             // vectors range.start ..= range.end, i.e. the chunk's
             // transitions plus the boundary reference vector
             let mut v = range.start;
             while v <= range.end {
-                let m = ((range.end - v + 1) as usize).min(64);
-                words.fill(0);
-                for lane in 0..m {
-                    pour_vector(&base, v + lane as u64, lane, words);
+                let m = ((range.end - v + 1) as usize).min(64 * N);
+                for blk in blocks.iter_mut() {
+                    *blk = [0u64; N];
                 }
-                sim.eval_words(words);
-                let within_mask: u64 = if m >= 2 { (1u64 << (m - 1)) - 1 } else { 0 };
-                for (j, &(slot, en)) in mon.iter().enumerate() {
-                    let w = sim.slot_word(slot);
-                    let mut toggles = ((w ^ (w >> 1)) & within_mask).count_ones();
-                    if have_prev && (w & 1) != last_bits[j] {
-                        toggles += 1; // seam between passes
-                    }
-                    chunk_charge += toggles as f64 * en;
-                    last_bits[j] = (w >> (m - 1)) & 1;
+                for lane in 0..m {
+                    pour_vector(&base, v + lane as u64, lane, blocks);
+                }
+                sim.eval_blocks(blocks);
+                for (j, &(slot, _)) in mon.iter().enumerate() {
+                    let blk = sim.slot_block(slot);
+                    let prev = if have_prev { Some(last_bits[j]) } else { None };
+                    let (t, last) = block_toggles(&blk, m, prev);
+                    counts[j] += t;
+                    last_bits[j] = last;
                 }
                 have_prev = true;
                 v += m as u64;
+            }
+            let mut chunk_charge = 0.0f64;
+            for (count, &(_, en)) in counts.iter().zip(mon.iter()) {
+                chunk_charge += *count as f64 * en;
             }
             chunk_charge
         },
@@ -178,9 +242,10 @@ mod tests {
         // Re-implement a scalar per-bool walk over the same indexed
         // vector derivation and pin the packed, chunked estimator's
         // toggle arithmetic against it (integer-exact; the f64 charge
-        // sum differs only in association order). The vector counts
-        // straddle the 64-lane pass boundary and the 256-transition
-        // parallel chunk boundary.
+        // sum differs only in association order) — at every supported
+        // block width. The vector counts straddle the lane-pass
+        // boundaries of every width and the 256-transition parallel
+        // chunk boundary.
         let e = Energies {
             lut_toggle: 1.0,
             carry_toggle: 1.0,
@@ -190,7 +255,6 @@ mod tests {
         let nl = binary_adder_netlist(6);
         let n_in = nl.inputs.len();
         for (vectors, seed) in [(1usize, 5u64), (63, 6), (64, 7), (65, 8), (200, 9), (300, 10)] {
-            let packed = estimate(&nl, &e, vectors, seed);
             // scalar reference: vector v from base.split(v), bit i from
             // draw i — the derivation `estimate` documents
             let base = XorShift256::new(seed);
@@ -217,13 +281,33 @@ mod tests {
                 prev = cur;
             }
             let want = toggles as f64 / vectors as f64;
-            assert!(
-                (packed.charge_per_op - want).abs() < 1e-9,
-                "vectors={vectors}: packed {} vs scalar {}",
-                packed.charge_per_op,
-                want
-            );
+            for (width, packed) in [
+                (1usize, estimate_wide::<1>(&nl, &e, vectors, seed)),
+                (4, estimate_wide::<4>(&nl, &e, vectors, seed)),
+                (8, estimate_wide::<8>(&nl, &e, vectors, seed)),
+            ] {
+                assert!(
+                    (packed.charge_per_op - want).abs() < 1e-9,
+                    "vectors={vectors} N={width}: packed {} vs scalar {}",
+                    packed.charge_per_op,
+                    want
+                );
+            }
         }
+    }
+
+    #[test]
+    fn charge_is_block_width_invariant() {
+        // the RAPID_BLOCK analog of the thread pin: 64-, 256- and
+        // 512-lane passes must report the same charge, bit for bit
+        // (integer counts per chunk + fixed conversion order)
+        let e = Energies::default();
+        let nl = binary_adder_netlist(8);
+        let reference = estimate_wide::<1>(&nl, &e, 700, 42);
+        let p4 = estimate_wide::<4>(&nl, &e, 700, 42);
+        let p8 = estimate_wide::<8>(&nl, &e, 700, 42);
+        assert_eq!(p4.charge_per_op.to_bits(), reference.charge_per_op.to_bits(), "N=4");
+        assert_eq!(p8.charge_per_op.to_bits(), reference.charge_per_op.to_bits(), "N=8");
     }
 
     #[test]

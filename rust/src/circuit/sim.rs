@@ -4,11 +4,18 @@
 //! `Vec<bool>` per input vector — fine as the *reference semantics*, far
 //! too slow as the inner loop of exhaustive equivalence sweeps, the
 //! switching-activity power estimator and the pipeline-cut checks.
-//! [`CompiledNetlist`] lowers a netlist once into a flat, topologically
-//! ordered word-op list (cells are already in definition order) over a
-//! dense net→slot remap with constants pre-poured, and then evaluates
-//! **64 input vectors per pass** by bitslicing: every net holds a `u64`
-//! word whose bit *l* is that net's value in lane *l*.
+//! [`BlockSim`] lowers a netlist once into a flat, topologically ordered
+//! word-op list (cells are already in definition order) over a dense
+//! net→slot remap with constants pre-poured, and then evaluates
+//! **64·N input vectors per pass** by bitslicing: every net holds a
+//! `[u64; N]` block whose bit *l* of word *l / 64* is that net's value in
+//! lane *l*. `N` is a const-generic block width (1, 4 or 8 → 64, 256 or
+//! 512 lanes per pass): the op loop is monomorphized per width, so the
+//! fixed-length `[u64; N]` element loops are exactly the shape the
+//! autovectorizer turns into SSE2/AVX2/AVX-512 stores. [`CompiledNetlist`]
+//! is the classic single-word instantiation (`BlockSim<1>`) and keeps the
+//! original 64-lane API; [`default_block`] picks the runtime rung
+//! (`RAPID_BLOCK`, default 4) for the width-dispatched sweep helpers.
 //!
 //! Lowering rules:
 //! * a K-input LUT is Shannon-expanded on its truth table into AND / OR /
@@ -19,10 +26,13 @@
 //!   scalar evaluator).
 //!
 //! The scalar interpreter stays as the one-lane semantic definition; the
-//! compiled engine is pinned bit-identical to it by the exhaustive sweeps
-//! in `rust/tests/netlist_equivalence.rs` and the unit tests below, and
-//! every hot consumer (power, pipeline verification, equivalence tests,
-//! benches) runs on the packed engine.
+//! compiled engine is pinned bit-identical to it — at every block width —
+//! by the exhaustive sweeps in `rust/tests/netlist_equivalence.rs` and the
+//! unit tests below, and every hot consumer (power, pipeline verification,
+//! equivalence tests, benches) runs on the packed engine. Crucially the
+//! parallel chunk decompositions of the sweep helpers are defined in
+//! *pairs*, never in passes, so results (and panic payloads) are
+//! bit-identical at every `(RAPID_BLOCK, RAPID_THREADS)` combination.
 
 use std::collections::HashMap;
 
@@ -31,7 +41,7 @@ use super::primitive::{Cell, Net};
 use crate::util::{par, XorShift256};
 
 /// Dense-slot word operation. `dst`/sources index the state vector; the
-/// op list is the whole program for one 64-lane pass.
+/// op list is the whole program for one 64·N-lane pass.
 #[derive(Clone, Copy, Debug)]
 enum Op {
     Copy { dst: u32, src: u32 },
@@ -53,10 +63,37 @@ const SLOT_ZERO: u32 = 0;
 const SLOT_ONES: u32 = 1;
 const UNMAPPED: u32 = u32::MAX;
 
-/// A netlist lowered once for bit-parallel evaluation; see module docs.
-pub struct CompiledNetlist {
+/// The widest supported block (N = 8 → 512 lanes): sizes the by-value
+/// scratch buffers of the sweep helpers so they stay allocation-free at
+/// every rung.
+pub const MAX_BLOCK_LANES: usize = 512;
+
+/// Runtime block-width rung for the width-dispatched consumers
+/// ([`assert_exhaustive_pairs`], [`assert_pairs`], the power estimator,
+/// emit's vector oracle, the bench sweeps): the `RAPID_BLOCK` environment
+/// variable, which must be 1, 4 or 8 (vectors per pass = 64·N). Defaults
+/// to 4 (256 lanes — the AVX2 sweet spot). Like `RAPID_THREADS` this knob
+/// only trades wall-clock: every consumer is contractually bit-identical
+/// across rungs (`tests/netlist_equivalence.rs`, `tests/par_determinism.rs`).
+pub fn default_block() -> usize {
+    match std::env::var("RAPID_BLOCK") {
+        Ok(s) => match s.trim() {
+            "1" => 1,
+            "4" => 4,
+            "8" => 8,
+            other => panic!("RAPID_BLOCK={other:?}: supported block widths are 1, 4 and 8"),
+        },
+        Err(_) => 4,
+    }
+}
+
+/// A netlist lowered once for bit-parallel evaluation at const-generic
+/// block width `N` (64·N lanes per pass); see module docs.
+/// [`CompiledNetlist`] = `BlockSim<1>` is the plain-`u64` instantiation.
+pub struct BlockSim<const N: usize> {
     name: String,
-    /// per-pass initial state: constants poured, everything else zero
+    /// per-pass initial state template: constants poured, everything else
+    /// zero; broadcast across the block words of each slot at pass start
     init: Vec<u64>,
     ops: Vec<Op>,
     input_slots: Vec<u32>,
@@ -64,26 +101,46 @@ pub struct CompiledNetlist {
     /// original net id → slot (`UNMAPPED` for nets no cell/IO touches)
     net_slots: Vec<u32>,
     /// scratch state of the last pass
-    state: Vec<u64>,
-    out_buf: Vec<u64>,
-    in_buf: Vec<u64>,
+    state: Vec<[u64; N]>,
+    out_buf: Vec<[u64; N]>,
+    in_buf: Vec<[u64; N]>,
+    /// flattened single-word output view (`eval_words`, N = 1 only)
+    word_buf: Vec<u64>,
     lane_buf: Vec<u128>,
+}
+
+/// The original single-word engine: one `u64` per net, 64 vectors per
+/// pass. Every 64-lane consumer (`eval_words`, `equivalent_random`, the
+/// pipeliner's self-check) keeps this exact type; the wider rungs are
+/// [`BlockSim`]`::<4>` / `::<8>`.
+pub type CompiledNetlist = BlockSim<1>;
+
+/// Enumerate `a.len()` consecutive operand pairs of an exhaustive sweep
+/// starting at pair index `first_pair`: pair index splits into its low
+/// `bits_a` bits (first operand) and the rest (second operand). The
+/// block-width-generic core of [`pair_chunk`]: callers hand it a slice of
+/// any lane count (64·N for the wide sweeps), so the mask/shift arithmetic
+/// lives in one place at every rung.
+pub fn pair_lanes(first_pair: u64, bits_a: u32, a: &mut [u64], b: &mut [u64]) {
+    assert!(bits_a >= 1 && bits_a < 64, "pair_lanes: bits_a {bits_a} (want 1..=63)");
+    assert_eq!(a.len(), b.len(), "pair_lanes: lane buffers must match");
+    let mask = (1u64 << bits_a) - 1;
+    for (l, (av, bv)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+        let p = first_pair + l as u64;
+        *av = p & mask;
+        *bv = p >> bits_a;
+    }
 }
 
 /// Enumerate the 64 consecutive operand pairs of an exhaustive sweep:
 /// pair index `chunk*64 + lane` splits into its low `bits_a` bits (first
-/// operand) and the rest (second operand). Shared by every packed
-/// full-pair-space sweep so the mask/shift arithmetic lives in one place;
-/// returns arrays by value so hot sweep loops stay allocation-free.
+/// operand) and the rest (second operand). The classic one-word chunk of
+/// [`pair_lanes`]; returns arrays by value so hot sweep loops stay
+/// allocation-free.
 pub fn pair_chunk(chunk: u64, bits_a: u32) -> ([u64; 64], [u64; 64]) {
-    assert!(bits_a >= 1 && bits_a < 64, "pair_chunk: bits_a {bits_a} (want 1..=63)");
-    let mask = (1u64 << bits_a) - 1;
     let mut a = [0u64; 64];
     let mut b = [0u64; 64];
-    for l in 0..64u64 {
-        a[l as usize] = (chunk * 64 + l) & mask;
-        b[l as usize] = (chunk * 64 + l) >> bits_a;
-    }
+    pair_lanes(chunk * 64, bits_a, &mut a, &mut b);
     (a, b)
 }
 
@@ -92,14 +149,16 @@ pub fn pair_chunk(chunk: u64, bits_a: u32) -> ([u64; 64], [u64; 64]) {
 pub type PairOracle<'a> = &'a (dyn Fn(u64, u64) -> u128 + Sync);
 
 /// 64-lane passes per parallel task in the sweep helpers (64 Ki pairs):
-/// coarse enough to amortise one `CompiledNetlist::compile` per worker,
-/// fixed so the task decomposition never depends on the thread count.
+/// coarse enough to amortise one `BlockSim::compile` per worker, fixed so
+/// the task decomposition never depends on the thread count — or on the
+/// block width (tasks are defined in pairs; a wider block only changes how
+/// many lanes one `eval_lanes` call carries *inside* a task).
 const SWEEP_TASK_PASSES: u64 = 1024;
 
 /// One packed pass of `check`: every lane of `(a, b)` against `want`.
-fn check_lanes(
+fn check_lanes<const N: usize>(
     nl: &Netlist,
-    sim: &mut CompiledNetlist,
+    sim: &mut BlockSim<N>,
     widths: [u32; 2],
     a: &[u64],
     b: &[u64],
@@ -136,13 +195,31 @@ fn scalar_stride_recheck(
 }
 
 /// Sweep an explicit operand-pair list through the compiled engine in
-/// 64-lane passes, asserting every pair against `want`; additionally
-/// re-check every `scalar_stride`-th pair on the scalar interpreter
-/// (0 = skip). Shared by the sampled integration sweeps. The pair list
-/// splits into [`SWEEP_TASK_PASSES`]-pass parallel tasks, each worker
-/// compiling its own engine instance; pass/fail and panic messages are
-/// identical at every thread count (a pure pair-indexed assertion).
+/// 64-lane passes at the [`default_block`] width, asserting every pair
+/// against `want`; additionally re-check every `scalar_stride`-th pair on
+/// the scalar interpreter (0 = skip). Shared by the sampled integration
+/// sweeps; dispatches to [`assert_pairs_wide`].
 pub fn assert_pairs(
+    nl: &Netlist,
+    widths: [u32; 2],
+    pairs: &[(u64, u64)],
+    scalar_stride: usize,
+    want: PairOracle,
+) {
+    match default_block() {
+        1 => assert_pairs_wide::<1>(nl, widths, pairs, scalar_stride, want),
+        4 => assert_pairs_wide::<4>(nl, widths, pairs, scalar_stride, want),
+        _ => assert_pairs_wide::<8>(nl, widths, pairs, scalar_stride, want),
+    }
+}
+
+/// [`assert_pairs`] at an explicit block width `N`: the pair list splits
+/// into [`SWEEP_TASK_PASSES`]·64-**pair** parallel tasks (each worker
+/// compiling its own engine instance), and within a task lanes flow
+/// through `eval_lanes` 64·N at a time. Pass/fail and panic messages are
+/// identical at every thread count *and* block width (a pure pair-indexed
+/// assertion over a pair-defined decomposition).
+pub fn assert_pairs_wide<const N: usize>(
     nl: &Netlist,
     widths: [u32; 2],
     pairs: &[(u64, u64)],
@@ -152,10 +229,10 @@ pub fn assert_pairs(
     par::par_chunks_init(
         pairs.len() as u64,
         SWEEP_TASK_PASSES * 64,
-        || CompiledNetlist::compile(nl),
+        || BlockSim::<N>::compile(nl),
         |sim, _t, range| {
-            for chunk in pairs[range.start as usize..range.end as usize].chunks(64) {
-                let (mut a, mut b) = ([0u64; 64], [0u64; 64]);
+            for chunk in pairs[range.start as usize..range.end as usize].chunks(64 * N) {
+                let (mut a, mut b) = ([0u64; MAX_BLOCK_LANES], [0u64; MAX_BLOCK_LANES]);
                 for (l, &(av, bv)) in chunk.iter().enumerate() {
                     a[l] = av;
                     b[l] = bv;
@@ -168,16 +245,34 @@ pub fn assert_pairs(
 }
 
 /// Exhaustively sweep the full `widths[0] + widths[1]`-bit pair space of
-/// `nl` on the compiled engine (64 pairs per pass via [`pair_chunk`],
-/// allocation-free), asserting every pair against `want`; additionally
-/// re-check every `scalar_stride`-th pair on the scalar interpreter
-/// (0 = skip). Shared by the builder unit tests and the integration
-/// equivalence suite so the sweep arithmetic exists exactly once. The
-/// pass space shards into [`SWEEP_TASK_PASSES`]-pass parallel tasks
-/// (one compiled engine per worker) — this is what makes the full
-/// 2^24-pair divider sweeps in `table3_div` and the 65 536-pair
-/// registry sweeps in `tests/netlist_equivalence.rs` scale with cores.
+/// `nl` on the compiled engine at the [`default_block`] width (via
+/// [`pair_lanes`], allocation-free), asserting every pair against `want`;
+/// additionally re-check every `scalar_stride`-th pair on the scalar
+/// interpreter (0 = skip). Shared by the builder unit tests and the
+/// integration equivalence suite so the sweep arithmetic exists exactly
+/// once; dispatches to [`assert_exhaustive_pairs_wide`].
 pub fn assert_exhaustive_pairs(
+    nl: &Netlist,
+    widths: [u32; 2],
+    scalar_stride: usize,
+    want: PairOracle,
+) {
+    match default_block() {
+        1 => assert_exhaustive_pairs_wide::<1>(nl, widths, scalar_stride, want),
+        4 => assert_exhaustive_pairs_wide::<4>(nl, widths, scalar_stride, want),
+        _ => assert_exhaustive_pairs_wide::<8>(nl, widths, scalar_stride, want),
+    }
+}
+
+/// [`assert_exhaustive_pairs`] at an explicit block width `N`. The pass
+/// space shards into [`SWEEP_TASK_PASSES`]-pass parallel tasks (one
+/// compiled engine per worker) — this is what makes the full 2^24-pair
+/// divider sweeps in `table3_div` and the 65 536-pair registry sweeps in
+/// `tests/netlist_equivalence.rs` scale with cores; inside a task, up to
+/// `N` consecutive 64-lane chunks ride one `eval_lanes` call, so the task
+/// decomposition (and every panic payload) is block-width-invariant while
+/// the inner loop gets the wide-block speedup.
+pub fn assert_exhaustive_pairs_wide<const N: usize>(
     nl: &Netlist,
     widths: [u32; 2],
     scalar_stride: usize,
@@ -188,11 +283,16 @@ pub fn assert_exhaustive_pairs(
     par::par_chunks_init(
         1u64 << (total - 6),
         SWEEP_TASK_PASSES,
-        || CompiledNetlist::compile(nl),
+        || BlockSim::<N>::compile(nl),
         |sim, _t, range| {
-            for chunk in range {
-                let (a, b) = pair_chunk(chunk, widths[0]);
-                check_lanes(nl, sim, widths, &a, &b, want);
+            let (mut a, mut b) = ([0u64; MAX_BLOCK_LANES], [0u64; MAX_BLOCK_LANES]);
+            let mut chunk = range.start;
+            while chunk < range.end {
+                let take = ((range.end - chunk) as usize).min(N);
+                let lanes = take * 64;
+                pair_lanes(chunk * 64, widths[0], &mut a[..lanes], &mut b[..lanes]);
+                check_lanes(nl, sim, widths, &a[..lanes], &b[..lanes], want);
+                chunk += take as u64;
             }
         },
     );
@@ -201,10 +301,11 @@ pub fn assert_exhaustive_pairs(
     scalar_stride_recheck(nl, widths, scalar_stride, every_pair, want);
 }
 
-impl CompiledNetlist {
+impl<const N: usize> BlockSim<N> {
     /// Lower `nl` into the word-op program. The cell list must be in
     /// definition order (builders guarantee it — the same invariant the
-    /// scalar evaluator relies on).
+    /// scalar evaluator relies on). The program is width-independent; only
+    /// the state element type (`[u64; N]`) changes per instantiation.
     pub fn compile(nl: &Netlist) -> Self {
         let mut b = Builder {
             consts: nl.consts.iter().cloned().collect(),
@@ -274,12 +375,13 @@ impl CompiledNetlist {
 
         let n_slots = b.temp_base as usize + b.max_temps as usize;
         b.init.resize(n_slots, 0);
-        CompiledNetlist {
+        BlockSim {
             name: nl.name.clone(),
-            state: vec![0u64; n_slots],
+            state: vec![[0u64; N]; n_slots],
             out_buf: Vec::with_capacity(output_slots.len()),
             in_buf: Vec::with_capacity(input_slots.len()),
-            lane_buf: Vec::with_capacity(64),
+            word_buf: Vec::with_capacity(output_slots.len()),
+            lane_buf: Vec::with_capacity(64 * N),
             init: b.init,
             ops: b.ops,
             input_slots,
@@ -288,17 +390,17 @@ impl CompiledNetlist {
         }
     }
 
-    /// Input bit count (one word per input bit in [`Self::eval_words`]).
+    /// Input bit count (one block per input bit in [`Self::eval_blocks`]).
     pub fn n_inputs(&self) -> usize {
         self.input_slots.len()
     }
 
-    /// Output bit count (one word per output bit per pass).
+    /// Output bit count (one block per output bit per pass).
     pub fn n_outputs(&self) -> usize {
         self.output_slots.len()
     }
 
-    /// Word ops per 64-lane pass (the compiled program length).
+    /// Word ops per 64·N-lane pass (the compiled program length).
     pub fn op_count(&self) -> usize {
         self.ops.len()
     }
@@ -311,49 +413,83 @@ impl CompiledNetlist {
             .filter(|&s| s != UNMAPPED)
     }
 
-    /// State word of a slot after the last pass (bit *l* = lane *l*).
-    pub fn slot_word(&self, slot: u32) -> u64 {
+    /// State block of a slot after the last pass (bit *l* of word *l / 64*
+    /// = lane *l*).
+    pub fn slot_block(&self, slot: u32) -> [u64; N] {
         self.state[slot as usize]
     }
 
-    /// Run one 64-lane pass. `in_words[i]` carries input bit `i` across
-    /// all 64 lanes; the returned slice holds one word per output bit.
-    /// Zero allocation after the first call.
-    pub fn eval_words(&mut self, in_words: &[u64]) -> &[u64] {
+    /// Run one 64·N-lane pass. `in_blocks[i]` carries input bit `i`
+    /// across all lanes; the returned slice holds one block per output
+    /// bit. Zero allocation after the first call. The per-op inner loops
+    /// are fixed-length `[u64; N]` element walks — the monomorphized shape
+    /// the autovectorizer widens to AVX2 (N = 4) / AVX-512 (N = 8).
+    pub fn eval_blocks(&mut self, in_blocks: &[[u64; N]]) -> &[[u64; N]] {
         assert_eq!(
-            in_words.len(),
+            in_blocks.len(),
             self.input_slots.len(),
-            "{}: input word arity mismatch",
+            "{}: input block arity mismatch",
             self.name
         );
-        self.state.copy_from_slice(&self.init);
-        for (slot, w) in self.input_slots.iter().zip(in_words) {
-            self.state[*slot as usize] = *w;
+        for (s, &w) in self.state.iter_mut().zip(&self.init) {
+            *s = [w; N];
+        }
+        for (slot, blk) in self.input_slots.iter().zip(in_blocks) {
+            self.state[*slot as usize] = *blk;
         }
         let state = &mut self.state;
         for op in &self.ops {
             match *op {
                 Op::Copy { dst, src } => state[dst as usize] = state[src as usize],
-                Op::Not { dst, a } => state[dst as usize] = !state[a as usize],
+                Op::Not { dst, a } => {
+                    let av = state[a as usize];
+                    let d = &mut state[dst as usize];
+                    for i in 0..N {
+                        d[i] = !av[i];
+                    }
+                }
                 Op::And { dst, a, b } => {
-                    state[dst as usize] = state[a as usize] & state[b as usize]
+                    let (av, bv) = (state[a as usize], state[b as usize]);
+                    let d = &mut state[dst as usize];
+                    for i in 0..N {
+                        d[i] = av[i] & bv[i];
+                    }
                 }
                 Op::AndNot { dst, a, b } => {
-                    state[dst as usize] = state[a as usize] & !state[b as usize]
+                    let (av, bv) = (state[a as usize], state[b as usize]);
+                    let d = &mut state[dst as usize];
+                    for i in 0..N {
+                        d[i] = av[i] & !bv[i];
+                    }
                 }
                 Op::Or { dst, a, b } => {
-                    state[dst as usize] = state[a as usize] | state[b as usize]
+                    let (av, bv) = (state[a as usize], state[b as usize]);
+                    let d = &mut state[dst as usize];
+                    for i in 0..N {
+                        d[i] = av[i] | bv[i];
+                    }
                 }
                 Op::OrNot { dst, a, b } => {
-                    state[dst as usize] = state[a as usize] | !state[b as usize]
+                    let (av, bv) = (state[a as usize], state[b as usize]);
+                    let d = &mut state[dst as usize];
+                    for i in 0..N {
+                        d[i] = av[i] | !bv[i];
+                    }
                 }
                 Op::Xor { dst, a, b } => {
-                    state[dst as usize] = state[a as usize] ^ state[b as usize]
+                    let (av, bv) = (state[a as usize], state[b as usize]);
+                    let d = &mut state[dst as usize];
+                    for i in 0..N {
+                        d[i] = av[i] ^ bv[i];
+                    }
                 }
                 Op::Mux { dst, s, hi, lo } => {
-                    let sv = state[s as usize];
-                    state[dst as usize] =
-                        (sv & state[hi as usize]) | (!sv & state[lo as usize]);
+                    let (sv, hv, lv) =
+                        (state[s as usize], state[hi as usize], state[lo as usize]);
+                    let d = &mut state[dst as usize];
+                    for i in 0..N {
+                        d[i] = (sv[i] & hv[i]) | (!sv[i] & lv[i]);
+                    }
                 }
             }
         }
@@ -364,61 +500,106 @@ impl CompiledNetlist {
         &self.out_buf
     }
 
-    /// Evaluate up to 64 lanes of integer operands in one pass.
+    /// Evaluate up to 64·N lanes of integer operands in one pass.
     /// `buses[i]` holds bus `i`'s value per lane (LSB-first packing, buses
     /// in declaration order — the batched mirror of
     /// `Netlist::pack_inputs`). Returns the output bits of each lane as a
     /// `u128`, like `Netlist::eval_outputs`. Zero allocation after the
-    /// first call (both transpose buffers live on `self`).
+    /// first call (both transpose buffers live on `self`). Guard messages
+    /// name the engine as `name[block=N]` so a failing wide sweep
+    /// identifies its rung.
     pub fn eval_lanes(&mut self, widths: &[u32], buses: &[&[u64]]) -> &[u128] {
-        // only the u128 lane packing needs this bound — word-level
-        // consumers (eval_words, power, equivalent_random) have none
+        // only the u128 lane packing needs this bound — block-level
+        // consumers (eval_blocks, power, equivalent_random) have none
         assert!(
             self.output_slots.len() <= 128,
-            "{}: {} output bits exceed the 128-bit lane window",
+            "{}[block={N}]: {} output bits exceed the 128-bit lane window",
             self.name,
             self.output_slots.len()
         );
-        assert_eq!(widths.len(), buses.len(), "{}: bus arity mismatch", self.name);
+        assert_eq!(widths.len(), buses.len(), "{}[block={N}]: bus arity mismatch", self.name);
         let lanes = buses.first().map_or(0, |b| b.len());
-        assert!(lanes >= 1 && lanes <= 64, "{}: {lanes} lanes (want 1..=64)", self.name);
+        let max_lanes = 64 * N;
+        assert!(
+            lanes >= 1 && lanes <= max_lanes,
+            "{}[block={N}]: {lanes} lanes (want 1..={max_lanes})",
+            self.name
+        );
         let total: u32 = widths.iter().sum();
         assert_eq!(
             total as usize,
             self.input_slots.len(),
-            "{}: input arity mismatch",
+            "{}[block={N}]: input arity mismatch",
             self.name
         );
-        let mut words = std::mem::take(&mut self.in_buf);
-        words.clear();
-        words.resize(self.input_slots.len(), 0);
+        let mut blocks = std::mem::take(&mut self.in_buf);
+        blocks.clear();
+        blocks.resize(self.input_slots.len(), [0u64; N]);
         let mut base = 0usize;
         for (bi, (w, bus)) in widths.iter().zip(buses).enumerate() {
-            assert_eq!(bus.len(), lanes, "{}: bus {bi} lane count mismatch", self.name);
-            assert!(*w <= 64, "{}: bus {bi} is {w} bits wide (max 64)", self.name);
+            assert_eq!(
+                bus.len(),
+                lanes,
+                "{}[block={N}]: bus {bi} lane count mismatch",
+                self.name
+            );
+            assert!(*w <= 64, "{}[block={N}]: bus {bi} is {w} bits wide (max 64)", self.name);
             for (lane, &val) in bus.iter().enumerate() {
                 assert!(
                     *w == 64 || val >> *w == 0,
-                    "{}: value {val:#x} exceeds the {w}-bit bus {bi}",
+                    "{}[block={N}]: value {val:#x} exceeds the {w}-bit bus {bi}",
                     self.name
                 );
+                let (word, bit) = (lane / 64, lane % 64);
                 for i in 0..*w as usize {
-                    words[base + i] |= ((val >> i) & 1) << lane;
+                    blocks[base + i][word] |= ((val >> i) & 1) << bit;
                 }
             }
             base += *w as usize;
         }
-        self.eval_words(&words);
-        self.in_buf = words;
+        self.eval_blocks(&blocks);
+        self.in_buf = blocks;
         self.lane_buf.clear();
         self.lane_buf.resize(lanes, 0);
         for (oi, &slot) in self.output_slots.iter().enumerate() {
-            let w = self.state[slot as usize];
+            let blk = self.state[slot as usize];
             for (lane, o) in self.lane_buf.iter_mut().enumerate() {
-                *o |= (((w >> lane) & 1) as u128) << oi;
+                *o |= (((blk[lane / 64] >> (lane % 64)) & 1) as u128) << oi;
             }
         }
         &self.lane_buf
+    }
+}
+
+impl CompiledNetlist {
+    /// State word of a slot after the last pass (bit *l* = lane *l*) —
+    /// the single-word view of [`BlockSim::slot_block`].
+    pub fn slot_word(&self, slot: u32) -> u64 {
+        self.state[slot as usize][0]
+    }
+
+    /// Run one 64-lane pass. `in_words[i]` carries input bit `i` across
+    /// all 64 lanes; the returned slice holds one word per output bit.
+    /// Zero allocation after the first call. (The N = 1 convenience over
+    /// [`BlockSim::eval_blocks`] — kept as the interface of every
+    /// word-at-a-time consumer.)
+    pub fn eval_words(&mut self, in_words: &[u64]) -> &[u64] {
+        assert_eq!(
+            in_words.len(),
+            self.input_slots.len(),
+            "{}: input word arity mismatch",
+            self.name
+        );
+        let mut blocks = std::mem::take(&mut self.in_buf);
+        blocks.clear();
+        blocks.extend(in_words.iter().map(|&w| [w]));
+        self.eval_blocks(&blocks);
+        self.in_buf = blocks;
+        self.word_buf.clear();
+        for &slot in &self.output_slots {
+            self.word_buf.push(self.state[slot as usize][0]);
+        }
+        &self.word_buf
     }
 }
 
@@ -551,7 +732,9 @@ const EQ_CHUNK_PASSES: u64 = 8;
 /// order, which keeps the reported counterexample deterministic under
 /// parallel execution. Pass chunks shard across workers (each compiling
 /// its own engine pair); small `passes` counts (the pipeliner's debug
-/// check uses 4) stay on the calling thread.
+/// check uses 4) stay on the calling thread. Stays on the single-word
+/// engine: its pass/lane indexing is part of the stable mismatch-message
+/// contract.
 pub fn equivalent_random(a: &Netlist, b: &Netlist, passes: usize, seed: u64) -> Result<(), String> {
     assert_eq!(a.inputs.len(), b.inputs.len(), "{} vs {}: input arity", a.name, b.name);
     assert_eq!(a.outputs.len(), b.outputs.len(), "{} vs {}: output arity", a.name, b.name);
@@ -678,6 +861,41 @@ mod tests {
     }
 
     #[test]
+    fn wide_blocks_match_scalar_on_adder_exhaustive() {
+        // the same full pair space explicitly at every block rung — the
+        // unit-scale pin that 256- and 512-lane passes change nothing
+        let nl = binary_adder_netlist(8);
+        let want = |a: u64, b: u64| (a + b) as u128;
+        assert_exhaustive_pairs_wide::<1>(&nl, [8, 8], 0, &want);
+        assert_exhaustive_pairs_wide::<4>(&nl, [8, 8], 0, &want);
+        assert_exhaustive_pairs_wide::<8>(&nl, [8, 8], 0, &want);
+    }
+
+    #[test]
+    fn wide_eval_lanes_matches_narrow_on_partial_blocks() {
+        // lane counts that straddle the word seams of a block (63, 64,
+        // 65, 200, 256) — wide engines must agree with the 64-lane one
+        // lane for lane, including ragged tails
+        let nl = binary_adder_netlist(8);
+        let mut s1 = BlockSim::<1>::compile(&nl);
+        let mut s4 = BlockSim::<4>::compile(&nl);
+        let mut s8 = BlockSim::<8>::compile(&nl);
+        let mut rng = XorShift256::new(0xB10C);
+        for lanes in [1usize, 63, 64, 65, 200, 256] {
+            let a: Vec<u64> = (0..lanes).map(|_| rng.bits(8)).collect();
+            let b: Vec<u64> = (0..lanes).map(|_| rng.bits(8)).collect();
+            let want: Vec<u128> = a.iter().zip(&b).map(|(&x, &y)| (x + y) as u128).collect();
+            let got4 = s4.eval_lanes(&[8, 8], &[&a, &b]).to_vec();
+            assert_eq!(got4, want, "N=4 lanes={lanes}");
+            let got8 = s8.eval_lanes(&[8, 8], &[&a, &b]).to_vec();
+            assert_eq!(got8, want, "N=8 lanes={lanes}");
+            if lanes <= 64 {
+                assert_eq!(s1.eval_lanes(&[8, 8], &[&a, &b]).to_vec(), want, "N=1");
+            }
+        }
+    }
+
+    #[test]
     fn carry_and_ff_lowering_matches_scalar() {
         // carry chain + FFs + constants in one netlist
         let mut nl = Netlist::new("mix");
@@ -730,6 +948,25 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "[block=4]: value 0x100 exceeds the 8-bit bus")]
+    fn wide_eval_lanes_rejects_oversized_values_and_names_the_block() {
+        // the wide path's guard carries the block width next to the
+        // netlist name, so a failing RAPID_BLOCK=4 sweep says which rung
+        let nl = binary_adder_netlist(8);
+        let mut sim = BlockSim::<4>::compile(&nl);
+        sim.eval_lanes(&[8, 8], &[&[256], &[1]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "lanes (want 1..=256)")]
+    fn wide_eval_lanes_rejects_lane_overflow_per_rung() {
+        let nl = binary_adder_netlist(8);
+        let mut sim = BlockSim::<4>::compile(&nl);
+        let a = vec![0u64; 257];
+        sim.eval_lanes(&[8, 8], &[&a, &a]);
+    }
+
+    #[test]
     #[should_panic(expected = "128-bit lane window")]
     fn eval_lanes_rejects_more_than_128_outputs() {
         let mut nl = Netlist::new("wide");
@@ -740,6 +977,22 @@ mod tests {
         assert_eq!(sim.eval_words(&[0u64; 129]).len(), 129);
         // ...only the u128 lane packing does
         sim.eval_lanes(&[43, 43, 43], &[&[0], &[0], &[0]]);
+    }
+
+    #[test]
+    fn pair_lanes_matches_pair_chunk() {
+        let (a, b) = pair_chunk(37, 8);
+        let (mut aw, mut bw) = ([0u64; 256], [0u64; 256]);
+        pair_lanes(36 * 64, 8, &mut aw, &mut bw);
+        // pair_chunk(37) is the second 64-lane window of the 256-lane span
+        assert_eq!(&aw[64..128], &a[..]);
+        assert_eq!(&bw[64..128], &b[..]);
+    }
+
+    #[test]
+    fn default_block_is_a_supported_rung() {
+        // whatever the environment says, dispatch must land on 1/4/8
+        assert!(matches!(default_block(), 1 | 4 | 8));
     }
 
     #[test]

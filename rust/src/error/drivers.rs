@@ -46,7 +46,12 @@ impl Default for CharacterizeOpts {
 /// Lane count per `mul_batch`/`div_batch` call in the sweep loops: large
 /// enough to amortise the per-batch virtual dispatch and let the unit's
 /// specialized loop unroll, small enough that the three operand/result
-/// buffers stay in L1.
+/// buffers stay in L1. This staging is also where the sub-word SWAR
+/// packing ([`crate::arith::swar`]) kicks in transitively: the hot units'
+/// batch overrides pack 4×8-bit / 2×16-bit operands per machine word, so
+/// the drivers get the packed speedup without knowing it exists — and
+/// `tests/par_determinism.rs` pins every reported metric bit-identical to
+/// a forced-scalar wrapper.
 const BATCH_CHUNK: usize = 4096;
 
 /// Pair/sample indices per parallel chunk. Fixed (never derived from the

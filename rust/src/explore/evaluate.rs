@@ -13,6 +13,13 @@
 //! avoiding oversubscription; the per-candidate results are a pure
 //! function of the candidate and the options, making the whole
 //! evaluation bit-identical at any `RAPID_THREADS`.
+//!
+//! The hot inner legs ride the wide engines transitively: accuracy
+//! characterisation stages operands through the units' batched entry
+//! points (where the sub-word SWAR packing lives), and the power leg's
+//! `circuit::report::characterize` call runs the block bitslice engine at
+//! the `RAPID_BLOCK` width. Both are pinned bit-identical across widths,
+//! so exploration verdicts never depend on the simulation rung.
 
 use crate::arith::registry::{make_div, make_mul};
 use crate::circuit::report::{characterize, UnitReport};

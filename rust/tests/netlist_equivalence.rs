@@ -13,10 +13,11 @@
 use rapid::arith::registry::{div_names, make_div, make_mul, mul_names};
 use rapid::circuit::pipeline::pipeline;
 use rapid::circuit::primitive::Delays;
-use rapid::circuit::sim::{assert_exhaustive_pairs, assert_pairs};
+use rapid::circuit::sim::{assert_exhaustive_pairs, assert_exhaustive_pairs_wide, assert_pairs};
 use rapid::circuit::synth::divider::rapid_div_netlist;
 use rapid::circuit::synth::multiplier::rapid_mul_netlist;
 use rapid::circuit::synth::{netlist_for_div, netlist_for_mul};
+use rapid::util::par;
 use rapid::util::XorShift256;
 
 fn random_pairs(count: usize, bits_a: u32, bits_b: u32, seed: u64) -> Vec<(u64, u64)> {
@@ -152,6 +153,37 @@ fn div_netlist_16bit_spot() {
     assert_pairs(&nl, [32, 16], &pairs, 64, &want);
     let p = pipeline(&nl, 3, &d);
     assert_pairs(&p.netlist, [32, 16], &pairs, 512, &want);
+}
+
+#[test]
+fn block_width_thread_matrix_full_pair_space() {
+    // The block-width rungs of the compiled engine ({N=1, 4, 8} — 64-,
+    // 256- and 512-lane passes) crossed with worker counts {1, 4}: the
+    // full 65 536-pair mul8 space and the full 4 096-pair div4 space
+    // (b = 0 and the overflow region included) must pass the exhaustive
+    // equivalence sweep on every (N, threads) cell. Scalar stride 0 —
+    // the compiled-vs-model verdict is the thing pinned here; the
+    // scalar cross-check has its own full-stride sweeps above. Width is
+    // forced through `assert_exhaustive_pairs_wide` (the scoped analog
+    // of RAPID_BLOCK), thread count through `par::with_threads`, so the
+    // matrix is independent of the process environment; CI additionally
+    // runs this suite under RAPID_BLOCK ∈ {1, 8} end-to-end.
+    let mul_nl = rapid_mul_netlist(8, 10);
+    let mul = make_mul("rapid10", 8).unwrap();
+    let want_mul = |a: u64, b: u64| mul.mul(a, b) as u128;
+    let div_nl = rapid_div_netlist(4, 9);
+    let div = make_div("rapid9", 4).unwrap();
+    let want_div = |a: u64, b: u64| div.div(a, b) as u128;
+    for t in [1usize, 4] {
+        par::with_threads(t, || {
+            assert_exhaustive_pairs_wide::<1>(&mul_nl, [8, 8], 0, &want_mul);
+            assert_exhaustive_pairs_wide::<4>(&mul_nl, [8, 8], 0, &want_mul);
+            assert_exhaustive_pairs_wide::<8>(&mul_nl, [8, 8], 0, &want_mul);
+            assert_exhaustive_pairs_wide::<1>(&div_nl, [8, 4], 0, &want_div);
+            assert_exhaustive_pairs_wide::<4>(&div_nl, [8, 4], 0, &want_div);
+            assert_exhaustive_pairs_wide::<8>(&div_nl, [8, 4], 0, &want_div);
+        });
+    }
 }
 
 #[test]

@@ -12,6 +12,7 @@ use rapid::apps::harris;
 use rapid::apps::images::aerial_scene;
 use rapid::apps::jpeg;
 use rapid::arith::registry::{make_div, make_mul};
+use rapid::arith::{ApproxDiv, ApproxMul, DivUnit, MulUnit};
 use rapid::circuit::power;
 use rapid::circuit::primitive::{Cell, Energies};
 use rapid::circuit::sim::equivalent_random;
@@ -92,6 +93,112 @@ fn power_toggle_charges_are_thread_invariant() {
             assert_eq!(p.clock_charge.to_bits(), p0.clock_charge.to_bits(), "{} t={t}", nl.name);
         }
     }
+}
+
+#[test]
+fn power_charges_are_block_width_and_thread_invariant() {
+    // the same Table III power loop on the explicit-width entry point:
+    // charges must be bit-identical across the whole {N = 1, 4, 8} ×
+    // {1, 2, 7 workers} matrix, because the toggle counts are summed as
+    // integers per 256-transition chunk and handed to the accumulator in
+    // chunk order — the block width only sets how many vectors ride one
+    // eval pass, never where a chunk begins.
+    let e = Energies::default();
+    for (nl, vectors, seed) in [
+        (rapid_mul_netlist(16, 10), 1024usize, 11u64),
+        (rapid_div_netlist(8, 9), 700, 12),
+    ] {
+        let base = par::with_threads(1, || power::estimate_wide::<1>(&nl, &e, vectors, seed));
+        for &t in &THREADS {
+            for (n, p) in [
+                (1usize, par::with_threads(t, || power::estimate_wide::<1>(&nl, &e, vectors, seed))),
+                (4, par::with_threads(t, || power::estimate_wide::<4>(&nl, &e, vectors, seed))),
+                (8, par::with_threads(t, || power::estimate_wide::<8>(&nl, &e, vectors, seed))),
+            ] {
+                assert_eq!(
+                    p.charge_per_op.to_bits(),
+                    base.charge_per_op.to_bits(),
+                    "{} N={n} t={t}",
+                    nl.name
+                );
+                assert_eq!(
+                    p.clock_charge.to_bits(),
+                    base.clock_charge.to_bits(),
+                    "{} N={n} t={t}",
+                    nl.name
+                );
+            }
+        }
+    }
+}
+
+/// A registry multiplier stripped of its batch override: the trait's
+/// default `mul_batch` walks the scalar entry point, so characterizing
+/// through this wrapper measures the scalar kernel everywhere the real
+/// unit's batch path takes the packed SWAR sub-word lanes.
+struct ScalarOnlyMul(MulUnit);
+impl ApproxMul for ScalarOnlyMul {
+    fn width(&self) -> u32 {
+        self.0.width()
+    }
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        self.0.mul(a, b)
+    }
+    fn name(&self) -> String {
+        self.0.name()
+    }
+}
+
+/// Divider analog of [`ScalarOnlyMul`].
+struct ScalarOnlyDiv(DivUnit);
+impl ApproxDiv for ScalarOnlyDiv {
+    fn divisor_width(&self) -> u32 {
+        self.0.divisor_width()
+    }
+    fn div(&self, a: u64, b: u64) -> u64 {
+        self.0.div(a, b)
+    }
+    fn name(&self) -> String {
+        self.0.name()
+    }
+}
+
+#[test]
+fn error_metrics_see_no_packed_batch_path() {
+    // characterize drives units through the batched entry points (the
+    // drivers stage operands in 4 096-lane chunks); at width 8 the rapid
+    // units answer those with 4×8-bit packed lanes, at width 16 with
+    // 2×16-bit lanes. Every headline metric must be bit-identical to the
+    // forced-scalar wrapper — the packed path is a pure speedup, never a
+    // semantic change, even after the accumulation order it feeds.
+    let opts = CharacterizeOpts::default();
+    let m8 = characterize_mul(make_mul("rapid10", 8).unwrap().as_ref(), &opts);
+    let s8 = characterize_mul(&ScalarOnlyMul(make_mul("rapid10", 8).unwrap()), &opts);
+    assert_eq!(m8.are.to_bits(), s8.are.to_bits(), "mul8 ARE");
+    assert_eq!(m8.pre.to_bits(), s8.pre.to_bits(), "mul8 PRE");
+    assert_eq!(m8.pre_large.to_bits(), s8.pre_large.to_bits(), "mul8 PRE≥8");
+    assert_eq!(m8.bias.to_bits(), s8.bias.to_bits(), "mul8 bias");
+    assert_eq!(m8.samples, s8.samples, "mul8 samples");
+    let d4 = characterize_div(make_div("rapid9", 4).unwrap().as_ref(), &opts);
+    let t4 = characterize_div(&ScalarOnlyDiv(make_div("rapid9", 4).unwrap()), &opts);
+    assert_eq!(d4.are.to_bits(), t4.are.to_bits(), "div4 ARE");
+    assert_eq!(d4.pre.to_bits(), t4.pre.to_bits(), "div4 PRE");
+    assert_eq!(d4.bias.to_bits(), t4.bias.to_bits(), "div4 bias");
+    assert_eq!(d4.samples, t4.samples, "div4 samples");
+    assert_eq!(d4.skipped, t4.skipped, "div4 skipped");
+    // 16-bit Monte-Carlo leg: the 2×16 mul / 2×8 div lane shapes
+    let mc = CharacterizeOpts { exhaustive_limit: 0, mc_samples: 200_000, ..Default::default() };
+    let m16 = characterize_mul(make_mul("rapid10", 16).unwrap().as_ref(), &mc);
+    let s16 = characterize_mul(&ScalarOnlyMul(make_mul("rapid10", 16).unwrap()), &mc);
+    assert_eq!(m16.are.to_bits(), s16.are.to_bits(), "mul16 ARE");
+    assert_eq!(m16.bias.to_bits(), s16.bias.to_bits(), "mul16 bias");
+    assert_eq!(m16.samples, s16.samples, "mul16 samples");
+    let d8 = characterize_div(make_div("rapid9", 8).unwrap().as_ref(), &mc);
+    let t8 = characterize_div(&ScalarOnlyDiv(make_div("rapid9", 8).unwrap()), &mc);
+    assert_eq!(d8.are.to_bits(), t8.are.to_bits(), "div8 ARE");
+    assert_eq!(d8.bias.to_bits(), t8.bias.to_bits(), "div8 bias");
+    assert_eq!(d8.samples, t8.samples, "div8 samples");
+    assert_eq!(d8.skipped, t8.skipped, "div8 skipped");
 }
 
 #[test]
