@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 is `cargo build --release && cargo test -q`.
 
-.PHONY: all test artifacts bench bench-hotpath bench-explore bench-emit emit-artifacts doc
+.PHONY: all test artifacts bench bench-hotpath bench-explore bench-emit bench-serve emit-artifacts doc
 
 all:
 	cargo build --release
@@ -18,7 +18,7 @@ bench:
 	for b in fig1_motivation fig2_error_surface fig4_stage_balance \
 	         fig8_fig9_qor fig10_apps fig11_fig12_pipeline \
 	         table1_accuracy table3_mul table3_div ablations hotpath \
-	         explore emit; do \
+	         explore emit serve; do \
 	    cargo bench --bench $$b; \
 	done
 
@@ -37,6 +37,11 @@ bench-explore:
 # also rewrites BENCH_emit.json.
 bench-emit:
 	cargo bench --bench emit
+
+# Open-loop serving saturation ladder (offered vs achieved, p50/p99/p999)
+# over the sharded functional path; also rewrites BENCH_serve.json.
+bench-serve:
+	cargo bench --bench serve
 
 # The Table III trio as synthesizable RTL bundles (module + self-checking
 # testbench + $readmemh vectors) under rtl/. With iverilog installed,

@@ -47,6 +47,7 @@ fn main() {
             max_wait: Duration::from_micros(300),
             workers: 2,
             queue_depth: 64,
+            shards: 1,
         },
     );
     let model = RapidMul::new(16, 10);

@@ -1,0 +1,97 @@
+//! §Serve — open-loop saturation ladder over the sharded functional serve
+//! path (not a paper figure): offered vs. achieved throughput and
+//! p50/p99/p999 latency per rate rung, recorded to `BENCH_serve.json`
+//! (`make bench-serve` refreshes it; `rapid serve-bench` is the CLI twin
+//! with every knob exposed).
+//!
+//! The generator fires a precomputed, seeded arrival schedule whether or
+//! not earlier requests completed, so — unlike the closed-loop `serve`
+//! client — the offered/achieved gap actually reveals where the sharded
+//! ingress saturates. Two ladders run: the 16-bit multiplier (the Table
+//! III workhorse) and the 16/8 divider, both on the default sharded
+//! topology (4 lanes, 4 workers).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapid::arith::{RapidDiv, RapidMul};
+use rapid::bench_support::table::Table;
+use rapid::coordinator::loadgen::{self, LoadgenConfig};
+use rapid::coordinator::router::{
+    BatchDivFactory, BatchMulFactory, CoordinatorConfig, ExecutorFactory,
+};
+
+fn coord_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        batch_capacity: 8192,
+        max_wait: Duration::from_micros(200),
+        workers: 4,
+        queue_depth: 256,
+        shards: 4,
+    }
+}
+
+fn ladder(
+    t: &mut Table,
+    label: &str,
+    factory: Arc<dyn ExecutorFactory>,
+    cfg: &LoadgenConfig,
+) -> Vec<loadgen::RungReport> {
+    let coord_cfg = coord_cfg();
+    let mut reports = Vec::new();
+    for r in 0..cfg.rates.len() {
+        let rep = loadgen::run_rung(&factory, &coord_cfg, cfg, r);
+        println!("{label}: {}", loadgen::format_report(&rep));
+        t.row(&[
+            format!("{label} @ {} req/s", rep.offered_rps),
+            format!("{:.0} req/s", rep.achieved_rps),
+            format!("{:.2} Melem/s", rep.achieved_eps / 1e6),
+            format!("{:.1}µs", rep.p50_ns as f64 / 1e3),
+            format!("{:.1}µs", rep.p99_ns as f64 / 1e3),
+            format!("{:.1}µs", rep.p999_ns as f64 / 1e3),
+            format!("{}/{} (+{} shed, {} rej)", rep.completed, rep.requests, rep.shed, rep.rejected),
+        ]);
+        reports.push(rep);
+    }
+    reports
+}
+
+fn main() {
+    let mut t = Table::new(
+        "§Serve — open-loop load ladder (sharded functional path, 4 lanes × 1 worker)",
+        &["workload", "achieved", "elem/s", "p50", "p99", "p999", "done/offered"],
+    );
+
+    // the committed ladder: low rung (well under saturation, latency
+    // floor), mid rung, and a rung high enough to expose the knee on
+    // typical CI hardware
+    let rates = vec![10_000u64, 50_000, 200_000];
+    let duration = Duration::from_millis(1500);
+    let req_len = 256;
+    let seed = 42;
+
+    let mul_cfg = LoadgenConfig::for_mul(16, rates.clone(), duration, req_len, seed);
+    let mul_reports = ladder(
+        &mut t,
+        "mul16",
+        Arc::new(BatchMulFactory { unit: Arc::new(RapidMul::new(16, 10)) }),
+        &mul_cfg,
+    );
+
+    // divider rungs appear in the printed table only; BENCH_serve.json
+    // records the multiplier ladder (the EXPERIMENTS.md §Serve trajectory)
+    let div_cfg = LoadgenConfig::for_div(8, rates, duration, req_len, seed);
+    let _div_reports = ladder(
+        &mut t,
+        "div16/8",
+        Arc::new(BatchDivFactory { unit: Arc::new(RapidDiv::new(8, 9)) }),
+        &div_cfg,
+    );
+
+    t.print();
+
+    match loadgen::to_recorder(&mul_reports).write("BENCH_serve.json") {
+        Ok(()) => println!("\nrecorded -> BENCH_serve.json (the EXPERIMENTS.md §Serve trajectory)"),
+        Err(e) => eprintln!("\ncould not write BENCH_serve.json: {e}"),
+    }
+}

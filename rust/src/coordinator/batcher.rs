@@ -51,10 +51,20 @@ impl DynamicBatcher {
     }
 
     /// Offer a request; returns any batches that became full. A request
-    /// larger than the capacity is split across batches.
+    /// larger than the capacity is split across batches. Allocates the
+    /// result vector per call — hot loops use [`Self::offer_into`].
     pub fn offer(&mut self, id: u64, a: &[i64], b: &[i64]) -> Vec<Batch> {
-        assert_eq!(a.len(), b.len());
         let mut out = Vec::new();
+        self.offer_into(id, a, b, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::offer`]: full batches are
+    /// appended to `out` (which is not cleared, so a caller-owned reusable
+    /// buffer makes steady-state batch formation allocation-free — the
+    /// routing loops drain and reuse one buffer across all offers).
+    pub fn offer_into(&mut self, id: u64, a: &[i64], b: &[i64], out: &mut Vec<Batch>) {
+        assert_eq!(a.len(), b.len());
         let mut off = 0;
         while off < a.len() {
             if self.opened_at.is_none() {
@@ -71,7 +81,6 @@ impl DynamicBatcher {
                 out.push(self.flush().expect("full batch flushes"));
             }
         }
-        out
     }
 
     /// Flush the open batch (padding to capacity), if any.
@@ -131,6 +140,32 @@ mod tests {
         assert_eq!(tail.a.len(), 8, "padded to capacity");
         assert_eq!(&tail.a[..4], &[16, 17, 18, 19]);
         assert_eq!(&tail.a[4..], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn offer_into_appends_without_clearing() {
+        // the reusable-buffer contract: offer_into never clears `out`,
+        // and produces exactly the batches offer would
+        let mut b1 = mk();
+        let mut b2 = mk();
+        let a: Vec<i64> = (0..20).collect();
+        let via_offer = b1.offer(3, &a, &a);
+        let mut out = Vec::new();
+        b2.offer_into(3, &a, &a, &mut out);
+        assert_eq!(out.len(), via_offer.len());
+        for (x, y) in out.iter().zip(&via_offer) {
+            assert_eq!(x.a, y.a);
+            assert_eq!(x.b, y.b);
+            assert_eq!(x.spans, y.spans);
+            assert_eq!(x.used, y.used);
+        }
+        // appending: a second offer_into adds to the same buffer
+        let n0 = out.len();
+        let big: Vec<i64> = (0..16).collect();
+        b2.flush();
+        b2.offer_into(4, &big, &big, &mut out);
+        assert!(out.len() > n0, "second offer appended");
+        assert_eq!(out[n0].spans[0].0, 4);
     }
 
     #[test]

@@ -3,7 +3,12 @@
 //! functional units (`--backend functional` — any registry name, no
 //! artifacts or libxla needed), drive it with a synthetic client load and
 //! print throughput/latency metrics — the minimal "serving demo" a user
-//! runs to see the three layers compose.
+//! runs to see the three layers compose. `--shards N` runs the sharded
+//! ingress (N independent queue+batcher+worker lanes), `--deadline-us D`
+//! turns on deadline admission control, and the run ends with the
+//! Prometheus-style `metrics_text()` dump (the `/metrics` endpoint view).
+//! For saturation measurements use `rapid serve-bench` — this client is
+//! closed-loop and can only offer what the service completes.
 //!
 //! The functional backend executes every served batch as a single
 //! `mul_batch`/`div_batch` call (see `router::BatchMulFactory`), so it is
@@ -89,17 +94,24 @@ impl Executor for PjrtExecutor {
 pub fn run(argv: Vec<String>) {
     let args = Args::parse(
         argv,
-        &["artifacts", "artifact", "batch", "workers", "requests", "req-len", "backend", "unit", "width", "op"],
+        &[
+            "artifacts", "artifact", "batch", "workers", "shards", "requests", "req-len",
+            "backend", "unit", "width", "op", "deadline-us",
+        ],
     );
     let dir = args.get_or("artifacts", "artifacts");
     let artifact = args.get_or("artifact", "rapid_mul16");
     let batch = args.get_usize("batch", 8192);
     let workers = args.get_usize("workers", 2);
+    let shards = args.get_usize("shards", 1);
     let n_requests = args.get_usize("requests", 200);
     let req_len = args.get_usize("req-len", 1024);
     let backend = args.get_or("backend", "pjrt");
     let width = args.get_u32("width", 16);
     let op = args.get_or("op", "mul");
+    // optional per-request deadline for admission control (0 = none)
+    let deadline_us = args.get_u64("deadline-us", 0);
+    let deadline = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
     // Registry divider names differ from multiplier names (rapid9 vs
     // rapid10) — the default unit must follow the op.
     let unit_name = args.get_or("unit", if op == "div" { "rapid9" } else { "rapid10" });
@@ -163,6 +175,7 @@ pub fn run(argv: Vec<String>) {
         max_wait: Duration::from_micros(500),
         workers,
         queue_depth: 128,
+        shards,
     };
     let coord = Coordinator::start(exec, cfg);
 
@@ -170,18 +183,25 @@ pub fn run(argv: Vec<String>) {
     let mut rng = crate::util::XorShift256::new(42);
     let t0 = Instant::now();
     let mut checked = 0u64;
+    let mut shed = 0u64;
     for _ in 0..n_requests {
         let a: Vec<i64> = (0..req_len).map(|_| rng.bits(bits_a) as i64).collect();
         let b: Vec<i64> = (0..req_len).map(|_| rng.bits(bits_b).max(min_b) as i64).collect();
-        let out = coord.call(a.clone(), b.clone());
-        assert_eq!(out.len(), req_len);
-        checked += out.len() as u64;
+        match coord.call_with_deadline(a, b, deadline) {
+            Ok(out) => {
+                assert_eq!(out.len(), req_len);
+                checked += out.len() as u64;
+            }
+            Err(_) => shed += 1,
+        }
     }
     let dt = t0.elapsed();
     println!(
-        "served {n_requests} requests ({checked} elements) in {:.2?} — {:.1} kelem/s",
+        "served {n_requests} requests ({checked} elements, {shed} shed) in {:.2?} — {:.1} kelem/s",
         dt,
         checked as f64 / dt.as_secs_f64() / 1e3
     );
     println!("metrics: {}", coord.metrics.summary());
+    // the /metrics-endpoint view of the same counters
+    print!("{}", coord.metrics.metrics_text());
 }

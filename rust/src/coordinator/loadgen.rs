@@ -1,0 +1,511 @@
+//! Deterministic open-loop load generator for the serving shell
+//! (`rapid serve-bench`, `rust/benches/serve.rs`, `make bench-serve`).
+//!
+//! Closed-loop drivers (like `serve`'s synthetic client) only ever offer
+//! as much load as the service completes, so they cannot see saturation.
+//! This module drives the coordinator *open-loop*: a precomputed, seeded
+//! arrival schedule fires requests at a fixed offered rate whether or not
+//! earlier requests have completed, per rate rung, and the report records
+//! offered vs. achieved throughput plus p50/p99/p999 latency — the
+//! "millions of users" claim as a measured table (`BENCH_serve.json`).
+//!
+//! Everything the generator *produces* is deterministic under a fixed
+//! seed: the arrival schedule ([`schedule`]) and the operand streams
+//! ([`operands`]) are pure functions of (seed, rung, request index), and
+//! the response checksum folds per-request digests keyed by request index,
+//! so it is independent of completion order. Wall-clock measurements
+//! (achieved rate, latency percentiles) are of course machine-dependent;
+//! the determinism pin in `tests/coordinator_e2e.rs` covers the
+//! deterministic fields.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::router::{Coordinator, CoordinatorConfig, ExecutorFactory, SubmitError};
+use crate::bench_support::record::Recorder;
+use crate::util::timer::BenchResult;
+use crate::util::XorShift256;
+
+/// Stream-id namespace separating arrival-jitter draws from operand draws
+/// (both derive from the same user seed via `XorShift256::split`).
+const ARRIVAL_STREAM: u64 = 0x4C47_0000_0000_0001;
+const OPERAND_STREAM: u64 = 0x4C47_0000_0001_0000;
+
+/// Open-loop workload description: rate rungs, per-rung duration and the
+/// seeded operand model.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Offered request rates (requests/second), one rung each.
+    pub rates: Vec<u64>,
+    /// Duration of each rung's arrival schedule.
+    pub duration: Duration,
+    /// Operand lanes per request.
+    pub req_len: usize,
+    /// Master seed of the arrival jitter and operand streams.
+    pub seed: u64,
+    /// Significant bits of the first operand.
+    pub bits_a: u32,
+    /// Significant bits of the second operand.
+    pub bits_b: u32,
+    /// Floor applied to the second operand (1 keeps divider rungs away
+    /// from the all-zero-padding saturation path; 0 for multipliers).
+    pub min_b: u64,
+    /// Per-request deadline handed to admission control (None = no
+    /// deadlines, nothing sheds).
+    pub deadline: Option<Duration>,
+}
+
+impl LoadgenConfig {
+    /// Multiplier workload: uniform `width`-bit operands, no deadline.
+    pub fn for_mul(width: u32, rates: Vec<u64>, duration: Duration, req_len: usize, seed: u64) -> Self {
+        LoadgenConfig { rates, duration, req_len, seed, bits_a: width, bits_b: width, min_b: 0, deadline: None }
+    }
+
+    /// Divider workload: `2·width`-bit dividends over `width`-bit
+    /// non-zero divisors, no deadline.
+    pub fn for_div(width: u32, rates: Vec<u64>, duration: Duration, req_len: usize, seed: u64) -> Self {
+        LoadgenConfig { rates, duration, req_len, seed, bits_a: 2 * width, bits_b: width, min_b: 1, deadline: None }
+    }
+}
+
+/// Measured outcome of one rate rung. The starred fields are
+/// deterministic under a fixed seed when nothing is shed or rejected;
+/// the rest are wall-clock measurements.
+#[derive(Clone, Debug)]
+pub struct RungReport {
+    /// *Offered rate this rung was scheduled at (requests/s).
+    pub offered_rps: u64,
+    /// *Scheduled arrivals (= offered_rps · duration).
+    pub requests: u64,
+    /// *Requests past admission control and the bounded queue.
+    pub admitted: u64,
+    /// Requests shed by deadline admission control.
+    pub shed: u64,
+    /// Requests rejected by backpressure (ingress queue full).
+    pub rejected: u64,
+    /// *Requests fully completed (all spans replied).
+    pub completed: u64,
+    /// *Operand elements across completed requests.
+    pub elements: u64,
+    /// Wall clock from first arrival to last completion (ns).
+    pub wall_ns: u64,
+    /// Achieved completed-request throughput (requests/s).
+    pub achieved_rps: f64,
+    /// Achieved completed-element throughput (elements/s).
+    pub achieved_eps: f64,
+    /// Median span latency (ns, histogram upper bound).
+    pub p50_ns: u64,
+    /// 99th-percentile span latency (ns).
+    pub p99_ns: u64,
+    /// 99.9th-percentile span latency (ns).
+    pub p999_ns: u64,
+    /// Mean span latency (ns).
+    pub mean_ns: f64,
+    /// *Order-independent digest of every completed response, keyed by
+    /// request index — the bit-identity handle of the whole rung.
+    pub checksum: u64,
+}
+
+/// The seeded arrival schedule of one rung: `rate · duration` offsets
+/// (ns since rung start), strictly within the rung, sorted. Arrival *k*
+/// sits in slot `k · spacing` with seeded sub-slot jitter, so the offered
+/// rate is exact per rung while inter-arrival gaps vary — a deterministic
+/// stand-in for a Poisson arrival process (pure integer arithmetic; no
+/// float schedule drift, bit-identical on every machine).
+pub fn schedule(rate: u64, duration: Duration, seed: u64, rung: u64) -> Vec<u64> {
+    assert!(rate > 0, "loadgen: rate must be positive");
+    let dur_ns = duration.as_nanos() as u64;
+    let n = ((rate as u128 * dur_ns as u128) / 1_000_000_000) as u64;
+    let n = n.max(1);
+    let spacing = (dur_ns / n).max(1);
+    let mut rng = XorShift256::new(seed).split(ARRIVAL_STREAM ^ (rung << 32) ^ rate);
+    (0..n).map(|k| k * spacing + rng.below(spacing)).collect()
+}
+
+/// The fixed operand streams: request `k` of rung `rung` always carries
+/// these operands, independent of pacing, sharding or completion order.
+pub fn operands(cfg: &LoadgenConfig, rung: u64, k: u64) -> (Vec<i64>, Vec<i64>) {
+    let mut rng = XorShift256::new(cfg.seed).split(OPERAND_STREAM ^ (rung << 40) ^ k);
+    let a = (0..cfg.req_len).map(|_| rng.bits(cfg.bits_a) as i64).collect();
+    let b = (0..cfg.req_len).map(|_| rng.bits(cfg.bits_b).max(cfg.min_b) as i64).collect();
+    (a, b)
+}
+
+/// Digest of one completed request, keyed by its index so the rung-level
+/// XOR fold is completion-order independent.
+pub fn request_digest(k: u64, values: &[i64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ k.wrapping_mul(0x0100_0000_01b3);
+    for &v in values {
+        h ^= v as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3).rotate_left(17);
+    }
+    // avalanche so sparse value sets still spread over all 64 bits
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^ (h >> 29)
+}
+
+/// Drive one rung against a fresh coordinator and collect its report.
+///
+/// The submitting thread walks the arrival schedule (sleep + short spin
+/// pacing) and issues non-blocking submits — the open loop never waits
+/// for completions. A collector thread reassembles span replies into
+/// per-request results and folds checksums; latency percentiles come from
+/// the coordinator's own histogram ([`super::metrics::Metrics`]).
+pub fn run_rung(
+    factory: &Arc<dyn ExecutorFactory>,
+    coord_cfg: &CoordinatorConfig,
+    cfg: &LoadgenConfig,
+    rung: usize,
+) -> RungReport {
+    let rate = cfg.rates[rung];
+    let arrivals = schedule(rate, cfg.duration, cfg.seed, rung as u64);
+    let coord = Coordinator::start(factory.clone(), coord_cfg.clone());
+
+    // collector: reassemble each admitted request's spans, fold digests
+    type Pending = (u64, usize, std::sync::mpsc::Receiver<super::router::Response>);
+    let (done_tx, done_rx) = channel::<Pending>();
+    let collector = std::thread::spawn(move || {
+        let mut checksum = 0u64;
+        let mut completed = 0u64;
+        let mut elements = 0u64;
+        while let Ok((k, n, rx)) = done_rx.recv() {
+            let mut vals = vec![0i64; n];
+            let mut filled = 0usize;
+            while filled < n {
+                match rx.recv() {
+                    Ok(resp) => {
+                        let end = resp.offset + resp.values.len();
+                        vals[resp.offset..end].copy_from_slice(&resp.values);
+                        filled += resp.values.len();
+                    }
+                    Err(_) => break,
+                }
+            }
+            if filled == n {
+                checksum ^= request_digest(k, &vals);
+                completed += 1;
+                elements += n as u64;
+            }
+        }
+        (checksum, completed, elements)
+    });
+
+    let t0 = Instant::now();
+    let mut admitted = 0u64;
+    let mut shed = 0u64;
+    let mut rejected = 0u64;
+    for (k, &at_ns) in arrivals.iter().enumerate() {
+        // pace: coarse sleep, then spin the last stretch for precision
+        let target = t0 + Duration::from_nanos(at_ns);
+        loop {
+            let now = Instant::now();
+            if now >= target {
+                break;
+            }
+            let left = target - now;
+            if left > Duration::from_micros(120) {
+                std::thread::sleep(left - Duration::from_micros(100));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let (a, b) = operands(cfg, rung as u64, k as u64);
+        let n = a.len();
+        match coord.try_call_async_with_deadline(a, b, cfg.deadline) {
+            Ok(rx) => {
+                admitted += 1;
+                done_tx.send((k as u64, n, rx)).expect("collector alive");
+            }
+            Err(SubmitError::Shed) => shed += 1,
+            Err(SubmitError::Full) => rejected += 1,
+        }
+    }
+    drop(done_tx);
+    let (checksum, completed, elements) = collector.join().expect("collector");
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let m = &coord.metrics;
+    let report = RungReport {
+        offered_rps: rate,
+        requests: arrivals.len() as u64,
+        admitted,
+        shed,
+        rejected,
+        completed,
+        elements,
+        wall_ns,
+        achieved_rps: completed as f64 / (wall_ns as f64 * 1e-9),
+        achieved_eps: elements as f64 / (wall_ns as f64 * 1e-9),
+        p50_ns: m.p50_ns(),
+        p99_ns: m.p99_ns(),
+        p999_ns: m.p999_ns(),
+        mean_ns: m.mean_latency_ns(),
+        checksum,
+    };
+    drop(coord);
+    report
+}
+
+/// Run the whole rate ladder, one fresh coordinator per rung.
+pub fn run(
+    factory: &Arc<dyn ExecutorFactory>,
+    coord_cfg: &CoordinatorConfig,
+    cfg: &LoadgenConfig,
+) -> Vec<RungReport> {
+    (0..cfg.rates.len()).map(|r| run_rung(factory, coord_cfg, cfg, r)).collect()
+}
+
+/// Pour the rung reports into a [`Recorder`] for `BENCH_serve.json`:
+/// per rung, a throughput row (`median_ns` = rung wall clock,
+/// `items_per_iter` = completed elements, so `ns_per_item` is ns/element)
+/// and one row per latency percentile.
+pub fn to_recorder(reports: &[RungReport]) -> Recorder {
+    let mut rec = Recorder::new("serve");
+    let one = |name: &str, ns: f64| BenchResult {
+        name: name.to_string(),
+        median_ns: ns,
+        mean_ns: ns,
+        min_ns: ns,
+        max_ns: ns,
+        samples: 1,
+        iters_per_sample: 1,
+    };
+    for r in reports {
+        let base = format!("offered_{}rps", r.offered_rps);
+        rec.add(&format!("{base}_throughput"), &one(&base, r.wall_ns as f64), r.elements as f64);
+        rec.add(&format!("{base}_p50"), &one(&base, r.p50_ns as f64), 1.0);
+        rec.add(&format!("{base}_p99"), &one(&base, r.p99_ns as f64), 1.0);
+        rec.add(&format!("{base}_p999"), &one(&base, r.p999_ns as f64), 1.0);
+    }
+    rec
+}
+
+/// One human-readable table line per rung.
+pub fn format_report(r: &RungReport) -> String {
+    format!(
+        "offered {:>9} req/s | achieved {:>9.0} req/s {:>12.0} elem/s | \
+         completed {:>7}/{:<7} shed {:>6} rejected {:>6} | \
+         p50 {:>8.1}µs p99 {:>8.1}µs p999 {:>8.1}µs | checksum {:016x}",
+        r.offered_rps,
+        r.achieved_rps,
+        r.achieved_eps,
+        r.completed,
+        r.requests,
+        r.shed,
+        r.rejected,
+        r.p50_ns as f64 / 1e3,
+        r.p99_ns as f64 / 1e3,
+        r.p999_ns as f64 / 1e3,
+        r.checksum,
+    )
+}
+
+/// The `rapid serve-bench` subcommand (argv = everything after it):
+/// open-loop rate ladder over the in-process functional backend — no
+/// PJRT, no artifacts — recording `BENCH_serve.json`.
+pub mod cli {
+    use super::*;
+    use crate::arith::registry::{make_div, make_mul};
+    use crate::coordinator::router::{BatchDivFactory, BatchMulFactory};
+    use crate::util::cli::Args;
+
+    /// Entry point of the `serve-bench` subcommand.
+    pub fn run(argv: Vec<String>) {
+        let args = Args::parse(
+            argv,
+            &[
+                "backend", "unit", "op", "width", "rates", "duration-ms", "req-len", "seed",
+                "batch", "workers", "shards", "queue-depth", "max-wait-us", "deadline-us", "out",
+            ],
+        );
+        let backend = args.get_or("backend", "functional");
+        if backend != "functional" {
+            eprintln!(
+                "serve-bench: only the in-process functional backend is load-benched \
+                 (got '{backend}'); the PJRT path is measured via `rapid serve`"
+            );
+            std::process::exit(1);
+        }
+        let op = args.get_or("op", "mul");
+        let width = args.get_u32("width", 16);
+        let unit_name = args.get_or("unit", if op == "div" { "rapid9" } else { "rapid10" });
+        let rates: Vec<u64> = args
+            .get_or("rates", "10000,50000,200000")
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+        if rates.is_empty() {
+            eprintln!("serve-bench: --rates must be a comma list of positive integers");
+            std::process::exit(1);
+        }
+        let duration = Duration::from_millis(args.get_u64("duration-ms", 2000));
+        let req_len = args.get_usize("req-len", 256);
+        let seed = args.get_u64("seed", 42);
+        let deadline_us = args.get_u64("deadline-us", 0);
+        let out = args.get_or("out", "BENCH_serve.json").to_string();
+
+        let factory: Arc<dyn ExecutorFactory> = if op == "div" {
+            let unit = make_div(unit_name, width).unwrap_or_else(|| {
+                eprintln!("serve-bench: unknown divider '{unit_name}' (see README registry table)");
+                std::process::exit(1);
+            });
+            Arc::new(BatchDivFactory { unit: Arc::from(unit) })
+        } else {
+            let unit = make_mul(unit_name, width).unwrap_or_else(|| {
+                eprintln!("serve-bench: unknown multiplier '{unit_name}' (see README registry table)");
+                std::process::exit(1);
+            });
+            Arc::new(BatchMulFactory { unit: Arc::from(unit) })
+        };
+
+        let coord_cfg = CoordinatorConfig {
+            batch_capacity: args.get_usize("batch", 8192),
+            max_wait: Duration::from_micros(args.get_u64("max-wait-us", 200)),
+            workers: args.get_usize("workers", 4),
+            queue_depth: args.get_usize("queue-depth", 256),
+            shards: args.get_usize("shards", 4),
+        };
+        let mut cfg = if op == "div" {
+            LoadgenConfig::for_div(width, rates, duration, req_len, seed)
+        } else {
+            LoadgenConfig::for_mul(width, rates, duration, req_len, seed)
+        };
+        if deadline_us > 0 {
+            cfg.deadline = Some(Duration::from_micros(deadline_us));
+        }
+
+        println!(
+            "serve-bench: functional {unit_name} {op}{width}, req_len {req_len}, \
+             {} rungs x {:?}, shards {}, workers {}, batch {}, deadline {}",
+            cfg.rates.len(),
+            cfg.duration,
+            coord_cfg.shards,
+            coord_cfg.workers,
+            coord_cfg.batch_capacity,
+            if deadline_us > 0 { format!("{deadline_us}µs") } else { "none".into() },
+        );
+        let mut reports = Vec::new();
+        for r in 0..cfg.rates.len() {
+            let rep = run_rung(&factory, &coord_cfg, &cfg, r);
+            println!("{}", format_report(&rep));
+            reports.push(rep);
+        }
+        match to_recorder(&reports).write(&out) {
+            Ok(()) => println!("recorded -> {out} (the EXPERIMENTS.md §Serve trajectory)"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::FnFactory;
+
+    #[test]
+    fn schedule_is_deterministic_sorted_and_in_range() {
+        let a = schedule(10_000, Duration::from_millis(200), 7, 0);
+        let b = schedule(10_000, Duration::from_millis(200), 7, 0);
+        assert_eq!(a, b, "same seed → same schedule");
+        assert_eq!(a.len(), 2000, "rate · duration arrivals");
+        let dur_ns = 200_000_000u64;
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1], "sorted");
+        }
+        assert!(*a.last().unwrap() < dur_ns, "inside the rung");
+        // different seed or rung → different jitter
+        assert_ne!(a, schedule(10_000, Duration::from_millis(200), 8, 0));
+        assert_ne!(a, schedule(10_000, Duration::from_millis(200), 7, 1));
+    }
+
+    #[test]
+    fn schedule_never_empty() {
+        // sub-request-per-duration rates still schedule one arrival
+        let a = schedule(1, Duration::from_millis(1), 3, 0);
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn operands_are_fixed_per_request_index() {
+        let cfg = LoadgenConfig::for_mul(16, vec![1000], Duration::from_millis(100), 32, 99);
+        let (a1, b1) = operands(&cfg, 0, 5);
+        let (a2, b2) = operands(&cfg, 0, 5);
+        assert_eq!((&a1, &b1), (&a2, &b2), "same (seed, rung, k) → same operands");
+        assert_ne!(a1, operands(&cfg, 0, 6).0, "k varies the stream");
+        assert_ne!(a1, operands(&cfg, 1, 5).0, "rung varies the stream");
+        assert!(a1.iter().all(|&x| (0..65536).contains(&x)), "width-bit operands");
+        let dcfg = LoadgenConfig::for_div(8, vec![1000], Duration::from_millis(100), 32, 99);
+        let (_, db) = operands(&dcfg, 0, 0);
+        assert!(db.iter().all(|&x| x >= 1), "divisor floor");
+    }
+
+    #[test]
+    fn digest_fold_is_completion_order_independent() {
+        let d0 = request_digest(0, &[1, 2, 3]);
+        let d1 = request_digest(1, &[4, 5]);
+        assert_eq!(d0 ^ d1, d1 ^ d0);
+        // key matters: same values under different k must differ
+        assert_ne!(request_digest(0, &[1, 2, 3]), request_digest(1, &[1, 2, 3]));
+        // value order matters within a request
+        assert_ne!(request_digest(0, &[1, 2, 3]), request_digest(0, &[3, 2, 1]));
+    }
+
+    #[test]
+    fn rung_completes_everything_at_low_rate() {
+        let factory: Arc<dyn ExecutorFactory> = Arc::new(FnFactory(|a: &[i64], b: &[i64]| {
+            a.iter().zip(b).map(|(x, y)| x * 2 + y).collect::<Vec<i64>>()
+        }));
+        let coord_cfg = CoordinatorConfig {
+            batch_capacity: 128,
+            max_wait: Duration::from_micros(100),
+            workers: 2,
+            queue_depth: 1024,
+            shards: 2,
+        };
+        let cfg = LoadgenConfig::for_mul(16, vec![2000], Duration::from_millis(100), 16, 11);
+        let rep = run_rung(&factory, &coord_cfg, &cfg, 0);
+        assert_eq!(rep.requests, 200);
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.rejected, 0);
+        assert_eq!(rep.completed, rep.admitted);
+        assert_eq!(rep.completed, 200);
+        assert_eq!(rep.elements, 200 * 16);
+        // end-to-end data-integrity pin: the rung checksum must equal the
+        // executor model applied to the deterministic operand streams
+        let mut want = 0u64;
+        for k in 0..200u64 {
+            let (a, b) = operands(&cfg, 0, k);
+            let vals: Vec<i64> = a.iter().zip(&b).map(|(x, y)| x * 2 + y).collect();
+            want ^= request_digest(k, &vals);
+        }
+        assert_eq!(rep.checksum, want);
+    }
+
+    #[test]
+    fn recorder_rows_carry_throughput_and_percentiles() {
+        let rep = RungReport {
+            offered_rps: 50_000,
+            requests: 100,
+            admitted: 100,
+            shed: 0,
+            rejected: 0,
+            completed: 100,
+            elements: 1600,
+            wall_ns: 3_200_000,
+            achieved_rps: 31_250.0,
+            achieved_eps: 500_000.0,
+            p50_ns: 4096,
+            p99_ns: 16384,
+            p999_ns: 32768,
+            mean_ns: 5000.0,
+            checksum: 0xabcd,
+        };
+        let j = to_recorder(&[rep]).to_json();
+        assert!(j.contains("\"bench\": \"serve\""), "{j}");
+        assert!(j.contains("offered_50000rps_throughput"), "{j}");
+        // ns_per_item of the throughput row = wall / elements = 2000 ns
+        assert!(j.contains("\"ns_per_item\": 2000.000"), "{j}");
+        assert!(j.contains("offered_50000rps_p999"), "{j}");
+    }
+}

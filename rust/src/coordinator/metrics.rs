@@ -1,5 +1,9 @@
 //! Lock-light metrics shared by the coordinator's threads: request /
-//! element counters, latency histogram, queue depth gauges.
+//! element counters, latency histogram, queue depth gauges (per-shard
+//! ingress + the dispatch channel), the deadline-shed counter and an EWMA
+//! of batch service time (the admission controller's drain estimate).
+//! [`Metrics::metrics_text`] dumps everything in the Prometheus text
+//! exposition format for scraping / the serve CLI.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -7,7 +11,7 @@ use std::time::Duration;
 /// Fixed log2 latency histogram (ns buckets from 1µs to ~4s).
 const BUCKETS: usize = 24;
 
-/// Counters and latency histogram shared by leader, workers and callers.
+/// Counters and latency histogram shared by leaders, workers and callers.
 #[derive(Default)]
 pub struct Metrics {
     /// Requests submitted.
@@ -20,15 +24,40 @@ pub struct Metrics {
     pub padded_elements: AtomicU64,
     /// Requests rejected by backpressure (`try_submit` on a full queue).
     pub rejected: AtomicU64,
+    /// Requests shed by deadline admission control (the enqueue-time
+    /// estimate said the deadline could not be met given queue depth).
+    pub shed: AtomicU64,
+    /// Per-shard ingress queue depth gauges (requests currently enqueued
+    /// and not yet picked up by the shard's batching loop).
+    ingress_depth: Vec<AtomicU64>,
+    /// Batches currently sitting in dispatch channels awaiting a worker.
+    batch_queue_depth: AtomicU64,
+    /// EWMA of worker batch execution time in ns (0 until the first batch
+    /// completes); feeds the admission controller's drain estimate.
+    batch_service_ewma_ns: AtomicU64,
     hist: [AtomicU64; BUCKETS],
     lat_sum_ns: AtomicU64,
     lat_count: AtomicU64,
 }
 
 impl Metrics {
-    /// All-zero metrics.
+    /// All-zero metrics with a single ingress gauge (the classic
+    /// single-leader shape).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_shards(1)
+    }
+
+    /// All-zero metrics with one ingress queue depth gauge per shard.
+    pub fn with_shards(shards: usize) -> Self {
+        Metrics {
+            ingress_depth: (0..shards.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            ..Metrics::default()
+        }
+    }
+
+    /// Number of ingress gauges (== the coordinator's shard count).
+    pub fn shards(&self) -> usize {
+        self.ingress_depth.len()
     }
 
     /// Count one submitted request of `elements` operand lanes.
@@ -57,6 +86,67 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one deadline-shed request (admission control said no).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request entered shard `s`'s ingress queue.
+    pub fn ingress_enqueued(&self, s: usize) {
+        if let Some(g) = self.ingress_depth.get(s) {
+            g.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A request left shard `s`'s ingress queue (picked up for batching).
+    pub fn ingress_dequeued(&self, s: usize) {
+        if let Some(g) = self.ingress_depth.get(s) {
+            // saturating: a racing reader must never observe a wrapped
+            // gauge; enqueue/dequeue pairing keeps this exact in practice
+            let _ = g.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+        }
+    }
+
+    /// Current ingress queue depth of shard `s` (0 for unknown shards).
+    pub fn ingress_depth(&self, s: usize) -> u64 {
+        self.ingress_depth.get(s).map_or(0, |g| g.load(Ordering::Relaxed))
+    }
+
+    /// A batch entered a dispatch channel.
+    pub fn batch_enqueued(&self) {
+        self.batch_queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker picked a batch out of a dispatch channel.
+    pub fn batch_dequeued(&self) {
+        let _ = self.batch_queue_depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+
+    /// Batches currently awaiting a worker across all dispatch channels.
+    pub fn batch_queue_depth(&self) -> u64 {
+        self.batch_queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Fold one batch execution time into the service-time EWMA
+    /// (`new = (3·old + sample) / 4`; the first sample seeds it).
+    pub fn record_batch_service(&self, d: Duration) {
+        let ns = (d.as_nanos() as u64).max(1);
+        let _ = self.batch_service_ewma_ns.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |old| Some(if old == 0 { ns } else { (3 * old + ns) / 4 }),
+        );
+    }
+
+    /// EWMA batch service time in ns (0 before the first batch).
+    pub fn batch_service_ewma_ns(&self) -> u64 {
+        self.batch_service_ewma_ns.load(Ordering::Relaxed)
+    }
+
     /// Approximate latency percentile from the histogram (upper bound of
     /// the containing bucket).
     pub fn latency_percentile_ns(&self, p: f64) -> u64 {
@@ -75,6 +165,22 @@ impl Metrics {
         1u64 << (BUCKETS + 10)
     }
 
+    /// Median span latency in ns (histogram upper bound).
+    pub fn p50_ns(&self) -> u64 {
+        self.latency_percentile_ns(0.5)
+    }
+
+    /// 99th-percentile span latency in ns (histogram upper bound).
+    pub fn p99_ns(&self) -> u64 {
+        self.latency_percentile_ns(0.99)
+    }
+
+    /// 99.9th-percentile span latency in ns (histogram upper bound) —
+    /// the tail the open-loop load bench tracks per rate rung.
+    pub fn p999_ns(&self) -> u64 {
+        self.latency_percentile_ns(0.999)
+    }
+
     /// Mean span latency in ns (0 before any reply).
     pub fn mean_latency_ns(&self) -> f64 {
         let n = self.lat_count.load(Ordering::Relaxed);
@@ -88,16 +194,59 @@ impl Metrics {
     /// One-line human-readable dump of every counter.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} elements={} batches={} padding={} rejected={} mean_lat={:.1}µs p50={:.1}µs p99={:.1}µs",
+            "requests={} elements={} batches={} padding={} rejected={} shed={} \
+             mean_lat={:.1}µs p50={:.1}µs p99={:.1}µs p999={:.1}µs",
             self.requests.load(Ordering::Relaxed),
             self.elements.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.padded_elements.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
             self.mean_latency_ns() / 1e3,
-            self.latency_percentile_ns(0.5) as f64 / 1e3,
-            self.latency_percentile_ns(0.99) as f64 / 1e3,
+            self.p50_ns() as f64 / 1e3,
+            self.p99_ns() as f64 / 1e3,
+            self.p999_ns() as f64 / 1e3,
         )
+    }
+
+    /// Prometheus text-exposition dump of every counter, gauge and the
+    /// latency summary — what a `/metrics` endpoint would serve, printed
+    /// by `rapid serve` / `rapid serve-bench` after a run.
+    pub fn metrics_text(&self) -> String {
+        let mut s = String::new();
+        let counter = |s: &mut String, name: &str, help: &str, v: u64| {
+            s.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        counter(&mut s, "rapid_requests_total", "Requests submitted.", self.requests.load(Ordering::Relaxed));
+        counter(&mut s, "rapid_elements_total", "Operand elements submitted.", self.elements.load(Ordering::Relaxed));
+        counter(&mut s, "rapid_batches_total", "Batches dispatched to workers.", self.batches.load(Ordering::Relaxed));
+        counter(&mut s, "rapid_padded_elements_total", "Zero-padding elements in short batches.", self.padded_elements.load(Ordering::Relaxed));
+        counter(&mut s, "rapid_rejected_total", "Requests rejected by backpressure.", self.rejected.load(Ordering::Relaxed));
+        counter(&mut s, "rapid_shed_total", "Requests shed by deadline admission control.", self.shed.load(Ordering::Relaxed));
+        s.push_str("# HELP rapid_ingress_queue_depth Requests waiting in a shard's ingress queue.\n");
+        s.push_str("# TYPE rapid_ingress_queue_depth gauge\n");
+        for (i, g) in self.ingress_depth.iter().enumerate() {
+            s.push_str(&format!(
+                "rapid_ingress_queue_depth{{shard=\"{i}\"}} {}\n",
+                g.load(Ordering::Relaxed)
+            ));
+        }
+        s.push_str("# HELP rapid_batch_queue_depth Batches awaiting a worker in dispatch channels.\n");
+        s.push_str("# TYPE rapid_batch_queue_depth gauge\n");
+        s.push_str(&format!("rapid_batch_queue_depth {}\n", self.batch_queue_depth()));
+        s.push_str("# HELP rapid_batch_service_ewma_ns EWMA batch execution time (ns).\n");
+        s.push_str("# TYPE rapid_batch_service_ewma_ns gauge\n");
+        s.push_str(&format!("rapid_batch_service_ewma_ns {}\n", self.batch_service_ewma_ns()));
+        s.push_str("# HELP rapid_latency_ns Span submit-to-reply latency (ns).\n");
+        s.push_str("# TYPE rapid_latency_ns summary\n");
+        s.push_str(&format!("rapid_latency_ns{{quantile=\"0.5\"}} {}\n", self.p50_ns()));
+        s.push_str(&format!("rapid_latency_ns{{quantile=\"0.99\"}} {}\n", self.p99_ns()));
+        s.push_str(&format!("rapid_latency_ns{{quantile=\"0.999\"}} {}\n", self.p999_ns()));
+        s.push_str(&format!("rapid_latency_ns_sum {}\n", self.lat_sum_ns.load(Ordering::Relaxed)));
+        s.push_str(&format!("rapid_latency_ns_count {}\n", self.lat_count.load(Ordering::Relaxed)));
+        s
     }
 }
 
@@ -122,7 +271,64 @@ mod tests {
         for us in [5u64, 10, 20, 40, 80, 160, 1000] {
             m.record_latency(Duration::from_micros(us));
         }
-        assert!(m.latency_percentile_ns(0.5) <= m.latency_percentile_ns(0.99));
+        assert!(m.p50_ns() <= m.p99_ns());
+        assert!(m.p99_ns() <= m.p999_ns());
         assert!(m.mean_latency_ns() > 0.0);
+    }
+
+    #[test]
+    fn gauges_track_depth_and_saturate() {
+        let m = Metrics::with_shards(3);
+        assert_eq!(m.shards(), 3);
+        m.ingress_enqueued(1);
+        m.ingress_enqueued(1);
+        m.ingress_dequeued(1);
+        assert_eq!(m.ingress_depth(1), 1);
+        assert_eq!(m.ingress_depth(0), 0);
+        // dequeue on an empty gauge saturates at zero, never wraps
+        m.ingress_dequeued(0);
+        assert_eq!(m.ingress_depth(0), 0);
+        // out-of-range shards are inert
+        m.ingress_enqueued(9);
+        assert_eq!(m.ingress_depth(9), 0);
+        m.batch_enqueued();
+        m.batch_enqueued();
+        m.batch_dequeued();
+        assert_eq!(m.batch_queue_depth(), 1);
+        m.batch_dequeued();
+        m.batch_dequeued();
+        assert_eq!(m.batch_queue_depth(), 0);
+    }
+
+    #[test]
+    fn service_ewma_seeds_then_smooths() {
+        let m = Metrics::new();
+        assert_eq!(m.batch_service_ewma_ns(), 0);
+        m.record_batch_service(Duration::from_nanos(1000));
+        assert_eq!(m.batch_service_ewma_ns(), 1000);
+        m.record_batch_service(Duration::from_nanos(2000));
+        // (3*1000 + 2000) / 4 = 1250
+        assert_eq!(m.batch_service_ewma_ns(), 1250);
+    }
+
+    #[test]
+    fn metrics_text_is_prometheus_shaped() {
+        let m = Metrics::with_shards(2);
+        m.record_request(10);
+        m.record_shed();
+        m.ingress_enqueued(1);
+        m.record_latency(Duration::from_micros(50));
+        let t = m.metrics_text();
+        assert!(t.contains("# TYPE rapid_requests_total counter"), "{t}");
+        assert!(t.contains("rapid_requests_total 1"), "{t}");
+        assert!(t.contains("rapid_shed_total 1"), "{t}");
+        assert!(t.contains("rapid_ingress_queue_depth{shard=\"0\"} 0"), "{t}");
+        assert!(t.contains("rapid_ingress_queue_depth{shard=\"1\"} 1"), "{t}");
+        assert!(t.contains("rapid_latency_ns{quantile=\"0.999\"}"), "{t}");
+        assert!(t.contains("rapid_latency_ns_count 1"), "{t}");
+        // every non-comment line is "name[{labels}] value"
+        for line in t.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
     }
 }

@@ -3,12 +3,18 @@
 //!
 //! The paper's units target stream applications "constantly fed with a
 //! bulk of data"; the coordinator provides exactly that runtime: a
-//! bounded-queue router with backpressure, a dynamic batcher that packs
-//! requests to the artifact's compiled batch shape, a std-thread worker
-//! pool executing on PJRT, per-stage metrics, and a pipeline scheduler
-//! mirroring the 2/3/4-stage units for the Fig. 11/12 study.
+//! sharded ingress (N independent queue + batcher + worker-pool lanes,
+//! requests routed round-robin by the submitting thread; `shards = 1` is
+//! the classic single-leader oracle) with backpressure and deadline
+//! admission control, a dynamic batcher that packs requests to the
+//! artifact's compiled batch shape, std-thread worker pools executing on
+//! PJRT or the in-process functional units, Prometheus-style metrics
+//! ([`Metrics::metrics_text`]), a deterministic open-loop load generator
+//! ([`loadgen`], `rapid serve-bench`) and a pipeline scheduler mirroring
+//! the 2/3/4-stage units for the Fig. 11/12 study.
 
 pub mod batcher;
+pub mod loadgen;
 pub mod metrics;
 pub mod pipeline_sched;
 pub mod router;
@@ -17,4 +23,7 @@ pub mod cli;
 
 pub use batcher::{Batch, DynamicBatcher};
 pub use metrics::Metrics;
-pub use router::{BatchDivFactory, BatchMulFactory, Coordinator, Request, Response};
+pub use router::{
+    BatchDivFactory, BatchMulFactory, Coordinator, CoordinatorConfig, Request, Response,
+    SubmitError,
+};

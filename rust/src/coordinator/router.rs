@@ -1,12 +1,39 @@
-//! Request router + worker pool: the leader loop of the serving shell.
+//! Request router + worker pool: the sharded ingress of the serving shell.
 //!
-//! Requests (operand vectors) enter through a bounded queue (backpressure:
-//! `submit` blocks, `try_submit` rejects when full), the leader thread
-//! packs them through the `DynamicBatcher`, full batches are dispatched to
-//! a worker pool over a second bounded channel, workers execute a
-//! pluggable `Executor` (the PJRT artifact in production; an in-process
-//! functional model in tests — the mock the integration tests inject), and
-//! results are scattered back to per-request reply channels.
+//! Requests (operand vectors) enter through bounded queues (backpressure:
+//! `submit` blocks, `try_*` rejects when full), one of N independent
+//! *lanes* packs them through its own `DynamicBatcher`, full batches are
+//! dispatched to the lane's worker pool over a second bounded channel,
+//! workers execute a pluggable `Executor` (the PJRT artifact in
+//! production; an in-process functional model in tests — the mock the
+//! integration tests inject), and results are scattered back to
+//! per-request reply channels.
+//!
+//! ## Sharding
+//!
+//! With `shards == 1` this is the classic single-leader loop: one ingress
+//! queue, one batching thread, `workers` executor threads — the oracle
+//! the sharded path is pinned bit-identical against. With `shards == N`
+//! the coordinator runs N fully independent lanes (own bounded ingress
+//! queue, own batcher thread, own worker pool), and the *submitting*
+//! thread routes each request round-robin, so batch formation and
+//! dispatch scale with cores instead of serializing on one leader. A
+//! request is routed whole — its spans never cross lanes — and every
+//! lane serves the identical unit on independent operand lanes with inert
+//! zero padding, so replies are bit-identical to the single-leader path
+//! regardless of shard count or routing order (pinned by
+//! `tests/coordinator_e2e.rs`).
+//!
+//! ## Deadlines
+//!
+//! A request may carry a deadline. Admission control runs *at enqueue*:
+//! the submitting thread estimates the wait as
+//! `max_wait + (queue_depth + 1) · ewma_batch_service` for its lane and
+//! sheds the request — counted in [`Metrics::shed`], never enqueued,
+//! never executed — when the estimate exceeds the deadline. Once
+//! admitted, a request always executes (its measured latency, not a
+//! mid-queue drop, reflects any overload); the bounded queues still
+//! provide hard backpressure independently of deadlines.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -153,6 +180,11 @@ pub struct Request {
     pub reply: SyncSender<Response>,
     /// Submission time for latency accounting.
     pub t_submit: Instant,
+    /// Absolute completion deadline, if the caller set one. Admission
+    /// control already ran at enqueue; the field rides along for
+    /// observability (admitted requests always execute — see the module
+    /// doc's shed policy).
+    pub deadline: Option<Instant>,
 }
 
 /// Reply carrying one span's results, tagged with its position inside the
@@ -168,16 +200,31 @@ pub struct Response {
     pub values: Vec<i64>,
 }
 
+/// Why a non-blocking submission did not enter the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The lane's bounded ingress queue is full (backpressure) or closed.
+    Full,
+    /// Deadline admission control shed the request: the enqueue-time
+    /// estimate said the deadline cannot be met given the queue depth.
+    Shed,
+}
+
 /// Sizing knobs of one coordinator instance.
+#[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// Fixed batch shape requests are packed into.
     pub batch_capacity: usize,
     /// Deadline after which a short batch is flushed anyway.
     pub max_wait: Duration,
-    /// Executor worker threads.
+    /// Total executor worker threads, divided across shards (≥ 1 each).
     pub workers: usize,
-    /// Bounded ingress queue depth (the backpressure point).
+    /// Bounded ingress queue depth per shard (the backpressure point).
     pub queue_depth: usize,
+    /// Independent ingress lanes. `1` = the classic single-leader loop
+    /// (the bit-identity oracle); `N` = N queue+batcher+worker-pool lanes
+    /// with round-robin routing at the submitting thread.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -187,72 +234,133 @@ impl Default for CoordinatorConfig {
             max_wait: Duration::from_micros(200),
             workers: 2,
             queue_depth: 64,
+            shards: 1,
         }
     }
 }
 
-/// The leader + worker-pool coordinator.
+/// The sharded-lane (or, at `shards == 1`, leader + worker-pool)
+/// coordinator.
 pub struct Coordinator {
-    ingress: SyncSender<Request>,
-    /// Live counters (shared with the leader and workers).
+    lanes: Vec<SyncSender<Request>>,
+    /// Live counters (shared with all lanes and workers).
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    next_lane: AtomicU64,
+    max_wait: Duration,
     shutdown: Arc<AtomicBool>,
     threads: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Coordinator {
-    /// Spawn the leader and `cfg.workers` executor threads and return the
+    /// Spawn every lane (batcher thread + executor threads) and return the
     /// handle callers submit through. Threads join on drop.
     pub fn start(exec: Arc<dyn ExecutorFactory>, cfg: CoordinatorConfig) -> Arc<Self> {
-        let metrics = Arc::new(Metrics::new());
+        let shards = cfg.shards.max(1);
+        let workers_per_shard = (cfg.workers / shards).max(1);
+        let metrics = Arc::new(Metrics::with_shards(shards));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (ingress_tx, ingress_rx) = sync_channel::<Request>(cfg.queue_depth);
-        let (batch_tx, batch_rx) = sync_channel::<(Batch, Vec<PendingSpan>)>(cfg.workers * 2);
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
-
+        let mut lanes = Vec::with_capacity(shards);
         let mut threads = Vec::new();
-        // leader: ingest + batch
-        {
-            let metrics = metrics.clone();
-            let shutdown = shutdown.clone();
-            let capacity = cfg.batch_capacity;
-            let max_wait = cfg.max_wait;
-            threads.push(std::thread::Builder::new().name("rapid-leader".into()).spawn(move || {
-                leader_loop(ingress_rx, batch_tx, metrics, shutdown, capacity, max_wait)
-            }).expect("spawn leader"));
-        }
-        // workers
-        for w in 0..cfg.workers {
-            let rx = batch_rx.clone();
-            let exec = exec.clone();
-            let metrics = metrics.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("rapid-worker-{w}"))
-                    .spawn(move || worker_loop(rx, exec, metrics))
-                    .expect("spawn worker"),
-            );
+        for s in 0..shards {
+            let (ingress_tx, ingress_rx) = sync_channel::<Request>(cfg.queue_depth);
+            let (batch_tx, batch_rx) = sync_channel::<(Batch, Vec<PendingSpan>)>(workers_per_shard * 2);
+            let batch_rx = Arc::new(Mutex::new(batch_rx));
+            lanes.push(ingress_tx);
+            // lane leader: ingest + batch
+            {
+                let metrics = metrics.clone();
+                let shutdown = shutdown.clone();
+                let capacity = cfg.batch_capacity;
+                let max_wait = cfg.max_wait;
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("rapid-leader-{s}"))
+                        .spawn(move || {
+                            leader_loop(s, ingress_rx, batch_tx, metrics, shutdown, capacity, max_wait)
+                        })
+                        .expect("spawn leader"),
+                );
+            }
+            // lane workers
+            for w in 0..workers_per_shard {
+                let rx = batch_rx.clone();
+                let exec = exec.clone();
+                let metrics = metrics.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("rapid-worker-{s}-{w}"))
+                        .spawn(move || worker_loop(rx, exec, metrics))
+                        .expect("spawn worker"),
+                );
+            }
         }
         Arc::new(Coordinator {
-            ingress: ingress_tx,
+            lanes,
             metrics,
             next_id: AtomicU64::new(1),
+            next_lane: AtomicU64::new(0),
+            max_wait: cfg.max_wait,
             shutdown,
             threads: Mutex::new(threads),
         })
+    }
+
+    /// Round-robin lane pick by the submitting thread (the scalable part
+    /// of the sharded ingress: no leader serializes routing).
+    fn route(&self) -> usize {
+        (self.next_lane.fetch_add(1, Ordering::Relaxed) % self.lanes.len() as u64) as usize
+    }
+
+    /// Enqueue-time wait estimate for `lane` in ns: worst-case batch
+    /// formation linger plus draining everything queued ahead at the
+    /// EWMA batch service time (0 until the first batch completes, so a
+    /// cold coordinator admits everything with a feasible deadline).
+    pub fn estimated_wait_ns(&self, lane: usize) -> u64 {
+        let depth = self.metrics.ingress_depth(lane);
+        let service = self.metrics.batch_service_ewma_ns();
+        self.max_wait.as_nanos() as u64 + (depth + 1) * service
     }
 
     /// Submit and wait for the reply (blocking backpressure). A request may
     /// be split across batches at capacity boundaries; replies arrive one
     /// per span and are reassembled in order here.
     pub fn call(&self, a: Vec<i64>, b: Vec<i64>) -> Vec<i64> {
+        self.call_with_deadline(a, b, None).expect("no deadline, never shed")
+    }
+
+    /// [`Self::call`] with optional deadline admission control: `Err(Shed)`
+    /// when the enqueue-time estimate says `deadline` cannot be met given
+    /// the lane's queue depth (counted in [`Metrics::shed`], never
+    /// enqueued, never executed).
+    pub fn call_with_deadline(
+        &self,
+        a: Vec<i64>,
+        b: Vec<i64>,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<i64>, SubmitError> {
+        let lane = self.route();
+        if let Some(d) = deadline {
+            if self.estimated_wait_ns(lane) > d.as_nanos() as u64 {
+                self.metrics.record_shed();
+                return Err(SubmitError::Shed);
+            }
+        }
         let (tx, rx) = sync_channel(16);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let n = a.len();
+        let now = Instant::now();
+        let req = Request {
+            id,
+            a,
+            b,
+            reply: tx,
+            t_submit: now,
+            deadline: deadline.map(|d| now + d),
+        };
         self.metrics.record_request(n);
-        let req = Request { id, a, b, reply: tx, t_submit: Instant::now() };
-        self.ingress.send(req).expect("coordinator ingress closed");
+        self.metrics.ingress_enqueued(lane);
+        self.lanes[lane].send(req).expect("coordinator ingress closed");
         let mut out = vec![0i64; n];
         let mut filled = 0usize;
         while filled < n {
@@ -262,25 +370,64 @@ impl Coordinator {
             out[resp.offset..end].copy_from_slice(&resp.values);
             filled += resp.values.len();
         }
-        out
+        Ok(out)
     }
 
     /// Non-blocking submit; `Err` = queue full (backpressure signal).
+    /// Replies arrive one per span on the returned channel.
     pub fn try_call_async(&self, a: Vec<i64>, b: Vec<i64>) -> Result<Receiver<Response>, ()> {
-        let (tx, rx) = sync_channel(1);
+        self.try_call_async_with_deadline(a, b, None).map_err(|_| ())
+    }
+
+    /// Non-blocking submit with optional deadline admission control —
+    /// the open-loop load generator's entry point: `Err(Shed)` when
+    /// admission control drops the request, `Err(Full)` on backpressure.
+    /// The reply channel is sized for split requests (one reply per span).
+    pub fn try_call_async_with_deadline(
+        &self,
+        a: Vec<i64>,
+        b: Vec<i64>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        let lane = self.route();
+        if let Some(d) = deadline {
+            if self.estimated_wait_ns(lane) > d.as_nanos() as u64 {
+                self.metrics.record_shed();
+                return Err(SubmitError::Shed);
+            }
+        }
+        let n = a.len();
+        let (tx, rx) = sync_channel(16);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.record_request(a.len());
-        let req = Request { id, a, b, reply: tx, t_submit: Instant::now() };
-        match self.ingress.try_send(req) {
-            Ok(()) => Ok(rx),
+        let now = Instant::now();
+        let req = Request {
+            id,
+            a,
+            b,
+            reply: tx,
+            t_submit: now,
+            deadline: deadline.map(|d| now + d),
+        };
+        self.metrics.ingress_enqueued(lane);
+        match self.lanes[lane].try_send(req) {
+            Ok(()) => {
+                self.metrics.record_request(n);
+                Ok(rx)
+            }
             Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.metrics.ingress_dequeued(lane);
                 self.metrics.record_rejected();
-                Err(())
+                Err(SubmitError::Full)
             }
         }
     }
 
-    /// Signal the leader loop to exit (drop joins the threads).
+    /// Number of independent ingress lanes.
+    pub fn shards(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Signal the lane loops to exit (drop joins the threads).
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
     }
@@ -289,8 +436,9 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown();
-        // leader exits when ingress disconnects; workers when batch channel
-        // closes. Joining here keeps tests leak-free.
+        // each leader exits on the shutdown flag (or when its ingress
+        // disconnects); its workers exit when the lane's batch channel
+        // closes behind it. Joining here keeps tests leak-free.
         for t in self.threads.lock().unwrap().drain(..) {
             let _ = t.join();
         }
@@ -310,6 +458,7 @@ struct PendingSpan {
 }
 
 fn leader_loop(
+    shard: usize,
     ingress: Receiver<Request>,
     batch_tx: SyncSender<(Batch, Vec<PendingSpan>)>,
     metrics: Arc<Metrics>,
@@ -319,6 +468,9 @@ fn leader_loop(
 ) {
     let mut batcher = DynamicBatcher::new(capacity, max_wait);
     let mut pending: Vec<PendingSpan> = Vec::new();
+    // reusable full-batch buffer: offer_into appends here, so steady-state
+    // batch formation never allocates a fresh Vec<Batch>
+    let mut emitted: Vec<Batch> = Vec::new();
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
@@ -329,22 +481,21 @@ fn leader_loop(
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 // drain: flush the open batch and exit
                 if let Some(b) = batcher.flush() {
-                    dispatch(&batch_tx, b, std::mem::take(&mut pending), &metrics);
+                    let spans = collect_spans(&b, &pending);
+                    metrics.record_batch(b.used, capacity);
+                    dispatch(&batch_tx, b, spans, &metrics);
                 }
                 return;
             }
         };
         if let Some(req) = req {
+            metrics.ingress_dequeued(shard);
             // requests larger than the batch are executed in chunks but the
-            // reply is assembled by the worker via multiple spans with the
+            // reply is assembled by the caller via multiple spans with the
             // same reply channel
-            let full = batcher.offer(req.id, &req.a, &req.b);
+            batcher.offer_into(req.id, &req.a, &req.b, &mut emitted);
             // spans for this request may appear in several emitted batches;
             // tag each emitted batch with its pending spans
-            let mut emitted = full;
-            // compute spans ownership: DynamicBatcher already recorded the
-            // spans inside each Batch, so pending only needs reply handles
-            // keyed by id.
             for b in emitted.drain(..) {
                 let spans = spans_for(&b, &req, &pending);
                 metrics.record_batch(b.used, capacity);
@@ -413,8 +564,9 @@ fn dispatch(
     tx: &SyncSender<(Batch, Vec<PendingSpan>)>,
     b: Batch,
     spans: Vec<PendingSpan>,
-    _metrics: &Metrics,
+    metrics: &Metrics,
 ) {
+    metrics.batch_enqueued();
     let _ = tx.send((b, spans));
 }
 
@@ -433,7 +585,10 @@ fn worker_loop(
             Ok(x) => x,
             Err(_) => return,
         };
+        metrics.batch_dequeued();
+        let t_exec = Instant::now();
         let out = exec.execute(&batch.a, &batch.b);
+        metrics.record_batch_service(t_exec.elapsed());
         for s in spans {
             let values = out[s.offset..s.offset + s.len].to_vec();
             metrics.record_latency(s.t_submit.elapsed());
@@ -458,6 +613,7 @@ mod tests {
             max_wait: Duration::from_micros(100),
             workers: 2,
             queue_depth: 8,
+            shards: 1,
         }
     }
 
@@ -469,25 +625,41 @@ mod tests {
     }
 
     #[test]
+    fn call_roundtrip_sharded() {
+        let c = Coordinator::start(add_exec(), CoordinatorConfig { shards: 4, ..small_cfg() });
+        assert_eq!(c.shards(), 4);
+        for i in 0..16i64 {
+            // 16 calls round-robin across all 4 lanes
+            let out = c.call(vec![i, i + 1], vec![10, 20]);
+            assert_eq!(out, vec![i + 10, i + 21]);
+        }
+    }
+
+    #[test]
     fn many_concurrent_callers_get_their_own_results() {
-        let c = Coordinator::start(add_exec(), small_cfg());
-        let mut handles = Vec::new();
-        for t in 0..8i64 {
-            let c = c.clone();
-            handles.push(std::thread::spawn(move || {
-                for i in 0..50i64 {
-                    let a: Vec<i64> = (0..5).map(|j| t * 1000 + i * 10 + j).collect();
-                    let b = vec![1i64; 5];
-                    let out = c.call(a.clone(), b);
-                    let want: Vec<i64> = a.iter().map(|x| x + 1).collect();
-                    assert_eq!(out, want);
-                }
-            }));
+        for shards in [1usize, 4] {
+            let c = Coordinator::start(
+                add_exec(),
+                CoordinatorConfig { shards, workers: 4, ..small_cfg() },
+            );
+            let mut handles = Vec::new();
+            for t in 0..8i64 {
+                let c = c.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..50i64 {
+                        let a: Vec<i64> = (0..5).map(|j| t * 1000 + i * 10 + j).collect();
+                        let b = vec![1i64; 5];
+                        let out = c.call(a.clone(), b);
+                        let want: Vec<i64> = a.iter().map(|x| x + 1).collect();
+                        assert_eq!(out, want);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 400, "shards={shards}");
         }
-        for h in handles {
-            h.join().unwrap();
-        }
-        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 400);
     }
 
     #[test]
@@ -496,8 +668,7 @@ mod tests {
         let a: Vec<i64> = (0..100).collect();
         let b: Vec<i64> = (0..100).map(|x| 2 * x).collect();
         // oversized requests yield multiple spans; the reply channel gets
-        // one Response per span — call() as written expects one reply, so
-        // use the async interface and collect.
+        // one Response per span — collect and reassemble by offset.
         let rx = c.try_call_async(a.clone(), b.clone()).unwrap();
         let mut got = vec![0i64; 100];
         let mut filled = 0;
@@ -548,6 +719,7 @@ mod tests {
             max_wait: Duration::from_micros(100),
             workers: 2,
             queue_depth: 8,
+            shards: 1,
         };
         let unit = RapidMul::new(16, 10);
         let model = RapidMul::new(16, 10);
@@ -567,5 +739,37 @@ mod tests {
         let _ = c.call(vec![1, 2, 3], vec![4, 5, 6]);
         // 3 elements in a 16-batch → 13 padded
         assert_eq!(c.metrics.padded_elements.load(Ordering::Relaxed), 13);
+    }
+
+    #[test]
+    fn impossible_deadline_is_shed_before_enqueue() {
+        let c = Coordinator::start(add_exec(), small_cfg());
+        // zero deadline < max_wait floor of the estimate → always shed
+        let r = c.call_with_deadline(vec![1, 2], vec![3, 4], Some(Duration::ZERO));
+        assert_eq!(r, Err(SubmitError::Shed));
+        assert_eq!(c.metrics.shed.load(Ordering::Relaxed), 1);
+        // shed requests are not counted as submitted
+        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 0);
+        // a generous deadline passes admission and completes
+        let r = c.call_with_deadline(vec![1, 2], vec![3, 4], Some(Duration::from_secs(5)));
+        assert_eq!(r, Ok(vec![4, 6]));
+        assert_eq!(c.metrics.shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn estimated_wait_grows_with_queue_depth() {
+        let c = Coordinator::start(add_exec(), small_cfg());
+        let base = c.estimated_wait_ns(0);
+        assert!(base >= 100_000, "max_wait floor: {base}");
+        // simulate a measured service time and queued requests: the
+        // estimate must grow linearly with depth
+        c.metrics.record_batch_service(Duration::from_micros(500));
+        let d0 = c.estimated_wait_ns(0);
+        c.metrics.ingress_enqueued(0);
+        c.metrics.ingress_enqueued(0);
+        let d2 = c.estimated_wait_ns(0);
+        assert_eq!(d2 - d0, 2 * 500_000);
+        c.metrics.ingress_dequeued(0);
+        c.metrics.ingress_dequeued(0);
     }
 }

@@ -29,8 +29,11 @@
 //!   default-on `pjrt` cargo feature; `--no-default-features` builds are
 //!   runtime-free and the PJRT-dependent tests/examples skip cleanly when
 //!   `libxla` is absent (DESIGN.md §2).
-//! * [`coordinator`] — the streaming orchestrator: dynamic batcher, worker
-//!   pool, backpressure, pipeline scheduler, metrics.
+//! * [`coordinator`] — the streaming orchestrator: sharded ingress lanes
+//!   (dynamic batcher + worker pool each) with backpressure and deadline
+//!   admission control, Prometheus-style metrics, the deterministic
+//!   open-loop load harness (`rapid serve-bench`) and the pipeline
+//!   scheduler.
 //! * [`util`] — zero-dependency PRNG/stats/CLI/bench/property-test helpers,
 //!   including [`util::par`], the deterministic multi-core sweep engine
 //!   every exhaustive/Monte-Carlo/power/equivalence sweep fans out on

@@ -13,6 +13,9 @@
 //!   (`rapid explore --app jpeg --qor "psnr>=30"`).
 //! * `serve`         — start the streaming coordinator on PJRT artifacts or
 //!   the in-process batched functional model (`--backend functional`).
+//! * `serve-bench`   — deterministic open-loop load ladder against the
+//!   sharded functional serve path; records offered vs. achieved
+//!   throughput and p50/p99/p999 latency to `BENCH_serve.json`.
 
 use rapid::util::cli::Args;
 
@@ -37,9 +40,13 @@ fn main() {
             {
                 let _ = argv;
                 eprintln!("serve requires the `pjrt` feature (build with default features)");
+                eprintln!("hint: `rapid serve-bench` load-tests the functional path feature-free");
                 std::process::exit(2);
             }
         }
+        // the open-loop load harness drives the in-process functional
+        // backend only, so it works on every build (no pjrt feature gate)
+        "serve-bench" => rapid::coordinator::loadgen::cli::run(argv),
         "--help" | "help" | "-h" => usage(),
         other => {
             eprintln!("unknown command '{other}'");
@@ -74,9 +81,16 @@ fn usage() {
                                                 Pareto design-space exploration; BUDGET\n\
                                                 is e.g. \"psnr>=30\" or \"are<=0.02,luts<=400\"\n\
            serve         [--backend {{pjrt|functional}}] [--artifacts DIR] [--unit NAME]\n\
-                         [--width N] [--op {{mul|div}}] [--batch B] [--workers W] [--requests R]\n\
+                         [--width N] [--op {{mul|div}}] [--batch B] [--workers W] [--shards S]\n\
+                         [--requests R] [--deadline-us D]\n\
                                                 streaming coordinator demo (PJRT artifacts,\n\
-                                                or the in-process batched functional model)\n"
+                                                or the in-process batched functional model)\n\
+           serve-bench   [--unit NAME] [--op {{mul|div}}] [--width N] [--rates R1,R2,..]\n\
+                         [--duration-ms MS] [--req-len L] [--shards S] [--workers W]\n\
+                         [--batch B] [--deadline-us D] [--seed S] [--out FILE]\n\
+                                                deterministic open-loop load ladder over the\n\
+                                                sharded functional serve path; records offered\n\
+                                                vs. achieved + p50/p99/p999 to BENCH_serve.json\n"
     );
 }
 

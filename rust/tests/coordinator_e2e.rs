@@ -8,8 +8,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use rapid::arith::{ApproxDiv, ApproxMul, RapidDiv, RapidMul};
+use rapid::coordinator::loadgen;
 use rapid::coordinator::router::{
     BatchDivFactory, BatchMulFactory, Coordinator, CoordinatorConfig, ExecutorFactory,
+    SubmitError,
 };
 use rapid::util::XorShift256;
 
@@ -26,6 +28,7 @@ fn cfg(batch: usize, workers: usize) -> CoordinatorConfig {
         max_wait: Duration::from_micros(200),
         workers,
         queue_depth: 32,
+        shards: 1,
     }
 }
 
@@ -131,6 +134,7 @@ fn backpressure_rejects_when_full() {
             max_wait: Duration::from_micros(50),
             workers: 1,
             queue_depth: 2,
+            shards: 1,
         },
     );
     // flood the queue asynchronously
@@ -161,4 +165,143 @@ fn metrics_account_padding_and_batches() {
     assert_eq!(batches, 1);
     assert_eq!(padding, 22);
     assert!(c.metrics.mean_latency_ns() > 0.0);
+    // the Prometheus view carries the same counters
+    let t = c.metrics.metrics_text();
+    assert!(t.contains("rapid_batches_total 1"), "{t}");
+    assert!(t.contains("rapid_padded_elements_total 22"), "{t}");
+    assert!(t.contains("rapid_ingress_queue_depth{shard=\"0\"} 0"), "{t}");
+}
+
+/// ISSUE 8 tentpole pin: the sharded ingress is bit-identical to the
+/// single-leader oracle. Every (workers, shards) point in {1,4}² serves
+/// the identical request stream; replies must match the shards=1/workers=1
+/// oracle (and the direct unit model) lane for lane, bit for bit —
+/// routing, per-lane batch packing and padding must never leak into
+/// results.
+#[test]
+fn sharded_matches_leader_oracle_bit_identical() {
+    let model = RapidMul::new(16, 10);
+    // fixed request stream: varied lengths exercise padding, splitting
+    // (lengths > batch) and multi-request packing inside one batch
+    let mut rng = XorShift256::new(77);
+    let requests: Vec<(Vec<i64>, Vec<i64>)> = (0..60)
+        .map(|_| {
+            let n = 1 + rng.below(700) as usize;
+            let a: Vec<i64> = (0..n).map(|_| rng.bits(16) as i64).collect();
+            let b: Vec<i64> = (0..n).map(|_| rng.bits(16) as i64).collect();
+            (a, b)
+        })
+        .collect();
+
+    // the oracle: the classic single-leader, single-worker path
+    let oracle_coord = Coordinator::start(rapid_exec(), cfg(256, 1));
+    let oracle: Vec<Vec<i64>> = requests
+        .iter()
+        .map(|(a, b)| oracle_coord.call(a.clone(), b.clone()))
+        .collect();
+    // the oracle itself matches the direct unit model
+    for ((a, b), got) in requests.iter().zip(&oracle) {
+        for i in 0..a.len() {
+            assert_eq!(got[i], model.mul(a[i] as u64, b[i] as u64) as i64);
+        }
+    }
+
+    for workers in [1usize, 4] {
+        for shards in [1usize, 4] {
+            let c = Coordinator::start(
+                rapid_exec(),
+                CoordinatorConfig { workers, shards, ..cfg(256, workers) },
+            );
+            for ((a, b), want) in requests.iter().zip(&oracle) {
+                let got = c.call(a.clone(), b.clone());
+                assert_eq!(&got, want, "workers={workers} shards={shards}");
+            }
+            assert_eq!(c.shards(), shards);
+        }
+    }
+}
+
+/// ISSUE 8 satellite: expired deadlines are shed at enqueue — rejected
+/// with `SubmitError::Shed`, counted in `Metrics::shed`, and their
+/// operands never reach an executor.
+#[test]
+fn deadline_shed_requests_never_execute() {
+    static EXECUTED: AtomicUsize = AtomicUsize::new(0);
+    #[derive(Clone)]
+    struct CountingFactory;
+    impl ExecutorFactory for CountingFactory {
+        fn make(&self) -> Box<dyn rapid::coordinator::router::Executor> {
+            Box::new(|a: &[i64], _b: &[i64]| {
+                // count live (non-padding) sentinel lanes that execute
+                EXECUTED.fetch_add(a.iter().filter(|&&x| x == 0xDEAD).count(), Ordering::SeqCst);
+                a.to_vec()
+            })
+        }
+    }
+    let c = Coordinator::start(Arc::new(CountingFactory), cfg(16, 2));
+    // an already-expired (zero) deadline can never be met: the admission
+    // estimate has a max_wait floor > 0
+    for _ in 0..10 {
+        let r = c.call_with_deadline(vec![0xDEAD; 4], vec![1; 4], Some(Duration::ZERO));
+        assert_eq!(r, Err(SubmitError::Shed));
+    }
+    assert_eq!(c.metrics.shed.load(Ordering::Relaxed), 10);
+    assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 0, "sheds are not submissions");
+    // generous deadlines pass admission and complete normally
+    let ok = c
+        .call_with_deadline(vec![7, 8], vec![0, 0], Some(Duration::from_secs(10)))
+        .expect("admitted");
+    assert_eq!(ok, vec![7, 8]);
+    assert_eq!(c.metrics.shed.load(Ordering::Relaxed), 10, "no further sheds");
+    // give any (erroneously) enqueued work time to surface, then check
+    // that no shed sentinel lane ever executed
+    std::thread::sleep(Duration::from_millis(20));
+    assert_eq!(EXECUTED.load(Ordering::SeqCst), 0, "shed operands must never execute");
+}
+
+/// ISSUE 8 satellite: the open-loop load generator is deterministic under
+/// a fixed seed — same schedule, same operand streams, and (at a rate the
+/// backend trivially sustains, with no deadline) the same recorded rows:
+/// request/element counts and the response checksum, twice over.
+#[test]
+fn loadgen_same_seed_same_rows() {
+    let factory: Arc<dyn ExecutorFactory> =
+        Arc::new(BatchMulFactory { unit: Arc::new(RapidMul::new(16, 10)) });
+    let coord_cfg = CoordinatorConfig {
+        batch_capacity: 512,
+        max_wait: Duration::from_micros(100),
+        workers: 2,
+        queue_depth: 2048,
+        shards: 2,
+    };
+    let cfg = loadgen::LoadgenConfig::for_mul(
+        16,
+        vec![1500, 3000],
+        Duration::from_millis(120),
+        24,
+        2026,
+    );
+    // the schedule itself is a pure function of (rate, duration, seed, rung)
+    assert_eq!(
+        loadgen::schedule(1500, cfg.duration, cfg.seed, 0),
+        loadgen::schedule(1500, cfg.duration, cfg.seed, 0)
+    );
+    let run1 = loadgen::run(&factory, &coord_cfg, &cfg);
+    let run2 = loadgen::run(&factory, &coord_cfg, &cfg);
+    assert_eq!(run1.len(), 2);
+    for (a, b) in run1.iter().zip(&run2) {
+        assert_eq!(a.offered_rps, b.offered_rps);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!((a.shed, a.rejected), (0, 0), "sustainable rate: nothing dropped");
+        assert_eq!((b.shed, b.rejected), (0, 0));
+        assert_eq!(a.completed, a.requests, "everything admitted completes");
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.elements, b.elements);
+        assert_eq!(a.checksum, b.checksum, "same seed → same served bits");
+    }
+    // and the rows survive the Recorder round-trip with stable names
+    let j = loadgen::to_recorder(&run1).to_json();
+    assert!(j.contains("\"bench\": \"serve\""), "{j}");
+    assert!(j.contains("offered_1500rps_throughput"), "{j}");
+    assert!(j.contains("offered_3000rps_p999"), "{j}");
 }
