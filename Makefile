@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 is `cargo build --release && cargo test -q`.
 
-.PHONY: all test artifacts bench bench-hotpath bench-explore bench-emit bench-serve emit-artifacts doc
+.PHONY: all test artifacts bench bench-hotpath bench-explore bench-emit bench-serve bench-governor emit-artifacts doc
 
 all:
 	cargo build --release
@@ -42,6 +42,12 @@ bench-emit:
 # over the sharded functional path; also rewrites BENCH_serve.json.
 bench-serve:
 	cargo bench --bench serve
+
+# QoR-adaptive governed scenario (clean -> noisy -> clean through the
+# rapid3 -> rapid10 -> exact ladder): switch trace, per-phase throughput
+# and tail latency; also rewrites BENCH_governor.json.
+bench-governor:
+	cargo bench --bench governor
 
 # The Table III trio as synthesizable RTL bundles (module + self-checking
 # testbench + $readmemh vectors) under rtl/. With iverilog installed,

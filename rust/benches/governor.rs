@@ -1,0 +1,101 @@
+//! §Governor — QoR-adaptive closed-loop scenario over the governed serve
+//! path (not a paper figure): a clean → noisy → clean workload drives the
+//! accuracy ladder through the hysteresis policy, recording the switch
+//! trace, per-phase throughput and tail latency to `BENCH_governor.json`
+//! (`make bench-governor` refreshes it; `rapid serve-bench --governor` is
+//! the CLI twin with every knob exposed).
+//!
+//! Two scenarios run: the committed jpeg/PSNR trajectory (recorded), and
+//! a harris/vector-ratio variant (printed only) showing the same policy
+//! reacting through a completely different QoR metric. Everything in the
+//! trace is deterministic under the fixed seed — the bench's printed
+//! switch windows are bit-identical run to run; only latency columns are
+//! machine-dependent.
+
+use std::time::Duration;
+
+use rapid::bench_support::table::Table;
+use rapid::coordinator::governor::{App, GovernorConfig, Ladder};
+use rapid::coordinator::router::CoordinatorConfig;
+use rapid::coordinator::scenario::{
+    self, run_scenario, Phase, Regime, ScenarioConfig, ScenarioReport,
+};
+
+fn coord_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        batch_capacity: 4096,
+        max_wait: Duration::from_micros(200),
+        workers: 4,
+        queue_depth: 4096,
+        shards: 4,
+    }
+}
+
+fn scenario_cfg(app: App) -> ScenarioConfig {
+    ScenarioConfig {
+        app,
+        width: 16,
+        phases: vec![
+            Phase { regime: Regime::Clean, requests: 2000, rate: 20_000 },
+            Phase { regime: Regime::Noisy, requests: 2000, rate: 20_000 },
+            Phase { regime: Regime::Clean, requests: 2000, rate: 20_000 },
+        ],
+        req_len: 256,
+        seed: 42,
+        governor: GovernorConfig {
+            floor: app.default_floor(),
+            headroom: app.default_headroom(),
+            window: 256,
+            dwell: 3,
+            sample_stride: 8,
+            sample_lanes: 32,
+            seed: 42,
+            p99_budget_ns: 0,
+        },
+        start_rung: 0,
+        deadline: None,
+    }
+}
+
+fn run(t: &mut Table, label: &str, app: App) -> ScenarioReport {
+    let cfg = scenario_cfg(app);
+    let ladder = Ladder::from_names(&["rapid3", "rapid10", "exact"], cfg.width)
+        .expect("registry ladder");
+    let rep = run_scenario(&ladder, &coord_cfg(), &cfg);
+    print!("{label}:\n{}", scenario::format_report(&rep));
+    for (i, p) in rep.phases.iter().enumerate() {
+        t.row(&[
+            format!("{label} phase {i} ({})", p.phase.regime.label()),
+            format!("{} req @ {} req/s", p.phase.requests, p.phase.rate),
+            format!("{} -> {}", ladder.rung_name(p.start_rung), ladder.rung_name(p.end_rung)),
+            format!("{}", rep.trace.transitions.iter().filter(|tr| {
+                // transitions committed while this phase's windows closed
+                let w0 = rep.phases[..i].iter().map(|q| q.phase.requests).sum::<u64>()
+                    / cfg.governor.window;
+                let w1 = w0 + p.phase.requests / cfg.governor.window;
+                (w0..w1).contains(&tr.window)
+            }).count()),
+            format!("{}/{}", p.admitted, p.phase.requests),
+        ]);
+    }
+    rep
+}
+
+fn main() {
+    let mut t = Table::new(
+        "§Governor — closed-loop accuracy switching (rapid3 -> rapid10 -> exact, 16-bit)",
+        &["scenario", "offered", "rung", "switches", "admitted"],
+    );
+
+    let jpeg = run(&mut t, "jpeg/psnr", App::Jpeg);
+    let _harris = run(&mut t, "harris/vectors", App::Harris);
+
+    t.print();
+
+    match scenario::to_recorder(&jpeg, 256).write("BENCH_governor.json") {
+        Ok(()) => {
+            println!("\nrecorded -> BENCH_governor.json (the EXPERIMENTS.md §Governor trajectory)")
+        }
+        Err(e) => eprintln!("\ncould not write BENCH_governor.json: {e}"),
+    }
+}

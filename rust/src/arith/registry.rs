@@ -111,6 +111,13 @@ pub fn div_names() -> Vec<&'static str> {
     BASE_DIVS.iter().chain(RAPID_KEYS).copied().collect()
 }
 
+/// Resolve an owned/borrowed multiplier name to its canonical `'static`
+/// registry key — consumers that build `explore::space::Candidate`s
+/// (whose `name` is `&'static str`) from user input go through here.
+pub fn static_mul_name(name: &str) -> Option<&'static str> {
+    mul_names().into_iter().find(|&n| n == name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +263,14 @@ mod tests {
     fn unknown_names_rejected() {
         assert!(make_mul("nope", 16).is_none());
         assert!(make_div("nope", 8).is_none());
+    }
+
+    #[test]
+    fn static_names_resolve_owned_strings() {
+        let owned = String::from("rapid10");
+        assert_eq!(static_mul_name(&owned), Some("rapid10"));
+        assert_eq!(static_mul_name("exact"), Some("exact"));
+        assert_eq!(static_mul_name("nope"), None);
     }
 
     #[test]

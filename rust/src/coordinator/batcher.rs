@@ -3,6 +3,16 @@
 //! same policy a serving router uses to feed a fixed-shape accelerator
 //! kernel. Short batches are padded with zero operands (the kernels map
 //! zero inputs to zero outputs, so padding is inert) and trimmed on reply.
+//!
+//! Batches are additionally keyed by a *rung* — the accuracy-ladder index
+//! the QoR governor ([`crate::coordinator::governor`]) stamps on every
+//! request. A batch only ever holds lanes of one rung: offering a request
+//! whose rung differs from the open batch's flushes the open batch first,
+//! so a served batch maps to exactly one unit configuration and replies
+//! stay bit-identical regardless of when a switch lands relative to batch
+//! formation. With the governor off every request carries rung 0 and the
+//! policy is inert — batch boundaries are byte-identical to the
+//! pre-governor batcher.
 
 use std::time::{Duration, Instant};
 
@@ -19,6 +29,9 @@ pub struct Batch {
     pub spans: Vec<(u64, usize, usize, usize)>,
     /// live elements before padding
     pub used: usize,
+    /// Accuracy-ladder rung every lane of this batch is served at
+    /// (0 when no governor is attached).
+    pub rung: u32,
 }
 
 /// Accumulates requests into fixed-size batches.
@@ -29,6 +42,8 @@ pub struct DynamicBatcher {
     cur_b: Vec<i64>,
     spans: Vec<(u64, usize, usize, usize)>,
     opened_at: Option<Instant>,
+    /// rung of the open batch (meaningful only while lanes are pending)
+    cur_rung: u32,
 }
 
 impl DynamicBatcher {
@@ -42,6 +57,7 @@ impl DynamicBatcher {
             cur_b: Vec::with_capacity(capacity),
             spans: Vec::new(),
             opened_at: None,
+            cur_rung: 0,
         }
     }
 
@@ -50,12 +66,12 @@ impl DynamicBatcher {
         self.cur_a.len()
     }
 
-    /// Offer a request; returns any batches that became full. A request
-    /// larger than the capacity is split across batches. Allocates the
-    /// result vector per call — hot loops use [`Self::offer_into`].
+    /// Offer a rung-0 request; returns any batches that became full. A
+    /// request larger than the capacity is split across batches. Allocates
+    /// the result vector per call — hot loops use [`Self::offer_into`].
     pub fn offer(&mut self, id: u64, a: &[i64], b: &[i64]) -> Vec<Batch> {
         let mut out = Vec::new();
-        self.offer_into(id, a, b, &mut out);
+        self.offer_into(id, 0, a, b, &mut out);
         out
     }
 
@@ -63,8 +79,16 @@ impl DynamicBatcher {
     /// appended to `out` (which is not cleared, so a caller-owned reusable
     /// buffer makes steady-state batch formation allocation-free — the
     /// routing loops drain and reuse one buffer across all offers).
-    pub fn offer_into(&mut self, id: u64, a: &[i64], b: &[i64], out: &mut Vec<Batch>) {
+    ///
+    /// `rung` keys the batch: when the open batch holds lanes of a
+    /// different rung it is flushed (short, padded) before this request's
+    /// lanes start a new one — a batch never mixes rungs.
+    pub fn offer_into(&mut self, id: u64, rung: u32, a: &[i64], b: &[i64], out: &mut Vec<Batch>) {
         assert_eq!(a.len(), b.len());
+        if !self.cur_a.is_empty() && self.cur_rung != rung {
+            out.push(self.flush().expect("non-empty batch flushes"));
+        }
+        self.cur_rung = rung;
         let mut off = 0;
         while off < a.len() {
             if self.opened_at.is_none() {
@@ -96,7 +120,7 @@ impl DynamicBatcher {
         b.resize(self.capacity, 0);
         let spans = std::mem::take(&mut self.spans);
         self.opened_at = None;
-        Some(Batch { a, b, spans, used })
+        Some(Batch { a, b, spans, used, rung: self.cur_rung })
     }
 
     /// True when the open batch has waited past the deadline.
@@ -151,7 +175,7 @@ mod tests {
         let a: Vec<i64> = (0..20).collect();
         let via_offer = b1.offer(3, &a, &a);
         let mut out = Vec::new();
-        b2.offer_into(3, &a, &a, &mut out);
+        b2.offer_into(3, 0, &a, &a, &mut out);
         assert_eq!(out.len(), via_offer.len());
         for (x, y) in out.iter().zip(&via_offer) {
             assert_eq!(x.a, y.a);
@@ -163,9 +187,55 @@ mod tests {
         let n0 = out.len();
         let big: Vec<i64> = (0..16).collect();
         b2.flush();
-        b2.offer_into(4, &big, &big, &mut out);
+        b2.offer_into(4, 0, &big, &big, &mut out);
         assert!(out.len() > n0, "second offer appended");
         assert_eq!(out[n0].spans[0].0, 4);
+    }
+
+    #[test]
+    fn rung_change_flushes_open_batch() {
+        // a batch never mixes rungs: offering under a new rung closes the
+        // open (short, padded) batch first
+        let mut b = mk();
+        let mut out = Vec::new();
+        b.offer_into(1, 2, &[1, 2, 3], &[4, 5, 6], &mut out);
+        assert!(out.is_empty(), "short batch stays open under one rung");
+        b.offer_into(2, 3, &[7], &[8], &mut out);
+        assert_eq!(out.len(), 1, "rung change forced a flush");
+        assert_eq!(out[0].rung, 2);
+        assert_eq!(out[0].used, 3);
+        assert_eq!(b.pending(), 1, "new-rung lanes open a fresh batch");
+        let tail = b.flush().unwrap();
+        assert_eq!(tail.rung, 3);
+        assert_eq!(tail.used, 1);
+    }
+
+    #[test]
+    fn constant_rung_is_byte_identical_to_rungless_offers() {
+        // the governor-off pin at batcher level: a stream offered entirely
+        // at rung 0 produces exactly the batches the rungless `offer` API
+        // produces — same boundaries, same lanes, same spans
+        let mut plain = DynamicBatcher::new(16, Duration::from_millis(1));
+        let mut tagged = DynamicBatcher::new(16, Duration::from_millis(1));
+        let mut rng = crate::util::XorShift256::new(5);
+        let mut got_plain = Vec::new();
+        let mut got_tagged = Vec::new();
+        for id in 0..40u64 {
+            let len = 1 + rng.below(22) as usize;
+            let v: Vec<i64> = (0..len as i64).map(|x| x + id as i64).collect();
+            got_plain.extend(plain.offer(id, &v, &v));
+            tagged.offer_into(id, 0, &v, &v, &mut got_tagged);
+        }
+        got_plain.extend(plain.flush());
+        got_tagged.extend(tagged.flush());
+        assert_eq!(got_plain.len(), got_tagged.len());
+        for (x, y) in got_plain.iter().zip(&got_tagged) {
+            assert_eq!(x.a, y.a);
+            assert_eq!(x.b, y.b);
+            assert_eq!(x.spans, y.spans);
+            assert_eq!(x.used, y.used);
+            assert_eq!(x.rung, y.rung);
+        }
     }
 
     #[test]

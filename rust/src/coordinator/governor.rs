@@ -1,0 +1,771 @@
+//! QoR-adaptive runtime governor: closed-loop accuracy switching on the
+//! serving path (DESIGN.md §8).
+//!
+//! The DR-multiplier line of work (PAPERS.md, Vakili et al.) makes
+//! accuracy a *runtime* knob; this module closes the loop over the pieces
+//! the repo already has. A [`Ladder`] of multiplier rungs (ordered
+//! cheapest → most accurate, hand-picked or computed from the exact
+//! Pareto frontier via [`Ladder::pareto`]) is served through
+//! [`super::router::LadderMulFactory`]; the [`Governor`] watches a stream
+//! of per-window observations ([`WindowObs`]) and steps the served rung
+//! along the ladder under a QoR floor and an optional latency budget.
+//!
+//! ## Signals
+//!
+//! * **QoR** — on a seeded stride of requests ([`is_sampled`]), the
+//!   serving harness shadow-evaluates a few lanes: the exact product next
+//!   to the ladder unit's product ([`WindowAccumulator`]). At each window
+//!   close the samples fold into the application metric
+//!   ([`window_qor`] — PSNR for `jpeg`, QRS-detection F1 for `ecg`,
+//!   correct-motion-vector ratio for `harris`, all from
+//!   [`crate::apps::qor`], all higher-is-better). The accumulator also
+//!   shadow-probes the *next cheaper* rung on the same samples, so the
+//!   governor knows whether stepping down is safe before committing.
+//! * **Load** — deadline-shed counts and the p99 latency of the window
+//!   against a budget ([`GovernorConfig::p99_budget_ns`]; 0 disables the
+//!   load signal, which keeps switch traces independent of wall-clock
+//!   measurements).
+//!
+//! ## Policy and determinism
+//!
+//! The policy is a hysteresis state machine: decisions happen only at
+//! window boundaries, step at most one rung, and respect a dwell of ≥ D
+//! windows between switches. [`Governor::observe`] is a *pure* function
+//! of the observation stream — no clocks, no randomness — so a recorded
+//! [`GovernorTrace`] replays exactly ([`Governor::replay`]), and scenario
+//! runs are bit-identical in their switch traces across `RAPID_THREADS`
+//! and shard counts (pinned by `tests/governor_e2e.rs`). The actuation
+//! side is deterministic too: the rung is stamped on each request at
+//! submit time and batches never mix rungs (see
+//! [`super::batcher::DynamicBatcher`]), so the unit a request executes on
+//! never depends on worker or batch timing.
+
+use std::sync::Arc;
+
+use crate::apps::qor::{correct_vector_ratio, psnr, Sensitivity};
+use crate::arith::registry::make_mul;
+use crate::arith::ApproxMul;
+use crate::explore::evaluate::{evaluate_all, EvalOpts};
+use crate::explore::pareto::{frontier, Point};
+use crate::explore::space::{Candidate, Op};
+use crate::util::XorShift256;
+
+use super::router::{ExecutorFactory, LadderMulFactory};
+
+/// Stream id separating the sampling-phase draws from every other
+/// consumer of the scenario seed.
+const SAMPLE_STREAM: u64 = 0x474F_5600_0000_0001;
+
+/// The three paper applications a governed stream can be scored as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum App {
+    /// JPEG stream: windowed PSNR of the sampled products (dB).
+    Jpeg,
+    /// Continuous ECG: QRS-detection F1 over threshold crossings.
+    Ecg,
+    /// UAV tracking (Harris corners): correct-motion-vector ratio.
+    Harris,
+}
+
+impl App {
+    /// Parse an application name (`jpeg` / `ecg` / `harris`).
+    pub fn parse(s: &str) -> Result<App, String> {
+        match s {
+            "jpeg" => Ok(App::Jpeg),
+            "ecg" => Ok(App::Ecg),
+            "harris" => Ok(App::Harris),
+            other => Err(format!(
+                "unknown app '{other}' (expected 'jpeg', 'ecg' or 'harris')"
+            )),
+        }
+    }
+
+    /// Name of the QoR metric this app is scored by.
+    pub fn qor_name(&self) -> &'static str {
+        match self {
+            App::Jpeg => "psnr_db",
+            App::Ecg => "qrs_f1",
+            App::Harris => "vector_ratio",
+        }
+    }
+
+    /// Default QoR floor for `width`-bit served products: 60 dB for the
+    /// JPEG PSNR stream, 0.90 for the two ratio metrics.
+    pub fn default_floor(&self) -> f64 {
+        match self {
+            App::Jpeg => 60.0,
+            App::Ecg | App::Harris => 0.90,
+        }
+    }
+
+    /// Default decay headroom (hysteresis margin above the floor a
+    /// cheaper rung must clear in shadow before the governor steps down).
+    pub fn default_headroom(&self) -> f64 {
+        match self {
+            App::Jpeg => 10.0,
+            App::Ecg | App::Harris => 0.05,
+        }
+    }
+}
+
+/// Peak value of a `width`×`width` product — the PSNR reference and the
+/// normalisation base of the other window metrics.
+fn product_peak(width: u32) -> f64 {
+    let m = ((1u64 << width) - 1) as f64;
+    m * m
+}
+
+/// Fold one window's sampled (exact, approx) product lanes into the app's
+/// QoR metric. All three metrics are higher-is-better:
+///
+/// * `jpeg` — [`psnr`] against the fixed `width`-product peak (dB;
+///   `+Inf` when the samples are error-free);
+/// * `ecg` — threshold the products at peak/4 into "beats" and score
+///   approx detections against exact ones with [`Sensitivity::measure`]
+///   (F1; 1.0 when both streams are beat-free);
+/// * `harris` — pair consecutive lanes into error motion-vectors and
+///   count the fraction within peak/256 of zero
+///   ([`correct_vector_ratio`]).
+///
+/// Empty windows (no sampled lanes) score `+Inf`: no evidence of a
+/// violation.
+pub fn window_qor(app: App, width: u32, exact: &[i64], approx: &[i64]) -> f64 {
+    assert_eq!(exact.len(), approx.len());
+    if exact.is_empty() {
+        return f64::INFINITY;
+    }
+    let peak = product_peak(width);
+    match app {
+        App::Jpeg => psnr(exact, approx, peak),
+        App::Ecg => {
+            let thresh = (peak / 4.0) as i64;
+            let truth: Vec<usize> = exact
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v > thresh)
+                .map(|(i, _)| i)
+                .collect();
+            let detected: Vec<usize> = approx
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v > thresh)
+                .map(|(i, _)| i)
+                .collect();
+            if truth.is_empty() && detected.is_empty() {
+                return 1.0;
+            }
+            Sensitivity::measure(&truth, &detected, 0, 1).f1()
+        }
+        App::Harris => {
+            let scale = peak / 256.0;
+            let vectors: Vec<(f64, f64)> = exact
+                .chunks(2)
+                .zip(approx.chunks(2))
+                .filter(|(e, _)| e.len() == 2)
+                .map(|(e, a)| {
+                    (
+                        (a[0] - e[0]) as f64 / scale,
+                        (a[1] - e[1]) as f64 / scale,
+                    )
+                })
+                .collect();
+            if vectors.is_empty() {
+                return f64::INFINITY;
+            }
+            correct_vector_ratio(&vectors, (0.0, 0.0), 1.0)
+        }
+    }
+}
+
+/// True when request `k` is shadow-sampled: one request per
+/// `stride`-sized slot, at a seeded phase that re-rolls every decision
+/// window so the sample never aliases a periodic workload. Pure function
+/// of `(seed, stride, window_index, k)`.
+pub fn is_sampled(seed: u64, stride: u64, window_index: u64, k: u64) -> bool {
+    let stride = stride.max(1);
+    let phase = XorShift256::new(seed)
+        .split(SAMPLE_STREAM ^ window_index)
+        .below(stride);
+    k % stride == phase
+}
+
+/// Why the governor committed a switch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchReason {
+    /// Window QoR fell below the floor: step up to a more accurate rung.
+    QorFloor,
+    /// Load pressure (sheds, or p99 over budget) with the cheaper rung
+    /// still clearing the floor in shadow: step down.
+    Load,
+    /// Clean regime: the cheaper rung clears floor + headroom in shadow,
+    /// decay back down.
+    Decay,
+}
+
+impl std::fmt::Display for SwitchReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SwitchReason::QorFloor => write!(f, "qor-floor"),
+            SwitchReason::Load => write!(f, "load"),
+            SwitchReason::Decay => write!(f, "decay"),
+        }
+    }
+}
+
+/// One committed rung switch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Transition {
+    /// Decision window the switch was committed at.
+    pub window: u64,
+    /// Rung served before the switch.
+    pub from: usize,
+    /// Rung served from the next request on.
+    pub to: usize,
+    /// Which rule fired.
+    pub reason: SwitchReason,
+    /// The window QoR observation that drove the decision.
+    pub qor: f64,
+}
+
+/// One closed decision window, as the governor observed it. The
+/// `qor`/`qor_down` fields are deterministic shadow measurements; `shed`
+/// and `p99_ns` are live load signals (only consulted when a latency
+/// budget is configured, so budget-free traces stay machine-independent).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowObs {
+    /// Window index (global request index / window length).
+    pub window: u64,
+    /// Rung in effect while the window's requests were served.
+    pub rung: usize,
+    /// The window's QoR at the served rung (higher is better).
+    pub qor: f64,
+    /// Shadow QoR of the next cheaper rung on the same samples
+    /// (`None` at rung 0).
+    pub qor_down: Option<f64>,
+    /// Requests shed by deadline admission control during the window.
+    pub shed: u64,
+    /// p99 span latency at window close (ns).
+    pub p99_ns: u64,
+}
+
+/// Hysteresis knobs of the governor (the policy itself lives in
+/// [`Governor::observe`]).
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorConfig {
+    /// QoR floor: a window below it steps the rung up (more accurate).
+    pub floor: f64,
+    /// Decay margin: the cheaper rung must clear `floor + headroom` in
+    /// shadow before the governor steps down without load pressure.
+    pub headroom: f64,
+    /// Requests per decision window (K).
+    pub window: u64,
+    /// Minimum windows between switches (D ≥ 1).
+    pub dwell: u64,
+    /// Shadow-sample one request per this many ([`is_sampled`]).
+    pub sample_stride: u64,
+    /// Lanes shadow-evaluated per sampled request.
+    pub sample_lanes: usize,
+    /// Seed of the sampling phase.
+    pub seed: u64,
+    /// p99 budget for the load signal (ns); 0 disables it, keeping the
+    /// switch trace free of wall-clock inputs.
+    pub p99_budget_ns: u64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            floor: 60.0,
+            headroom: 10.0,
+            window: 256,
+            dwell: 4,
+            sample_stride: 8,
+            sample_lanes: 32,
+            seed: 42,
+            p99_budget_ns: 0,
+        }
+    }
+}
+
+/// The closed-loop controller: a pure hysteresis state machine over
+/// [`WindowObs`] streams. Construct with [`Governor::new`], feed every
+/// closed window to [`Governor::observe`], actuate the returned
+/// [`Transition`]s (e.g. `Coordinator::set_rung`).
+pub struct Governor {
+    cfg: GovernorConfig,
+    n_rungs: usize,
+    rung: usize,
+    windows_since_switch: u64,
+}
+
+impl Governor {
+    /// Governor over an `n_rungs`-deep ladder, starting at `start_rung`
+    /// (clamped). A cold governor may switch at the very first window.
+    pub fn new(cfg: GovernorConfig, n_rungs: usize, start_rung: usize) -> Self {
+        assert!(n_rungs > 0, "governor needs at least one rung");
+        Governor {
+            windows_since_switch: cfg.dwell,
+            cfg,
+            n_rungs,
+            rung: start_rung.min(n_rungs - 1),
+        }
+    }
+
+    /// Rung currently selected by the policy.
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    /// The policy knobs this governor runs under.
+    pub fn config(&self) -> &GovernorConfig {
+        &self.cfg
+    }
+
+    /// Feed one closed window; returns the committed switch, if any.
+    ///
+    /// Pure in the observation stream: same `WindowObs` sequence in, same
+    /// transitions out — the determinism contract `tests/governor_e2e.rs`
+    /// pins across thread/shard matrices.
+    pub fn observe(&mut self, obs: &WindowObs) -> Option<Transition> {
+        let decision = self.decide(obs);
+        match decision {
+            Some((to, reason)) => {
+                let t = Transition { window: obs.window, from: self.rung, to, reason, qor: obs.qor };
+                self.rung = to;
+                self.windows_since_switch = 0;
+                Some(t)
+            }
+            None => {
+                self.windows_since_switch = self.windows_since_switch.saturating_add(1);
+                None
+            }
+        }
+    }
+
+    /// The decision rule (dwell gate, then floor > load > decay, one rung
+    /// at a time).
+    fn decide(&self, obs: &WindowObs) -> Option<(usize, SwitchReason)> {
+        if self.windows_since_switch < self.cfg.dwell {
+            return None;
+        }
+        if obs.qor < self.cfg.floor && self.rung + 1 < self.n_rungs {
+            return Some((self.rung + 1, SwitchReason::QorFloor));
+        }
+        if self.rung > 0 {
+            if let Some(qd) = obs.qor_down {
+                let pressured = self.cfg.p99_budget_ns > 0
+                    && (obs.shed > 0 || obs.p99_ns > self.cfg.p99_budget_ns);
+                if pressured && qd >= self.cfg.floor {
+                    return Some((self.rung - 1, SwitchReason::Load));
+                }
+                if qd >= self.cfg.floor + self.cfg.headroom {
+                    return Some((self.rung - 1, SwitchReason::Decay));
+                }
+            }
+        }
+        None
+    }
+
+    /// Re-run the policy over a recorded window stream: the transitions a
+    /// fresh governor emits. A recorded [`GovernorTrace`] satisfies
+    /// `replay(cfg, n, start, &trace.windows) == trace.transitions` — the
+    /// replayability contract.
+    pub fn replay(
+        cfg: GovernorConfig,
+        n_rungs: usize,
+        start_rung: usize,
+        windows: &[WindowObs],
+    ) -> Vec<Transition> {
+        let mut g = Governor::new(cfg, n_rungs, start_rung);
+        windows.iter().filter_map(|w| g.observe(w)).collect()
+    }
+}
+
+/// Everything a governed run observed and decided — the replayable
+/// record `rapid serve-bench --governor` prints and
+/// `tests/governor_e2e.rs` pins.
+#[derive(Clone, Debug, Default)]
+pub struct GovernorTrace {
+    /// Every closed window, in order.
+    pub windows: Vec<WindowObs>,
+    /// Every committed switch, in order.
+    pub transitions: Vec<Transition>,
+}
+
+impl GovernorTrace {
+    /// Canonical one-line-per-switch rendering — the bit-identity handle
+    /// of a governed run (QoR is rendered as exact f64 bits, so two
+    /// traces compare equal iff every decision input/output matched).
+    pub fn switch_trace(&self) -> String {
+        self.transitions
+            .iter()
+            .map(|t| {
+                format!(
+                    "w={} {}->{} {} qor={:016x}",
+                    t.window,
+                    t.from,
+                    t.to,
+                    t.reason,
+                    t.qor.to_bits()
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// (rung, QoR bits) per window — the deterministic per-window half of
+    /// the trace (shed/p99 are live measurements and excluded).
+    pub fn qor_trace(&self) -> Vec<(usize, u64)> {
+        self.windows.iter().map(|w| (w.rung, w.qor.to_bits())).collect()
+    }
+
+    /// Smallest gap (in windows) between consecutive switches, if any —
+    /// the hysteresis bound `tests/governor_e2e.rs` checks against the
+    /// configured dwell.
+    pub fn min_switch_gap(&self) -> Option<u64> {
+        self.transitions
+            .windows(2)
+            .map(|p| p[1].window - p[0].window)
+            .min()
+    }
+}
+
+/// An accuracy ladder: multiplier rungs ordered cheapest → most accurate,
+/// served through [`LadderMulFactory`] and shadow-evaluated by the
+/// governor's sampling path.
+pub struct Ladder {
+    /// Registry names, cheapest first.
+    pub names: Vec<String>,
+    /// Instantiated units, aligned with `names`.
+    pub units: Vec<Arc<dyn ApproxMul>>,
+    /// Operand width the ladder serves.
+    pub width: u32,
+}
+
+impl Ladder {
+    /// Build a ladder from explicit registry names (cheapest first —
+    /// the caller's ordering is trusted). Unknown names and empty lists
+    /// return `Err` (the CLI error paths `tests/governor_e2e.rs` pins).
+    pub fn from_names<S: AsRef<str>>(names: &[S], width: u32) -> Result<Ladder, String> {
+        if names.is_empty() {
+            return Err("ladder must name at least one rung".to_string());
+        }
+        let mut units: Vec<Arc<dyn ApproxMul>> = Vec::with_capacity(names.len());
+        let mut owned = Vec::with_capacity(names.len());
+        for n in names {
+            let n = n.as_ref().trim();
+            if n.is_empty() {
+                return Err("ladder contains an empty rung name".to_string());
+            }
+            let u = make_mul(n, width)
+                .ok_or_else(|| format!("unknown multiplier '{n}' in ladder (see README registry table)"))?;
+            units.push(Arc::from(u));
+            owned.push(n.to_string());
+        }
+        Ok(Ladder { names: owned, units, width })
+    }
+
+    /// Build the ladder from the exact Pareto frontier over `names`:
+    /// evaluate every candidate (accuracy + circuit halves, fidelity per
+    /// `opts`), keep the frontier of (ADP, ARE), order by ADP ascending —
+    /// i.e. cheapest → most accurate, the precomputed ladder ROADMAP item
+    /// 4 asks for. Accuracy-only models (no netlist) carry no cost axis
+    /// and are skipped. Deterministic: the frontier is a pure function of
+    /// the evaluated points, which are bit-identical at any
+    /// `RAPID_THREADS`.
+    pub fn pareto(
+        names: &[&'static str],
+        width: u32,
+        stages: usize,
+        opts: &EvalOpts,
+    ) -> Result<Ladder, String> {
+        let cands: Vec<Candidate> = names
+            .iter()
+            .map(|&name| Candidate { op: Op::Mul, name, width, stages })
+            .collect();
+        if cands.is_empty() {
+            return Err("pareto ladder needs at least one candidate name".to_string());
+        }
+        for c in &cands {
+            if make_mul(c.name, width).is_none() {
+                return Err(format!(
+                    "unknown multiplier '{}' in ladder (see README registry table)",
+                    c.name
+                ));
+            }
+        }
+        let reports = evaluate_all(&cands, opts);
+        let points: Vec<(usize, Point)> = reports
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| {
+                r.adp().map(|adp| {
+                    (i, Point { key: r.cand.key(), axes: vec![adp, r.error.are] })
+                })
+            })
+            .collect();
+        if points.is_empty() {
+            return Err("no synthesizable candidates: a pareto ladder needs circuit-bearing units".to_string());
+        }
+        let pts: Vec<Point> = points.iter().map(|(_, p)| p.clone()).collect();
+        // frontier indices arrive in canonical order = ADP ascending =
+        // cheapest first (equal-ADP points cannot both survive)
+        let keep = frontier(&pts);
+        let rungs: Vec<&str> = keep.iter().map(|&i| reports[points[i].0].cand.name).collect();
+        Ladder::from_names(&rungs, width)
+    }
+
+    /// Number of rungs.
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    /// True when the ladder has no rungs (unreachable via constructors).
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Registry name of `rung` (clamped).
+    pub fn rung_name(&self, rung: usize) -> &str {
+        &self.names[rung.min(self.names.len() - 1)]
+    }
+
+    /// Shadow-evaluate one lane at `rung` (clamped) — the governor's
+    /// sampling path; bit-identical to the served result by the batch
+    /// specialisation contract (`tests/batch_equivalence.rs`).
+    pub fn shadow_mul(&self, rung: usize, a: u64, b: u64) -> u64 {
+        self.units[rung.min(self.units.len() - 1)].mul(a, b)
+    }
+
+    /// The executor factory serving this ladder.
+    pub fn factory(&self) -> Arc<dyn ExecutorFactory> {
+        Arc::new(LadderMulFactory { units: self.units.clone() })
+    }
+}
+
+/// Per-window shadow-sample accumulator: exact products next to the
+/// served rung's (and the next cheaper rung's) products, folded into the
+/// app metric at window close.
+#[derive(Default)]
+pub struct WindowAccumulator {
+    exact: Vec<i64>,
+    approx: Vec<i64>,
+    approx_down: Vec<i64>,
+}
+
+impl WindowAccumulator {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sampled lanes currently held.
+    pub fn lanes(&self) -> usize {
+        self.exact.len()
+    }
+
+    /// Shadow-evaluate the first `lanes` lanes of a sampled request under
+    /// `rung` (and `rung - 1` when it exists). Operands are the i64 wire
+    /// format (u64 bit patterns).
+    pub fn sample(&mut self, ladder: &Ladder, rung: usize, a: &[i64], b: &[i64], lanes: usize) {
+        let n = lanes.min(a.len());
+        for i in 0..n {
+            let (ua, ub) = (a[i] as u64, b[i] as u64);
+            self.exact.push(ua.wrapping_mul(ub) as i64);
+            self.approx.push(ladder.shadow_mul(rung, ua, ub) as i64);
+            if rung > 0 {
+                self.approx_down.push(ladder.shadow_mul(rung - 1, ua, ub) as i64);
+            }
+        }
+    }
+
+    /// Fold the window's samples into `(qor, qor_down)` and clear for the
+    /// next window. Empty windows score `+Inf` (no evidence of
+    /// violation); `qor_down` is `None` at rung 0.
+    pub fn close(&mut self, app: App, width: u32, rung: usize) -> (f64, Option<f64>) {
+        let qor = window_qor(app, width, &self.exact, &self.approx);
+        let qor_down = if rung > 0 {
+            Some(window_qor(app, width, &self.exact, &self.approx_down))
+        } else {
+            None
+        };
+        self.exact.clear();
+        self.approx.clear();
+        self.approx_down.clear();
+        (qor, qor_down)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(window: u64, rung: usize, qor: f64, qor_down: Option<f64>) -> WindowObs {
+        WindowObs { window, rung, qor, qor_down, shed: 0, p99_ns: 0 }
+    }
+
+    #[test]
+    fn floor_violation_steps_up_one_rung() {
+        let cfg = GovernorConfig { floor: 30.0, dwell: 2, ..Default::default() };
+        let mut g = Governor::new(cfg, 3, 0);
+        let t = g.observe(&obs(0, 0, 20.0, None)).expect("switch");
+        assert_eq!((t.from, t.to), (0, 1));
+        assert_eq!(t.reason, SwitchReason::QorFloor);
+        assert_eq!(g.rung(), 1);
+        // dwell: the very next windows cannot switch, however bad
+        assert!(g.observe(&obs(1, 1, 5.0, Some(1.0))).is_none());
+        assert!(g.observe(&obs(2, 1, 5.0, Some(1.0))).is_none());
+        // after the dwell it steps again — one rung at a time
+        let t = g.observe(&obs(3, 1, 5.0, Some(1.0))).expect("second step");
+        assert_eq!((t.from, t.to), (1, 2));
+        // at the top rung a violation has nowhere to go
+        for w in 4..10 {
+            assert!(g.observe(&obs(w, 2, 5.0, Some(1.0))).is_none());
+        }
+        assert_eq!(g.rung(), 2);
+    }
+
+    #[test]
+    fn decay_requires_headroom_on_the_cheaper_rung() {
+        let cfg = GovernorConfig { floor: 30.0, headroom: 10.0, dwell: 1, ..Default::default() };
+        let mut g = Governor::new(cfg, 3, 2);
+        // cheaper rung clears the floor but not the headroom: hold
+        assert!(g.observe(&obs(0, 2, 90.0, Some(35.0))).is_none());
+        // cheaper rung clears floor + headroom: decay one rung
+        let t = g.observe(&obs(1, 2, 90.0, Some(45.0))).expect("decay");
+        assert_eq!((t.from, t.to), (2, 1));
+        assert_eq!(t.reason, SwitchReason::Decay);
+        // rung 0 has no cheaper shadow: qor_down = None never decays
+        let mut g0 = Governor::new(cfg, 3, 0);
+        assert!(g0.observe(&obs(0, 0, 500.0, None)).is_none());
+    }
+
+    #[test]
+    fn load_pressure_steps_down_only_with_budget_and_floor() {
+        let base = GovernorConfig { floor: 30.0, headroom: 50.0, dwell: 1, ..Default::default() };
+        // budget off: sheds are ignored (trace stays wall-clock-free)
+        let mut g = Governor::new(base, 3, 2);
+        let mut o = obs(0, 2, 90.0, Some(35.0));
+        o.shed = 17;
+        assert!(g.observe(&o).is_none());
+        // budget on: shed pressure steps down as long as shadow clears the
+        // bare floor (headroom not required under pressure)
+        let cfg = GovernorConfig { p99_budget_ns: 1_000_000, ..base };
+        let mut g = Governor::new(cfg, 3, 2);
+        let t = g.observe(&o).expect("load step");
+        assert_eq!((t.from, t.to), (2, 1));
+        assert_eq!(t.reason, SwitchReason::Load);
+        // but never below the floor: qor_down under the floor holds
+        let mut g = Governor::new(cfg, 3, 2);
+        let mut bad = obs(0, 2, 90.0, Some(20.0));
+        bad.shed = 17;
+        assert!(g.observe(&bad).is_none());
+    }
+
+    #[test]
+    fn replay_reproduces_a_recorded_stream() {
+        let cfg = GovernorConfig { floor: 30.0, headroom: 10.0, dwell: 2, ..Default::default() };
+        let mut g = Governor::new(cfg, 4, 0);
+        let mut windows = Vec::new();
+        let mut transitions = Vec::new();
+        // a noisy → clean phase shift encoded directly as observations
+        for w in 0..30u64 {
+            let rung = g.rung();
+            let (qor, qd) = if w < 12 {
+                (20.0 + rung as f64 * 8.0, (rung > 0).then(|| 12.0 + rung as f64 * 8.0))
+            } else {
+                (200.0, (rung > 0).then_some(180.0))
+            };
+            let o = obs(w, rung, qor, qd);
+            windows.push(o);
+            transitions.extend(g.observe(&o));
+        }
+        assert!(!transitions.is_empty(), "the stream must force switches");
+        let replayed = Governor::replay(cfg, 4, 0, &windows);
+        assert_eq!(replayed, transitions, "pure replay");
+        let trace = GovernorTrace { windows, transitions };
+        assert!(trace.min_switch_gap().map_or(true, |g| g >= 2), "dwell bound");
+        assert!(!trace.switch_trace().is_empty());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_one_per_stride() {
+        // exactly one sampled request per stride slot, same picks twice
+        for window in 0..4u64 {
+            let picks: Vec<u64> =
+                (0..64).filter(|&k| is_sampled(7, 8, window, k)).collect();
+            assert_eq!(picks.len(), 8, "one per slot");
+            let again: Vec<u64> =
+                (0..64).filter(|&k| is_sampled(7, 8, window, k)).collect();
+            assert_eq!(picks, again);
+        }
+        // stride 1 samples everything; stride 0 clamps to 1
+        assert_eq!((0..10).filter(|&k| is_sampled(3, 1, 0, k)).count(), 10);
+        assert_eq!((0..10).filter(|&k| is_sampled(3, 0, 0, k)).count(), 10);
+    }
+
+    #[test]
+    fn window_qor_metrics_are_oriented_higher_better() {
+        // identical streams: perfect scores on every app
+        let e = vec![100i64, 2000, 30000, 100, 50, 4000];
+        assert!(window_qor(App::Jpeg, 16, &e, &e).is_infinite());
+        assert_eq!(window_qor(App::Ecg, 16, &e, &e), 1.0);
+        assert_eq!(window_qor(App::Harris, 16, &e, &e), 1.0);
+        // a large perturbation hurts every metric
+        let peak = ((1u64 << 16) - 1) as i64;
+        let big: Vec<i64> = (0..6).map(|i| peak * peak / (1 + i)).collect();
+        let off: Vec<i64> = big.iter().map(|&v| v / 2).collect();
+        assert!(window_qor(App::Jpeg, 16, &big, &off) < 30.0);
+        assert!(window_qor(App::Ecg, 16, &big, &off) < 1.0);
+        assert!(window_qor(App::Harris, 16, &big, &off) < 1.0);
+        // empty windows are never evidence of a violation
+        assert!(window_qor(App::Jpeg, 16, &[], &[]).is_infinite());
+    }
+
+    #[test]
+    fn ladder_from_names_validates() {
+        let l = Ladder::from_names(&["rapid3", "rapid10", "exact"], 16).unwrap();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.rung_name(0), "rapid3");
+        assert_eq!(l.rung_name(99), "exact", "clamped");
+        assert_eq!(l.shadow_mul(2, 123, 456), 123 * 456, "exact top rung");
+        assert!(Ladder::from_names::<&str>(&[], 16).is_err());
+        assert!(Ladder::from_names(&["nosuchunit"], 16).is_err());
+        assert!(Ladder::from_names(&["rapid3", ""], 16).is_err());
+    }
+
+    #[test]
+    fn pareto_ladder_is_cheapest_first() {
+        // tiny fidelity: enough to order exact vs a coarse rung
+        let opts = EvalOpts { mc_samples: 20_000, power_vectors: 16, ..Default::default() };
+        let l = Ladder::pareto(&["exact", "rapid3", "rapid10"], 8, 1, &opts).unwrap();
+        assert!(l.len() >= 2, "frontier keeps a trade-off");
+        // the last rung must be the exact unit (ARE 0 is never dominated);
+        // every earlier rung is cheaper and less accurate
+        assert_eq!(l.rung_name(l.len() - 1), "exact");
+        assert_ne!(l.rung_name(0), "exact");
+        // unknown names fail cleanly
+        assert!(Ladder::pareto(&["nosuchunit"], 8, 1, &opts).is_err());
+    }
+
+    #[test]
+    fn accumulator_tracks_rung_and_cheaper_shadow() {
+        let l = Ladder::from_names(&["rapid3", "exact"], 16).unwrap();
+        let mut acc = WindowAccumulator::new();
+        let a = vec![40000i64, 50000, 60000];
+        let b = vec![39999i64, 49999, 59999];
+        // at the exact rung the served shadow is error-free and the
+        // cheaper shadow carries rapid3's error
+        acc.sample(&l, 1, &a, &b, 2);
+        assert_eq!(acc.lanes(), 2);
+        let (qor, qd) = acc.close(App::Jpeg, 16, 1);
+        assert!(qor.is_infinite(), "exact rung: perfect window");
+        let qd = qd.expect("cheaper shadow exists");
+        assert!(qd.is_finite() && qd < qor);
+        assert_eq!(acc.lanes(), 0, "close clears");
+        // at rung 0 there is no cheaper shadow
+        acc.sample(&l, 0, &a, &b, 3);
+        let (_, qd) = acc.close(App::Jpeg, 16, 0);
+        assert!(qd.is_none());
+    }
+}

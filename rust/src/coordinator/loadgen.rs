@@ -301,17 +301,61 @@ pub fn format_report(r: &RungReport) -> String {
     )
 }
 
+/// Parse a `--rates` comma list. Strict: empty entries, malformed tokens
+/// (including negatives) and zero rates are clean `Err`s — the old
+/// `filter_map` silently dropped bad tokens, and a zero rate would panic
+/// deep inside [`schedule`] instead of failing at the CLI boundary.
+pub fn parse_rates(s: &str) -> Result<Vec<u64>, String> {
+    let mut rates = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            return Err(format!("--rates '{s}': empty entry"));
+        }
+        let r: u64 = tok
+            .parse()
+            .map_err(|_| format!("--rates: '{tok}' is not a positive integer"))?;
+        if r == 0 {
+            return Err("--rates: rates must be positive (an open loop cannot offer 0 req/s)"
+                .to_string());
+        }
+        rates.push(r);
+    }
+    Ok(rates)
+}
+
 /// The `rapid serve-bench` subcommand (argv = everything after it):
 /// open-loop rate ladder over the in-process functional backend — no
-/// PJRT, no artifacts — recording `BENCH_serve.json`.
+/// PJRT, no artifacts — recording `BENCH_serve.json`. With `--governor`
+/// the argv is handed to the governed scenario mode
+/// ([`crate::coordinator::scenario::cli`]) instead.
 pub mod cli {
     use super::*;
     use crate::arith::registry::{make_div, make_mul};
     use crate::coordinator::router::{BatchDivFactory, BatchMulFactory};
     use crate::util::cli::Args;
 
-    /// Entry point of the `serve-bench` subcommand.
-    pub fn run(argv: Vec<String>) {
+    /// A validated plain serve-bench run (no `--governor`).
+    pub struct ServeBenchSetup {
+        /// `mul` or `div`.
+        pub op: String,
+        /// Registry name of the served unit.
+        pub unit: String,
+        /// Operand width.
+        pub width: u32,
+        /// Workload (rates / duration / operand model / deadline).
+        pub cfg: LoadgenConfig,
+        /// Serving shell shape.
+        pub coord: CoordinatorConfig,
+        /// Output JSON path.
+        pub out: String,
+    }
+
+    /// Validate a serve-bench argv. Pure (nothing served, no I/O): every
+    /// malformed input — unknown unit or backend, zero/negative/garbage
+    /// rates, bad numerics — is a clean `Err`, which the error-path tests
+    /// in `tests/governor_e2e.rs` drive directly.
+    pub fn parse(argv: Vec<String>) -> Result<ServeBenchSetup, String> {
         let args = Args::parse(
             argv,
             &[
@@ -321,51 +365,40 @@ pub mod cli {
         );
         let backend = args.get_or("backend", "functional");
         if backend != "functional" {
-            eprintln!(
-                "serve-bench: only the in-process functional backend is load-benched \
+            return Err(format!(
+                "only the in-process functional backend is load-benched \
                  (got '{backend}'); the PJRT path is measured via `rapid serve`"
-            );
-            std::process::exit(1);
+            ));
         }
-        let op = args.get_or("op", "mul");
-        let width = args.get_u32("width", 16);
-        let unit_name = args.get_or("unit", if op == "div" { "rapid9" } else { "rapid10" });
-        let rates: Vec<u64> = args
-            .get_or("rates", "10000,50000,200000")
-            .split(',')
-            .filter_map(|s| s.trim().parse().ok())
-            .collect();
-        if rates.is_empty() {
-            eprintln!("serve-bench: --rates must be a comma list of positive integers");
-            std::process::exit(1);
+        let op = args.get_or("op", "mul").to_string();
+        if op != "mul" && op != "div" {
+            return Err(format!("--op: '{op}' is not 'mul' or 'div'"));
         }
-        let duration = Duration::from_millis(args.get_u64("duration-ms", 2000));
-        let req_len = args.get_usize("req-len", 256);
-        let seed = args.get_u64("seed", 42);
-        let deadline_us = args.get_u64("deadline-us", 0);
-        let out = args.get_or("out", "BENCH_serve.json").to_string();
-
-        let factory: Arc<dyn ExecutorFactory> = if op == "div" {
-            let unit = make_div(unit_name, width).unwrap_or_else(|| {
-                eprintln!("serve-bench: unknown divider '{unit_name}' (see README registry table)");
-                std::process::exit(1);
-            });
-            Arc::new(BatchDivFactory { unit: Arc::from(unit) })
+        let width = args.try_u64("width", 16)? as u32;
+        if !(2..=32).contains(&width) {
+            return Err(format!("--width: {width} is outside the supported 2..=32 range"));
+        }
+        let unit = args
+            .get_or("unit", if op == "div" { "rapid9" } else { "rapid10" })
+            .to_string();
+        let known = if op == "div" {
+            make_div(&unit, width).is_some()
         } else {
-            let unit = make_mul(unit_name, width).unwrap_or_else(|| {
-                eprintln!("serve-bench: unknown multiplier '{unit_name}' (see README registry table)");
-                std::process::exit(1);
-            });
-            Arc::new(BatchMulFactory { unit: Arc::from(unit) })
+            make_mul(&unit, width).is_some()
         };
-
-        let coord_cfg = CoordinatorConfig {
-            batch_capacity: args.get_usize("batch", 8192),
-            max_wait: Duration::from_micros(args.get_u64("max-wait-us", 200)),
-            workers: args.get_usize("workers", 4),
-            queue_depth: args.get_usize("queue-depth", 256),
-            shards: args.get_usize("shards", 4),
-        };
+        if !known {
+            let kind = if op == "div" { "divider" } else { "multiplier" };
+            return Err(format!("unknown {kind} '{unit}' (see README registry table)"));
+        }
+        let rates = parse_rates(args.get_or("rates", "10000,50000,200000"))?;
+        let duration_ms = args.try_u64("duration-ms", 2000)?;
+        if duration_ms == 0 {
+            return Err("--duration-ms: rungs must last at least 1 ms".to_string());
+        }
+        let duration = Duration::from_millis(duration_ms);
+        let req_len = args.try_usize("req-len", 256)?.max(1);
+        let seed = args.try_u64("seed", 42)?;
+        let deadline_us = args.try_u64("deadline-us", 0)?;
         let mut cfg = if op == "div" {
             LoadgenConfig::for_div(width, rates, duration, req_len, seed)
         } else {
@@ -374,26 +407,74 @@ pub mod cli {
         if deadline_us > 0 {
             cfg.deadline = Some(Duration::from_micros(deadline_us));
         }
+        Ok(ServeBenchSetup {
+            op,
+            unit,
+            width,
+            cfg,
+            coord: CoordinatorConfig {
+                batch_capacity: args.try_usize("batch", 8192)?.max(1),
+                max_wait: Duration::from_micros(args.try_u64("max-wait-us", 200)?),
+                workers: args.try_usize("workers", 4)?.max(1),
+                queue_depth: args.try_usize("queue-depth", 256)?.max(1),
+                shards: args.try_usize("shards", 4)?.max(1),
+            },
+            out: args.get_or("out", "BENCH_serve.json").to_string(),
+        })
+    }
 
+    /// Run a validated plain serve-bench ladder end to end.
+    pub fn try_run(argv: Vec<String>) -> Result<(), String> {
+        let setup = parse(argv)?;
+        let factory: Arc<dyn ExecutorFactory> = if setup.op == "div" {
+            let unit = make_div(&setup.unit, setup.width).expect("parse validated the unit");
+            Arc::new(BatchDivFactory { unit: Arc::from(unit) })
+        } else {
+            let unit = make_mul(&setup.unit, setup.width).expect("parse validated the unit");
+            Arc::new(BatchMulFactory { unit: Arc::from(unit) })
+        };
+        let deadline_us = setup.cfg.deadline.map_or(0, |d| d.as_micros() as u64);
         println!(
-            "serve-bench: functional {unit_name} {op}{width}, req_len {req_len}, \
-             {} rungs x {:?}, shards {}, workers {}, batch {}, deadline {}",
-            cfg.rates.len(),
-            cfg.duration,
-            coord_cfg.shards,
-            coord_cfg.workers,
-            coord_cfg.batch_capacity,
+            "serve-bench: functional {} {}{}, req_len {}, {} rungs x {:?}, shards {}, \
+             workers {}, batch {}, deadline {}",
+            setup.unit,
+            setup.op,
+            setup.width,
+            setup.cfg.req_len,
+            setup.cfg.rates.len(),
+            setup.cfg.duration,
+            setup.coord.shards,
+            setup.coord.workers,
+            setup.coord.batch_capacity,
             if deadline_us > 0 { format!("{deadline_us}µs") } else { "none".into() },
         );
         let mut reports = Vec::new();
-        for r in 0..cfg.rates.len() {
-            let rep = run_rung(&factory, &coord_cfg, &cfg, r);
+        for r in 0..setup.cfg.rates.len() {
+            let rep = run_rung(&factory, &setup.coord, &setup.cfg, r);
             println!("{}", format_report(&rep));
             reports.push(rep);
         }
-        match to_recorder(&reports).write(&out) {
-            Ok(()) => println!("recorded -> {out} (the EXPERIMENTS.md §Serve trajectory)"),
-            Err(e) => eprintln!("could not write {out}: {e}"),
+        to_recorder(&reports)
+            .write(&setup.out)
+            .map_err(|e| format!("could not write {}: {e}", setup.out))?;
+        println!("recorded -> {} (the EXPERIMENTS.md §Serve trajectory)", setup.out);
+        Ok(())
+    }
+
+    /// Entry point of the `serve-bench` subcommand: route `--governor`
+    /// argvs to the scenario mode, everything else to the plain ladder;
+    /// errors print once and set the exit code here — the only
+    /// `process::exit` in the serve-bench path.
+    pub fn run(argv: Vec<String>) {
+        let governed = argv.iter().any(|a| a == "--governor");
+        let result = if governed {
+            crate::coordinator::scenario::cli::run(argv)
+        } else {
+            try_run(argv)
+        };
+        if let Err(e) = result {
+            eprintln!("serve-bench: {e}");
+            std::process::exit(1);
         }
     }
 }
@@ -480,6 +561,41 @@ mod tests {
             want ^= request_digest(k, &vals);
         }
         assert_eq!(rep.checksum, want);
+    }
+
+    #[test]
+    fn parse_rates_is_strict() {
+        assert_eq!(parse_rates("10000, 50000 ,200000"), Ok(vec![10000, 50000, 200000]));
+        for bad in ["", "0", "10,0", "-5", "10,-5", "ten", "10,,20", "1e4"] {
+            assert!(parse_rates(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn cli_parse_accepts_defaults_and_rejects_malformed() {
+        let sv = |s: &[&str]| s.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        let setup = cli::parse(sv(&[])).expect("defaults parse");
+        assert_eq!(setup.op, "mul");
+        assert_eq!(setup.unit, "rapid10");
+        assert_eq!(setup.cfg.rates, vec![10000, 50000, 200000]);
+        let setup = cli::parse(sv(&["--op", "div", "--rates", "5000"])).unwrap();
+        assert_eq!(setup.unit, "rapid9", "default unit follows the op");
+        for bad in [
+            vec!["--rates", "0"],
+            vec!["--rates", "-100"],
+            vec!["--rates", "10,ten"],
+            vec!["--rates", ""],
+            vec!["--unit", "nosuchunit"],
+            vec!["--op", "sqrt"],
+            vec!["--backend", "pjrt"],
+            vec!["--width", "99"],
+            vec!["--width", "-16"],
+            vec!["--duration-ms", "0"],
+            vec!["--workers", "two"],
+        ] {
+            let owned = sv(&bad);
+            assert!(cli::parse(owned.clone()).is_err(), "{owned:?} must be rejected");
+        }
     }
 
     #[test]

@@ -11,6 +11,21 @@ use std::time::Duration;
 /// Fixed log2 latency histogram (ns buckets from 1µs to ~4s).
 const BUCKETS: usize = 24;
 
+/// Render an f64 sample value in the Prometheus text exposition format:
+/// finite values print plainly, non-finite map to `+Inf`/`-Inf`/`NaN`
+/// (windowed PSNR is `+Inf` when the sampled lanes were error-free).
+fn prom_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
 /// Counters and latency histogram shared by leaders, workers and callers.
 #[derive(Default)]
 pub struct Metrics {
@@ -35,6 +50,16 @@ pub struct Metrics {
     /// EWMA of worker batch execution time in ns (0 until the first batch
     /// completes); feeds the admission controller's drain estimate.
     batch_service_ewma_ns: AtomicU64,
+    /// Accuracy-ladder rung currently being served (0 = cheapest /
+    /// governor off) — mirrors the coordinator's rung register.
+    governor_rung: AtomicU64,
+    /// Rung switches the governor has committed.
+    governor_switches: AtomicU64,
+    /// Decision windows the governor has closed.
+    governor_windows: AtomicU64,
+    /// Last closed window's QoR observation (f64 bits; 0.0 before the
+    /// first window). Higher is better on every app metric.
+    governor_window_qor_bits: AtomicU64,
     hist: [AtomicU64; BUCKETS],
     lat_sum_ns: AtomicU64,
     lat_count: AtomicU64,
@@ -147,6 +172,44 @@ impl Metrics {
         self.batch_service_ewma_ns.load(Ordering::Relaxed)
     }
 
+    /// Set the served-rung gauge (the coordinator's `set_rung` mirrors
+    /// its rung register here).
+    pub fn set_governor_rung(&self, rung: u64) {
+        self.governor_rung.store(rung, Ordering::Relaxed);
+    }
+
+    /// Accuracy-ladder rung currently being served.
+    pub fn governor_rung(&self) -> u64 {
+        self.governor_rung.load(Ordering::Relaxed)
+    }
+
+    /// Count one committed governor switch.
+    pub fn record_governor_switch(&self) {
+        self.governor_switches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Rung switches the governor has committed.
+    pub fn governor_switches(&self) -> u64 {
+        self.governor_switches.load(Ordering::Relaxed)
+    }
+
+    /// Close one governor decision window with its QoR observation
+    /// (bumps the window counter and sets the last-window QoR gauge).
+    pub fn record_governor_window(&self, qor: f64) {
+        self.governor_windows.fetch_add(1, Ordering::Relaxed);
+        self.governor_window_qor_bits.store(qor.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Decision windows the governor has closed.
+    pub fn governor_windows(&self) -> u64 {
+        self.governor_windows.load(Ordering::Relaxed)
+    }
+
+    /// Last closed window's QoR observation (0.0 before the first window).
+    pub fn governor_window_qor(&self) -> f64 {
+        f64::from_bits(self.governor_window_qor_bits.load(Ordering::Relaxed))
+    }
+
     /// Approximate latency percentile from the histogram (upper bound of
     /// the containing bucket).
     pub fn latency_percentile_ns(&self, p: f64) -> u64 {
@@ -239,6 +302,24 @@ impl Metrics {
         s.push_str("# HELP rapid_batch_service_ewma_ns EWMA batch execution time (ns).\n");
         s.push_str("# TYPE rapid_batch_service_ewma_ns gauge\n");
         s.push_str(&format!("rapid_batch_service_ewma_ns {}\n", self.batch_service_ewma_ns()));
+        counter(
+            &mut s,
+            "rapid_governor_switches_total",
+            "Accuracy-rung switches committed by the QoR governor.",
+            self.governor_switches(),
+        );
+        counter(
+            &mut s,
+            "rapid_governor_windows_total",
+            "Decision windows closed by the QoR governor.",
+            self.governor_windows(),
+        );
+        s.push_str("# HELP rapid_governor_rung Accuracy-ladder rung currently served (0 = cheapest).\n");
+        s.push_str("# TYPE rapid_governor_rung gauge\n");
+        s.push_str(&format!("rapid_governor_rung {}\n", self.governor_rung()));
+        s.push_str("# HELP rapid_governor_window_qor Last decision window's QoR observation (higher is better).\n");
+        s.push_str("# TYPE rapid_governor_window_qor gauge\n");
+        s.push_str(&format!("rapid_governor_window_qor {}\n", prom_f64(self.governor_window_qor())));
         s.push_str("# HELP rapid_latency_ns Span submit-to-reply latency (ns).\n");
         s.push_str("# TYPE rapid_latency_ns summary\n");
         s.push_str(&format!("rapid_latency_ns{{quantile=\"0.5\"}} {}\n", self.p50_ns()));
@@ -309,6 +390,29 @@ mod tests {
         m.record_batch_service(Duration::from_nanos(2000));
         // (3*1000 + 2000) / 4 = 1250
         assert_eq!(m.batch_service_ewma_ns(), 1250);
+    }
+
+    #[test]
+    fn governor_gauges_roundtrip() {
+        let m = Metrics::new();
+        assert_eq!(m.governor_rung(), 0);
+        assert_eq!(m.governor_switches(), 0);
+        assert_eq!(m.governor_window_qor(), 0.0);
+        m.set_governor_rung(3);
+        m.record_governor_switch();
+        m.record_governor_window(41.25);
+        m.record_governor_window(f64::INFINITY);
+        assert_eq!(m.governor_rung(), 3);
+        assert_eq!(m.governor_switches(), 1);
+        assert_eq!(m.governor_windows(), 2);
+        assert!(m.governor_window_qor().is_infinite());
+        let t = m.metrics_text();
+        assert!(t.contains("rapid_governor_rung 3"), "{t}");
+        assert!(t.contains("rapid_governor_switches_total 1"), "{t}");
+        assert!(t.contains("rapid_governor_windows_total 2"), "{t}");
+        assert!(t.contains("rapid_governor_window_qor +Inf"), "{t}");
+        assert!(t.contains("# TYPE rapid_governor_rung gauge"), "{t}");
+        assert!(t.contains("# TYPE rapid_governor_switches_total counter"), "{t}");
     }
 
     #[test]

@@ -12,18 +12,29 @@
 //! ([`Metrics::metrics_text`]), a deterministic open-loop load generator
 //! ([`loadgen`], `rapid serve-bench`) and a pipeline scheduler mirroring
 //! the 2/3/4-stage units for the Fig. 11/12 study.
+//!
+//! Closing the loop on top of that shell sits the QoR governor
+//! ([`governor`]): requests are stamped with an accuracy-ladder rung at
+//! submit time, batches never mix rungs, and a pure hysteresis policy
+//! steps the served rung along a cheapest→most-accurate ladder from
+//! windowed shadow-QoR and load signals — driven by phase-shifting
+//! replayable workloads ([`scenario`], `rapid serve-bench --governor`).
 
 pub mod batcher;
+pub mod governor;
 pub mod loadgen;
 pub mod metrics;
 pub mod pipeline_sched;
 pub mod router;
+pub mod scenario;
 #[cfg(feature = "pjrt")]
 pub mod cli;
 
 pub use batcher::{Batch, DynamicBatcher};
+pub use governor::{App, Governor, GovernorConfig, GovernorTrace, Ladder, SwitchReason, Transition, WindowObs};
 pub use metrics::Metrics;
 pub use router::{
-    BatchDivFactory, BatchMulFactory, Coordinator, CoordinatorConfig, Request, Response,
-    SubmitError,
+    BatchDivFactory, BatchMulFactory, Coordinator, CoordinatorConfig, LadderMulFactory, Request,
+    Response, SubmitError,
 };
+pub use scenario::{Phase, Regime, ScenarioConfig, ScenarioReport, run_scenario};

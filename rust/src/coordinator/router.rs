@@ -35,7 +35,7 @@
 //! mid-queue drop, reflects any overload); the bounded queues still
 //! provide hard backpressure independently of deadlines.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -50,6 +50,17 @@ use super::metrics::Metrics;
 pub trait Executor {
     /// Elementwise op over the packed batch.
     fn execute(&mut self, a: &[i64], b: &[i64]) -> Vec<i64>;
+
+    /// Rung-aware variant the workers actually call: `rung` is the
+    /// accuracy-ladder index the batch was stamped with (batches never mix
+    /// rungs — see [`super::batcher::DynamicBatcher::offer_into`]).
+    /// Single-unit executors ignore it; the governor's ladder executor
+    /// ([`LadderMulFactory`]) dispatches on it. The default forwards to
+    /// [`Self::execute`], so pre-governor executors (PJRT, closures) are
+    /// untouched.
+    fn execute_rung(&mut self, _rung: u32, a: &[i64], b: &[i64]) -> Vec<i64> {
+        self.execute(a, b)
+    }
 }
 
 impl<F> Executor for F
@@ -168,6 +179,58 @@ impl Executor for BatchUnitExecutor {
     }
 }
 
+/// Accuracy-ladder serving: one executor holding every rung of a
+/// multiplier ladder (cheapest → most accurate, the order
+/// [`crate::coordinator::governor::Ladder`] produces). Each batch executes
+/// through the unit at the batch's stamped rung — the same sharded
+/// `mul_batch` fan-out as [`BatchMulFactory`], so a one-rung ladder is
+/// bit-identical to serving that unit directly. Out-of-range rungs clamp
+/// to the most accurate unit (fail-safe: QoR can only improve).
+pub struct LadderMulFactory {
+    /// The ladder every worker's executor shares, cheapest first.
+    pub units: Vec<Arc<dyn crate::arith::ApproxMul>>,
+}
+
+impl ExecutorFactory for LadderMulFactory {
+    fn make(&self) -> Box<dyn Executor> {
+        assert!(!self.units.is_empty(), "ladder must have at least one rung");
+        Box::new(LadderExecutor {
+            units: self.units.clone(),
+            a: Vec::new(),
+            b: Vec::new(),
+            out: Vec::new(),
+        })
+    }
+}
+
+struct LadderExecutor {
+    units: Vec<Arc<dyn crate::arith::ApproxMul>>,
+    a: Vec<u64>,
+    b: Vec<u64>,
+    out: Vec<u64>,
+}
+
+impl Executor for LadderExecutor {
+    fn execute(&mut self, a: &[i64], b: &[i64]) -> Vec<i64> {
+        self.execute_rung(0, a, b)
+    }
+
+    fn execute_rung(&mut self, rung: u32, a: &[i64], b: &[i64]) -> Vec<i64> {
+        let u = &self.units[(rung as usize).min(self.units.len() - 1)];
+        self.a.clear();
+        self.a.extend(a.iter().map(|&x| x as u64));
+        self.b.clear();
+        self.b.extend(b.iter().map(|&x| x as u64));
+        self.out.clear();
+        self.out.resize(a.len(), 0);
+        let (ua, ub) = (&self.a, &self.b);
+        crate::util::par::par_chunks_mut(&mut self.out, UNIT_SHARD_LANES, |_c, off, o| {
+            u.mul_batch(&ua[off..off + o.len()], &ub[off..off + o.len()], o);
+        });
+        self.out.iter().map(|&x| x as i64).collect()
+    }
+}
+
 /// One enqueued request.
 pub struct Request {
     /// Caller-unique id (assigned by the coordinator).
@@ -185,6 +248,11 @@ pub struct Request {
     /// observability (admitted requests always execute — see the module
     /// doc's shed policy).
     pub deadline: Option<Instant>,
+    /// Accuracy-ladder rung stamped at submit time (the coordinator's
+    /// current rung register; 0 with no governor attached). The batcher
+    /// keys batches by it, so the unit a request executes on is fixed at
+    /// submit — never by worker/batch timing.
+    pub rung: u32,
 }
 
 /// Reply carrying one span's results, tagged with its position inside the
@@ -248,6 +316,9 @@ pub struct Coordinator {
     next_id: AtomicU64,
     next_lane: AtomicU64,
     max_wait: Duration,
+    /// Accuracy-ladder rung stamped on every submitted request (the QoR
+    /// governor's actuator; 0 = cheapest / governor off).
+    rung: AtomicU32,
     shutdown: Arc<AtomicBool>,
     threads: Mutex<Vec<JoinHandle<()>>>,
 }
@@ -301,6 +372,7 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             next_lane: AtomicU64::new(0),
             max_wait: cfg.max_wait,
+            rung: AtomicU32::new(0),
             shutdown,
             threads: Mutex::new(threads),
         })
@@ -357,6 +429,7 @@ impl Coordinator {
             reply: tx,
             t_submit: now,
             deadline: deadline.map(|d| now + d),
+            rung: self.rung.load(Ordering::SeqCst),
         };
         self.metrics.record_request(n);
         self.metrics.ingress_enqueued(lane);
@@ -407,6 +480,7 @@ impl Coordinator {
             reply: tx,
             t_submit: now,
             deadline: deadline.map(|d| now + d),
+            rung: self.rung.load(Ordering::SeqCst),
         };
         self.metrics.ingress_enqueued(lane);
         match self.lanes[lane].try_send(req) {
@@ -425,6 +499,21 @@ impl Coordinator {
     /// Number of independent ingress lanes.
     pub fn shards(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Rung stamped on requests submitted from now on (the governor's
+    /// actuator). In-flight requests keep the rung they were stamped with;
+    /// the batcher flushes any open batch at the first request of the new
+    /// rung, so no batch ever mixes rungs. Also mirrored into the
+    /// `rapid_governor_rung` gauge.
+    pub fn set_rung(&self, rung: u32) {
+        self.rung.store(rung, Ordering::SeqCst);
+        self.metrics.set_governor_rung(rung as u64);
+    }
+
+    /// Rung currently stamped on new submissions.
+    pub fn current_rung(&self) -> u32 {
+        self.rung.load(Ordering::SeqCst)
     }
 
     /// Signal the lane loops to exit (drop joins the threads).
@@ -493,7 +582,7 @@ fn leader_loop(
             // requests larger than the batch are executed in chunks but the
             // reply is assembled by the caller via multiple spans with the
             // same reply channel
-            batcher.offer_into(req.id, &req.a, &req.b, &mut emitted);
+            batcher.offer_into(req.id, req.rung, &req.a, &req.b, &mut emitted);
             // spans for this request may appear in several emitted batches;
             // tag each emitted batch with its pending spans
             for b in emitted.drain(..) {
@@ -587,7 +676,7 @@ fn worker_loop(
         };
         metrics.batch_dequeued();
         let t_exec = Instant::now();
-        let out = exec.execute(&batch.a, &batch.b);
+        let out = exec.execute_rung(batch.rung, &batch.a, &batch.b);
         metrics.record_batch_service(t_exec.elapsed());
         for s in spans {
             let values = out[s.offset..s.offset + s.len].to_vec();
@@ -731,6 +820,39 @@ mod tests {
         for i in (0..n).step_by(397) {
             assert_eq!(got[i], model.mul(a[i] as u64, b[i] as u64) as i64, "lane {i}");
         }
+    }
+
+    #[test]
+    fn ladder_executor_serves_the_stamped_rung() {
+        use crate::arith::{ApproxMul, ExactMul, RapidMul};
+        let ladder = LadderMulFactory {
+            units: vec![
+                Arc::new(RapidMul::new(16, 3)) as Arc<dyn crate::arith::ApproxMul>,
+                Arc::new(ExactMul { n: 16 }),
+            ],
+        };
+        let c = Coordinator::start(Arc::new(ladder), small_cfg());
+        let cheap = RapidMul::new(16, 3);
+        let a = vec![3i64, 58, 1000, 65535];
+        let b = vec![7i64, 18, 999, 65535];
+        // rung 0 (default): the cheap unit serves
+        assert_eq!(c.current_rung(), 0);
+        let got = c.call(a.clone(), b.clone());
+        for i in 0..a.len() {
+            assert_eq!(got[i], cheap.mul(a[i] as u64, b[i] as u64) as i64, "rung0 lane {i}");
+        }
+        // switch to rung 1: the exact unit serves subsequent requests
+        c.set_rung(1);
+        assert_eq!(c.current_rung(), 1);
+        let got = c.call(a.clone(), b.clone());
+        for i in 0..a.len() {
+            assert_eq!(got[i], (a[i] * b[i]), "rung1 lane {i}");
+        }
+        // out-of-range rungs clamp to the most accurate unit
+        c.set_rung(9);
+        let got = c.call(a.clone(), b.clone());
+        assert_eq!(got[2], a[2] * b[2]);
+        assert_eq!(c.metrics.governor_rung(), 9);
     }
 
     #[test]

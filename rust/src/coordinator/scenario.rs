@@ -1,0 +1,800 @@
+//! Phase-shifting scenario replay: the workload side of the QoR governor
+//! (`rapid serve-bench --governor`, `make bench-governor`,
+//! `tests/governor_e2e.rs`).
+//!
+//! A scenario is a list of [`Phase`]s, each pairing an operand [`Regime`]
+//! (clean = narrow operands whose approximate products barely err; noisy
+//! = full-width operands that expose the cheap rungs) with a request
+//! count and an offered rate. The runner ([`run_scenario`]) drives a
+//! governed coordinator open-loop through the phases — the paper apps
+//! become long-running adaptive workloads whose QoR-vs-throughput traces
+//! land in `BENCH_governor.json` / EXPERIMENTS.md §Governor.
+//!
+//! Determinism contract: operands are a pure function of
+//! `(seed, request index, regime)`, windows close on request *count* (not
+//! time), QoR is shadow-computed from seeded samples, and the governor is
+//! a pure state machine — so the recorded switch trace (and, with no
+//! shedding, the response checksum) is bit-identical across
+//! `RAPID_THREADS`, shard counts and machines. Wall-clock pacing only
+//! affects the latency columns.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::governor::{App, Governor, GovernorConfig, GovernorTrace, Ladder, WindowAccumulator, WindowObs, is_sampled};
+use super::loadgen::request_digest;
+use super::router::{Coordinator, CoordinatorConfig, SubmitError};
+use crate::bench_support::record::Recorder;
+use crate::util::timer::BenchResult;
+use crate::util::XorShift256;
+
+/// Stream-id namespaces of the scenario's seeded draws (operands and
+/// arrival jitter; disjoint from the loadgen and governor namespaces).
+const SCEN_OPERAND_STREAM: u64 = 0x5343_0000_0001_0000;
+const SCEN_ARRIVAL_STREAM: u64 = 0x5343_0000_0000_0001;
+
+/// Operand regime of one scenario phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// Narrow operands (half the serving width): approximate products are
+    /// near-exact, QoR sits far above any floor — the regime that lets
+    /// the governor decay to cheap rungs.
+    Clean,
+    /// Full-width operands: the cheap rungs' error is fully exposed and a
+    /// QoR floor forces upgrades.
+    Noisy,
+}
+
+impl Regime {
+    /// Parse a regime name (`clean` / `noisy`).
+    pub fn parse(s: &str) -> Result<Regime, String> {
+        match s {
+            "clean" => Ok(Regime::Clean),
+            "noisy" => Ok(Regime::Noisy),
+            other => Err(format!("unknown regime '{other}' (expected 'clean' or 'noisy')")),
+        }
+    }
+
+    /// Lower-case label (CLI round-trip of [`Regime::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Regime::Clean => "clean",
+            Regime::Noisy => "noisy",
+        }
+    }
+}
+
+/// One scenario phase: `requests` arrivals offered at `rate`/s under one
+/// operand regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Phase {
+    /// Operand regime of every request in the phase.
+    pub regime: Regime,
+    /// Arrivals in the phase.
+    pub requests: u64,
+    /// Offered rate (requests/second, > 0).
+    pub rate: u64,
+}
+
+/// Parse a scenario spec: comma-separated `regime:requests:rate` phases,
+/// e.g. `clean:2000:20000,noisy:2000:20000`. Every malformed field is a
+/// clean `Err` (the CLI error paths `tests/governor_e2e.rs` pins).
+pub fn parse_phases(s: &str) -> Result<Vec<Phase>, String> {
+    let mut phases = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            return Err(format!("--phases '{s}': empty phase entry"));
+        }
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() != 3 {
+            return Err(format!(
+                "--phases: '{part}' is not 'regime:requests:rate' (e.g. 'noisy:2000:20000')"
+            ));
+        }
+        let regime = Regime::parse(fields[0])?;
+        let requests: u64 = fields[1]
+            .parse()
+            .map_err(|_| format!("--phases: '{}' is not a request count", fields[1]))?;
+        if requests == 0 {
+            return Err(format!("--phases: '{part}' has a zero request count"));
+        }
+        let rate: u64 = fields[2]
+            .parse()
+            .map_err(|_| format!("--phases: '{}' is not a rate (requests/s)", fields[2]))?;
+        if rate == 0 {
+            return Err(format!("--phases: '{part}' has a zero rate"));
+        }
+        phases.push(Phase { regime, requests, rate });
+    }
+    if phases.is_empty() {
+        return Err("--phases: at least one phase is required".to_string());
+    }
+    Ok(phases)
+}
+
+/// A governed scenario: the workload, the app scoring it, and the
+/// governor/serving knobs.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    /// Application whose QoR metric scores the stream.
+    pub app: App,
+    /// Operand width of the served multiplications.
+    pub width: u32,
+    /// The phase schedule.
+    pub phases: Vec<Phase>,
+    /// Operand lanes per request.
+    pub req_len: usize,
+    /// Master seed of the operand / jitter / sampling streams.
+    pub seed: u64,
+    /// Governor policy knobs (window, dwell, floor, ...).
+    pub governor: GovernorConfig,
+    /// Rung the ladder starts serving at.
+    pub start_rung: usize,
+    /// Per-request deadline for admission control (None = nothing sheds;
+    /// the deterministic-trace configuration).
+    pub deadline: Option<Duration>,
+}
+
+impl ScenarioConfig {
+    /// Total arrivals across all phases.
+    pub fn total_requests(&self) -> u64 {
+        self.phases.iter().map(|p| p.requests).sum()
+    }
+
+    /// Regime of global request `k` (pure function of the phase table).
+    pub fn regime_of(&self, k: u64) -> Regime {
+        let mut off = 0u64;
+        for p in &self.phases {
+            if k < off + p.requests {
+                return p.regime;
+            }
+            off += p.requests;
+        }
+        self.phases.last().expect("phases non-empty").regime
+    }
+}
+
+/// The fixed operand streams of a scenario: request `k` always carries
+/// these lanes, independent of pacing, sharding, completion order or the
+/// rung it is served at. Clean phases draw `width/2`-bit operands, noisy
+/// phases full-width ones.
+pub fn scenario_operands(cfg: &ScenarioConfig, k: u64) -> (Vec<i64>, Vec<i64>) {
+    let bits = match cfg.regime_of(k) {
+        Regime::Clean => (cfg.width / 2).max(2),
+        Regime::Noisy => cfg.width,
+    };
+    let mut rng = XorShift256::new(cfg.seed).split(SCEN_OPERAND_STREAM ^ k);
+    let a = (0..cfg.req_len).map(|_| rng.bits(bits) as i64).collect();
+    let b = (0..cfg.req_len).map(|_| rng.bits(bits) as i64).collect();
+    (a, b)
+}
+
+/// Seeded arrival offsets (ns since phase start) of one phase: request
+/// `j` of the phase sits in slot `j · spacing` with sub-slot jitter —
+/// same construction as `loadgen::schedule`, with the count given
+/// directly instead of derived from a duration.
+pub fn phase_schedule(phase_idx: usize, phase: &Phase, seed: u64) -> Vec<u64> {
+    let spacing = (1_000_000_000 / phase.rate).max(1);
+    let mut rng =
+        XorShift256::new(seed).split(SCEN_ARRIVAL_STREAM ^ ((phase_idx as u64) << 32) ^ phase.rate);
+    (0..phase.requests).map(|j| j * spacing + rng.below(spacing)).collect()
+}
+
+/// Submit-side tallies of one phase (wall-clock-free apart from rates).
+#[derive(Clone, Debug)]
+pub struct PhaseReport {
+    /// The phase as configured.
+    pub phase: Phase,
+    /// Requests past admission control and the bounded queues.
+    pub admitted: u64,
+    /// Requests shed by deadline admission control.
+    pub shed: u64,
+    /// Requests rejected by backpressure.
+    pub rejected: u64,
+    /// Rung in effect when the phase started / ended.
+    pub start_rung: usize,
+    pub end_rung: usize,
+}
+
+/// Everything one governed scenario run produced.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// The replayable governor record (windows + transitions).
+    pub trace: GovernorTrace,
+    /// Per-phase submit tallies.
+    pub phases: Vec<PhaseReport>,
+    /// Registry names of the ladder rungs (cheapest first).
+    pub rung_names: Vec<String>,
+    /// Total arrivals offered.
+    pub requests: u64,
+    /// Requests fully completed (all spans replied).
+    pub completed: u64,
+    /// Operand lanes across completed requests.
+    pub elements: u64,
+    /// Wall clock of the whole scenario (ns).
+    pub wall_ns: u64,
+    /// Order-independent digest of every completed response — with no
+    /// shedding, a pure function of (seed, phases, ladder, policy): the
+    /// end-to-end bit-identity handle of a governed run.
+    pub checksum: u64,
+    /// p50 / p99 span latency at scenario end (ns; wall-clock).
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+impl ScenarioReport {
+    /// Rung that served request `k` (from the recorded window stream).
+    pub fn rung_of_request(&self, k: u64, window: u64) -> Option<usize> {
+        let w = (k / window.max(1)) as usize;
+        self.trace.windows.get(w).map(|o| o.rung)
+    }
+}
+
+/// Drive one governed scenario against a fresh coordinator.
+///
+/// The submitting thread walks the phase schedules (sleep + spin pacing),
+/// stamps each request with the governor's current rung (inside
+/// `Coordinator::try_call_async_with_deadline` via the rung register),
+/// shadow-samples the seeded stride, and closes a decision window every
+/// `governor.window` *offered* requests: fold the window's samples into
+/// the app QoR, feed the observation to the [`Governor`], and actuate any
+/// transition with [`Coordinator::set_rung`] before the next request is
+/// submitted — so a window's requests are all served at one rung and the
+/// switch trace is a pure function of the seed and policy. A collector
+/// thread reassembles replies into the order-independent checksum
+/// (`loadgen` pattern).
+pub fn run_scenario(
+    ladder: &Ladder,
+    coord_cfg: &CoordinatorConfig,
+    cfg: &ScenarioConfig,
+) -> ScenarioReport {
+    assert_eq!(ladder.width, cfg.width, "ladder and scenario widths must agree");
+    let gcfg = cfg.governor;
+    let window = gcfg.window.max(1);
+    let coord = Coordinator::start(ladder.factory(), coord_cfg.clone());
+    let mut governor = Governor::new(gcfg, ladder.len(), cfg.start_rung);
+    coord.set_rung(governor.rung() as u32);
+
+    // collector: reassemble each admitted request's spans, fold digests
+    type Pending = (u64, usize, std::sync::mpsc::Receiver<super::router::Response>);
+    let (done_tx, done_rx) = channel::<Pending>();
+    let collector = std::thread::spawn(move || {
+        let mut checksum = 0u64;
+        let mut completed = 0u64;
+        let mut elements = 0u64;
+        while let Ok((k, n, rx)) = done_rx.recv() {
+            let mut vals = vec![0i64; n];
+            let mut filled = 0usize;
+            while filled < n {
+                match rx.recv() {
+                    Ok(resp) => {
+                        let end = resp.offset + resp.values.len();
+                        vals[resp.offset..end].copy_from_slice(&resp.values);
+                        filled += resp.values.len();
+                    }
+                    Err(_) => break,
+                }
+            }
+            if filled == n {
+                checksum ^= request_digest(k, &vals);
+                completed += 1;
+                elements += n as u64;
+            }
+        }
+        (checksum, completed, elements)
+    });
+
+    let mut trace = GovernorTrace::default();
+    let mut acc = WindowAccumulator::new();
+    let mut phase_reports: Vec<PhaseReport> = Vec::new();
+    let mut window_shed = 0u64;
+    let t0 = Instant::now();
+    let mut k = 0u64; // global request index
+
+    // close the decision window `w` and actuate any switch
+    let mut close_window = |w: u64,
+                            governor: &mut Governor,
+                            acc: &mut WindowAccumulator,
+                            window_shed: &mut u64,
+                            trace: &mut GovernorTrace| {
+        let rung = governor.rung();
+        let (qor, qor_down) = acc.close(cfg.app, cfg.width, rung);
+        let obs = WindowObs {
+            window: w,
+            rung,
+            qor,
+            qor_down,
+            shed: *window_shed,
+            p99_ns: coord.metrics.p99_ns(),
+        };
+        *window_shed = 0;
+        coord.metrics.record_governor_window(qor);
+        if let Some(t) = governor.observe(&obs) {
+            coord.set_rung(t.to as u32);
+            coord.metrics.record_governor_switch();
+            trace.transitions.push(t);
+        }
+        trace.windows.push(obs);
+    };
+
+    for (pi, phase) in cfg.phases.iter().enumerate() {
+        let arrivals = phase_schedule(pi, phase, cfg.seed);
+        let mut rep = PhaseReport {
+            phase: *phase,
+            admitted: 0,
+            shed: 0,
+            rejected: 0,
+            start_rung: governor.rung(),
+            end_rung: governor.rung(),
+        };
+        let p0 = Instant::now();
+        for &at_ns in &arrivals {
+            // window boundary: decide *before* the first request of the
+            // new window is stamped
+            if k > 0 && k % window == 0 {
+                close_window(k / window - 1, &mut governor, &mut acc, &mut window_shed, &mut trace);
+            }
+            // pace: coarse sleep, then spin the last stretch
+            let target = p0 + Duration::from_nanos(at_ns);
+            loop {
+                let now = Instant::now();
+                if now >= target {
+                    break;
+                }
+                let left = target - now;
+                if left > Duration::from_micros(120) {
+                    std::thread::sleep(left - Duration::from_micros(100));
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+            let (a, b) = scenario_operands(cfg, k);
+            // shadow-sample the seeded stride (offered requests, so the
+            // QoR signal is independent of admission outcomes)
+            if is_sampled(cfg.seed, gcfg.sample_stride, k / window, k) {
+                acc.sample(ladder, governor.rung(), &a, &b, gcfg.sample_lanes);
+            }
+            let n = a.len();
+            match coord.try_call_async_with_deadline(a, b, cfg.deadline) {
+                Ok(rx) => {
+                    rep.admitted += 1;
+                    done_tx.send((k, n, rx)).expect("collector alive");
+                }
+                Err(SubmitError::Shed) => {
+                    rep.shed += 1;
+                    window_shed += 1;
+                }
+                Err(SubmitError::Full) => rep.rejected += 1,
+            }
+            k += 1;
+        }
+        rep.end_rung = governor.rung();
+        phase_reports.push(rep);
+    }
+    // close the trailing (possibly partial) window
+    if k > 0 {
+        close_window((k - 1) / window, &mut governor, &mut acc, &mut window_shed, &mut trace);
+    }
+
+    drop(done_tx);
+    let (checksum, completed, elements) = collector.join().expect("collector");
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let report = ScenarioReport {
+        trace,
+        phases: phase_reports,
+        rung_names: ladder.names.clone(),
+        requests: k,
+        completed,
+        elements,
+        wall_ns,
+        checksum,
+        p50_ns: coord.metrics.p50_ns(),
+        p99_ns: coord.metrics.p99_ns(),
+    };
+    drop(coord);
+    report
+}
+
+/// Pour a scenario report into a [`Recorder`] for `BENCH_governor.json`:
+/// one throughput row per phase plus scenario-level switch/QoR rows
+/// (`items_per_iter` carries the deterministic counters so the JSON is
+/// self-describing).
+pub fn to_recorder(rep: &ScenarioReport, window: u64) -> Recorder {
+    let mut rec = Recorder::new("governor");
+    let one = |ns: f64| BenchResult {
+        name: String::new(),
+        median_ns: ns,
+        mean_ns: ns,
+        min_ns: ns,
+        max_ns: ns,
+        samples: 1,
+        iters_per_sample: 1,
+    };
+    for (i, p) in rep.phases.iter().enumerate() {
+        let name = format!(
+            "phase{}_{}_{}rps_rung{}to{}",
+            i,
+            p.phase.regime.label(),
+            p.phase.rate,
+            p.start_rung,
+            p.end_rung
+        );
+        rec.add(&name, &one(rep.wall_ns as f64 / rep.phases.len() as f64), p.admitted as f64);
+    }
+    rec.add("switches_total", &one(rep.wall_ns as f64), rep.trace.transitions.len() as f64);
+    rec.add(
+        "windows_total",
+        &one(rep.wall_ns as f64),
+        (rep.requests.div_ceil(window.max(1))) as f64,
+    );
+    rec.add("p99_latency", &one(rep.p99_ns as f64), 1.0);
+    rec
+}
+
+/// Human-readable scenario summary: phase table + switch trace.
+pub fn format_report(rep: &ScenarioReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("ladder: {}\n", rep.rung_names.join(" -> ")));
+    for (i, p) in rep.phases.iter().enumerate() {
+        out.push_str(&format!(
+            "phase {} {:<5} {:>7} req @ {:>8} req/s | admitted {:>7} shed {:>6} rejected {:>6} | rung {} -> {}\n",
+            i,
+            p.phase.regime.label(),
+            p.phase.requests,
+            p.phase.rate,
+            p.admitted,
+            p.shed,
+            p.rejected,
+            p.start_rung,
+            p.end_rung,
+        ));
+    }
+    out.push_str(&format!(
+        "completed {}/{} | {} switches over {} windows | p50 {:.1}µs p99 {:.1}µs | checksum {:016x}\n",
+        rep.completed,
+        rep.requests,
+        rep.trace.transitions.len(),
+        rep.trace.windows.len(),
+        rep.p50_ns as f64 / 1e3,
+        rep.p99_ns as f64 / 1e3,
+        rep.checksum,
+    ));
+    if rep.trace.transitions.is_empty() {
+        out.push_str("switch trace: (none)\n");
+    } else {
+        out.push_str("switch trace:\n");
+        for line in rep.trace.switch_trace().lines() {
+            out.push_str(&format!("  {line}\n"));
+        }
+    }
+    out
+}
+
+/// `rapid serve-bench --governor` — parse/validate/run split so every
+/// malformed input is a clean `Err` (satellite error-path tests), and the
+/// process-exit shell lives in one place (`loadgen::cli`).
+pub mod cli {
+    use super::*;
+    use crate::explore::evaluate::EvalOpts;
+    use crate::util::cli::Args;
+
+    /// Everything a governed serve-bench run needs, fully validated.
+    pub struct ScenarioSetup {
+        /// Scenario + governor knobs.
+        pub cfg: ScenarioConfig,
+        /// Ladder rung names (cheapest first), already registry-checked.
+        pub ladder_names: Vec<String>,
+        /// Reorder/filter the names through the exact Pareto frontier.
+        pub use_pareto: bool,
+        /// Pipeline stages of the Pareto evaluation.
+        pub stages: usize,
+        /// Fidelity of the Pareto evaluation.
+        pub mc_samples: u64,
+        pub power_vectors: usize,
+        /// Serving shell shape.
+        pub coord: CoordinatorConfig,
+        /// Output JSON path.
+        pub out: String,
+    }
+
+    /// Option keys of the governed mode (superset of the plain
+    /// serve-bench keys so one argv parses either way).
+    pub const VALUE_KEYS: &[&str] = &[
+        "backend", "unit", "op", "width", "rates", "duration-ms", "req-len", "seed",
+        "batch", "workers", "shards", "queue-depth", "max-wait-us", "deadline-us", "out",
+        "app", "ladder", "phases", "qor-floor", "headroom", "window", "dwell",
+        "sample-stride", "sample-lanes", "start-rung", "p99-budget-us", "stages",
+        "samples", "vectors",
+    ];
+
+    /// Validate a governed serve-bench argv into a [`ScenarioSetup`].
+    /// Pure (no I/O, nothing served): the function the error-path tests
+    /// drive with malformed inputs.
+    pub fn parse(argv: Vec<String>) -> Result<ScenarioSetup, String> {
+        let args = Args::parse(argv, VALUE_KEYS);
+        let backend = args.get_or("backend", "functional");
+        if backend != "functional" {
+            return Err(format!(
+                "--governor serves the in-process functional ladder (got backend '{backend}'); \
+                 the PJRT path serves one fixed artifact"
+            ));
+        }
+        if args.get_or("op", "mul") != "mul" {
+            return Err("--governor ladders are multiplier ladders (--op mul)".to_string());
+        }
+        let app = App::parse(args.get_or("app", "jpeg"))?;
+        let width = {
+            let w = args.try_u64("width", 16)? as u32;
+            if !(2..=32).contains(&w) {
+                return Err(format!("--width: {w} is outside the supported 2..=32 range"));
+            }
+            w
+        };
+        let phases = parse_phases(args.get_or(
+            "phases",
+            "clean:2000:20000,noisy:2000:20000,clean:2000:20000",
+        ))?;
+        let ladder_spec = args.get_or("ladder", "rapid3,rapid10,exact");
+        let ladder_names: Vec<String> =
+            ladder_spec.split(',').map(|s| s.trim().to_string()).collect();
+        // registry-check now so a typo fails before anything is served
+        Ladder::from_names(&ladder_names, width)?;
+
+        let floor = args.try_f64("qor-floor", app.default_floor())?;
+        if !floor.is_finite() {
+            return Err(format!("--qor-floor: {floor} must be finite"));
+        }
+        let headroom = args.try_f64("headroom", app.default_headroom())?;
+        if !headroom.is_finite() || headroom < 0.0 {
+            return Err(format!("--headroom: {headroom} must be finite and non-negative"));
+        }
+        let seed = args.try_u64("seed", 42)?;
+        let deadline_us = args.try_u64("deadline-us", 0)?;
+        let governor = GovernorConfig {
+            floor,
+            headroom,
+            window: args.try_u64("window", 256)?.max(1),
+            dwell: args.try_u64("dwell", 3)?.max(1),
+            sample_stride: args.try_u64("sample-stride", 8)?.max(1),
+            sample_lanes: args.try_usize("sample-lanes", 32)?.max(1),
+            seed,
+            p99_budget_ns: args.try_u64("p99-budget-us", 0)? * 1000,
+        };
+        let cfg = ScenarioConfig {
+            app,
+            width,
+            phases,
+            req_len: args.try_usize("req-len", 256)?.max(1),
+            seed,
+            governor,
+            start_rung: args.try_usize("start-rung", 0)?,
+            deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
+        };
+        Ok(ScenarioSetup {
+            cfg,
+            ladder_names,
+            use_pareto: args.flag("pareto"),
+            stages: args.try_usize("stages", 1)?.max(1),
+            mc_samples: args.try_u64("samples", 50_000)?.max(1),
+            power_vectors: args.try_usize("vectors", 24)?.max(1),
+            coord: CoordinatorConfig {
+                batch_capacity: args.try_usize("batch", 4096)?.max(1),
+                max_wait: Duration::from_micros(args.try_u64("max-wait-us", 200)?),
+                workers: args.try_usize("workers", 4)?.max(1),
+                queue_depth: args.try_usize("queue-depth", 256)?.max(1),
+                shards: args.try_usize("shards", 4)?.max(1),
+            },
+            out: args.get_or("out", "BENCH_governor.json").to_string(),
+        })
+    }
+
+    /// Build the ladder a setup asks for (explicit order, or Pareto-
+    /// reordered cheapest→most-accurate). `--pareto` needs `'static`
+    /// registry names, so the owned names are matched back through the
+    /// registry table.
+    pub fn build_ladder(setup: &ScenarioSetup) -> Result<Ladder, String> {
+        if !setup.use_pareto {
+            return Ladder::from_names(&setup.ladder_names, setup.cfg.width);
+        }
+        let mut stat: Vec<&'static str> = Vec::with_capacity(setup.ladder_names.len());
+        for n in &setup.ladder_names {
+            stat.push(
+                crate::arith::registry::static_mul_name(n)
+                    .ok_or_else(|| format!("--pareto: '{n}' is not a registry multiplier name"))?,
+            );
+        }
+        let opts = EvalOpts {
+            mc_samples: setup.mc_samples,
+            power_vectors: setup.power_vectors,
+            ..Default::default()
+        };
+        Ladder::pareto(&stat, setup.cfg.width, setup.stages, &opts)
+    }
+
+    /// Run a governed serve-bench end to end. `Err` carries the
+    /// user-facing message (the caller prints it and sets the exit code).
+    pub fn run(argv: Vec<String>) -> Result<(), String> {
+        let setup = parse(argv)?;
+        let ladder = build_ladder(&setup)?;
+        let g = &setup.cfg.governor;
+        println!(
+            "serve-bench --governor: app {} ({}, floor {} headroom {}), ladder [{}], \
+             window {} dwell {} stride {}, shards {}, workers {}, start rung {}",
+            match setup.cfg.app {
+                App::Jpeg => "jpeg",
+                App::Ecg => "ecg",
+                App::Harris => "harris",
+            },
+            setup.cfg.app.qor_name(),
+            g.floor,
+            g.headroom,
+            ladder.names.join(","),
+            g.window,
+            g.dwell,
+            g.sample_stride,
+            setup.coord.shards,
+            setup.coord.workers,
+            setup.cfg.start_rung,
+        );
+        let rep = run_scenario(&ladder, &setup.coord, &setup.cfg);
+        print!("{}", format_report(&rep));
+        to_recorder(&rep, g.window)
+            .write(&setup.out)
+            .map_err(|e| format!("could not write {}: {e}", setup.out))?;
+        println!("recorded -> {} (the EXPERIMENTS.md §Governor trajectory)", setup.out);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg() -> ScenarioConfig {
+        ScenarioConfig {
+            app: App::Jpeg,
+            width: 16,
+            phases: vec![
+                Phase { regime: Regime::Clean, requests: 100, rate: 50_000 },
+                Phase { regime: Regime::Noisy, requests: 100, rate: 50_000 },
+            ],
+            req_len: 32,
+            seed: 7,
+            governor: GovernorConfig {
+                window: 50,
+                dwell: 1,
+                sample_stride: 4,
+                sample_lanes: 8,
+                seed: 7,
+                ..Default::default()
+            },
+            start_rung: 0,
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn phase_spec_parses_and_rejects() {
+        let p = parse_phases("clean:2000:20000,noisy:1000:5000").unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0], Phase { regime: Regime::Clean, requests: 2000, rate: 20000 });
+        assert_eq!(p[1].regime, Regime::Noisy);
+        for bad in [
+            "", "clean", "clean:10", "clean:10:0", "clean:0:100", "murky:10:100",
+            "clean:ten:100", "clean:10:-5", "clean:10:100,,noisy:5:5",
+        ] {
+            assert!(parse_phases(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn operands_follow_the_phase_regimes() {
+        let cfg = base_cfg();
+        // clean phase: width/2-bit operands
+        let (a, _) = scenario_operands(&cfg, 0);
+        assert_eq!(a.len(), 32);
+        assert!(a.iter().all(|&x| (0..256).contains(&x)), "clean = 8-bit at width 16");
+        // noisy phase: full-width operands (some above the clean cap)
+        let (a, _) = scenario_operands(&cfg, 150);
+        assert!(a.iter().all(|&x| (0..65536).contains(&x)));
+        assert!(a.iter().any(|&x| x >= 256), "noisy draws beyond the clean range");
+        // pure: same k, same lanes
+        assert_eq!(scenario_operands(&cfg, 150), scenario_operands(&cfg, 150));
+        // past-the-end indexing clamps to the last phase's regime
+        assert_eq!(cfg.regime_of(10_000), Regime::Noisy);
+    }
+
+    #[test]
+    fn phase_schedule_is_seeded_and_paced() {
+        let p = Phase { regime: Regime::Clean, requests: 100, rate: 1_000_000 };
+        let s1 = phase_schedule(0, &p, 3);
+        assert_eq!(s1, phase_schedule(0, &p, 3));
+        assert_eq!(s1.len(), 100);
+        for w in s1.windows(2) {
+            assert!(w[0] <= w[1], "sorted");
+        }
+        assert!(*s1.last().unwrap() < 100 * 1000, "inside the phase");
+        assert_ne!(s1, phase_schedule(1, &p, 3), "phase index varies jitter");
+    }
+
+    #[test]
+    fn cli_parse_rejects_malformed_inputs() {
+        let sv = |s: &[&str]| s.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        assert!(cli::parse(sv(&[])).is_ok(), "defaults parse");
+        for bad in [
+            vec!["--app", "video"],
+            vec!["--ladder", "rapid3,nosuchunit"],
+            vec!["--ladder", "rapid3,,exact"],
+            vec!["--phases", "clean:100:0"],
+            vec!["--phases", "noisy:-5:100"],
+            vec!["--window", "-3"],
+            vec!["--qor-floor", "lots"],
+            vec!["--backend", "pjrt"],
+            vec!["--op", "div"],
+            vec!["--width", "64"],
+        ] {
+            let owned = sv(&bad);
+            assert!(cli::parse(owned.clone()).is_err(), "{owned:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn short_scenario_upgrades_under_noise_and_is_replayable() {
+        let ladder = Ladder::from_names(&["rapid3", "exact"], 16).unwrap();
+        let coord = CoordinatorConfig {
+            batch_capacity: 64,
+            max_wait: Duration::from_micros(50),
+            workers: 2,
+            queue_depth: 1024,
+            shards: 1,
+        };
+        let cfg = base_cfg();
+        let rep = run_scenario(&ladder, &coord, &cfg);
+        assert_eq!(rep.requests, 200);
+        assert_eq!(rep.completed, 200, "no deadline → nothing sheds");
+        assert_eq!(rep.trace.windows.len(), 4, "200 requests / window 50");
+        // clean phase holds the cheap rung, noisy phase forces the exact one
+        assert_eq!(rep.phases[0].start_rung, 0);
+        assert_eq!(rep.phases[1].end_rung, 1, "noisy regime upgraded");
+        assert!(rep
+            .trace
+            .transitions
+            .iter()
+            .any(|t| t.reason == crate::coordinator::governor::SwitchReason::QorFloor));
+        // the recorded trace replays exactly
+        let replayed = Governor::replay(cfg.governor, ladder.len(), cfg.start_rung, &rep.trace.windows);
+        assert_eq!(replayed, rep.trace.transitions);
+    }
+
+    #[test]
+    fn recorder_carries_phases_and_switches() {
+        let rep = ScenarioReport {
+            trace: GovernorTrace::default(),
+            phases: vec![PhaseReport {
+                phase: Phase { regime: Regime::Noisy, requests: 100, rate: 5000 },
+                admitted: 100,
+                shed: 0,
+                rejected: 0,
+                start_rung: 0,
+                end_rung: 1,
+            }],
+            rung_names: vec!["rapid3".into(), "exact".into()],
+            requests: 100,
+            completed: 100,
+            elements: 3200,
+            wall_ns: 1_000_000,
+            checksum: 0xfeed,
+            p50_ns: 1000,
+            p99_ns: 2000,
+        };
+        let j = to_recorder(&rep, 50).to_json();
+        assert!(j.contains("\"bench\": \"governor\""), "{j}");
+        assert!(j.contains("phase0_noisy_5000rps_rung0to1"), "{j}");
+        assert!(j.contains("switches_total"), "{j}");
+        let text = format_report(&rep);
+        assert!(text.contains("rapid3 -> exact"), "{text}");
+        assert!(text.contains("switch trace: (none)"), "{text}");
+    }
+}

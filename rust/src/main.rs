@@ -15,7 +15,9 @@
 //!   the in-process batched functional model (`--backend functional`).
 //! * `serve-bench`   — deterministic open-loop load ladder against the
 //!   sharded functional serve path; records offered vs. achieved
-//!   throughput and p50/p99/p999 latency to `BENCH_serve.json`.
+//!   throughput and p50/p99/p999 latency to `BENCH_serve.json`. With
+//!   `--governor`, replays a phase-shifting scenario through the
+//!   QoR-adaptive accuracy governor (`BENCH_governor.json`).
 
 use rapid::util::cli::Args;
 
@@ -34,6 +36,15 @@ fn main() {
         "app" => rapid::apps::cli::run(argv),
         "explore" => rapid::explore::cli::run(argv),
         "serve" => {
+            // the governed ladder serves the in-process functional backend,
+            // so `serve --governor` works on every build (no pjrt gate)
+            if argv.iter().any(|a| a == "--governor") {
+                if let Err(e) = rapid::coordinator::scenario::cli::run(argv) {
+                    eprintln!("serve: {e}");
+                    std::process::exit(1);
+                }
+                return;
+            }
             #[cfg(feature = "pjrt")]
             rapid::coordinator::cli::run(argv);
             #[cfg(not(feature = "pjrt"))]
@@ -82,15 +93,25 @@ fn usage() {
                                                 is e.g. \"psnr>=30\" or \"are<=0.02,luts<=400\"\n\
            serve         [--backend {{pjrt|functional}}] [--artifacts DIR] [--unit NAME]\n\
                          [--width N] [--op {{mul|div}}] [--batch B] [--workers W] [--shards S]\n\
-                         [--requests R] [--deadline-us D]\n\
+                         [--requests R] [--deadline-us D] [--governor ...]\n\
                                                 streaming coordinator demo (PJRT artifacts,\n\
-                                                or the in-process batched functional model)\n\
+                                                or the in-process batched functional model);\n\
+                                                --governor runs the QoR-adaptive ladder (same\n\
+                                                flags as serve-bench --governor)\n\
            serve-bench   [--unit NAME] [--op {{mul|div}}] [--width N] [--rates R1,R2,..]\n\
                          [--duration-ms MS] [--req-len L] [--shards S] [--workers W]\n\
                          [--batch B] [--deadline-us D] [--seed S] [--out FILE]\n\
                                                 deterministic open-loop load ladder over the\n\
                                                 sharded functional serve path; records offered\n\
-                                                vs. achieved + p50/p99/p999 to BENCH_serve.json\n"
+                                                vs. achieved + p50/p99/p999 to BENCH_serve.json\n\
+                         --governor [--app {{jpeg|ecg|harris}}] [--ladder A,B,..] [--pareto]\n\
+                         [--phases regime:reqs:rate,..] [--qor-floor F] [--headroom H]\n\
+                         [--window K] [--dwell D] [--sample-stride S] [--start-rung R]\n\
+                         [--p99-budget-us B] [--out FILE]\n\
+                                                QoR-adaptive governed scenario: closed-loop\n\
+                                                accuracy switching along the ladder under a QoR\n\
+                                                floor + latency budget, replayable switch trace\n\
+                                                recorded to BENCH_governor.json\n"
     );
 }
 

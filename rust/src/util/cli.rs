@@ -74,6 +74,32 @@ impl Args {
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Strict variant of [`Self::get_u64`]: absent → `Ok(default)`, but a
+    /// present-and-malformed value (including negatives) is an `Err`
+    /// naming the flag — the permissive getters would silently mask typos
+    /// like `--window -5`.
+    pub fn try_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: '{v}' is not a non-negative integer")),
+        }
+    }
+
+    /// Strict `usize` counterpart of [`Self::try_u64`].
+    pub fn try_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.try_u64(name, default as u64).map(|v| v as usize)
+    }
+
+    /// Strict `f64` counterpart of [`Self::try_u64`].
+    pub fn try_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not a number")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -100,5 +126,17 @@ mod tests {
         assert_eq!(a.get_usize("n", 3), 12);
         assert_eq!(a.get_usize("missing", 3), 3);
         assert_eq!(a.get_f64("missing", 2.5), 2.5);
+    }
+
+    #[test]
+    fn strict_getters_reject_malformed_values() {
+        let a = Args::parse(sv(&["--n=12", "--neg=-5", "--word=ten", "--x=2.5"]), &[]);
+        assert_eq!(a.try_u64("n", 3), Ok(12));
+        assert_eq!(a.try_u64("missing", 3), Ok(3), "absent falls back");
+        assert!(a.try_u64("neg", 3).is_err(), "negative is malformed, not defaulted");
+        assert!(a.try_u64("word", 3).is_err());
+        assert_eq!(a.try_f64("x", 0.0), Ok(2.5));
+        assert!(a.try_f64("word", 0.0).is_err());
+        assert_eq!(a.try_usize("n", 0), Ok(12));
     }
 }

@@ -305,3 +305,96 @@ fn loadgen_same_seed_same_rows() {
     assert!(j.contains("offered_1500rps_throughput"), "{j}");
     assert!(j.contains("offered_3000rps_p999"), "{j}");
 }
+
+/// ISSUE 9 satellite: deadline shedding under heavily skewed request
+/// sizes on the *sharded* ingress. Every request carries a unique lane
+/// value, so three invariants reconcile exactly however routing, packing
+/// and splitting interleave:
+/// 1. shed requests' lanes never reach an executor;
+/// 2. every admitted request completes, spans reassembling to its lanes;
+/// 3. submit-side tallies equal the coordinator's own counters, and
+///    shed + admitted covers the whole stream (nothing double-counted,
+///    nothing lost).
+#[test]
+fn skewed_sizes_shed_reconciles_on_sharded_ingress() {
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+
+    // executor that records every live (non-padding) lane value it runs
+    struct TracingFactory(Arc<Mutex<HashSet<i64>>>);
+    impl ExecutorFactory for TracingFactory {
+        fn make(&self) -> Box<dyn rapid::coordinator::router::Executor> {
+            let seen = self.0.clone();
+            Box::new(move |a: &[i64], _b: &[i64]| {
+                let mut s = seen.lock().unwrap();
+                for &x in a.iter().filter(|&&x| x != 0) {
+                    s.insert(x);
+                }
+                a.to_vec()
+            })
+        }
+    }
+
+    let executed = Arc::new(Mutex::new(HashSet::new()));
+    let c = Coordinator::start(
+        Arc::new(TracingFactory(executed.clone())),
+        CoordinatorConfig {
+            batch_capacity: 64, // far below the huge requests → splitting
+            max_wait: Duration::from_micros(100),
+            workers: 2,
+            queue_depth: 4096,
+            shards: 4,
+        },
+    );
+
+    let mut rng = XorShift256::new(2027);
+    let mut admitted = Vec::new(); // (id, n, rx)
+    let mut shed_ids = HashSet::new();
+    let mut rejected = 0u64;
+    for k in 0..300i64 {
+        // heavy-tailed skew: mostly tiny requests, every ~4th a huge one
+        // that splits over many batches and dominates queue occupancy
+        let n = if rng.below(4) == 0 {
+            400 + rng.below(900) as usize
+        } else {
+            1 + rng.below(6) as usize
+        };
+        let id = 1000 + k; // unique, non-zero: distinguishable from padding
+        // an already-expired deadline can never be met (admission has a
+        // max_wait floor); a generous one always passes admission
+        let deadline = if rng.below(3) == 0 { Duration::ZERO } else { Duration::from_secs(10) };
+        match c.try_call_async_with_deadline(vec![id; n], vec![1; n], Some(deadline)) {
+            Ok(rx) => {
+                assert_ne!(deadline, Duration::ZERO, "expired deadlines must shed");
+                admitted.push((id, n, rx));
+            }
+            Err(SubmitError::Shed) => {
+                assert_eq!(deadline, Duration::ZERO, "generous deadlines must admit");
+                shed_ids.insert(id);
+            }
+            Err(SubmitError::Full) => rejected += 1,
+        }
+    }
+    assert_eq!(rejected, 0, "queue_depth 4096 cannot fill at 300 requests");
+    assert!(!shed_ids.is_empty() && !admitted.is_empty(), "stream must mix outcomes");
+    assert_eq!(shed_ids.len() + admitted.len(), 300, "full reconciliation");
+
+    // (2) every admitted request completes: spans reassemble to its lanes
+    let admitted_ids: HashSet<i64> = admitted.iter().map(|(id, _, _)| *id).collect();
+    for (id, n, rx) in admitted {
+        let mut filled = 0usize;
+        while filled < n {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).expect("admitted completes");
+            assert!(resp.values.iter().all(|&v| v == id), "cross-request leak into {id}");
+            filled += resp.values.len();
+        }
+        assert_eq!(filled, n, "request {id}: reply length");
+    }
+    // (1)+(3) executed lanes are exactly the admitted ids; counters agree
+    let executed = executed.lock().unwrap();
+    assert_eq!(*executed, admitted_ids, "executed set must equal the admitted set");
+    assert!(executed.is_disjoint(&shed_ids), "shed operands must never execute");
+    assert_eq!(c.metrics.shed.load(Ordering::Relaxed), shed_ids.len() as u64);
+    assert_eq!(c.metrics.requests.load(Ordering::Relaxed), admitted_ids.len() as u64);
+    assert_eq!(c.metrics.rejected.load(Ordering::Relaxed), 0);
+}

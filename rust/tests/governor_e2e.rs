@@ -1,0 +1,346 @@
+//! Scenario-replay suite of the QoR governor (ISSUE 9 headline): the
+//! closed loop — ladder serving, rung stamping, windowed shadow QoR,
+//! hysteresis policy — pinned end to end on deterministic scenarios.
+//!
+//! The four contracts:
+//! (a) a noisy operand regime forces an upgrade to a more accurate rung
+//!     and a clean regime decays back — at exactly the windows the pure
+//!     policy predicts;
+//! (b) switch traces (and, with nothing shed, the served checksum) are
+//!     bit-identical across the serving matrix — workers × shards
+//!     in-process here, and `RAPID_THREADS ∈ {1,4}` via the CI tier-1
+//!     matrix, where the serially-computed expected checksum makes any
+//!     thread-count divergence fail that job;
+//! (c) hysteresis never switches faster than the dwell bound;
+//! (d) governor-off serving is byte-identical to the pre-governor path
+//!     (a one-rung ladder vs. `BatchMulFactory`, both loadgen and the
+//!     blocking call path).
+//!
+//! Plus the satellite error-path pins: serve-bench and governed-scenario
+//! CLI parsing returns clean `Err`s on malformed input, never panics.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapid::arith::{ApproxMul, RapidMul};
+use rapid::coordinator::governor::{App, Governor, GovernorConfig, Ladder, SwitchReason};
+use rapid::coordinator::loadgen;
+use rapid::coordinator::router::{
+    BatchMulFactory, Coordinator, CoordinatorConfig, ExecutorFactory, LadderMulFactory,
+};
+use rapid::coordinator::scenario::{
+    self, run_scenario, scenario_operands, Phase, Regime, ScenarioConfig,
+};
+use rapid::util::par::with_threads;
+use rapid::util::XorShift256;
+
+fn coord_cfg(workers: usize, shards: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batch_capacity: 256,
+        max_wait: Duration::from_micros(100),
+        workers,
+        queue_depth: 8192,
+        shards,
+    }
+}
+
+/// The reference scenario: clean → noisy → clean at a trivially
+/// sustainable rate, two-rung ladder (coarse rapid3, exact), windows of
+/// 50 requests, dwell 1. With the jpeg defaults (floor 60 dB, headroom
+/// 10 dB) the policy's decisions are fully predictable: the first
+/// all-noisy window trips the floor, the first all-clean window after the
+/// dwell decays back.
+fn reference_scenario() -> ScenarioConfig {
+    ScenarioConfig {
+        app: App::Jpeg,
+        width: 16,
+        phases: vec![
+            Phase { regime: Regime::Clean, requests: 200, rate: 50_000 },
+            Phase { regime: Regime::Noisy, requests: 300, rate: 50_000 },
+            Phase { regime: Regime::Clean, requests: 400, rate: 50_000 },
+        ],
+        req_len: 32,
+        seed: 2026,
+        governor: GovernorConfig {
+            window: 50,
+            dwell: 1,
+            sample_stride: 4,
+            sample_lanes: 8,
+            seed: 2026,
+            ..Default::default()
+        },
+        start_rung: 0,
+        deadline: None,
+    }
+}
+
+fn reference_ladder() -> Ladder {
+    Ladder::from_names(&["rapid3", "exact"], 16).unwrap()
+}
+
+/// (a) The closed loop reacts to the operand regimes at the predicted
+/// windows: noisy trips the QoR floor (upgrade at the close of window 4,
+/// the first all-noisy window), clean decays back (window 10, the first
+/// all-clean window), and the run ends back on the cheap rung.
+#[test]
+fn noisy_regime_upgrades_clean_regime_decays() {
+    let cfg = reference_scenario();
+    let ladder = reference_ladder();
+    let rep = run_scenario(&ladder, &coord_cfg(2, 1), &cfg);
+    assert_eq!(rep.requests, 900);
+    assert_eq!(rep.completed, 900, "no deadline → everything completes");
+    assert_eq!(rep.trace.windows.len(), 18, "900 requests / window 50");
+
+    let t = &rep.trace.transitions;
+    assert_eq!(t.len(), 2, "one upgrade + one decay: {}", rep.trace.switch_trace());
+    assert_eq!(
+        (t[0].window, t[0].from, t[0].to, t[0].reason),
+        (4, 0, 1, SwitchReason::QorFloor),
+        "first all-noisy window trips the floor"
+    );
+    assert_eq!(
+        (t[1].window, t[1].from, t[1].to, t[1].reason),
+        (10, 1, 0, SwitchReason::Decay),
+        "first all-clean window decays back"
+    );
+    // phase boundaries see the same story
+    assert_eq!(rep.phases[0].end_rung, 0, "clean phase holds the cheap rung");
+    assert_eq!(rep.phases[1].end_rung, 1, "noisy phase upgraded");
+    assert_eq!(rep.phases[2].end_rung, 0, "clean phase decayed back");
+    // the QoR floor actually separates the regimes it switched on
+    let floor = cfg.governor.floor;
+    assert!(rep.trace.windows[4].qor < floor, "noisy window under the floor");
+    assert!(rep.trace.windows[0].qor > floor, "clean window over the floor");
+    // the recorded trace replays exactly through the pure policy
+    let replayed =
+        Governor::replay(cfg.governor, ladder.len(), cfg.start_rung, &rep.trace.windows);
+    assert_eq!(replayed, rep.trace.transitions, "trace is replayable");
+}
+
+/// (a') The other ratio-metric app reacts the same way: under `harris`
+/// (correct-motion-vector ratio, floor 0.90) noise forces the upgrade
+/// and the trailing clean phase decays back to the cheap rung.
+#[test]
+fn harris_scenario_upgrades_and_decays_too() {
+    let mut cfg = reference_scenario();
+    cfg.app = App::Harris;
+    cfg.governor.floor = App::Harris.default_floor();
+    cfg.governor.headroom = App::Harris.default_headroom();
+    let ladder = reference_ladder();
+    let rep = run_scenario(&ladder, &coord_cfg(2, 1), &cfg);
+    let t = &rep.trace.transitions;
+    assert!(!t.is_empty(), "harris noise must force a switch");
+    assert_eq!(
+        (t[0].from, t[0].to, t[0].reason),
+        (0, 1, SwitchReason::QorFloor),
+        "{}",
+        rep.trace.switch_trace()
+    );
+    assert_eq!(rep.phases[1].end_rung, 1);
+    assert_eq!(rep.phases[2].end_rung, 0, "clean tail decays back");
+}
+
+/// (b) Bit-identity across the serving matrix: every workers × shards
+/// point (with the driver additionally pinned to 1 and 4 par threads)
+/// produces the same switch trace, the same per-window (rung, QoR bits)
+/// stream and the same response checksum — and that checksum equals the
+/// serially-computed model fold, so the CI `RAPID_THREADS ∈ {1,4}` jobs
+/// each enforce thread-count invariance of the served bits.
+#[test]
+fn switch_traces_bit_identical_across_matrix() {
+    let cfg = reference_scenario();
+    let ladder = reference_ladder();
+    let window = cfg.governor.window;
+
+    let mut runs = Vec::new();
+    for &threads in &[1usize, 4] {
+        for &workers in &[1usize, 4] {
+            for &shards in &[1usize, 4] {
+                let rep =
+                    with_threads(threads, || run_scenario(&ladder, &coord_cfg(workers, shards), &cfg));
+                assert_eq!(
+                    rep.completed, rep.requests,
+                    "t={threads} w={workers} s={shards}: nothing may drop"
+                );
+                runs.push((threads, workers, shards, rep));
+            }
+        }
+    }
+    let (_, _, _, first) = &runs[0];
+    // serially recompute what the served stream must hash to, from the
+    // recorded per-window rungs and the pure operand streams
+    let mut want = 0u64;
+    for k in 0..first.requests {
+        let rung = first.trace.windows[(k / window) as usize].rung;
+        let (a, b) = scenario_operands(&cfg, k);
+        let vals: Vec<i64> = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| ladder.units[rung].mul(x as u64, y as u64) as i64)
+            .collect();
+        want ^= loadgen::request_digest(k, &vals);
+    }
+    for (threads, workers, shards, rep) in &runs {
+        let tag = format!("threads={threads} workers={workers} shards={shards}");
+        assert_eq!(
+            rep.trace.switch_trace(),
+            first.trace.switch_trace(),
+            "{tag}: switch trace diverged"
+        );
+        assert_eq!(
+            rep.trace.qor_trace(),
+            first.trace.qor_trace(),
+            "{tag}: per-window QoR bits diverged"
+        );
+        assert_eq!(rep.checksum, want, "{tag}: served bits diverged from the model");
+    }
+}
+
+/// (c) Hysteresis: a workload that flips regimes every other window can
+/// never drive switches closer together than the dwell bound.
+#[test]
+fn hysteresis_respects_the_dwell_bound() {
+    let mut cfg = reference_scenario();
+    cfg.phases = vec![
+        Phase { regime: Regime::Clean, requests: 100, rate: 50_000 },
+        Phase { regime: Regime::Noisy, requests: 100, rate: 50_000 },
+        Phase { regime: Regime::Clean, requests: 100, rate: 50_000 },
+        Phase { regime: Regime::Noisy, requests: 100, rate: 50_000 },
+        Phase { regime: Regime::Clean, requests: 100, rate: 50_000 },
+    ];
+    cfg.governor.window = 25;
+    cfg.governor.dwell = 3;
+    let ladder = reference_ladder();
+    let rep = run_scenario(&ladder, &coord_cfg(2, 2), &cfg);
+    assert!(
+        rep.trace.transitions.len() >= 2,
+        "the flip-flopping workload must force repeated switches: {}",
+        rep.trace.switch_trace()
+    );
+    let gap = rep.trace.min_switch_gap().expect("two or more switches");
+    assert!(
+        gap >= cfg.governor.dwell,
+        "switches {} windows apart violate dwell {}: {}",
+        gap,
+        cfg.governor.dwell,
+        rep.trace.switch_trace()
+    );
+    // and the pure replay agrees transition-for-transition
+    let replayed =
+        Governor::replay(cfg.governor, ladder.len(), cfg.start_rung, &rep.trace.windows);
+    assert_eq!(replayed, rep.trace.transitions);
+}
+
+/// (d) Governor-off byte-identity, loadgen path: a one-rung ladder (the
+/// rung register never moves off 0) serves the exact same bits as the
+/// pre-governor `BatchMulFactory` under the identical open-loop workload.
+#[test]
+fn governor_off_loadgen_is_byte_identical_to_plain_serving() {
+    let unit = Arc::new(RapidMul::new(16, 10));
+    let plain: Arc<dyn ExecutorFactory> = Arc::new(BatchMulFactory { unit: unit.clone() });
+    let ladder: Arc<dyn ExecutorFactory> = Arc::new(LadderMulFactory { units: vec![unit] });
+    let cc = coord_cfg(2, 2);
+    let cfg =
+        loadgen::LoadgenConfig::for_mul(16, vec![2000], Duration::from_millis(100), 24, 2026);
+    let a = loadgen::run_rung(&plain, &cc, &cfg, 0);
+    let b = loadgen::run_rung(&ladder, &cc, &cfg, 0);
+    assert_eq!(a.completed, a.requests, "sustainable rate completes everything");
+    assert_eq!(b.completed, b.requests);
+    assert_eq!((a.shed, a.rejected, b.shed, b.rejected), (0, 0, 0, 0));
+    assert_eq!(a.checksum, b.checksum, "ladder plumbing must not change served bits");
+    assert_eq!(a.elements, b.elements);
+}
+
+/// (d') Governor-off byte-identity, blocking call path: the same request
+/// stream through a ladder coordinator (rung register untouched) and a
+/// plain coordinator returns identical replies, and the rung gauge stays
+/// at 0 with zero recorded switches.
+#[test]
+fn governor_off_call_path_is_byte_identical() {
+    let unit = Arc::new(RapidMul::new(16, 10));
+    let plain = Coordinator::start(
+        Arc::new(BatchMulFactory { unit: unit.clone() }),
+        coord_cfg(2, 1),
+    );
+    let ladder = Coordinator::start(
+        Arc::new(LadderMulFactory { units: vec![unit] }),
+        coord_cfg(2, 1),
+    );
+    let mut rng = XorShift256::new(55);
+    for _ in 0..30 {
+        let n = 1 + rng.below(400) as usize;
+        let a: Vec<i64> = (0..n).map(|_| rng.bits(16) as i64).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.bits(16) as i64).collect();
+        assert_eq!(
+            plain.call(a.clone(), b.clone()),
+            ladder.call(a, b),
+            "ladder at rung 0 must serve the plain path's bits"
+        );
+    }
+    assert_eq!(ladder.current_rung(), 0);
+    assert_eq!(ladder.metrics.governor_switches(), 0);
+    assert_eq!(ladder.metrics.governor_rung(), 0);
+}
+
+/// A one-rung governed scenario can never switch: the trace stays empty
+/// however the regimes shift (there is nowhere to go).
+#[test]
+fn single_rung_ladder_never_switches() {
+    let cfg = reference_scenario();
+    let ladder = Ladder::from_names(&["rapid10"], 16).unwrap();
+    let rep = run_scenario(&ladder, &coord_cfg(2, 1), &cfg);
+    assert!(rep.trace.transitions.is_empty(), "{}", rep.trace.switch_trace());
+    assert_eq!(rep.completed, rep.requests);
+    assert!(rep.trace.windows.iter().all(|w| w.rung == 0));
+}
+
+/// Satellite: serve-bench CLI parsing returns clean errors — zero and
+/// negative rates, malformed tokens, unknown units/ops/backends — and the
+/// governed scenario parser rejects malformed ladders, phases and app
+/// names the same way. No panics, no process exits, messages name the
+/// offending flag.
+#[test]
+fn cli_error_paths_are_clean_errors() {
+    let sv = |s: &[&str]| s.iter().map(|x| x.to_string()).collect::<Vec<String>>();
+
+    // plain serve-bench: strict rate list
+    for bad in ["0", "-100", "ten", "10,0", "10,,20", ""] {
+        let e = loadgen::cli::parse(sv(&["--rates", bad])).unwrap_err();
+        assert!(e.contains("--rates") || e.contains("--duration"), "'{bad}' → {e}");
+    }
+    assert!(loadgen::cli::parse(sv(&["--unit", "warp9"])).unwrap_err().contains("warp9"));
+    assert!(loadgen::cli::parse(sv(&["--op", "sqrt"])).is_err());
+    assert!(loadgen::cli::parse(sv(&["--backend", "pjrt"])).is_err());
+    assert!(loadgen::cli::parse(sv(&["--rates", "5000"])).is_ok());
+
+    // governed scenario: app / ladder / phase validation
+    let e = scenario::cli::parse(sv(&["--app", "video"])).unwrap_err();
+    assert!(e.contains("video"), "{e}");
+    let e = scenario::cli::parse(sv(&["--ladder", "rapid3,warp9"])).unwrap_err();
+    assert!(e.contains("warp9"), "{e}");
+    for bad in ["clean:100:0", "clean:0:100", "noisy:-5:100", "murky:10:100", "clean:10"] {
+        assert!(
+            scenario::cli::parse(sv(&["--phases", bad])).is_err(),
+            "'{bad}' must be rejected"
+        );
+    }
+    assert!(scenario::cli::parse(sv(&["--window", "-3"])).is_err());
+    assert!(scenario::cli::parse(sv(&["--qor-floor", "inf"])).is_err());
+    // a well-formed governed argv parses (nothing is served by parse)
+    let setup = scenario::cli::parse(sv(&[
+        "--app",
+        "harris",
+        "--ladder",
+        "rapid3,rapid10,exact",
+        "--phases",
+        "clean:100:5000,noisy:100:5000",
+        "--window",
+        "25",
+        "--dwell",
+        "2",
+    ]))
+    .expect("well-formed argv parses");
+    assert_eq!(setup.cfg.phases.len(), 2);
+    assert_eq!(setup.ladder_names, vec!["rapid3", "rapid10", "exact"]);
+    assert_eq!(setup.cfg.governor.window, 25);
+}

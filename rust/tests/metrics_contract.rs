@@ -1,0 +1,265 @@
+//! Contract test of [`Metrics::metrics_text`]'s Prometheus text
+//! exposition output (ISSUE 9 satellite): the dashboards the governor
+//! rollout leans on scrape this text, so its *grammar* is pinned here —
+//! not just substring spot-checks:
+//!
+//! * every non-comment line is `name[{labels}] value`, names and label
+//!   keys are valid Prometheus identifiers, values parse (including the
+//!   `+Inf`/`-Inf`/`NaN` specials);
+//! * every sample's metric family declares `# HELP` and `# TYPE` before
+//!   its first sample, and the TYPE is a known one;
+//! * `_total` families are counters and counter families end in `_total`;
+//! * counters are monotone across snapshots with served work in between;
+//! * the family-name set — the scrape contract — is pinned exactly, so a
+//!   renamed gauge fails here instead of silently breaking dashboards.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use rapid::arith::RapidMul;
+use rapid::coordinator::router::{BatchMulFactory, Coordinator, CoordinatorConfig};
+use rapid::coordinator::Metrics;
+
+/// One metric family as read back from the exposition text.
+#[derive(Default)]
+struct Family {
+    help: bool,
+    ty: Option<String>,
+    /// (label part incl. braces or "", raw value token) per sample line.
+    samples: Vec<(String, String)>,
+}
+
+fn is_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().map_or(false, |c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn is_valid_value(s: &str) -> bool {
+    matches!(s, "+Inf" | "-Inf" | "NaN") || s.parse::<f64>().is_ok()
+}
+
+/// Parse an exposition dump into families, enforcing the grammar as we
+/// go: comment syntax, sample-line shape, declare-before-use, label
+/// well-formedness. Panics (failing the test) on any violation.
+fn parse_exposition(text: &str) -> BTreeMap<String, Family> {
+    let mut families: BTreeMap<String, Family> = BTreeMap::new();
+    for line in text.lines() {
+        assert!(!line.trim().is_empty(), "exposition text has no blank lines");
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut it = rest.splitn(3, ' ');
+            let kind = it.next().unwrap_or_default();
+            let name = it.next().unwrap_or_default();
+            let payload = it.next().unwrap_or_default();
+            assert!(is_metric_name(name), "bad family name in comment: {line}");
+            let fam = families.entry(name.to_string()).or_default();
+            match kind {
+                "HELP" => {
+                    assert!(!payload.is_empty(), "HELP without text: {line}");
+                    fam.help = true;
+                }
+                "TYPE" => {
+                    assert!(
+                        matches!(payload, "counter" | "gauge" | "summary" | "histogram"),
+                        "unknown TYPE '{payload}': {line}"
+                    );
+                    assert!(fam.ty.is_none(), "duplicate TYPE for {name}");
+                    fam.ty = Some(payload.to_string());
+                }
+                other => panic!("unknown comment kind '{other}': {line}"),
+            }
+            continue;
+        }
+        // sample line: name[{labels}] value
+        let (name_part, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("sample line without a value: {line}");
+        });
+        assert!(is_valid_value(value), "unparseable value '{value}': {line}");
+        let (base, labels) = match name_part.split_once('{') {
+            Some((b, rest)) => {
+                let labels = rest.strip_suffix('}').unwrap_or_else(|| {
+                    panic!("unterminated label set: {line}");
+                });
+                for pair in labels.split(',') {
+                    let (k, v) = pair
+                        .split_once('=')
+                        .unwrap_or_else(|| panic!("label without '=': {line}"));
+                    assert!(is_metric_name(k), "bad label key '{k}': {line}");
+                    assert!(
+                        v.len() >= 2 && v.starts_with('"') && v.ends_with('"'),
+                        "unquoted label value '{v}': {line}"
+                    );
+                }
+                (b, format!("{{{labels}}}"))
+            }
+            None => (name_part, String::new()),
+        };
+        assert!(is_metric_name(base), "bad metric name '{base}': {line}");
+        // resolve the family: exact, or the summary's _sum/_count children
+        let family = if families.contains_key(base) {
+            base.to_string()
+        } else {
+            let parent = base
+                .strip_suffix("_sum")
+                .or_else(|| base.strip_suffix("_count"))
+                .unwrap_or_else(|| panic!("sample '{base}' has no declared family"));
+            assert!(
+                families.get(parent).is_some_and(|f| f.ty.as_deref() == Some("summary")),
+                "sample '{base}' has no declared family (and '{parent}' is not a summary)"
+            );
+            parent.to_string()
+        };
+        let fam = families.get_mut(&family).unwrap();
+        assert!(fam.help, "sample before # HELP: {line}");
+        assert!(fam.ty.is_some(), "sample before # TYPE: {line}");
+        fam.samples.push((labels, value.to_string()));
+    }
+    families
+}
+
+fn served_coordinator() -> Coordinator {
+    let c = Coordinator::start(
+        Arc::new(BatchMulFactory { unit: Arc::new(RapidMul::new(16, 10)) }),
+        CoordinatorConfig {
+            batch_capacity: 64,
+            max_wait: Duration::from_micros(50),
+            workers: 2,
+            queue_depth: 64,
+            shards: 2,
+        },
+    );
+    for k in 0..20i64 {
+        let a: Vec<i64> = (0..33).map(|i| (k * 33 + i) & 0xffff).collect();
+        let b: Vec<i64> = (0..33).map(|i| (k * 7 + i * 3) & 0xffff).collect();
+        c.call(a, b);
+    }
+    c
+}
+
+/// The whole dump obeys the exposition grammar, every family is typed
+/// and documented, and counter naming is bidirectionally consistent.
+#[test]
+fn exposition_grammar_holds_on_a_served_coordinator() {
+    let c = served_coordinator();
+    let text = c.metrics.metrics_text();
+    let families = parse_exposition(&text);
+    assert!(!families.is_empty());
+    for (name, fam) in &families {
+        assert!(fam.help, "{name}: missing HELP");
+        let ty = fam.ty.as_deref().expect("TYPE checked during parse");
+        assert!(!fam.samples.is_empty(), "{name}: family declared but no samples");
+        if name.ends_with("_total") {
+            assert_eq!(ty, "counter", "{name}: _total families must be counters");
+        }
+        if ty == "counter" {
+            assert!(name.ends_with("_total"), "{name}: counters must end in _total");
+            for (labels, v) in &fam.samples {
+                let n: f64 = v.parse().unwrap_or_else(|_| panic!("{name}{labels}: non-numeric counter {v}"));
+                assert!(n >= 0.0 && n.fract() == 0.0, "{name}{labels}: counter value {v}");
+            }
+        }
+    }
+    // the summary's quantile series exist and are ordered
+    let lat = &families["rapid_latency_ns"];
+    let q = |want: &str| -> f64 {
+        lat.samples
+            .iter()
+            .find(|(l, _)| l == &format!("{{quantile=\"{want}\"}}"))
+            .unwrap_or_else(|| panic!("missing quantile {want}"))
+            .1
+            .parse()
+            .unwrap()
+    };
+    assert!(q("0.5") <= q("0.99") && q("0.99") <= q("0.999"), "quantiles out of order");
+    assert!(
+        lat.samples.iter().any(|(l, _)| l.is_empty()),
+        "summary _sum/_count series missing"
+    );
+}
+
+/// The family-name set is the scrape contract: renaming or dropping a
+/// metric fails here by name.
+#[test]
+fn family_names_are_pinned() {
+    let families = parse_exposition(&Metrics::with_shards(3).metrics_text());
+    let names: Vec<&str> = families.keys().map(|s| s.as_str()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "rapid_batch_queue_depth",
+            "rapid_batch_service_ewma_ns",
+            "rapid_batches_total",
+            "rapid_elements_total",
+            "rapid_governor_rung",
+            "rapid_governor_switches_total",
+            "rapid_governor_window_qor",
+            "rapid_governor_windows_total",
+            "rapid_ingress_queue_depth",
+            "rapid_latency_ns",
+            "rapid_padded_elements_total",
+            "rapid_rejected_total",
+            "rapid_requests_total",
+            "rapid_shed_total",
+        ],
+        "the exported family set changed — update dashboards AND this pin together"
+    );
+    // one ingress-depth series per shard, keyed by the shard label
+    let ingress = &families["rapid_ingress_queue_depth"];
+    assert_eq!(ingress.samples.len(), 3);
+    for (i, (labels, _)) in ingress.samples.iter().enumerate() {
+        assert_eq!(labels, &format!("{{shard=\"{i}\"}}"));
+    }
+}
+
+/// Counters only ever grow: snapshot, serve more, snapshot again.
+#[test]
+fn counters_are_monotone_across_snapshots() {
+    let c = served_coordinator();
+    let before = parse_exposition(&c.metrics.metrics_text());
+    for k in 0..10i64 {
+        let a: Vec<i64> = (0..17).map(|i| (k + i) & 0xffff).collect();
+        c.call(a.clone(), a);
+    }
+    let after = parse_exposition(&c.metrics.metrics_text());
+    for (name, fam) in &before {
+        if fam.ty.as_deref() != Some("counter") {
+            continue;
+        }
+        for (labels, v0) in &fam.samples {
+            let v0: u64 = v0.parse().unwrap();
+            let v1: u64 = after[name]
+                .samples
+                .iter()
+                .find(|(l, _)| l == labels)
+                .unwrap_or_else(|| panic!("{name}{labels} vanished"))
+                .1
+                .parse()
+                .unwrap();
+            assert!(v1 >= v0, "{name}{labels} went backwards: {v0} -> {v1}");
+        }
+    }
+    let req = |f: &BTreeMap<String, Family>| -> u64 {
+        f["rapid_requests_total"].samples[0].1.parse().unwrap()
+    };
+    assert_eq!(req(&after), req(&before) + 10, "served work must show up");
+}
+
+/// Non-finite governor QoR renders as the Prometheus `+Inf`/`-Inf`/`NaN`
+/// tokens and still satisfies the grammar (a clean window's PSNR is
+/// literally infinite).
+#[test]
+fn non_finite_gauge_values_render_as_prom_tokens() {
+    let m = Metrics::new();
+    for (qor, want) in [
+        (f64::INFINITY, "rapid_governor_window_qor +Inf"),
+        (f64::NEG_INFINITY, "rapid_governor_window_qor -Inf"),
+        (f64::NAN, "rapid_governor_window_qor NaN"),
+        (42.5, "rapid_governor_window_qor 42.5"),
+    ] {
+        m.record_governor_window(qor);
+        let text = m.metrics_text();
+        assert!(text.contains(want), "wanted '{want}' in:\n{text}");
+        parse_exposition(&text); // still grammatical
+    }
+}
