@@ -49,6 +49,13 @@ fn ladder(
             format!("{:.1}µs", rep.p50_ns as f64 / 1e3),
             format!("{:.1}µs", rep.p99_ns as f64 / 1e3),
             format!("{:.1}µs", rep.p999_ns as f64 / 1e3),
+            // where the p99 went: ingress queue / batch formation / execution
+            format!(
+                "{:.1}/{:.1}/{:.1}µs",
+                rep.phases.queue_p99_ns as f64 / 1e3,
+                rep.phases.batch_form_p99_ns as f64 / 1e3,
+                rep.phases.execute_p99_ns as f64 / 1e3
+            ),
             format!("{}/{} (+{} shed, {} rej)", rep.completed, rep.requests, rep.shed, rep.rejected),
         ]);
         reports.push(rep);
@@ -59,7 +66,7 @@ fn ladder(
 fn main() {
     let mut t = Table::new(
         "§Serve — open-loop load ladder (sharded functional path, 4 lanes × 1 worker)",
-        &["workload", "achieved", "elem/s", "p50", "p99", "p999", "done/offered"],
+        &["workload", "achieved", "elem/s", "p50", "p99", "p999", "phase p99 q/f/x", "done/offered"],
     );
 
     // the committed ladder: low rung (well under saturation, latency

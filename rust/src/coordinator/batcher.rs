@@ -32,6 +32,9 @@ pub struct Batch {
     /// Accuracy-ladder rung every lane of this batch is served at
     /// (0 when no governor is attached).
     pub rung: u32,
+    /// When the first lane entered this batch — the start of its
+    /// formation window (trace spans + batch-form latency attribution).
+    pub opened_at: Instant,
 }
 
 /// Accumulates requests into fixed-size batches.
@@ -119,8 +122,8 @@ impl DynamicBatcher {
         a.resize(self.capacity, 0);
         b.resize(self.capacity, 0);
         let spans = std::mem::take(&mut self.spans);
-        self.opened_at = None;
-        Some(Batch { a, b, spans, used, rung: self.cur_rung })
+        let opened_at = self.opened_at.take().unwrap_or_else(Instant::now);
+        Some(Batch { a, b, spans, used, rung: self.cur_rung, opened_at })
     }
 
     /// True when the open batch has waited past the deadline.

@@ -22,6 +22,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::arith::registry::{make_div, make_mul};
+use crate::obs::trace;
 use crate::runtime::{ArtifactStore, Runtime};
 use crate::util::cli::Args;
 
@@ -96,7 +97,7 @@ pub fn run(argv: Vec<String>) {
         argv,
         &[
             "artifacts", "artifact", "batch", "workers", "shards", "requests", "req-len",
-            "backend", "unit", "width", "op", "deadline-us",
+            "backend", "unit", "width", "op", "deadline-us", "trace", "clock",
         ],
     );
     let dir = args.get_or("artifacts", "artifacts");
@@ -112,6 +113,15 @@ pub fn run(argv: Vec<String>) {
     // optional per-request deadline for admission control (0 = none)
     let deadline_us = args.get_u64("deadline-us", 0);
     let deadline = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
+    // optional structured span trace (--trace FILE, --clock monotonic|logical)
+    let trace_path = args.get("trace").map(String::from);
+    let clock = match args.get("clock") {
+        None => trace::Clock::Monotonic,
+        Some(c) => trace::Clock::parse(c).unwrap_or_else(|| {
+            eprintln!("serve: --clock '{c}' is not 'monotonic' or 'logical'");
+            std::process::exit(1);
+        }),
+    };
     // Registry divider names differ from multiplier names (rapid9 vs
     // rapid10) — the default unit must follow the op.
     let unit_name = args.get_or("unit", if op == "div" { "rapid9" } else { "rapid10" });
@@ -177,6 +187,9 @@ pub fn run(argv: Vec<String>) {
         queue_depth: 128,
         shards,
     };
+    if trace_path.is_some() {
+        trace::enable(clock);
+    }
     let coord = Coordinator::start(exec, cfg);
 
     // synthetic client load: uniform random operands in the unit's domain
@@ -204,4 +217,15 @@ pub fn run(argv: Vec<String>) {
     println!("metrics: {}", coord.metrics.summary());
     // the /metrics-endpoint view of the same counters
     print!("{}", coord.metrics.metrics_text());
+    if let Some(path) = &trace_path {
+        // drop joins the workers first so every in-flight span has landed
+        drop(coord);
+        trace::disable();
+        let cap = trace::take();
+        if let Err(e) = std::fs::write(path, crate::obs::chrome::to_chrome_json(&cap.events)) {
+            eprintln!("serve: could not write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("trace -> {path} (inspect with `rapid trace-report --in {path}`)");
+    }
 }

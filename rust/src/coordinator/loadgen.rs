@@ -22,8 +22,10 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::metrics::PhaseBreakdown;
 use super::router::{Coordinator, CoordinatorConfig, ExecutorFactory, SubmitError};
 use crate::bench_support::record::Recorder;
+use crate::obs::trace::{self, SpanEvent};
 use crate::util::timer::BenchResult;
 use crate::util::XorShift256;
 
@@ -102,9 +104,16 @@ pub struct RungReport {
     pub p999_ns: u64,
     /// Mean span latency (ns).
     pub mean_ns: f64,
+    /// Where the latency went: per-phase p50/p99 from the coordinator's
+    /// bucketed `rapid_phase_ns` histograms (merged across shards).
+    pub phases: PhaseBreakdown,
     /// *Order-independent digest of every completed response, keyed by
     /// request index — the bit-identity handle of the whole rung.
     pub checksum: u64,
+    /// Trace spans captured during this rung (empty unless the recorder
+    /// was enabled before the run — `serve-bench --trace`). Deterministic
+    /// under [`trace::Clock::Logical`] with no deadline/backpressure.
+    pub spans: Vec<SpanEvent>,
 }
 
 /// The seeded arrival schedule of one rung: `rate · duration` offsets
@@ -159,6 +168,9 @@ pub fn run_rung(
     cfg: &LoadgenConfig,
     rung: usize,
 ) -> RungReport {
+    // sampled once up front: a recorder enabled mid-run (another thread)
+    // must not leak a partial capture into this rung's report
+    let tracing = trace::enabled();
     let rate = cfg.rates[rung];
     let arrivals = schedule(rate, cfg.duration, cfg.seed, rung as u64);
     let coord = Coordinator::start(factory.clone(), coord_cfg.clone());
@@ -226,7 +238,7 @@ pub fn run_rung(
     let (checksum, completed, elements) = collector.join().expect("collector");
     let wall_ns = t0.elapsed().as_nanos() as u64;
     let m = &coord.metrics;
-    let report = RungReport {
+    let mut report = RungReport {
         offered_rps: rate,
         requests: arrivals.len() as u64,
         admitted,
@@ -241,9 +253,16 @@ pub fn run_rung(
         p99_ns: m.p99_ns(),
         p999_ns: m.p999_ns(),
         mean_ns: m.mean_latency_ns(),
+        phases: m.phase_breakdown(),
         checksum,
+        spans: Vec::new(),
     };
+    // drop first: the coordinator joins its threads, so every in-flight
+    // span has landed in a ring before the drain
     drop(coord);
+    if tracing {
+        report.spans = trace::take().events;
+    }
     report
 }
 
@@ -277,16 +296,24 @@ pub fn to_recorder(reports: &[RungReport]) -> Recorder {
         rec.add(&format!("{base}_p50"), &one(&base, r.p50_ns as f64), 1.0);
         rec.add(&format!("{base}_p99"), &one(&base, r.p99_ns as f64), 1.0);
         rec.add(&format!("{base}_p999"), &one(&base, r.p999_ns as f64), 1.0);
+        rec.add(&format!("{base}_queue_p50"), &one(&base, r.phases.queue_p50_ns as f64), 1.0);
+        rec.add(&format!("{base}_queue_p99"), &one(&base, r.phases.queue_p99_ns as f64), 1.0);
+        rec.add(&format!("{base}_batch_form_p50"), &one(&base, r.phases.batch_form_p50_ns as f64), 1.0);
+        rec.add(&format!("{base}_batch_form_p99"), &one(&base, r.phases.batch_form_p99_ns as f64), 1.0);
+        rec.add(&format!("{base}_execute_p50"), &one(&base, r.phases.execute_p50_ns as f64), 1.0);
+        rec.add(&format!("{base}_execute_p99"), &one(&base, r.phases.execute_p99_ns as f64), 1.0);
     }
     rec
 }
 
-/// One human-readable table line per rung.
+/// One human-readable table line per rung, with the p99 phase breakdown
+/// (where the tail went: queue wait / batch formation / execution).
 pub fn format_report(r: &RungReport) -> String {
     format!(
         "offered {:>9} req/s | achieved {:>9.0} req/s {:>12.0} elem/s | \
          completed {:>7}/{:<7} shed {:>6} rejected {:>6} | \
-         p50 {:>8.1}µs p99 {:>8.1}µs p999 {:>8.1}µs | checksum {:016x}",
+         p50 {:>8.1}µs p99 {:>8.1}µs p999 {:>8.1}µs | \
+         p99 queue {:>7.1}µs form {:>7.1}µs exec {:>7.1}µs | checksum {:016x}",
         r.offered_rps,
         r.achieved_rps,
         r.achieved_eps,
@@ -297,6 +324,9 @@ pub fn format_report(r: &RungReport) -> String {
         r.p50_ns as f64 / 1e3,
         r.p99_ns as f64 / 1e3,
         r.p999_ns as f64 / 1e3,
+        r.phases.queue_p99_ns as f64 / 1e3,
+        r.phases.batch_form_p99_ns as f64 / 1e3,
+        r.phases.execute_p99_ns as f64 / 1e3,
         r.checksum,
     )
 }
@@ -349,6 +379,11 @@ pub mod cli {
         pub coord: CoordinatorConfig,
         /// Output JSON path.
         pub out: String,
+        /// Chrome-trace output path (`--trace FILE`); None = no tracing.
+        pub trace: Option<String>,
+        /// Recorder clock (`--clock monotonic|logical`, default
+        /// monotonic). Logical traces are bit-replayable (no deadline).
+        pub clock: trace::Clock,
     }
 
     /// Validate a serve-bench argv. Pure (nothing served, no I/O): every
@@ -361,6 +396,7 @@ pub mod cli {
             &[
                 "backend", "unit", "op", "width", "rates", "duration-ms", "req-len", "seed",
                 "batch", "workers", "shards", "queue-depth", "max-wait-us", "deadline-us", "out",
+                "trace", "clock",
             ],
         );
         let backend = args.get_or("backend", "functional");
@@ -407,6 +443,11 @@ pub mod cli {
         if deadline_us > 0 {
             cfg.deadline = Some(Duration::from_micros(deadline_us));
         }
+        let clock = match args.get("clock") {
+            None => trace::Clock::Monotonic,
+            Some(c) => trace::Clock::parse(c)
+                .ok_or_else(|| format!("--clock: '{c}' is not 'monotonic' or 'logical'"))?,
+        };
         Ok(ServeBenchSetup {
             op,
             unit,
@@ -420,6 +461,8 @@ pub mod cli {
                 shards: args.try_usize("shards", 4)?.max(1),
             },
             out: args.get_or("out", "BENCH_serve.json").to_string(),
+            trace: args.get("trace").map(String::from),
+            clock,
         })
     }
 
@@ -448,11 +491,27 @@ pub mod cli {
             setup.coord.batch_capacity,
             if deadline_us > 0 { format!("{deadline_us}µs") } else { "none".into() },
         );
+        if setup.trace.is_some() {
+            trace::enable(setup.clock);
+        }
         let mut reports = Vec::new();
         for r in 0..setup.cfg.rates.len() {
             let rep = run_rung(&factory, &setup.coord, &setup.cfg, r);
             println!("{}", format_report(&rep));
             reports.push(rep);
+        }
+        if let Some(path) = &setup.trace {
+            trace::disable();
+            let labels: Vec<String> =
+                reports.iter().map(|r| format!("offered_{}rps", r.offered_rps)).collect();
+            let sections: Vec<(&str, &[SpanEvent])> = labels
+                .iter()
+                .map(|l| l.as_str())
+                .zip(reports.iter().map(|r| r.spans.as_slice()))
+                .collect();
+            std::fs::write(path, crate::obs::chrome::to_chrome_json_sections(&sections))
+                .map_err(|e| format!("could not write {path}: {e}"))?;
+            println!("trace -> {path} (inspect with `rapid trace-report --in {path}`)");
         }
         to_recorder(&reports)
             .write(&setup.out)
@@ -580,6 +639,12 @@ mod tests {
         assert_eq!(setup.cfg.rates, vec![10000, 50000, 200000]);
         let setup = cli::parse(sv(&["--op", "div", "--rates", "5000"])).unwrap();
         assert_eq!(setup.unit, "rapid9", "default unit follows the op");
+        assert_eq!(setup.trace, None);
+        assert_eq!(setup.clock, trace::Clock::Monotonic);
+        let setup =
+            cli::parse(sv(&["--trace", "t.json", "--clock", "logical"])).expect("trace flags parse");
+        assert_eq!(setup.trace.as_deref(), Some("t.json"));
+        assert_eq!(setup.clock, trace::Clock::Logical);
         for bad in [
             vec!["--rates", "0"],
             vec!["--rates", "-100"],
@@ -592,6 +657,7 @@ mod tests {
             vec!["--width", "-16"],
             vec!["--duration-ms", "0"],
             vec!["--workers", "two"],
+            vec!["--clock", "wall"],
         ] {
             let owned = sv(&bad);
             assert!(cli::parse(owned.clone()).is_err(), "{owned:?} must be rejected");
@@ -615,13 +681,19 @@ mod tests {
             p99_ns: 16384,
             p999_ns: 32768,
             mean_ns: 5000.0,
+            phases: PhaseBreakdown { queue_p99_ns: 8192, ..PhaseBreakdown::default() },
             checksum: 0xabcd,
+            spans: Vec::new(),
         };
-        let j = to_recorder(&[rep]).to_json();
+        let j = to_recorder(&[rep.clone()]).to_json();
         assert!(j.contains("\"bench\": \"serve\""), "{j}");
         assert!(j.contains("offered_50000rps_throughput"), "{j}");
         // ns_per_item of the throughput row = wall / elements = 2000 ns
         assert!(j.contains("\"ns_per_item\": 2000.000"), "{j}");
         assert!(j.contains("offered_50000rps_p999"), "{j}");
+        assert!(j.contains("offered_50000rps_queue_p99"), "{j}");
+        assert!(j.contains("offered_50000rps_execute_p50"), "{j}");
+        // the phase breakdown rides the human-readable line too
+        assert!(format_report(&rep).contains("p99 queue"), "{}", format_report(&rep));
     }
 }

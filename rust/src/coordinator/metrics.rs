@@ -1,15 +1,124 @@
 //! Lock-light metrics shared by the coordinator's threads: request /
-//! element counters, latency histogram, queue depth gauges (per-shard
-//! ingress + the dispatch channel), the deadline-shed counter and an EWMA
-//! of batch service time (the admission controller's drain estimate).
-//! [`Metrics::metrics_text`] dumps everything in the Prometheus text
-//! exposition format for scraping / the serve CLI.
+//! element counters, the end-to-end latency histogram plus true bucketed
+//! per-phase histograms (`queue` / `batch_form` / `execute`, per shard),
+//! queue depth gauges (per-shard ingress + the dispatch channel),
+//! admission-refusal counters split by reason (`deadline` sheds vs
+//! `queue_full` backpressure) and an EWMA of batch service time (the
+//! admission controller's drain estimate). [`Metrics::metrics_text`]
+//! dumps everything in the Prometheus text exposition format for
+//! scraping / the serve CLI.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Fixed log2 latency histogram (ns buckets from 1µs to ~4s).
 const BUCKETS: usize = 24;
+
+/// Histogram bucket of a nanosecond latency: bucket `i` holds
+/// `[2^(10+i), 2^(11+i))` ns, with everything below 1µs clamped into
+/// bucket 0 and everything from `2^33` ns (~8.6s) up in the last.
+fn bucket_of(ns: u64) -> usize {
+    (63 - (ns.max(1024)).leading_zeros() as usize - 10).min(BUCKETS - 1)
+}
+
+/// Upper bound of histogram bucket `i` in ns — the value every
+/// percentile read quantizes up to.
+fn bucket_upper_ns(i: usize) -> u64 {
+    1u64 << (i + 11)
+}
+
+/// Bucket-upper-bound percentile over one merged histogram: the bound
+/// of the first bucket whose cumulative count reaches `ceil(total·p)`;
+/// 0 when the histogram is empty (see
+/// [`Metrics::latency_percentile_ns`] for the full contract).
+fn hist_percentile_ns(counts: &[u64; BUCKETS], p: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (total as f64 * p).ceil() as u64;
+    let mut acc = 0;
+    for (i, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return bucket_upper_ns(i);
+        }
+    }
+    bucket_upper_ns(BUCKETS - 1)
+}
+
+/// The request lifecycle phases with a bucketed serving histogram.
+/// Their spans partition submit→reply exactly (each boundary instant is
+/// measured once and shared), so per-phase sums reconcile with the
+/// end-to-end `rapid_latency_ns` summary exactly on `_sum` and within
+/// one bucket on quantiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServePhase {
+    /// Enqueue to leader dequeue (ingress queue wait).
+    Queue,
+    /// Leader dequeue to batch dispatch (batch formation wait).
+    BatchForm,
+    /// Batch dispatch to reply ready (worker queue + execution).
+    Execute,
+}
+
+impl ServePhase {
+    /// All phases, exposition order.
+    pub const ALL: [ServePhase; 3] = [ServePhase::Queue, ServePhase::BatchForm, ServePhase::Execute];
+
+    /// The `phase` label value in `rapid_phase_ns`.
+    pub fn label(self) -> &'static str {
+        match self {
+            ServePhase::Queue => "queue",
+            ServePhase::BatchForm => "batch_form",
+            ServePhase::Execute => "execute",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            ServePhase::Queue => 0,
+            ServePhase::BatchForm => 1,
+            ServePhase::Execute => 2,
+        }
+    }
+}
+
+/// One phase × shard latency histogram (same bucket layout as the
+/// end-to-end histogram, plus an exact sum for `_sum`).
+#[derive(Default)]
+struct PhaseHist {
+    hist: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl PhaseHist {
+    fn record(&self, ns: u64) {
+        self.hist[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Quantized per-phase latency snapshot (histogram upper bounds, summed
+/// across shards) — the phase-attribution row benches and reports print
+/// next to the end-to-end percentiles.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseBreakdown {
+    /// Queue-wait median, ns.
+    pub queue_p50_ns: u64,
+    /// Queue-wait 99th percentile, ns.
+    pub queue_p99_ns: u64,
+    /// Batch-formation median, ns.
+    pub batch_form_p50_ns: u64,
+    /// Batch-formation 99th percentile, ns.
+    pub batch_form_p99_ns: u64,
+    /// Execute median, ns.
+    pub execute_p50_ns: u64,
+    /// Execute 99th percentile, ns.
+    pub execute_p99_ns: u64,
+}
 
 /// Render an f64 sample value in the Prometheus text exposition format:
 /// finite values print plainly, non-finite map to `+Inf`/`-Inf`/`NaN`
@@ -42,9 +151,18 @@ pub struct Metrics {
     /// Requests shed by deadline admission control (the enqueue-time
     /// estimate said the deadline could not be met given queue depth).
     pub shed: AtomicU64,
+    /// Per-shard deadline sheds (`rapid_shed_reason_total{reason="deadline"}`;
+    /// sums to `shed`).
+    shed_deadline: Vec<AtomicU64>,
+    /// Per-shard backpressure rejections
+    /// (`rapid_shed_reason_total{reason="queue_full"}`; sums to `rejected`).
+    shed_queue_full: Vec<AtomicU64>,
     /// Per-shard ingress queue depth gauges (requests currently enqueued
     /// and not yet picked up by the shard's batching loop).
     ingress_depth: Vec<AtomicU64>,
+    /// Per-shard [queue, batch_form, execute] phase histograms
+    /// (`rapid_phase_ns`), indexed by [`ServePhase::index`].
+    phase_hists: Vec<[PhaseHist; 3]>,
     /// Batches currently sitting in dispatch channels awaiting a worker.
     batch_queue_depth: AtomicU64,
     /// EWMA of worker batch execution time in ns (0 until the first batch
@@ -72,10 +190,15 @@ impl Metrics {
         Self::with_shards(1)
     }
 
-    /// All-zero metrics with one ingress queue depth gauge per shard.
+    /// All-zero metrics with one ingress queue depth gauge, one phase
+    /// histogram triple and one shed-reason counter pair per shard.
     pub fn with_shards(shards: usize) -> Self {
+        let n = shards.max(1);
         Metrics {
-            ingress_depth: (0..shards.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            ingress_depth: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            shed_deadline: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            shed_queue_full: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            phase_hists: (0..n).map(|_| <[PhaseHist; 3]>::default()).collect(),
             ..Metrics::default()
         }
     }
@@ -102,18 +225,36 @@ impl Metrics {
         let ns = d.as_nanos() as u64;
         self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.lat_count.fetch_add(1, Ordering::Relaxed);
-        let bucket = (63 - (ns.max(1024)).leading_zeros() as usize - 10).min(BUCKETS - 1);
-        self.hist[bucket].fetch_add(1, Ordering::Relaxed);
+        self.hist[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Count one backpressure rejection.
-    pub fn record_rejected(&self) {
+    /// Record one request's time in `phase` on `shard` (out-of-range
+    /// shards clamp to the last, so reason/phase sums stay exact).
+    pub fn record_phase(&self, phase: ServePhase, shard: usize, d: Duration) {
+        if let Some(h) = self.phase_hists.get(shard).or(self.phase_hists.last()) {
+            h[phase.index()].record(d.as_nanos() as u64);
+        }
+    }
+
+    fn bump_shard(counters: &[AtomicU64], shard: usize) {
+        if let Some(c) = counters.get(shard).or(counters.last()) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one backpressure rejection on `shard` (`reason="queue_full"`;
+    /// out-of-range shards clamp to the last so the per-reason sum always
+    /// equals the aggregate).
+    pub fn record_rejected(&self, shard: usize) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+        Self::bump_shard(&self.shed_queue_full, shard);
     }
 
-    /// Count one deadline-shed request (admission control said no).
-    pub fn record_shed(&self) {
+    /// Count one deadline-shed request on `shard` (admission control said
+    /// no; `reason="deadline"`, same clamping as [`Self::record_rejected`]).
+    pub fn record_shed(&self, shard: usize) {
         self.shed.fetch_add(1, Ordering::Relaxed);
+        Self::bump_shard(&self.shed_deadline, shard);
     }
 
     /// A request entered shard `s`'s ingress queue.
@@ -210,22 +351,57 @@ impl Metrics {
         f64::from_bits(self.governor_window_qor_bits.load(Ordering::Relaxed))
     }
 
-    /// Approximate latency percentile from the histogram (upper bound of
-    /// the containing bucket).
+    /// Approximate latency percentile from the log2 histogram.
+    ///
+    /// Contract (pinned by `latency_percentile_pins_edge_cases`):
+    ///
+    /// * **Empty histogram → 0.** Before any reply every percentile reads
+    ///   0, never a phantom bucket bound.
+    /// * **Bucket-upper-bound quantization.** The return value is the
+    ///   *upper* bound `2^(i+11)` of the first bucket whose cumulative
+    ///   count reaches `ceil(total·p)`; bucket `i` holds
+    ///   `[2^(10+i), 2^(11+i))` ns. A sample is therefore reported at up
+    ///   to 2× its true value (e.g. both 2048ns and 4095ns read 4096),
+    ///   and sub-µs samples clamp into bucket 0 and read 2048.
+    /// * **Monotone in `p`** — cumulative counts only grow.
+    /// * The last bucket is unbounded above, so its reported "upper
+    ///   bound" `2^34` ns (~17s) is a floor, not a bound, for samples
+    ///   ≥ `2^33` ns.
     pub fn latency_percentile_ns(&self, p: f64) -> u64 {
-        let total: u64 = self.hist.iter().map(|h| h.load(Ordering::Relaxed)).sum();
-        if total == 0 {
-            return 0;
+        hist_percentile_ns(&self.snapshot_hist(&self.hist), p)
+    }
+
+    fn snapshot_hist(&self, hist: &[AtomicU64; BUCKETS]) -> [u64; BUCKETS] {
+        let mut out = [0u64; BUCKETS];
+        for (o, h) in out.iter_mut().zip(hist.iter()) {
+            *o = h.load(Ordering::Relaxed);
         }
-        let target = (total as f64 * p).ceil() as u64;
-        let mut acc = 0;
-        for (i, h) in self.hist.iter().enumerate() {
-            acc += h.load(Ordering::Relaxed);
-            if acc >= target {
-                return 1u64 << (i + 10 + 1);
+        out
+    }
+
+    /// `phase` latency percentile, merged across shards (same
+    /// quantization contract as [`Self::latency_percentile_ns`]).
+    pub fn phase_percentile_ns(&self, phase: ServePhase, p: f64) -> u64 {
+        let mut merged = [0u64; BUCKETS];
+        for shard in &self.phase_hists {
+            let snap = self.snapshot_hist(&shard[phase.index()].hist);
+            for (m, v) in merged.iter_mut().zip(snap.iter()) {
+                *m += v;
             }
         }
-        1u64 << (BUCKETS + 10)
+        hist_percentile_ns(&merged, p)
+    }
+
+    /// Cross-shard p50/p99 of every serving phase in one snapshot.
+    pub fn phase_breakdown(&self) -> PhaseBreakdown {
+        PhaseBreakdown {
+            queue_p50_ns: self.phase_percentile_ns(ServePhase::Queue, 0.5),
+            queue_p99_ns: self.phase_percentile_ns(ServePhase::Queue, 0.99),
+            batch_form_p50_ns: self.phase_percentile_ns(ServePhase::BatchForm, 0.5),
+            batch_form_p99_ns: self.phase_percentile_ns(ServePhase::BatchForm, 0.99),
+            execute_p50_ns: self.phase_percentile_ns(ServePhase::Execute, 0.5),
+            execute_p99_ns: self.phase_percentile_ns(ServePhase::Execute, 0.99),
+        }
     }
 
     /// Median span latency in ns (histogram upper bound).
@@ -288,6 +464,16 @@ impl Metrics {
         counter(&mut s, "rapid_padded_elements_total", "Zero-padding elements in short batches.", self.padded_elements.load(Ordering::Relaxed));
         counter(&mut s, "rapid_rejected_total", "Requests rejected by backpressure.", self.rejected.load(Ordering::Relaxed));
         counter(&mut s, "rapid_shed_total", "Requests shed by deadline admission control.", self.shed.load(Ordering::Relaxed));
+        s.push_str("# HELP rapid_shed_reason_total Requests refused at admission, by reason and shard (deadline sheds + queue_full backpressure).\n");
+        s.push_str("# TYPE rapid_shed_reason_total counter\n");
+        for (reason, counters) in [("deadline", &self.shed_deadline), ("queue_full", &self.shed_queue_full)] {
+            for (i, c) in counters.iter().enumerate() {
+                s.push_str(&format!(
+                    "rapid_shed_reason_total{{reason=\"{reason}\",shard=\"{i}\"}} {}\n",
+                    c.load(Ordering::Relaxed)
+                ));
+            }
+        }
         s.push_str("# HELP rapid_ingress_queue_depth Requests waiting in a shard's ingress queue.\n");
         s.push_str("# TYPE rapid_ingress_queue_depth gauge\n");
         for (i, g) in self.ingress_depth.iter().enumerate() {
@@ -320,6 +506,28 @@ impl Metrics {
         s.push_str("# HELP rapid_governor_window_qor Last decision window's QoR observation (higher is better).\n");
         s.push_str("# TYPE rapid_governor_window_qor gauge\n");
         s.push_str(&format!("rapid_governor_window_qor {}\n", prom_f64(self.governor_window_qor())));
+        s.push_str("# HELP rapid_phase_ns Per-phase request latency (ns): ingress queue wait, batch formation, execution.\n");
+        s.push_str("# TYPE rapid_phase_ns histogram\n");
+        for phase in ServePhase::ALL {
+            for (i, shard) in self.phase_hists.iter().enumerate() {
+                let h = &shard[phase.index()];
+                let labels = format!("phase=\"{}\",shard=\"{i}\"", phase.label());
+                let mut acc = 0u64;
+                // finite `le` bounds stop one short of the last bucket:
+                // it is unbounded above, so it folds into +Inf
+                for (b, c) in h.hist.iter().enumerate().take(BUCKETS - 1) {
+                    acc += c.load(Ordering::Relaxed);
+                    s.push_str(&format!(
+                        "rapid_phase_ns_bucket{{{labels},le=\"{}\"}} {acc}\n",
+                        bucket_upper_ns(b)
+                    ));
+                }
+                let count = h.count.load(Ordering::Relaxed);
+                s.push_str(&format!("rapid_phase_ns_bucket{{{labels},le=\"+Inf\"}} {count}\n"));
+                s.push_str(&format!("rapid_phase_ns_sum{{{labels}}} {}\n", h.sum_ns.load(Ordering::Relaxed)));
+                s.push_str(&format!("rapid_phase_ns_count{{{labels}}} {count}\n"));
+            }
+        }
         s.push_str("# HELP rapid_latency_ns Span submit-to-reply latency (ns).\n");
         s.push_str("# TYPE rapid_latency_ns summary\n");
         s.push_str(&format!("rapid_latency_ns{{quantile=\"0.5\"}} {}\n", self.p50_ns()));
@@ -419,7 +627,7 @@ mod tests {
     fn metrics_text_is_prometheus_shaped() {
         let m = Metrics::with_shards(2);
         m.record_request(10);
-        m.record_shed();
+        m.record_shed(0);
         m.ingress_enqueued(1);
         m.record_latency(Duration::from_micros(50));
         let t = m.metrics_text();
@@ -434,5 +642,74 @@ mod tests {
         for line in t.lines().filter(|l| !l.starts_with('#')) {
             assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
         }
+    }
+
+    #[test]
+    fn latency_percentile_pins_edge_cases() {
+        // empty histogram: every percentile is 0, not a bucket bound
+        let m = Metrics::new();
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(m.latency_percentile_ns(p), 0);
+        }
+        // sub-µs samples clamp into bucket 0 and read its upper bound
+        m.record_latency(Duration::from_nanos(1));
+        assert_eq!(m.latency_percentile_ns(1.0), 2048);
+        // a sample exactly on a bucket's lower bound reads the upper
+        // bound of that bucket: 2048 lands in [2048, 4096) → 4096
+        let m = Metrics::new();
+        m.record_latency(Duration::from_nanos(2048));
+        assert_eq!(m.latency_percentile_ns(0.5), 4096);
+        // ... as does the value just below the upper bound
+        let m = Metrics::new();
+        m.record_latency(Duration::from_nanos(4095));
+        assert_eq!(m.latency_percentile_ns(0.5), 4096);
+        // the last bucket is unbounded above; anything ≥ 2^33 reads 2^34
+        let m = Metrics::new();
+        m.record_latency(Duration::from_nanos(1 << 33));
+        m.record_latency(Duration::from_secs(3600));
+        assert_eq!(m.latency_percentile_ns(1.0), 1 << 34);
+    }
+
+    #[test]
+    fn shed_reasons_reconcile_with_aggregates() {
+        let m = Metrics::with_shards(2);
+        m.record_shed(0);
+        m.record_shed(0);
+        m.record_shed(1);
+        m.record_rejected(1);
+        // out-of-range shard clamps to the last, keeping sums exact
+        m.record_rejected(7);
+        assert_eq!(m.shed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 2);
+        let t = m.metrics_text();
+        assert!(t.contains("# TYPE rapid_shed_reason_total counter"), "{t}");
+        assert!(t.contains("rapid_shed_reason_total{reason=\"deadline\",shard=\"0\"} 2"), "{t}");
+        assert!(t.contains("rapid_shed_reason_total{reason=\"deadline\",shard=\"1\"} 1"), "{t}");
+        assert!(t.contains("rapid_shed_reason_total{reason=\"queue_full\",shard=\"0\"} 0"), "{t}");
+        assert!(t.contains("rapid_shed_reason_total{reason=\"queue_full\",shard=\"1\"} 2"), "{t}");
+    }
+
+    #[test]
+    fn phase_histogram_merges_shards_and_exposes_buckets() {
+        let m = Metrics::with_shards(2);
+        m.record_phase(ServePhase::Queue, 0, Duration::from_nanos(1500));
+        m.record_phase(ServePhase::Queue, 1, Duration::from_nanos(3000));
+        m.record_phase(ServePhase::Execute, 0, Duration::from_micros(100));
+        assert_eq!(m.phase_percentile_ns(ServePhase::Queue, 0.5), 2048);
+        assert_eq!(m.phase_percentile_ns(ServePhase::Queue, 1.0), 4096);
+        assert_eq!(m.phase_percentile_ns(ServePhase::BatchForm, 0.99), 0);
+        let b = m.phase_breakdown();
+        assert_eq!(b.queue_p50_ns, 2048);
+        assert_eq!(b.queue_p99_ns, 4096);
+        assert_eq!(b.batch_form_p99_ns, 0);
+        assert_eq!(b.execute_p50_ns, m.phase_percentile_ns(ServePhase::Execute, 0.5));
+        let t = m.metrics_text();
+        assert!(t.contains("# TYPE rapid_phase_ns histogram"), "{t}");
+        assert!(t.contains("rapid_phase_ns_bucket{phase=\"queue\",shard=\"0\",le=\"2048\"} 1"), "{t}");
+        assert!(t.contains("rapid_phase_ns_bucket{phase=\"queue\",shard=\"1\",le=\"4096\"} 1"), "{t}");
+        assert!(t.contains("rapid_phase_ns_bucket{phase=\"queue\",shard=\"0\",le=\"+Inf\"} 1"), "{t}");
+        assert!(t.contains("rapid_phase_ns_sum{phase=\"queue\",shard=\"0\"} 1500"), "{t}");
+        assert!(t.contains("rapid_phase_ns_count{phase=\"execute\",shard=\"0\"} 1"), "{t}");
+        assert!(t.contains("rapid_phase_ns_count{phase=\"batch_form\",shard=\"1\"} 0"), "{t}");
     }
 }

@@ -42,7 +42,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, DynamicBatcher};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ServePhase};
+use crate::obs::trace::{self, Category, Phase};
 
 /// Work executed per batch. Constructed *inside* each worker thread by an
 /// [`ExecutorFactory`] — PJRT handles are not `Send`, so every worker owns
@@ -335,7 +336,8 @@ impl Coordinator {
         let mut threads = Vec::new();
         for s in 0..shards {
             let (ingress_tx, ingress_rx) = sync_channel::<Request>(cfg.queue_depth);
-            let (batch_tx, batch_rx) = sync_channel::<(Batch, Vec<PendingSpan>)>(workers_per_shard * 2);
+            let (batch_tx, batch_rx) =
+                sync_channel::<(Batch, Vec<PendingSpan>, BatchTicket)>(workers_per_shard * 2);
             let batch_rx = Arc::new(Mutex::new(batch_rx));
             lanes.push(ingress_tx);
             // lane leader: ingest + batch
@@ -411,10 +413,13 @@ impl Coordinator {
         b: Vec<i64>,
         deadline: Option<Duration>,
     ) -> Result<Vec<i64>, SubmitError> {
+        let t_entry = Instant::now();
         let lane = self.route();
+        let rung = self.rung.load(Ordering::SeqCst);
         if let Some(d) = deadline {
             if self.estimated_wait_ns(lane) > d.as_nanos() as u64 {
-                self.metrics.record_shed();
+                self.metrics.record_shed(lane);
+                trace::record_instant(Category::Request, Phase::Shed, 0, lane as u32, rung);
                 return Err(SubmitError::Shed);
             }
         }
@@ -429,11 +434,12 @@ impl Coordinator {
             reply: tx,
             t_submit: now,
             deadline: deadline.map(|d| now + d),
-            rung: self.rung.load(Ordering::SeqCst),
+            rung,
         };
         self.metrics.record_request(n);
         self.metrics.ingress_enqueued(lane);
         self.lanes[lane].send(req).expect("coordinator ingress closed");
+        trace::record_span(Category::Request, Phase::Submit, id, lane as u32, rung, t_entry, Instant::now());
         let mut out = vec![0i64; n];
         let mut filled = 0usize;
         while filled < n {
@@ -462,10 +468,13 @@ impl Coordinator {
         b: Vec<i64>,
         deadline: Option<Duration>,
     ) -> Result<Receiver<Response>, SubmitError> {
+        let t_entry = Instant::now();
         let lane = self.route();
+        let rung = self.rung.load(Ordering::SeqCst);
         if let Some(d) = deadline {
             if self.estimated_wait_ns(lane) > d.as_nanos() as u64 {
-                self.metrics.record_shed();
+                self.metrics.record_shed(lane);
+                trace::record_instant(Category::Request, Phase::Shed, 0, lane as u32, rung);
                 return Err(SubmitError::Shed);
             }
         }
@@ -480,17 +489,18 @@ impl Coordinator {
             reply: tx,
             t_submit: now,
             deadline: deadline.map(|d| now + d),
-            rung: self.rung.load(Ordering::SeqCst),
+            rung,
         };
         self.metrics.ingress_enqueued(lane);
         match self.lanes[lane].try_send(req) {
             Ok(()) => {
                 self.metrics.record_request(n);
+                trace::record_span(Category::Request, Phase::Submit, id, lane as u32, rung, t_entry, Instant::now());
                 Ok(rx)
             }
             Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
                 self.metrics.ingress_dequeued(lane);
-                self.metrics.record_rejected();
+                self.metrics.record_rejected(lane);
                 Err(SubmitError::Full)
             }
         }
@@ -539,6 +549,9 @@ struct PendingSpan {
     reply: SyncSender<Response>,
     id: u64,
     t_submit: Instant,
+    /// when the leader dequeued the request — the queue/batch_form phase
+    /// boundary (shared by both sides, so the phases telescope exactly)
+    t_dequeue: Instant,
     /// offset within the batch
     offset: usize,
     len: usize,
@@ -546,10 +559,19 @@ struct PendingSpan {
     req_offset: usize,
 }
 
+/// Per-batch routing metadata riding the dispatch channel: which lane
+/// formed the batch, its per-lane sequence number (the batch trace id)
+/// and the dispatch instant — the batch_form/execute phase boundary.
+struct BatchTicket {
+    shard: usize,
+    seq: u64,
+    t_dispatch: Instant,
+}
+
 fn leader_loop(
     shard: usize,
     ingress: Receiver<Request>,
-    batch_tx: SyncSender<(Batch, Vec<PendingSpan>)>,
+    batch_tx: SyncSender<(Batch, Vec<PendingSpan>, BatchTicket)>,
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     capacity: usize,
@@ -557,6 +579,9 @@ fn leader_loop(
 ) {
     let mut batcher = DynamicBatcher::new(capacity, max_wait);
     let mut pending: Vec<PendingSpan> = Vec::new();
+    // per-lane batch sequence (the batch trace id; ids only need to be
+    // unique within a lane, the shard label disambiguates across lanes)
+    let mut batch_seq: u64 = 0;
     // reusable full-batch buffer: offer_into appends here, so steady-state
     // batch formation never allocates a fresh Vec<Batch>
     let mut emitted: Vec<Batch> = Vec::new();
@@ -572,13 +597,14 @@ fn leader_loop(
                 if let Some(b) = batcher.flush() {
                     let spans = collect_spans(&b, &pending);
                     metrics.record_batch(b.used, capacity);
-                    dispatch(&batch_tx, b, spans, &metrics);
+                    dispatch(&batch_tx, b, spans, &metrics, shard, &mut batch_seq);
                 }
                 return;
             }
         };
         if let Some(req) = req {
             metrics.ingress_dequeued(shard);
+            let t_dequeue = Instant::now();
             // requests larger than the batch are executed in chunks but the
             // reply is assembled by the caller via multiple spans with the
             // same reply channel
@@ -586,9 +612,9 @@ fn leader_loop(
             // spans for this request may appear in several emitted batches;
             // tag each emitted batch with its pending spans
             for b in emitted.drain(..) {
-                let spans = spans_for(&b, &req, &pending);
+                let spans = spans_for(&b, &req, t_dequeue, &pending);
                 metrics.record_batch(b.used, capacity);
-                dispatch(&batch_tx, b, spans, &metrics);
+                dispatch(&batch_tx, b, spans, &metrics, shard, &mut batch_seq);
             }
             // remember the reply for the (possibly still open) tail span
             pending.push(PendingSpan {
@@ -596,6 +622,7 @@ fn leader_loop(
                 reply: req.reply.clone(),
                 id: req.id,
                 t_submit: req.t_submit,
+                t_dequeue,
                 offset: 0,
                 len: 0,
             });
@@ -611,23 +638,31 @@ fn leader_loop(
             if let Some(b) = batcher.flush() {
                 let spans = collect_spans(&b, &pending);
                 metrics.record_batch(b.used, capacity);
-                dispatch(&batch_tx, b, spans, &metrics);
+                dispatch(&batch_tx, b, spans, &metrics, shard, &mut batch_seq);
             }
         }
     }
 }
 
-fn spans_for(b: &Batch, req: &Request, pending: &[PendingSpan]) -> Vec<PendingSpan> {
+fn spans_for(b: &Batch, req: &Request, t_dequeue: Instant, pending: &[PendingSpan]) -> Vec<PendingSpan> {
     b.spans
         .iter()
         .map(|(id, off, len, req_off)| {
-            let (reply, t) = if *id == req.id {
-                (req.reply.clone(), req.t_submit)
+            let (reply, t, tq) = if *id == req.id {
+                (req.reply.clone(), req.t_submit, t_dequeue)
             } else {
                 let p = pending.iter().rev().find(|p| p.id == *id).expect("span for unknown request");
-                (p.reply.clone(), p.t_submit)
+                (p.reply.clone(), p.t_submit, p.t_dequeue)
             };
-            PendingSpan { reply, id: *id, t_submit: t, offset: *off, len: *len, req_offset: *req_off }
+            PendingSpan {
+                reply,
+                id: *id,
+                t_submit: t,
+                t_dequeue: tq,
+                offset: *off,
+                len: *len,
+                req_offset: *req_off,
+            }
         })
         .collect()
 }
@@ -641,6 +676,7 @@ fn collect_spans(b: &Batch, pending: &[PendingSpan]) -> Vec<PendingSpan> {
                 reply: p.reply.clone(),
                 id: *id,
                 t_submit: p.t_submit,
+                t_dequeue: p.t_dequeue,
                 offset: *off,
                 len: *len,
                 req_offset: *req_off,
@@ -650,17 +686,23 @@ fn collect_spans(b: &Batch, pending: &[PendingSpan]) -> Vec<PendingSpan> {
 }
 
 fn dispatch(
-    tx: &SyncSender<(Batch, Vec<PendingSpan>)>,
+    tx: &SyncSender<(Batch, Vec<PendingSpan>, BatchTicket)>,
     b: Batch,
     spans: Vec<PendingSpan>,
     metrics: &Metrics,
+    shard: usize,
+    batch_seq: &mut u64,
 ) {
+    let seq = *batch_seq;
+    *batch_seq += 1;
+    let t_dispatch = Instant::now();
+    trace::record_span(Category::Batch, Phase::BatchForm, seq, shard as u32, b.rung, b.opened_at, t_dispatch);
     metrics.batch_enqueued();
-    let _ = tx.send((b, spans));
+    let _ = tx.send((b, spans, BatchTicket { shard, seq, t_dispatch }));
 }
 
 fn worker_loop(
-    rx: Arc<Mutex<Receiver<(Batch, Vec<PendingSpan>)>>>,
+    rx: Arc<Mutex<Receiver<(Batch, Vec<PendingSpan>, BatchTicket)>>>,
     factory: Arc<dyn ExecutorFactory>,
     metrics: Arc<Metrics>,
 ) {
@@ -670,18 +712,46 @@ fn worker_loop(
             let guard = rx.lock().unwrap();
             guard.recv()
         };
-        let (batch, spans) = match item {
+        let (batch, spans, ticket) = match item {
             Ok(x) => x,
             Err(_) => return,
         };
         metrics.batch_dequeued();
-        let t_exec = Instant::now();
+        let shard32 = ticket.shard as u32;
+        let t_pick = Instant::now();
+        trace::record_span(Category::Batch, Phase::BatchQueue, ticket.seq, shard32, batch.rung, ticket.t_dispatch, t_pick);
         let out = exec.execute_rung(batch.rung, &batch.a, &batch.b);
-        metrics.record_batch_service(t_exec.elapsed());
+        let t_done = Instant::now();
+        metrics.record_batch_service(t_done.saturating_duration_since(t_pick));
+        trace::record_span(Category::Batch, Phase::BatchExecute, ticket.seq, shard32, batch.rung, t_pick, t_done);
         for s in spans {
             let values = out[s.offset..s.offset + s.len].to_vec();
-            metrics.record_latency(s.t_submit.elapsed());
+            // one shared `now` per span: the three phases telescope to the
+            // recorded end-to-end latency exactly (no re-reads in between)
+            let now = Instant::now();
+            metrics.record_phase(
+                ServePhase::Queue,
+                ticket.shard,
+                s.t_dequeue.saturating_duration_since(s.t_submit),
+            );
+            metrics.record_phase(
+                ServePhase::BatchForm,
+                ticket.shard,
+                ticket.t_dispatch.saturating_duration_since(s.t_dequeue),
+            );
+            metrics.record_phase(
+                ServePhase::Execute,
+                ticket.shard,
+                now.saturating_duration_since(ticket.t_dispatch),
+            );
+            metrics.record_latency(now.saturating_duration_since(s.t_submit));
+            if trace::enabled() {
+                trace::record_span(Category::Request, Phase::Queue, s.id, shard32, batch.rung, s.t_submit, s.t_dequeue);
+                trace::record_span(Category::Request, Phase::BatchForm, s.id, shard32, batch.rung, s.t_dequeue, ticket.t_dispatch);
+                trace::record_span(Category::Request, Phase::Execute, s.id, shard32, batch.rung, ticket.t_dispatch, now);
+            }
             let _ = s.reply.send(Response { id: s.id, offset: s.req_offset, values });
+            trace::record_span(Category::Request, Phase::Reply, s.id, shard32, batch.rung, now, Instant::now());
         }
     }
 }

@@ -24,8 +24,10 @@ use std::time::{Duration, Instant};
 
 use super::governor::{App, Governor, GovernorConfig, GovernorTrace, Ladder, WindowAccumulator, WindowObs, is_sampled};
 use super::loadgen::request_digest;
+use super::metrics::PhaseBreakdown;
 use super::router::{Coordinator, CoordinatorConfig, SubmitError};
 use crate::bench_support::record::Recorder;
+use crate::obs::{trace as obs_trace, Category as ObsCategory, Phase as ObsPhase, SpanEvent};
 use crate::util::timer::BenchResult;
 use crate::util::XorShift256;
 
@@ -222,6 +224,13 @@ pub struct ScenarioReport {
     /// p50 / p99 span latency at scenario end (ns; wall-clock).
     pub p50_ns: u64,
     pub p99_ns: u64,
+    /// Where the latency went: per-phase p50/p99 from the coordinator's
+    /// bucketed `rapid_phase_ns` histograms (merged across shards).
+    pub phase_breakdown: PhaseBreakdown,
+    /// Trace spans captured during the run (empty unless the recorder was
+    /// enabled — `serve-bench --governor --trace`). Under the logical
+    /// clock with no deadline, a pure function of seed/phases/policy.
+    pub spans: Vec<SpanEvent>,
 }
 
 impl ScenarioReport {
@@ -251,6 +260,9 @@ pub fn run_scenario(
     cfg: &ScenarioConfig,
 ) -> ScenarioReport {
     assert_eq!(ladder.width, cfg.width, "ladder and scenario widths must agree");
+    // sampled once up front: a recorder enabled mid-run (another thread)
+    // must not leak a partial capture into this report
+    let tracing = obs_trace::enabled();
     let gcfg = cfg.governor;
     let window = gcfg.window.max(1);
     let coord = Coordinator::start(ladder.factory(), coord_cfg.clone());
@@ -311,9 +323,14 @@ pub fn run_scenario(
         };
         *window_shed = 0;
         coord.metrics.record_governor_window(qor);
+        // identity-pure span (id = window, rung = the rung that served
+        // it, val = the QoR observation): deterministic under the
+        // logical clock, same contract as the replayable trace
+        obs_trace::record_val(ObsCategory::Governor, ObsPhase::Window, w, 0, rung as u32, qor);
         if let Some(t) = governor.observe(&obs) {
             coord.set_rung(t.to as u32);
             coord.metrics.record_governor_switch();
+            obs_trace::record_instant(ObsCategory::Governor, ObsPhase::Switch, w, 0, t.to as u32);
             trace.transitions.push(t);
         }
         trace.windows.push(obs);
@@ -381,7 +398,7 @@ pub fn run_scenario(
     drop(done_tx);
     let (checksum, completed, elements) = collector.join().expect("collector");
     let wall_ns = t0.elapsed().as_nanos() as u64;
-    let report = ScenarioReport {
+    let mut report = ScenarioReport {
         trace,
         phases: phase_reports,
         rung_names: ladder.names.clone(),
@@ -392,8 +409,15 @@ pub fn run_scenario(
         checksum,
         p50_ns: coord.metrics.p50_ns(),
         p99_ns: coord.metrics.p99_ns(),
+        phase_breakdown: coord.metrics.phase_breakdown(),
+        spans: Vec::new(),
     };
+    // drop first: the coordinator joins its threads, so every in-flight
+    // span has landed in a ring before the drain
     drop(coord);
+    if tracing {
+        report.spans = obs_trace::take().events;
+    }
     report
 }
 
@@ -430,6 +454,9 @@ pub fn to_recorder(rep: &ScenarioReport, window: u64) -> Recorder {
         (rep.requests.div_ceil(window.max(1))) as f64,
     );
     rec.add("p99_latency", &one(rep.p99_ns as f64), 1.0);
+    rec.add("queue_p99", &one(rep.phase_breakdown.queue_p99_ns as f64), 1.0);
+    rec.add("batch_form_p99", &one(rep.phase_breakdown.batch_form_p99_ns as f64), 1.0);
+    rec.add("execute_p99", &one(rep.phase_breakdown.execute_p99_ns as f64), 1.0);
     rec
 }
 
@@ -460,6 +487,12 @@ pub fn format_report(rep: &ScenarioReport) -> String {
         rep.p50_ns as f64 / 1e3,
         rep.p99_ns as f64 / 1e3,
         rep.checksum,
+    ));
+    out.push_str(&format!(
+        "phase p99: queue {:.1}µs batch_form {:.1}µs execute {:.1}µs\n",
+        rep.phase_breakdown.queue_p99_ns as f64 / 1e3,
+        rep.phase_breakdown.batch_form_p99_ns as f64 / 1e3,
+        rep.phase_breakdown.execute_p99_ns as f64 / 1e3,
     ));
     if rep.trace.transitions.is_empty() {
         out.push_str("switch trace: (none)\n");
@@ -497,6 +530,10 @@ pub mod cli {
         pub coord: CoordinatorConfig,
         /// Output JSON path.
         pub out: String,
+        /// Chrome-trace output path (`--trace FILE`); None = no tracing.
+        pub trace: Option<String>,
+        /// Recorder clock (`--clock monotonic|logical`).
+        pub clock: obs_trace::Clock,
     }
 
     /// Option keys of the governed mode (superset of the plain
@@ -506,7 +543,7 @@ pub mod cli {
         "batch", "workers", "shards", "queue-depth", "max-wait-us", "deadline-us", "out",
         "app", "ladder", "phases", "qor-floor", "headroom", "window", "dwell",
         "sample-stride", "sample-lanes", "start-rung", "p99-budget-us", "stages",
-        "samples", "vectors",
+        "samples", "vectors", "trace", "clock",
     ];
 
     /// Validate a governed serve-bench argv into a [`ScenarioSetup`].
@@ -587,6 +624,12 @@ pub mod cli {
                 shards: args.try_usize("shards", 4)?.max(1),
             },
             out: args.get_or("out", "BENCH_governor.json").to_string(),
+            trace: args.get("trace").map(String::from),
+            clock: match args.get("clock") {
+                None => obs_trace::Clock::Monotonic,
+                Some(c) => obs_trace::Clock::parse(c)
+                    .ok_or_else(|| format!("--clock: '{c}' is not 'monotonic' or 'logical'"))?,
+            },
         })
     }
 
@@ -638,7 +681,16 @@ pub mod cli {
             setup.coord.workers,
             setup.cfg.start_rung,
         );
+        if setup.trace.is_some() {
+            obs_trace::enable(setup.clock);
+        }
         let rep = run_scenario(&ladder, &setup.coord, &setup.cfg);
+        if let Some(path) = &setup.trace {
+            obs_trace::disable();
+            std::fs::write(path, crate::obs::chrome::to_chrome_json(&rep.spans))
+                .map_err(|e| format!("could not write {path}: {e}"))?;
+            println!("trace -> {path} (inspect with `rapid trace-report --in {path}`)");
+        }
         print!("{}", format_report(&rep));
         to_recorder(&rep, g.window)
             .write(&setup.out)
@@ -734,6 +786,7 @@ mod tests {
             vec!["--backend", "pjrt"],
             vec!["--op", "div"],
             vec!["--width", "64"],
+            vec!["--clock", "wall"],
         ] {
             let owned = sv(&bad);
             assert!(cli::parse(owned.clone()).is_err(), "{owned:?} must be rejected");
@@ -788,13 +841,18 @@ mod tests {
             checksum: 0xfeed,
             p50_ns: 1000,
             p99_ns: 2000,
+            phase_breakdown: PhaseBreakdown { queue_p99_ns: 8192, ..PhaseBreakdown::default() },
+            spans: Vec::new(),
         };
         let j = to_recorder(&rep, 50).to_json();
         assert!(j.contains("\"bench\": \"governor\""), "{j}");
         assert!(j.contains("phase0_noisy_5000rps_rung0to1"), "{j}");
         assert!(j.contains("switches_total"), "{j}");
+        assert!(j.contains("queue_p99"), "{j}");
+        assert!(j.contains("execute_p99"), "{j}");
         let text = format_report(&rep);
         assert!(text.contains("rapid3 -> exact"), "{text}");
         assert!(text.contains("switch trace: (none)"), "{text}");
+        assert!(text.contains("phase p99: queue"), "{text}");
     }
 }

@@ -31,6 +31,7 @@ use crate::apps::jpeg;
 use crate::apps::pantompkins;
 use crate::apps::qor::{correct_vector_ratio, psnr, Sensitivity};
 use crate::arith::registry::{div_names, make_div, make_mul, mul_names};
+use crate::obs::trace::{self, Category, Phase};
 use crate::util::par;
 
 use super::evaluate::{
@@ -252,7 +253,17 @@ pub fn explore_units(space: &Space, opts: &SearchOpts) -> UnitExplore {
         mc_samples: opts.screen_samples,
         ..opts.refine
     };
+    let t_screen = std::time::Instant::now();
     let screened = evaluate_all(&cands, &screen_opts);
+    trace::record_span(
+        Category::Explore,
+        Phase::Screen,
+        cands.len() as u64,
+        0,
+        0,
+        t_screen,
+        std::time::Instant::now(),
+    );
 
     // margin-dominance drop rule on the screened estimates
     let survive: Vec<bool> = (0..screened.len())
@@ -284,7 +295,17 @@ pub fn explore_units(space: &Space, opts: &SearchOpts) -> UnitExplore {
         .map(|(c, _)| c.clone())
         .collect();
     let refine_units = distinct_units(&refine_cands);
+    let t_refine = std::time::Instant::now();
     let refined_errors = accuracy_all(&refine_units, &opts.refine);
+    trace::record_span(
+        Category::Explore,
+        Phase::Refine,
+        refine_units.len() as u64,
+        0,
+        0,
+        t_refine,
+        std::time::Instant::now(),
+    );
     let by_unit: std::collections::HashMap<_, _> =
         refine_units.into_iter().zip(refined_errors).collect();
 
@@ -590,7 +611,17 @@ pub fn explore_app(app: &str, pairs: &[AppCandidate], opts: &SearchOpts) -> AppE
         pairs.iter().map(|p| (p.mul.name, p.div.name)).collect();
     let mut np_seen = std::collections::HashSet::new();
     name_pairs.retain(|np| np_seen.insert(*np));
+    let t_screen = std::time::Instant::now();
     let screen_qor = qor_of(&name_pairs, false);
+    trace::record_span(
+        Category::Explore,
+        Phase::Screen,
+        name_pairs.len() as u64,
+        0,
+        0,
+        t_screen,
+        std::time::Instant::now(),
+    );
     let qor_by_names: std::collections::HashMap<_, _> =
         name_pairs.iter().copied().zip(screen_qor).collect();
 
@@ -634,7 +665,17 @@ pub fn explore_app(app: &str, pairs: &[AppCandidate], opts: &SearchOpts) -> AppE
         v.retain(|np| seen.insert(*np));
         v
     };
+    let t_refine = std::time::Instant::now();
     let refined_qor = qor_of(&survivor_names, true);
+    trace::record_span(
+        Category::Explore,
+        Phase::Refine,
+        survivor_names.len() as u64,
+        0,
+        0,
+        t_refine,
+        std::time::Instant::now(),
+    );
     let refined_by_names: std::collections::HashMap<_, _> =
         survivor_names.iter().copied().zip(refined_qor).collect();
     let mut refined = vec![false; points.len()];

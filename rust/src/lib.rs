@@ -34,6 +34,11 @@
 //!   admission control, Prometheus-style metrics, the deterministic
 //!   open-loop load harness (`rapid serve-bench`) and the pipeline
 //!   scheduler.
+//! * [`obs`] — structured span tracing: per-request lifecycle spans and
+//!   per-batch/window/chunk spans into a lock-cheap per-thread recorder
+//!   with a pluggable clock (monotonic for production, logical for
+//!   bit-replayable traces), exported as Chrome trace-event JSON
+//!   (`--trace`) and aggregated by `rapid trace-report`.
 //! * [`util`] — zero-dependency PRNG/stats/CLI/bench/property-test helpers,
 //!   including [`util::par`], the deterministic multi-core sweep engine
 //!   every exhaustive/Monte-Carlo/power/equivalence sweep fans out on
@@ -65,6 +70,7 @@ pub mod explore;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod coordinator;
+pub mod obs;
 pub mod bench_support;
 
 /// Commonly used items.

@@ -18,6 +18,8 @@
 //!   throughput and p50/p99/p999 latency to `BENCH_serve.json`. With
 //!   `--governor`, replays a phase-shifting scenario through the
 //!   QoR-adaptive accuracy governor (`BENCH_governor.json`).
+//! * `trace-report`  — aggregate a `--trace` Chrome-trace file into
+//!   per-phase / per-shard / per-rung latency breakdown tables.
 
 use rapid::util::cli::Args;
 
@@ -58,6 +60,7 @@ fn main() {
         // the open-loop load harness drives the in-process functional
         // backend only, so it works on every build (no pjrt feature gate)
         "serve-bench" => rapid::coordinator::loadgen::cli::run(argv),
+        "trace-report" => rapid::obs::report::cli::run(argv),
         "--help" | "help" | "-h" => usage(),
         other => {
             eprintln!("unknown command '{other}'");
@@ -111,7 +114,11 @@ fn usage() {
                                                 QoR-adaptive governed scenario: closed-loop\n\
                                                 accuracy switching along the ladder under a QoR\n\
                                                 floor + latency budget, replayable switch trace\n\
-                                                recorded to BENCH_governor.json\n"
+                                                recorded to BENCH_governor.json\n\
+           trace-report  --in FILE              per-phase/per-shard/per-rung p50/p99/p999\n\
+                                                breakdown of a --trace Chrome-trace file\n\
+                                                (serve / serve-bench take --trace FILE and\n\
+                                                --clock {{monotonic|logical}})\n"
     );
 }
 

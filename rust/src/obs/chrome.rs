@@ -1,0 +1,190 @@
+//! Chrome trace-event JSON export (and line-oriented re-import) of a
+//! span capture (DESIGN.md §9).
+//!
+//! The emitted file is the stable `traceEvents` array format every
+//! Chromium-derived viewer (`chrome://tracing`, Perfetto's legacy
+//! loader, Speedscope) accepts: one `"ph":"X"` *complete event* per
+//! span with microsecond `ts`/`dur`, preceded by `"ph":"M"`
+//! `process_name` metadata rows naming each [`Category`] track group.
+//! Timestamps are printed as `<µs>.<3-digit-ns>` so the underlying
+//! nanosecond values survive a round trip losslessly ([`parse`] is the
+//! inverse, used by `rapid trace-report` and the determinism pins).
+//!
+//! The writer is **line-regular by contract** (one grammar production
+//! per row kind, keys in one fixed order, rows joined by `,\n`), which
+//! is what lets [`parse`] be a total line-oriented scan instead of a
+//! JSON parser — the same discipline as `circuit::emit`'s reparse gate.
+
+use super::trace::{Category, Phase, SpanEvent};
+
+/// Nanoseconds rendered as the trace format's microsecond field,
+/// keeping full precision: `16123` ns → `16.123`.
+fn fmt_us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// All categories, in pid order (for metadata row emission).
+const CATEGORIES: [Category; 5] =
+    [Category::Request, Category::Batch, Category::Governor, Category::Chunk, Category::Explore];
+
+/// Serialize one capture as Chrome trace-event JSON.
+pub fn to_chrome_json(events: &[SpanEvent]) -> String {
+    to_chrome_json_sections(&[("", events)])
+}
+
+/// Serialize several labelled captures (e.g. one per bench rung) into
+/// one trace. Each section's categories become distinct processes
+/// (`pid = section_index * 8 + category pid`) named
+/// `<label>/<category>` so a viewer groups the rungs side by side.
+pub fn to_chrome_json_sections(sections: &[(&str, &[SpanEvent])]) -> String {
+    let mut rows: Vec<String> = Vec::new();
+    for (si, (label, events)) in sections.iter().enumerate() {
+        let base = (si as u32) * 8;
+        for cat in CATEGORIES {
+            if !events.iter().any(|e| e.cat == cat) {
+                continue;
+            }
+            let name = if label.is_empty() {
+                cat.label().to_string()
+            } else {
+                format!("{label}/{}", cat.label())
+            };
+            rows.push(format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\"args\":{{\"name\":\"{}\"}}}}",
+                base + cat.pid(),
+                name
+            ));
+        }
+        for e in *events {
+            let val = if e.val != 0.0 { format!(",\"val\":\"{}\"", e.val) } else { String::new() };
+            rows.push(format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"id\":{},\"rung\":{}{}}}}}",
+                e.phase.label(),
+                e.cat.label(),
+                base + e.cat.pid(),
+                e.shard,
+                fmt_us(e.ts_ns),
+                fmt_us(e.dur_ns),
+                e.id,
+                e.rung,
+                val
+            ));
+        }
+    }
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(&rows.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Extract the value of `"key":` on one emitted line: a quoted string
+/// (quotes stripped) or a bare token up to the next `,` / `}`.
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    if let Some(stripped) = rest.strip_prefix('"') {
+        let end = stripped.find('"')?;
+        Some(&stripped[..end])
+    } else {
+        let end = rest.find([',', '}']).unwrap_or(rest.len());
+        Some(&rest[..end])
+    }
+}
+
+/// Parse a `<µs>.<ns>` timestamp back to nanoseconds.
+fn parse_us(s: &str) -> Option<u64> {
+    let (us, frac) = s.split_once('.')?;
+    if frac.len() != 3 {
+        return None;
+    }
+    Some(us.parse::<u64>().ok()? * 1000 + frac.parse::<u64>().ok()?)
+}
+
+/// Parse an emitted trace back into events (file order). Metadata rows
+/// are skipped; a malformed event row is an error naming its line.
+pub fn parse(text: &str) -> Result<Vec<SpanEvent>, String> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if !line.contains("\"ph\":\"X\"") {
+            continue;
+        }
+        let ev = (|| -> Option<SpanEvent> {
+            Some(SpanEvent {
+                cat: Category::parse(field(line, "cat")?)?,
+                phase: Phase::parse(field(line, "name")?)?,
+                id: field(line, "id")?.parse().ok()?,
+                shard: field(line, "tid")?.parse().ok()?,
+                rung: field(line, "rung")?.parse().ok()?,
+                ts_ns: parse_us(field(line, "ts")?)?,
+                dur_ns: parse_us(field(line, "dur")?)?,
+                val: match field(line, "val") {
+                    Some(v) => v.parse().ok()?,
+                    None => 0.0,
+                },
+            })
+        })();
+        match ev {
+            Some(e) => out.push(e),
+            None => return Err(format!("trace line {}: malformed event row: {line}", ln + 1)),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{Category, Phase, SpanEvent};
+    use super::*;
+
+    fn ev(cat: Category, phase: Phase, id: u64, shard: u32, rung: u32, ts: u64, dur: u64, val: f64) -> SpanEvent {
+        SpanEvent { cat, phase, id, shard, rung, ts_ns: ts, dur_ns: dur, val }
+    }
+
+    #[test]
+    fn round_trips_ns_precision_and_values() {
+        let events = vec![
+            ev(Category::Request, Phase::Queue, 1, 0, 0, 16_123, 999, 0.0),
+            ev(Category::Request, Phase::Execute, 1, 3, 2, 20_000, 1, 0.0),
+            ev(Category::Governor, Phase::Window, 4, 0, 1, 64_008_000, 1_000, 33.47),
+            ev(Category::Governor, Phase::Window, 5, 0, 1, 80_008_000, 1_000, f64::INFINITY),
+            ev(Category::Chunk, Phase::Chunk, 12, 0, 0, u64::MAX / 4096, 0, 0.0),
+        ];
+        let text = to_chrome_json(&events);
+        assert!(text.starts_with("{\"traceEvents\":[\n"));
+        assert!(text.ends_with("\n]}\n"));
+        assert_eq!(parse(&text).unwrap(), events);
+    }
+
+    #[test]
+    fn metadata_rows_name_present_categories_only() {
+        let events = vec![ev(Category::Request, Phase::Submit, 1, 0, 0, 0, 10, 0.0)];
+        let text = to_chrome_json(&events);
+        assert!(text.contains("\"args\":{\"name\":\"request\"}"));
+        assert!(!text.contains("\"name\":\"governor\""));
+        // sections prefix the process names and offset the pids
+        let twice = to_chrome_json_sections(&[("r1", &events), ("r2", &events)]);
+        assert!(twice.contains("\"args\":{\"name\":\"r1/request\"}"));
+        assert!(twice.contains("\"args\":{\"name\":\"r2/request\"}"));
+        assert!(twice.contains("\"pid\":8"));
+        // both sections' events parse back (section = file order)
+        assert_eq!(parse(&twice).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn malformed_rows_error_with_line_numbers() {
+        assert!(parse("{\"ph\":\"X\",\"cat\":\"warp\"}").unwrap_err().contains("line 1"));
+        assert!(parse("not json at all\n{\"ph\":\"X\"}").unwrap_err().contains("line 2"));
+        // metadata and unrelated lines are skipped cleanly
+        assert!(parse("{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn timestamp_formatting_is_lossless() {
+        for ns in [0u64, 1, 999, 1000, 16_123, 987_654_321] {
+            assert_eq!(parse_us(&fmt_us(ns)), Some(ns));
+        }
+        assert_eq!(fmt_us(16_123), "16.123");
+        assert_eq!(parse_us("16.12"), None, "exactly three fraction digits");
+    }
+}

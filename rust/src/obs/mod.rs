@@ -1,0 +1,32 @@
+//! Structured observability: span tracing and latency attribution
+//! (DESIGN.md §9).
+//!
+//! The serving metrics (`coordinator::metrics`) answer *how much* —
+//! counters, gauges and one end-to-end latency histogram. This layer
+//! answers *where the time went*: every served request's lifecycle
+//! (`submit → admit|shed → queue → batch_form → execute → reply`),
+//! every formed batch, every governor window/switch, every `util::par`
+//! chunk and every `explore` ladder stage can emit a [`trace::SpanEvent`]
+//! into a lock-cheap per-thread ring recorder.
+//!
+//! Three consumers sit on one capture:
+//!
+//! * [`chrome`] — Chrome trace-event JSON export (`--trace out.json` on
+//!   `rapid serve` / `serve-bench`), loadable in any trace viewer and
+//!   losslessly re-parseable;
+//! * [`report`] — `rapid trace-report`: per-phase / per-shard /
+//!   per-rung p50/p99/p999 breakdown tables from a trace file;
+//! * `Metrics::metrics_text()` — true bucketed `rapid_phase_ns`
+//!   Prometheus histograms, fed by the same phase boundary instants
+//!   (always on; the recorder is only for spans).
+//!
+//! Under [`trace::Clock::Logical`] the capture is a pure function of
+//! request/window identity — bit-identical across `RAPID_THREADS`,
+//! worker and shard counts (`tests/trace_determinism.rs`), the same
+//! replayability discipline as the governor (DESIGN.md §8).
+
+pub mod chrome;
+pub mod report;
+pub mod trace;
+
+pub use trace::{Capture, Category, Clock, Phase, SpanEvent};

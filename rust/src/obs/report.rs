@@ -1,0 +1,291 @@
+//! Aggregate a span capture into per-phase / per-shard / per-rung
+//! latency breakdown tables (`rapid trace-report`, DESIGN.md §9).
+//!
+//! Percentiles here are **exact** (nearest-rank over the sorted span
+//! durations), unlike the serving histogram's bucket-upper-bound
+//! quantization (`Metrics::latency_percentile_ns`) — so the report's
+//! end-to-end reconstruction row agrees with `rapid_latency_ns` within
+//! one histogram bucket, and the per-phase rows sum to it exactly
+//! (request phase spans partition submit→reply by construction).
+
+use std::collections::BTreeMap;
+
+use super::trace::{Capture, Category, Phase, SpanEvent};
+
+/// Nearest-rank percentile statistics over one population of span
+/// durations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Stat {
+    /// Number of spans.
+    pub count: u64,
+    /// Sum of durations, ns.
+    pub sum_ns: u64,
+    /// Mean duration, ns (0 when empty).
+    pub mean_ns: u64,
+    /// Median, ns.
+    pub p50_ns: u64,
+    /// 99th percentile, ns.
+    pub p99_ns: u64,
+    /// 99.9th percentile, ns.
+    pub p999_ns: u64,
+}
+
+/// Exact nearest-rank percentile of a sorted population (empty → 0),
+/// the same `ceil(n·q)` rank convention as the serving histogram.
+pub fn percentile_ns(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    let rank = ((n as f64 * q).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+impl Stat {
+    fn from_durs(durs: &mut Vec<u64>) -> Stat {
+        durs.sort_unstable();
+        let count = durs.len() as u64;
+        let sum_ns: u64 = durs.iter().sum();
+        Stat {
+            count,
+            sum_ns,
+            mean_ns: if count == 0 { 0 } else { sum_ns / count },
+            p50_ns: percentile_ns(durs, 0.50),
+            p99_ns: percentile_ns(durs, 0.99),
+            p999_ns: percentile_ns(durs, 0.999),
+        }
+    }
+}
+
+/// Aggregated view of one trace capture (see [`aggregate`]).
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    /// Total events aggregated.
+    pub total_events: usize,
+    /// Events the recorder dropped ring-full (0 unless overloaded).
+    pub dropped: u64,
+    /// One row per (category, phase) present, canonical order.
+    pub phases: Vec<(Category, Phase, Stat)>,
+    /// Request queue/batch_form/execute split per shard.
+    pub shard_rows: Vec<(Phase, u32, Stat)>,
+    /// Request execute spans split per accuracy rung.
+    pub rung_rows: Vec<(u32, Stat)>,
+    /// Per-request `queue + batch_form + execute` sums — the
+    /// reconstruction of the end-to-end latency histogram.
+    pub end_to_end: Stat,
+}
+
+/// Aggregate a capture's events into the report tables.
+pub fn aggregate(cap: &Capture) -> TraceReport {
+    let events: &[SpanEvent] = &cap.events;
+    let mut by_phase: BTreeMap<(Category, Phase), Vec<u64>> = BTreeMap::new();
+    let mut by_shard: BTreeMap<(Phase, u32), Vec<u64>> = BTreeMap::new();
+    let mut by_rung: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+    let mut by_id: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events {
+        by_phase.entry((e.cat, e.phase)).or_default().push(e.dur_ns);
+        if e.cat == Category::Request {
+            match e.phase {
+                Phase::Queue | Phase::BatchForm | Phase::Execute => {
+                    by_shard.entry((e.phase, e.shard)).or_default().push(e.dur_ns);
+                    *by_id.entry(e.id).or_default() += e.dur_ns;
+                    if e.phase == Phase::Execute {
+                        by_rung.entry(e.rung).or_default().push(e.dur_ns);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut e2e: Vec<u64> = by_id.into_values().collect();
+    TraceReport {
+        total_events: events.len(),
+        dropped: cap.dropped,
+        phases: by_phase.into_iter().map(|((c, p), mut d)| (c, p, Stat::from_durs(&mut d))).collect(),
+        shard_rows: by_shard.into_iter().map(|((p, s), mut d)| (p, s, Stat::from_durs(&mut d))).collect(),
+        rung_rows: by_rung.into_iter().map(|(r, mut d)| (r, Stat::from_durs(&mut d))).collect(),
+        end_to_end: Stat::from_durs(&mut e2e),
+    }
+}
+
+impl TraceReport {
+    /// Render the fixed-width breakdown tables.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("trace-report: {} events", self.total_events));
+        if self.dropped > 0 {
+            out.push_str(&format!(" ({} dropped ring-full)", self.dropped));
+        }
+        out.push('\n');
+        let header = format!(
+            "  {:<28} {:>8} {:>12} {:>12} {:>12} {:>12}\n",
+            "span", "count", "p50_ns", "p99_ns", "p999_ns", "mean_ns"
+        );
+        out.push_str("per-phase\n");
+        out.push_str(&header);
+        for (cat, phase, s) in &self.phases {
+            out.push_str(&format!(
+                "  {:<28} {:>8} {:>12} {:>12} {:>12} {:>12}\n",
+                format!("{}/{}", cat.label(), phase.label()),
+                s.count,
+                s.p50_ns,
+                s.p99_ns,
+                s.p999_ns,
+                s.mean_ns
+            ));
+        }
+        if !self.shard_rows.is_empty() {
+            out.push_str("per-shard (request)\n");
+            out.push_str(&header);
+            for (phase, shard, s) in &self.shard_rows {
+                out.push_str(&format!(
+                    "  {:<28} {:>8} {:>12} {:>12} {:>12} {:>12}\n",
+                    format!("{}/shard{}", phase.label(), shard),
+                    s.count,
+                    s.p50_ns,
+                    s.p99_ns,
+                    s.p999_ns,
+                    s.mean_ns
+                ));
+            }
+        }
+        if !self.rung_rows.is_empty() {
+            out.push_str("per-rung (request/execute)\n");
+            out.push_str(&header);
+            for (rung, s) in &self.rung_rows {
+                out.push_str(&format!(
+                    "  {:<28} {:>8} {:>12} {:>12} {:>12} {:>12}\n",
+                    format!("execute/rung{rung}"),
+                    s.count,
+                    s.p50_ns,
+                    s.p99_ns,
+                    s.p999_ns,
+                    s.mean_ns
+                ));
+            }
+        }
+        let s = &self.end_to_end;
+        out.push_str(&format!(
+            "end-to-end (queue+batch_form+execute): {} requests  p50 {} ns  p99 {} ns  p999 {} ns  mean {} ns\n",
+            s.count, s.p50_ns, s.p99_ns, s.p999_ns, s.mean_ns
+        ));
+        out
+    }
+}
+
+/// `rapid trace-report` subcommand: aggregate a Chrome-trace file
+/// written by `--trace` into the breakdown tables.
+pub mod cli {
+    use super::super::chrome;
+    use super::super::trace::Capture;
+    use super::aggregate;
+    use crate::util::cli::Args;
+
+    /// Run the subcommand, returning the rendered report.
+    pub fn try_run(argv: Vec<String>) -> Result<String, String> {
+        let args = Args::parse(argv, &["in"]);
+        let path = match (args.get("in"), args.positional.first()) {
+            (Some(p), _) => p.to_string(),
+            (None, Some(p)) => p.clone(),
+            (None, None) => return Err("usage: rapid trace-report --in <trace.json>".to_string()),
+        };
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
+        let events = chrome::parse(&text)?;
+        if events.is_empty() {
+            return Err(format!("{path}: no trace events (was the run started with --trace?)"));
+        }
+        Ok(aggregate(&Capture { events, dropped: 0 }).render())
+    }
+
+    /// Entry point of the `trace-report` subcommand (argv = everything
+    /// after it).
+    pub fn run(argv: Vec<String>) {
+        match try_run(argv) {
+            Ok(report) => println!("{report}"),
+            Err(e) => {
+                eprintln!("trace-report: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{Capture, Category, Phase, SpanEvent};
+    use super::*;
+
+    fn ev(phase: Phase, id: u64, shard: u32, rung: u32, dur: u64) -> SpanEvent {
+        SpanEvent { cat: Category::Request, phase, id, shard, rung, ts_ns: id * 100, dur_ns: dur, val: 0.0 }
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_and_empty_is_zero() {
+        assert_eq!(percentile_ns(&[], 0.5), 0);
+        let pop: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_ns(&pop, 0.50), 50);
+        assert_eq!(percentile_ns(&pop, 0.99), 99);
+        assert_eq!(percentile_ns(&pop, 0.999), 100);
+        assert_eq!(percentile_ns(&[7], 0.999), 7);
+    }
+
+    #[test]
+    fn aggregate_partitions_phases_shards_rungs_and_reconstructs_e2e() {
+        let events = vec![
+            ev(Phase::Queue, 1, 0, 0, 100),
+            ev(Phase::BatchForm, 1, 0, 0, 20),
+            ev(Phase::Execute, 1, 0, 0, 300),
+            ev(Phase::Queue, 2, 1, 2, 200),
+            ev(Phase::BatchForm, 2, 1, 2, 40),
+            ev(Phase::Execute, 2, 1, 2, 500),
+            ev(Phase::Submit, 1, 0, 0, 5),
+        ];
+        let rep = aggregate(&Capture { events, dropped: 3 });
+        assert_eq!(rep.total_events, 7);
+        assert_eq!(rep.dropped, 3);
+        // per-phase rows: submit, queue, batch_form, execute
+        assert_eq!(rep.phases.len(), 4);
+        let exec = rep.phases.iter().find(|(_, p, _)| *p == Phase::Execute).unwrap();
+        assert_eq!(exec.2.count, 2);
+        assert_eq!(exec.2.p50_ns, 300);
+        assert_eq!(exec.2.p99_ns, 500);
+        // shards split the request phases
+        assert_eq!(rep.shard_rows.len(), 6);
+        // rungs split execute
+        assert_eq!(rep.rung_rows, vec![
+            (0, Stat { count: 1, sum_ns: 300, mean_ns: 300, p50_ns: 300, p99_ns: 300, p999_ns: 300 }),
+            (2, Stat { count: 1, sum_ns: 500, mean_ns: 500, p50_ns: 500, p99_ns: 500, p999_ns: 500 }),
+        ]);
+        // end-to-end: id1 = 420, id2 = 740
+        assert_eq!(rep.end_to_end.count, 2);
+        assert_eq!(rep.end_to_end.p50_ns, 420);
+        assert_eq!(rep.end_to_end.p99_ns, 740);
+        let text = rep.render();
+        assert!(text.contains("request/queue"));
+        assert!(text.contains("request/batch_form"));
+        assert!(text.contains("request/execute"));
+        assert!(text.contains("queue/shard1"));
+        assert!(text.contains("execute/rung2"));
+        assert!(text.contains("(3 dropped ring-full)"));
+        assert!(text.contains("end-to-end (queue+batch_form+execute): 2 requests"));
+    }
+
+    #[test]
+    fn cli_reads_parses_and_rejects() {
+        use super::super::chrome;
+        // missing flag / missing file / empty trace all fail cleanly
+        assert!(cli::try_run(vec![]).unwrap_err().contains("usage"));
+        assert!(cli::try_run(vec!["--in".into(), "/nonexistent/t.json".into()]).is_err());
+        let dir = std::env::temp_dir();
+        let empty = dir.join("rapid_trace_report_empty.json");
+        std::fs::write(&empty, "{\"traceEvents\":[\n]}\n").unwrap();
+        let err = cli::try_run(vec!["--in".into(), empty.to_string_lossy().into_owned()]).unwrap_err();
+        assert!(err.contains("no trace events"));
+        // a real trace renders the per-phase table (positional path form)
+        let good = dir.join("rapid_trace_report_good.json");
+        let events = vec![ev(Phase::Queue, 1, 0, 0, 100), ev(Phase::Execute, 1, 0, 0, 300)];
+        std::fs::write(&good, chrome::to_chrome_json(&events)).unwrap();
+        let text = cli::try_run(vec![good.to_string_lossy().into_owned()]).unwrap();
+        assert!(text.contains("request/queue") && text.contains("request/execute"));
+    }
+}

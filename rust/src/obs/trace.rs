@@ -1,0 +1,545 @@
+//! Lock-cheap per-thread span recorder with a pluggable clock
+//! (DESIGN.md §9).
+//!
+//! Recording is **off by default**: every instrumentation site guards on
+//! [`enabled`] (one relaxed atomic load), so serving and sweep hot paths
+//! pay nothing while tracing is disabled. When enabled, each recording
+//! thread appends to its own bounded ring buffer (oldest events dropped
+//! first; the drop count is reported by [`take`]), registered once in a
+//! global list — the hot path touches only the thread's own ring lock,
+//! which is uncontended except during a [`take`] drain.
+//!
+//! ## Clock contract
+//!
+//! * [`Clock::Monotonic`] — production. Timestamps are nanoseconds since
+//!   the enable-time epoch, durations are real elapsed time.
+//! * [`Clock::Logical`] — bit-replayable tests. Timestamps are a pure
+//!   function of the event's *identity* (`id` × [`Phase::rank`], see
+//!   [`LOGICAL_STRIDE`]/[`LOGICAL_SLOT`]), the shard label is normalized
+//!   to 0 (which shard served a request is placement, not identity), and
+//!   only identity-pure categories ([`Category::identity_pure`]) are
+//!   recorded at all. The captured trace is therefore deterministic
+//!   across `RAPID_THREADS`, worker and shard counts — the same
+//!   discipline as the governor's switch traces (DESIGN.md §8), pinned
+//!   by `tests/trace_determinism.rs`. Like the governor contract, this
+//!   holds only with no deadline configured (shedding is a wall-clock
+//!   decision).
+//!
+//! Events drain through [`take`] in one **canonical order** (timestamp,
+//! category, phase rank, id, shard, rung, duration, value bits), so the
+//! merged multi-thread capture — and everything rendered from it — is a
+//! pure function of the event multiset.
+
+use std::cell::OnceCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Timestamp source of the recorder (see the module docs for the
+/// contract each mode provides).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Clock {
+    /// Real elapsed time since the enable-time epoch (production).
+    Monotonic,
+    /// Identity-derived timestamps, bit-replayable (tests/CI).
+    Logical,
+}
+
+impl Clock {
+    /// Parse a CLI clock name (`monotonic` | `logical`).
+    pub fn parse(s: &str) -> Option<Clock> {
+        match s {
+            "monotonic" => Some(Clock::Monotonic),
+            "logical" => Some(Clock::Logical),
+            _ => None,
+        }
+    }
+}
+
+/// What kind of entity a span describes. Categories map to Chrome-trace
+/// "processes" so each gets its own track group in a viewer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Category {
+    /// One served request's lifecycle (`id` = request id).
+    Request,
+    /// One formed batch (`id` = per-shard batch sequence number).
+    Batch,
+    /// Governor decision windows and rung switches (`id` = window).
+    Governor,
+    /// One `util::par` work chunk (`id` = chunk index).
+    Chunk,
+    /// One `explore` ladder stage (`id` = candidate count).
+    Explore,
+}
+
+impl Category {
+    /// Lower-case label used in exports and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::Request => "request",
+            Category::Batch => "batch",
+            Category::Governor => "governor",
+            Category::Chunk => "chunk",
+            Category::Explore => "explore",
+        }
+    }
+
+    /// Stable Chrome-trace process id of the category.
+    pub fn pid(self) -> u32 {
+        match self {
+            Category::Request => 0,
+            Category::Batch => 1,
+            Category::Governor => 2,
+            Category::Chunk => 3,
+            Category::Explore => 4,
+        }
+    }
+
+    /// Whether events of this category are a pure function of request /
+    /// window identity. Only identity-pure categories are recorded under
+    /// [`Clock::Logical`] — batch composition, chunk→worker placement
+    /// and ladder wall-time are scheduling artifacts, not identity.
+    pub fn identity_pure(self) -> bool {
+        matches!(self, Category::Request | Category::Governor)
+    }
+
+    /// Parse an exported category label back (inverse of [`Self::label`]).
+    pub fn parse(s: &str) -> Option<Category> {
+        match s {
+            "request" => Some(Category::Request),
+            "batch" => Some(Category::Batch),
+            "governor" => Some(Category::Governor),
+            "chunk" => Some(Category::Chunk),
+            "explore" => Some(Category::Explore),
+            _ => None,
+        }
+    }
+}
+
+/// Lifecycle phase a span covers. Request phases partition the
+/// submit-to-reply interval exactly: `queue + batch_form + execute`
+/// telescopes to the end-to-end latency `Metrics::record_latency` sees
+/// (each boundary instant is measured once and shared by both sides).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Admission + enqueue on the submitting thread.
+    Submit,
+    /// Deadline admission rejected the request at enqueue.
+    Shed,
+    /// Enqueue to leader dequeue (ingress queue wait).
+    Queue,
+    /// Leader dequeue to batch dispatch (batch formation wait).
+    BatchForm,
+    /// Batch dispatch to reply ready (worker queue + execution).
+    Execute,
+    /// Posting the reply to the caller's channel.
+    Reply,
+    /// Batch-level: dispatch to worker pickup.
+    BatchQueue,
+    /// Batch-level: worker execution of the whole batch.
+    BatchExecute,
+    /// Governor: one closed decision window (`val` = window QoR).
+    Window,
+    /// Governor: a rung switch (`rung` = the new rung).
+    Switch,
+    /// One `util::par` chunk execution.
+    Chunk,
+    /// Explore ladder: the coarse screen rung.
+    Screen,
+    /// Explore ladder: the full-fidelity refine rung.
+    Refine,
+}
+
+/// Every phase, in rank order (used by exports and reports).
+pub const PHASES: [Phase; 13] = [
+    Phase::Submit,
+    Phase::Shed,
+    Phase::Queue,
+    Phase::BatchForm,
+    Phase::Execute,
+    Phase::Reply,
+    Phase::BatchQueue,
+    Phase::BatchExecute,
+    Phase::Window,
+    Phase::Switch,
+    Phase::Chunk,
+    Phase::Screen,
+    Phase::Refine,
+];
+
+impl Phase {
+    /// Lower-case label used in exports, reports and metric labels.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Submit => "submit",
+            Phase::Shed => "shed",
+            Phase::Queue => "queue",
+            Phase::BatchForm => "batch_form",
+            Phase::Execute => "execute",
+            Phase::Reply => "reply",
+            Phase::BatchQueue => "batch_queue",
+            Phase::BatchExecute => "batch_execute",
+            Phase::Window => "window",
+            Phase::Switch => "switch",
+            Phase::Chunk => "chunk",
+            Phase::Screen => "screen",
+            Phase::Refine => "refine",
+        }
+    }
+
+    /// Stable ordinal of the phase; under [`Clock::Logical`] the
+    /// timestamp slot of the phase within its id stride.
+    pub fn rank(self) -> u64 {
+        PHASES.iter().position(|&p| p == self).unwrap() as u64
+    }
+
+    /// Parse an exported phase label back (inverse of [`Self::label`]).
+    pub fn parse(s: &str) -> Option<Phase> {
+        PHASES.iter().copied().find(|p| p.label() == s)
+    }
+}
+
+/// One recorded span (or instant event, `dur_ns == 0` in monotonic
+/// mode). Plain data — ordering, export and aggregation all live
+/// outside.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    /// Entity kind.
+    pub cat: Category,
+    /// Lifecycle phase.
+    pub phase: Phase,
+    /// Entity id (request id, batch seq, window index, chunk index).
+    pub id: u64,
+    /// Shard that recorded the event (0 under [`Clock::Logical`]).
+    pub shard: u32,
+    /// Accuracy rung the entity was served on (0 when ungoverned).
+    pub rung: u32,
+    /// Start timestamp, ns since the trace epoch.
+    pub ts_ns: u64,
+    /// Duration, ns.
+    pub dur_ns: u64,
+    /// Optional payload (window QoR); 0.0 when unused.
+    pub val: f64,
+}
+
+impl SpanEvent {
+    /// The canonical total order of a capture (see the module docs).
+    pub fn sort_key(&self) -> (u64, u32, u64, u64, u32, u32, u64, u64) {
+        (
+            self.ts_ns,
+            self.cat.pid(),
+            self.phase.rank(),
+            self.id,
+            self.shard,
+            self.rung,
+            self.dur_ns,
+            self.val.to_bits(),
+        )
+    }
+}
+
+/// A drained capture: every buffered event in canonical order, plus how
+/// many events the bounded rings discarded while recording.
+#[derive(Clone, Debug, Default)]
+pub struct Capture {
+    /// Events in canonical order ([`SpanEvent::sort_key`]).
+    pub events: Vec<SpanEvent>,
+    /// Events dropped ring-full since the last [`take`] / [`enable`].
+    pub dropped: u64,
+}
+
+/// Under [`Clock::Logical`], the timestamp stride between consecutive
+/// ids: `ts = id * LOGICAL_STRIDE + rank * LOGICAL_SLOT`.
+pub const LOGICAL_STRIDE: u64 = 16_000;
+
+/// Under [`Clock::Logical`], the per-phase slot width (also every
+/// logical span's duration). `rank * LOGICAL_SLOT` never reaches
+/// [`LOGICAL_STRIDE`], so id strides cannot collide.
+pub const LOGICAL_SLOT: u64 = 1_000;
+
+/// Per-thread ring capacity; the oldest event is dropped (and counted)
+/// when a ring is full.
+const RING_CAP: usize = 1 << 16;
+
+struct Ring {
+    events: VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+/// One thread's buffer. `Arc`-shared between the owning thread (via its
+/// thread-local handle) and the global registry; when the thread dies,
+/// the registry's copy is the last one and gets pruned on [`take`].
+struct ThreadBuf {
+    ring: Mutex<Ring>,
+}
+
+impl ThreadBuf {
+    fn new() -> ThreadBuf {
+        ThreadBuf { ring: Mutex::new(Ring { events: VecDeque::new(), dropped: 0 }) }
+    }
+
+    fn push(&self, ev: SpanEvent) {
+        let mut r = lock(&self.ring);
+        if r.events.len() >= RING_CAP {
+            r.events.pop_front();
+            r.dropped += 1;
+        }
+        r.events.push_back(ev);
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static CLOCK: AtomicU8 = AtomicU8::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: OnceCell<Arc<ThreadBuf>> = OnceCell::new();
+}
+
+/// Recover from a poisoned lock: the rings hold plain data, so a panic
+/// mid-push leaves nothing inconsistent.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn with_local(ev: SpanEvent) {
+    LOCAL.with(|cell| {
+        let buf = cell.get_or_init(|| {
+            let buf = Arc::new(ThreadBuf::new());
+            lock(&REGISTRY).push(Arc::clone(&buf));
+            buf
+        });
+        buf.push(ev);
+    });
+}
+
+/// Turn recording on under the given clock. Clears any previously
+/// buffered events so the next [`take`] sees only this session.
+pub fn enable(clock: Clock) {
+    EPOCH.get_or_init(Instant::now);
+    CLOCK.store(matches!(clock, Clock::Logical) as u8, Ordering::SeqCst);
+    drain();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn recording off. Buffered events stay drainable via [`take`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Is recording currently on? One relaxed load — the guard every
+/// instrumentation site uses.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The currently selected clock.
+pub fn clock() -> Clock {
+    if CLOCK.load(Ordering::Relaxed) == 1 { Clock::Logical } else { Clock::Monotonic }
+}
+
+fn record(cat: Category, phase: Phase, id: u64, shard: u32, rung: u32, span: Option<(Instant, Instant)>, val: f64) {
+    if !enabled() {
+        return;
+    }
+    let (ts_ns, dur_ns, shard) = match clock() {
+        Clock::Logical => {
+            if !cat.identity_pure() {
+                return;
+            }
+            let ts = id.wrapping_mul(LOGICAL_STRIDE).wrapping_add(phase.rank() * LOGICAL_SLOT);
+            (ts, LOGICAL_SLOT, 0)
+        }
+        Clock::Monotonic => {
+            let epoch = *EPOCH.get_or_init(Instant::now);
+            let (start, end) = span.unwrap_or_else(|| {
+                let now = Instant::now();
+                (now, now)
+            });
+            let ts = start.saturating_duration_since(epoch).as_nanos() as u64;
+            let dur = end.saturating_duration_since(start).as_nanos() as u64;
+            (ts, dur, shard)
+        }
+    };
+    with_local(SpanEvent { cat, phase, id, shard, rung, ts_ns, dur_ns, val });
+}
+
+/// Record a completed span covering `[start, end]`.
+pub fn record_span(cat: Category, phase: Phase, id: u64, shard: u32, rung: u32, start: Instant, end: Instant) {
+    record(cat, phase, id, shard, rung, Some((start, end)), 0.0);
+}
+
+/// Record an instant event (zero duration in monotonic mode).
+pub fn record_instant(cat: Category, phase: Phase, id: u64, shard: u32, rung: u32) {
+    record(cat, phase, id, shard, rung, None, 0.0);
+}
+
+/// Record an instant event carrying a value payload (e.g. a window QoR).
+pub fn record_val(cat: Category, phase: Phase, id: u64, shard: u32, rung: u32, val: f64) {
+    record(cat, phase, id, shard, rung, None, val);
+}
+
+fn drain() -> Capture {
+    let bufs: Vec<Arc<ThreadBuf>> = {
+        let mut reg = lock(&REGISTRY);
+        // prune buffers whose owning thread has exited (registry holds
+        // the only remaining reference) — after draining them below
+        let bufs = reg.clone();
+        reg.retain(|b| Arc::strong_count(b) > 2);
+        bufs
+    };
+    let mut cap = Capture::default();
+    for buf in bufs {
+        let mut r = lock(&buf.ring);
+        cap.events.extend(r.events.drain(..));
+        cap.dropped += r.dropped;
+        r.dropped = 0;
+    }
+    cap.events.sort_by_key(|e| e.sort_key());
+    cap
+}
+
+/// Drain every thread's buffered events into one canonically ordered
+/// [`Capture`] and reset the drop counters. Call after the traced
+/// workload's threads have finished (the coordinator joins its threads
+/// on drop), so no event is still in flight.
+pub fn take() -> Capture {
+    drain()
+}
+
+#[cfg(test)]
+pub(crate) mod testsync {
+    //! The recorder is process-global and `cargo test` runs lib tests in
+    //! parallel threads: every test that calls [`super::enable`] must
+    //! hold this lock, and must tag its events with ids in
+    //! [`TEST_ID_BASE`]`..` so strays recorded by concurrently running
+    //! non-obs tests can be filtered out of its capture.
+    use std::sync::{Mutex, MutexGuard};
+
+    /// Serializes tracing-enabled tests within the lib test binary.
+    pub static LOCK: Mutex<()> = Mutex::new(());
+
+    /// Reserved id range for obs unit-test events.
+    pub const TEST_ID_BASE: u64 = 1 << 60;
+
+    /// Acquire the test lock, surviving poisoning.
+    pub fn lock() -> MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testsync::{lock, TEST_ID_BASE};
+    use super::*;
+    use std::time::Duration;
+
+    fn mine(cap: &Capture) -> Vec<SpanEvent> {
+        cap.events.iter().copied().filter(|e| e.id >= TEST_ID_BASE).collect()
+    }
+
+    #[test]
+    fn disabled_recorder_drops_everything() {
+        let _g = lock();
+        disable();
+        record_instant(Category::Request, Phase::Submit, TEST_ID_BASE, 0, 0);
+        assert!(mine(&take()).is_empty());
+    }
+
+    #[test]
+    fn monotonic_spans_carry_epoch_relative_times() {
+        let _g = lock();
+        enable(Clock::Monotonic);
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_micros(5);
+        record_span(Category::Batch, Phase::BatchExecute, TEST_ID_BASE + 1, 3, 2, t0, t1);
+        disable();
+        let evs = mine(&take());
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].dur_ns, 5_000);
+        assert_eq!(evs[0].shard, 3, "monotonic mode keeps the shard label");
+        assert_eq!(evs[0].rung, 2);
+    }
+
+    #[test]
+    fn logical_clock_is_identity_pure() {
+        let _g = lock();
+        enable(Clock::Logical);
+        // placement-dependent categories are silently dropped
+        record_instant(Category::Chunk, Phase::Chunk, TEST_ID_BASE, 0, 0);
+        record_instant(Category::Batch, Phase::BatchQueue, TEST_ID_BASE, 0, 0);
+        // identity-pure ones get derived timestamps, shard forced to 0
+        let id = TEST_ID_BASE + 7;
+        record_instant(Category::Request, Phase::Execute, id, 9, 1);
+        disable();
+        let evs = mine(&take());
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].ts_ns, id.wrapping_mul(LOGICAL_STRIDE) + Phase::Execute.rank() * LOGICAL_SLOT);
+        assert_eq!(evs[0].dur_ns, LOGICAL_SLOT);
+        assert_eq!(evs[0].shard, 0, "logical mode normalizes the shard");
+        assert_eq!(evs[0].rung, 1, "the rung is identity and survives");
+    }
+
+    #[test]
+    fn take_returns_canonical_order_across_threads() {
+        let _g = lock();
+        enable(Clock::Logical);
+        let ids: Vec<u64> = (0..16).map(|i| TEST_ID_BASE + 16 - i).collect();
+        std::thread::scope(|s| {
+            for chunk in ids.chunks(4) {
+                s.spawn(move || {
+                    for &id in chunk {
+                        record_instant(Category::Request, Phase::Queue, id, 0, 0);
+                    }
+                });
+            }
+        });
+        disable();
+        let evs = mine(&take());
+        assert_eq!(evs.len(), 16);
+        let sorted: Vec<u64> = {
+            let mut v: Vec<u64> = ids.clone();
+            v.sort();
+            v
+        };
+        assert_eq!(evs.iter().map(|e| e.id).collect::<Vec<_>>(), sorted);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let _g = lock();
+        enable(Clock::Logical);
+        let n = (RING_CAP + 10) as u64;
+        for i in 0..n {
+            record_instant(Category::Request, Phase::Submit, TEST_ID_BASE + i, 0, 0);
+        }
+        disable();
+        let cap = take();
+        let evs = mine(&cap);
+        assert_eq!(evs.len(), RING_CAP);
+        assert!(cap.dropped >= 10, "drop counter reports the overflow");
+        // the *oldest* events are the dropped ones
+        assert_eq!(evs[0].id, TEST_ID_BASE + (n - RING_CAP as u64));
+    }
+
+    #[test]
+    fn phase_and_category_labels_round_trip() {
+        for p in PHASES {
+            assert_eq!(Phase::parse(p.label()), Some(p));
+        }
+        for c in [Category::Request, Category::Batch, Category::Governor, Category::Chunk, Category::Explore] {
+            assert_eq!(Category::parse(c.label()), Some(c));
+        }
+        assert_eq!(Phase::parse("warp"), None);
+        assert_eq!(Category::parse("warp"), None);
+        assert_eq!(Clock::parse("logical"), Some(Clock::Logical));
+        assert_eq!(Clock::parse("wall"), None);
+        // ranks are the PHASES positions — the logical-clock slot layout
+        assert_eq!(Phase::Submit.rank(), 0);
+        assert_eq!(Phase::Reply.rank(), 5);
+        assert!(PHASES.iter().map(|p| p.rank()).max().unwrap() * LOGICAL_SLOT < LOGICAL_STRIDE);
+    }
+}

@@ -30,6 +30,23 @@
 use std::cell::Cell;
 use std::ops::Range;
 
+use crate::obs::trace::{self, Category, Phase};
+
+/// Run one chunk body under an optional [`crate::obs::trace`] span
+/// (`chunk/chunk`, id = chunk index). Compiled to a direct call when the
+/// tracer is off — the `enabled()` probe is one relaxed atomic load, so
+/// the sweep hot loops pay nothing for the instrumentation they don't use.
+#[inline]
+fn traced<R>(c: u64, f: impl FnOnce() -> R) -> R {
+    if !trace::enabled() {
+        return f();
+    }
+    let t0 = std::time::Instant::now();
+    let r = f();
+    trace::record_span(Category::Chunk, Phase::Chunk, c, 0, 0, t0, std::time::Instant::now());
+    r
+}
+
 thread_local! {
     /// Per-thread worker-count override (see [`with_threads`]).
     static OVERRIDE: Cell<Option<usize>> = Cell::new(None);
@@ -111,7 +128,7 @@ where
         // serial oracle: same chunking, same order, no threads
         let mut state = init();
         return (0..n_chunks)
-            .map(|c| f(&mut state, c, chunk_range(c, chunk_size, len)))
+            .map(|c| traced(c, || f(&mut state, c, chunk_range(c, chunk_size, len))))
             .collect();
     }
     let mut slots: Vec<Option<R>> = (0..n_chunks).map(|_| None).collect();
@@ -124,7 +141,7 @@ where
                     let mut got = Vec::new();
                     let mut c = w;
                     while c < n_chunks {
-                        got.push((c, f(&mut state, c, chunk_range(c, chunk_size, len))));
+                        got.push((c, traced(c, || f(&mut state, c, chunk_range(c, chunk_size, len)))));
                         c += t;
                     }
                     got
@@ -182,7 +199,7 @@ where
         return data
             .chunks_mut(chunk_size)
             .enumerate()
-            .map(|(c, s)| f(c as u64, c * chunk_size, s))
+            .map(|(c, s)| traced(c as u64, || f(c as u64, c * chunk_size, s)))
             .collect();
     }
     // round-robin the disjoint slices over the workers
@@ -199,7 +216,7 @@ where
                 scope.spawn(move || {
                     bucket
                         .into_iter()
-                        .map(|(c, s)| (c, f(c as u64, c * chunk_size, s)))
+                        .map(|(c, s)| (c, traced(c as u64, || f(c as u64, c * chunk_size, s))))
                         .collect::<Vec<_>>()
                 })
             })

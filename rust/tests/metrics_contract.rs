@@ -7,9 +7,17 @@
 //!   keys are valid Prometheus identifiers, values parse (including the
 //!   `+Inf`/`-Inf`/`NaN` specials);
 //! * every sample's metric family declares `# HELP` and `# TYPE` before
-//!   its first sample, and the TYPE is a known one;
+//!   its first sample, and the TYPE is a known one; `_sum`/`_count`
+//!   children resolve to a summary or histogram parent, `_bucket`
+//!   children to a histogram parent;
 //! * `_total` families are counters and counter families end in `_total`;
 //! * counters are monotone across snapshots with served work in between;
+//! * histogram bucket series have ascending `le` bounds, monotone
+//!   cumulative counts and a terminal `+Inf` equal to `_count`
+//!   (the `rapid_phase_ns` contract of ISSUE 10);
+//! * the per-phase `_sum`s reconcile *exactly* with the end-to-end
+//!   `rapid_latency_ns_sum` (the phases partition submit→reply), and the
+//!   per-reason shed counters sum to their aggregate families;
 //! * the family-name set — the scrape contract — is pinned exactly, so a
 //!   renamed gauge fails here instead of silently breaking dashboards.
 
@@ -26,8 +34,10 @@ use rapid::coordinator::Metrics;
 struct Family {
     help: bool,
     ty: Option<String>,
-    /// (label part incl. braces or "", raw value token) per sample line.
-    samples: Vec<(String, String)>,
+    /// (sample base name, label part incl. braces or "", raw value
+    /// token) per sample line — the base name distinguishes a summary or
+    /// histogram family's `_sum`/`_count`/`_bucket` children.
+    samples: Vec<(String, String, String)>,
 }
 
 fn is_metric_name(s: &str) -> bool {
@@ -96,24 +106,33 @@ fn parse_exposition(text: &str) -> BTreeMap<String, Family> {
             None => (name_part, String::new()),
         };
         assert!(is_metric_name(base), "bad metric name '{base}': {line}");
-        // resolve the family: exact, or the summary's _sum/_count children
+        // resolve the family: exact, a summary's or histogram's
+        // _sum/_count children, or a histogram's _bucket children
         let family = if families.contains_key(base) {
             base.to_string()
+        } else if let Some(parent) = base.strip_suffix("_bucket") {
+            assert!(
+                families.get(parent).is_some_and(|f| f.ty.as_deref() == Some("histogram")),
+                "sample '{base}' has no declared family (and '{parent}' is not a histogram)"
+            );
+            parent.to_string()
         } else {
             let parent = base
                 .strip_suffix("_sum")
                 .or_else(|| base.strip_suffix("_count"))
                 .unwrap_or_else(|| panic!("sample '{base}' has no declared family"));
             assert!(
-                families.get(parent).is_some_and(|f| f.ty.as_deref() == Some("summary")),
-                "sample '{base}' has no declared family (and '{parent}' is not a summary)"
+                families
+                    .get(parent)
+                    .is_some_and(|f| matches!(f.ty.as_deref(), Some("summary" | "histogram"))),
+                "sample '{base}' has no declared family (and '{parent}' is not a summary/histogram)"
             );
             parent.to_string()
         };
         let fam = families.get_mut(&family).unwrap();
         assert!(fam.help, "sample before # HELP: {line}");
         assert!(fam.ty.is_some(), "sample before # TYPE: {line}");
-        fam.samples.push((labels, value.to_string()));
+        fam.samples.push((base.to_string(), labels, value.to_string()));
     }
     families
 }
@@ -154,7 +173,7 @@ fn exposition_grammar_holds_on_a_served_coordinator() {
         }
         if ty == "counter" {
             assert!(name.ends_with("_total"), "{name}: counters must end in _total");
-            for (labels, v) in &fam.samples {
+            for (_, labels, v) in &fam.samples {
                 let n: f64 = v.parse().unwrap_or_else(|_| panic!("{name}{labels}: non-numeric counter {v}"));
                 assert!(n >= 0.0 && n.fract() == 0.0, "{name}{labels}: counter value {v}");
             }
@@ -165,16 +184,16 @@ fn exposition_grammar_holds_on_a_served_coordinator() {
     let q = |want: &str| -> f64 {
         lat.samples
             .iter()
-            .find(|(l, _)| l == &format!("{{quantile=\"{want}\"}}"))
+            .find(|(_, l, _)| l == &format!("{{quantile=\"{want}\"}}"))
             .unwrap_or_else(|| panic!("missing quantile {want}"))
-            .1
+            .2
             .parse()
             .unwrap()
     };
     assert!(q("0.5") <= q("0.99") && q("0.99") <= q("0.999"), "quantiles out of order");
     assert!(
-        lat.samples.iter().any(|(l, _)| l.is_empty()),
-        "summary _sum/_count series missing"
+        lat.samples.iter().any(|(b, _, _)| b == "rapid_latency_ns_sum"),
+        "summary _sum series missing"
     );
 }
 
@@ -198,8 +217,10 @@ fn family_names_are_pinned() {
             "rapid_ingress_queue_depth",
             "rapid_latency_ns",
             "rapid_padded_elements_total",
+            "rapid_phase_ns",
             "rapid_rejected_total",
             "rapid_requests_total",
+            "rapid_shed_reason_total",
             "rapid_shed_total",
         ],
         "the exported family set changed — update dashboards AND this pin together"
@@ -207,7 +228,7 @@ fn family_names_are_pinned() {
     // one ingress-depth series per shard, keyed by the shard label
     let ingress = &families["rapid_ingress_queue_depth"];
     assert_eq!(ingress.samples.len(), 3);
-    for (i, (labels, _)) in ingress.samples.iter().enumerate() {
+    for (i, (_, labels, _)) in ingress.samples.iter().enumerate() {
         assert_eq!(labels, &format!("{{shard=\"{i}\"}}"));
     }
 }
@@ -226,23 +247,151 @@ fn counters_are_monotone_across_snapshots() {
         if fam.ty.as_deref() != Some("counter") {
             continue;
         }
-        for (labels, v0) in &fam.samples {
+        for (base, labels, v0) in &fam.samples {
             let v0: u64 = v0.parse().unwrap();
             let v1: u64 = after[name]
                 .samples
                 .iter()
-                .find(|(l, _)| l == labels)
-                .unwrap_or_else(|| panic!("{name}{labels} vanished"))
-                .1
+                .find(|(b, l, _)| b == base && l == labels)
+                .unwrap_or_else(|| panic!("{base}{labels} vanished"))
+                .2
                 .parse()
                 .unwrap();
-            assert!(v1 >= v0, "{name}{labels} went backwards: {v0} -> {v1}");
+            assert!(v1 >= v0, "{base}{labels} went backwards: {v0} -> {v1}");
         }
     }
     let req = |f: &BTreeMap<String, Family>| -> u64 {
-        f["rapid_requests_total"].samples[0].1.parse().unwrap()
+        f["rapid_requests_total"].samples[0].2.parse().unwrap()
     };
     assert_eq!(req(&after), req(&before) + 10, "served work must show up");
+}
+
+/// The `rapid_phase_ns` histogram obeys the histogram grammar per
+/// series: ascending finite `le` bounds, monotone cumulative bucket
+/// counts, and a terminal `+Inf` bucket equal to the series' `_count`.
+#[test]
+fn phase_histogram_buckets_are_cumulative_and_terminated() {
+    let c = served_coordinator();
+    let families = parse_exposition(&c.metrics.metrics_text());
+    let phase = &families["rapid_phase_ns"];
+    assert_eq!(phase.ty.as_deref(), Some("histogram"));
+    // group bucket samples into series keyed by their labels minus `le`
+    let mut series: BTreeMap<String, Vec<(String, u64)>> = BTreeMap::new();
+    for (base, labels, v) in &phase.samples {
+        if base != "rapid_phase_ns_bucket" {
+            continue;
+        }
+        let inner = labels.trim_start_matches('{').trim_end_matches('}');
+        let mut key = Vec::new();
+        let mut le = None;
+        for pair in inner.split(',') {
+            match pair.strip_prefix("le=") {
+                Some(val) => le = Some(val.trim_matches('"').to_string()),
+                None => key.push(pair),
+            }
+        }
+        series
+            .entry(key.join(","))
+            .or_default()
+            .push((le.expect("bucket sample without le"), v.parse().unwrap()));
+    }
+    assert_eq!(series.len(), 6, "3 phases x 2 shards");
+    for (key, buckets) in &series {
+        let (inf, finite) = buckets.split_last().expect("series has buckets");
+        assert_eq!(inf.0, "+Inf", "{key}: last bucket must be +Inf");
+        let mut prev_le = 0u64;
+        let mut prev_cum = 0u64;
+        for (le, cum) in finite {
+            let le: u64 = le.parse().unwrap_or_else(|_| panic!("{key}: non-numeric le '{le}'"));
+            assert!(le > prev_le, "{key}: le bounds not ascending at {le}");
+            assert!(*cum >= prev_cum, "{key}: cumulative count decreased at le {le}");
+            prev_le = le;
+            prev_cum = *cum;
+        }
+        assert!(inf.1 >= prev_cum, "{key}: +Inf below the last finite bucket");
+        let count: u64 = phase
+            .samples
+            .iter()
+            .find(|(b, l, _)| b == "rapid_phase_ns_count" && l == &format!("{{{key}}}"))
+            .unwrap_or_else(|| panic!("{key}: missing _count series"))
+            .2
+            .parse()
+            .unwrap();
+        assert_eq!(inf.1, count, "{key}: +Inf bucket must equal _count");
+    }
+}
+
+/// The three phases partition submit→reply exactly (shared boundary
+/// instants in the router), so their `_sum`s add up to
+/// `rapid_latency_ns_sum` to the nanosecond, and every completed span
+/// appears once in each phase.
+#[test]
+fn phase_sums_reconcile_exactly_with_latency_summary() {
+    let c = served_coordinator();
+    let families = parse_exposition(&c.metrics.metrics_text());
+    let phase = &families["rapid_phase_ns"];
+    let phase_sum: u64 = phase
+        .samples
+        .iter()
+        .filter(|(b, _, _)| b == "rapid_phase_ns_sum")
+        .map(|(_, _, v)| v.parse::<u64>().unwrap())
+        .sum();
+    let lat = &families["rapid_latency_ns"];
+    let lat_val = |base: &str| -> u64 {
+        lat.samples
+            .iter()
+            .find(|(b, _, _)| b == base)
+            .unwrap_or_else(|| panic!("missing {base}"))
+            .2
+            .parse()
+            .unwrap()
+    };
+    assert!(lat_val("rapid_latency_ns_count") > 0, "served work must record latency");
+    assert_eq!(
+        phase_sum,
+        lat_val("rapid_latency_ns_sum"),
+        "phase spans must partition submit->reply exactly"
+    );
+    for p in ["queue", "batch_form", "execute"] {
+        let n: u64 = phase
+            .samples
+            .iter()
+            .filter(|(b, l, _)| {
+                b == "rapid_phase_ns_count" && l.contains(&format!("phase=\"{p}\""))
+            })
+            .map(|(_, _, v)| v.parse::<u64>().unwrap())
+            .sum();
+        assert_eq!(n, lat_val("rapid_latency_ns_count"), "phase {p} span count");
+    }
+}
+
+/// The per-reason shed counters keep the aggregates honest: summing the
+/// `deadline` series reproduces `rapid_shed_total`, summing `queue_full`
+/// reproduces `rapid_rejected_total` — even with an out-of-range shard
+/// index (which clamps to the last shard instead of dropping the count).
+#[test]
+fn shed_reason_series_sum_to_their_aggregates() {
+    let m = Metrics::with_shards(2);
+    m.record_shed(0);
+    m.record_shed(1);
+    m.record_shed(1);
+    m.record_rejected(0);
+    m.record_rejected(5); // out of range: clamps to shard 1
+    let families = parse_exposition(&m.metrics_text());
+    let reasons = &families["rapid_shed_reason_total"];
+    let sum_of = |reason: &str| -> u64 {
+        reasons
+            .samples
+            .iter()
+            .filter(|(_, l, _)| l.contains(&format!("reason=\"{reason}\"")))
+            .map(|(_, _, v)| v.parse::<u64>().unwrap())
+            .sum()
+    };
+    let agg = |name: &str| -> u64 { families[name].samples[0].2.parse().unwrap() };
+    assert_eq!(sum_of("deadline"), 3);
+    assert_eq!(sum_of("deadline"), agg("rapid_shed_total"));
+    assert_eq!(sum_of("queue_full"), 2);
+    assert_eq!(sum_of("queue_full"), agg("rapid_rejected_total"));
 }
 
 /// Non-finite governor QoR renders as the Prometheus `+Inf`/`-Inf`/`NaN`

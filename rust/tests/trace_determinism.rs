@@ -1,0 +1,203 @@
+//! Determinism pins for the structured span tracer (ISSUE 10): under
+//! [`Clock::Logical`] a serve capture is a pure function of request
+//! *identity* — ids, phases, rungs — so the exported Chrome trace is
+//! byte-identical across worker thread counts and shard counts (the
+//! same contract `tests/par_determinism.rs` pins for the sweep engine).
+//! Under [`Clock::Monotonic`] the per-request phase spans share their
+//! boundary instants, so queue + batch_form + execute partitions the
+//! submit→reply interval exactly — the property that makes
+//! `rapid_phase_ns` reconcile with `rapid_latency_ns`.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use rapid::coordinator::governor::GovernorConfig;
+use rapid::coordinator::loadgen::{run_rung, LoadgenConfig};
+use rapid::coordinator::router::{CoordinatorConfig, ExecutorFactory, FnFactory};
+use rapid::coordinator::scenario::{run_scenario, Phase as ScenPhase, Regime, ScenarioConfig};
+use rapid::coordinator::{App, Ladder};
+use rapid::obs::chrome;
+use rapid::obs::trace::{self, Clock, LOGICAL_SLOT, LOGICAL_STRIDE};
+use rapid::obs::{Category, Phase, SpanEvent};
+use rapid::util::par::with_threads;
+
+/// The recorder is process-global and this binary's tests run on
+/// parallel threads: every test enables/disables it, so they serialize
+/// here (surviving poisoning — one failed test must not wedge the rest).
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn mul_factory() -> Arc<dyn ExecutorFactory> {
+    Arc::new(FnFactory(|a: &[i64], b: &[i64]| {
+        a.iter().zip(b).map(|(x, y)| x * y).collect::<Vec<i64>>()
+    }))
+}
+
+fn coord_cfg(shards: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batch_capacity: 64,
+        max_wait: Duration::from_micros(50),
+        workers: 4,
+        queue_depth: 4096,
+        shards,
+    }
+}
+
+/// One traced rung under the given clock. `req_len` divides the batch
+/// capacity, so no request ever splits across batches and every
+/// admitted request contributes exactly one span.
+fn traced_rung(clock: Clock, shards: usize, rate: u64, ms: u64) -> rapid::coordinator::loadgen::RungReport {
+    let cfg = LoadgenConfig::for_mul(16, vec![rate], Duration::from_millis(ms), 16, 7);
+    trace::enable(clock);
+    let rep = run_rung(&mul_factory(), &coord_cfg(shards), &cfg, 0);
+    trace::disable();
+    let _ = trace::take(); // drop any stray events from the gap
+    assert_eq!(rep.shed, 0, "no deadline, nothing sheds");
+    assert_eq!(rep.rejected, 0, "queue deep enough for the whole rung");
+    assert_eq!(rep.completed, rep.requests);
+    rep
+}
+
+/// Tentpole acceptance pin: the logical-clock capture of one serve rung
+/// is byte-identical across the worker-thread × shard matrix.
+#[test]
+fn logical_trace_is_bit_identical_across_threads_and_shards() {
+    let _g = lock();
+    let mut cells: Vec<(usize, usize, String)> = Vec::new();
+    for &threads in &[1usize, 4] {
+        for &shards in &[1usize, 4] {
+            let rep = with_threads(threads, || traced_rung(Clock::Logical, shards, 20_000, 100));
+            assert_eq!(
+                rep.spans.len() as u64,
+                rep.requests * 5,
+                "submit/queue/batch_form/execute/reply per request"
+            );
+            cells.push((threads, shards, chrome::to_chrome_json(&rep.spans)));
+        }
+    }
+    let (t0, s0, first) = cells[0].clone();
+    for (t, s, json) in &cells[1..] {
+        assert_eq!(
+            json, &first,
+            "logical trace diverged between (threads={t0},shards={s0}) and (threads={t},shards={s})"
+        );
+    }
+}
+
+/// The logical identity model itself: request `id` produces exactly the
+/// five lifecycle phases at `ts = id·STRIDE + rank·SLOT`, `dur = SLOT`,
+/// shard normalized to 0 — nothing wall-clock survives into the capture.
+#[test]
+fn logical_events_follow_the_identity_model() {
+    let _g = lock();
+    let rep = traced_rung(Clock::Logical, 2, 50_000, 20);
+    let lifecycle = [Phase::Submit, Phase::Queue, Phase::BatchForm, Phase::Execute, Phase::Reply];
+    assert_eq!(rep.spans.len() as u64, rep.requests * 5);
+    let mut it = rep.spans.iter();
+    for id in 1..=rep.requests {
+        for &phase in &lifecycle {
+            let e = it.next().expect("capture covers every request");
+            assert_eq!(e.cat, Category::Request, "id {id}");
+            assert_eq!(e.id, id, "canonical order is id-major");
+            assert_eq!(e.phase, phase, "id {id}");
+            assert_eq!(e.ts_ns, id * LOGICAL_STRIDE + phase.rank() * LOGICAL_SLOT, "id {id}");
+            assert_eq!(e.dur_ns, LOGICAL_SLOT, "id {id}");
+            assert_eq!(e.shard, 0, "logical mode normalizes placement away");
+            assert_eq!(e.rung, 0, "governor off: every request serves at rung 0");
+        }
+    }
+}
+
+fn scenario_cfg() -> ScenarioConfig {
+    ScenarioConfig {
+        app: App::Jpeg,
+        width: 16,
+        phases: vec![
+            ScenPhase { regime: Regime::Clean, requests: 100, rate: 50_000 },
+            ScenPhase { regime: Regime::Noisy, requests: 100, rate: 50_000 },
+        ],
+        req_len: 32,
+        seed: 7,
+        governor: GovernorConfig {
+            window: 50,
+            dwell: 1,
+            sample_stride: 4,
+            sample_lanes: 8,
+            seed: 7,
+            ..Default::default()
+        },
+        start_rung: 0,
+        deadline: None,
+    }
+}
+
+/// The governed scenario's logical capture — request lifecycles plus the
+/// governor's window/switch events with their QoR payloads — is
+/// shard-count-invariant (windows close on request *count*, QoR is
+/// shadow-sampled, the governor is a pure state machine).
+#[test]
+fn governed_scenario_logical_trace_is_shard_invariant() {
+    let _g = lock();
+    let mut jsons = Vec::new();
+    for &shards in &[1usize, 4] {
+        let ladder = Ladder::from_names(&["rapid3", "exact"], 16).unwrap();
+        trace::enable(Clock::Logical);
+        let rep = run_scenario(&ladder, &coord_cfg(shards), &scenario_cfg());
+        trace::disable();
+        let _ = trace::take();
+        assert_eq!(rep.completed, rep.requests, "shards={shards}");
+        assert!(
+            rep.spans
+                .iter()
+                .any(|e| e.cat == Category::Governor && e.phase == Phase::Window),
+            "window observations must be captured"
+        );
+        assert!(
+            rep.spans.iter().any(|e| e.phase == Phase::Switch),
+            "the noisy phase forces at least one rung switch"
+        );
+        jsons.push(chrome::to_chrome_json(&rep.spans));
+    }
+    assert_eq!(jsons[0], jsons[1], "scenario trace diverged between 1 and 4 shards");
+}
+
+/// A live capture survives the Chrome JSON round trip event-for-event,
+/// and the sectioned writer keeps both sections parseable.
+#[test]
+fn chrome_export_round_trips_a_live_capture() {
+    let _g = lock();
+    let rep = traced_rung(Clock::Logical, 1, 50_000, 20);
+    let text = chrome::to_chrome_json(&rep.spans);
+    assert_eq!(chrome::parse(&text).unwrap(), rep.spans);
+    let sections = chrome::to_chrome_json_sections(&[("a", &rep.spans), ("b", &rep.spans)]);
+    assert_eq!(chrome::parse(&sections).unwrap().len(), 2 * rep.spans.len());
+}
+
+/// Monotonic mode: each request's queue, batch_form and execute spans
+/// share their boundary timestamps, so the three durations sum exactly
+/// to the end-to-end interval — the trace-level twin of the
+/// `rapid_phase_ns` / `rapid_latency_ns` `_sum` reconciliation.
+#[test]
+fn monotonic_phase_spans_partition_each_request_exactly() {
+    let _g = lock();
+    let rep = traced_rung(Clock::Monotonic, 2, 50_000, 20);
+    let of = |id: u64, phase: Phase| -> &SpanEvent {
+        rep.spans
+            .iter()
+            .find(|e| e.cat == Category::Request && e.id == id && e.phase == phase)
+            .unwrap_or_else(|| panic!("request {id} missing its {} span", phase.label()))
+    };
+    for id in 1..=rep.requests {
+        let (q, f, x) = (of(id, Phase::Queue), of(id, Phase::BatchForm), of(id, Phase::Execute));
+        assert_eq!(q.ts_ns + q.dur_ns, f.ts_ns, "request {id}: queue/batch_form boundary");
+        assert_eq!(f.ts_ns + f.dur_ns, x.ts_ns, "request {id}: batch_form/execute boundary");
+        assert_eq!(
+            q.dur_ns + f.dur_ns + x.dur_ns,
+            x.ts_ns + x.dur_ns - q.ts_ns,
+            "request {id}: phases must partition submit->reply"
+        );
+    }
+}
